@@ -1,0 +1,32 @@
+//! Logistic-regression consensus (Fig. 1(c–f) style): MNIST-like blobs
+//! with both L2 and smoothed-L1 regularization, using the PJRT backend
+//! when artifacts are available (falling back to native).
+//!
+//!     cargo run --release --example logistic_consensus
+
+use sddnewton::config::{AlgoKind, ExperimentConfig, ProblemKind};
+use sddnewton::harness::{report, run_experiment};
+
+fn main() {
+    for l1 in [false, true] {
+        let name = if l1 { "fig1-mnist-l1" } else { "fig1-mnist-l2" };
+        let mut cfg = ExperimentConfig::preset(name).unwrap();
+        // Example-sized shrink (the bench runs the full preset).
+        cfg.nodes = 6;
+        cfg.edges = 12;
+        cfg.max_iters = 15;
+        cfg.problem = ProblemKind::MnistLike { p: 30, m_total: 600, l1, mu: 0.01 };
+        cfg.algorithms = vec![
+            AlgoKind::SddNewton { eps: 0.1, alpha: 1.0 },
+            AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+            AlgoKind::Admm { beta: 1.0 },
+        ];
+        let res = run_experiment(&cfg);
+        println!("--- {} (reg = {})", cfg.name, if l1 { "smooth-L1" } else { "L2" });
+        print!("{}", report::summary_table(&res));
+        let gap = (res.traces[0].final_objective() - res.f_star).abs() / res.f_star.abs();
+        assert!(gap < 1e-3, "SDD-Newton gap too large: {gap}");
+        println!();
+    }
+    println!("logistic_consensus OK");
+}

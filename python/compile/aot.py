@@ -1,0 +1,145 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format, not the serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--specs default]
+
+Writes one ``<name>.hlo.txt`` per (function, shape) pair plus a
+``manifest.json`` the rust ``PjrtBackend`` uses to pick artifacts.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s(shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def lower_quad(n, p, cg_iters):
+    """Artifacts for quadratic problems at (n, p)."""
+    rec = jax.jit(
+        lambda P, c, v: model.quad_recover_jit(P, c, v, cg_iters=cg_iters)
+    ).lower(s((n, p, p)), s((n, p)), s((n, p)))
+    rec_pre = jax.jit(model.quad_recover_pre_jit).lower(
+        s((n, p, p)), s((n, p)), s((n, p))
+    )
+    hess = jax.jit(model.quad_hess_apply_jit).lower(s((n, p, p)), s((n, p)))
+    return {
+        f"quad_recover_n{n}_p{p}": (
+            to_hlo_text(rec),
+            {"kind": "quad_recover", "n": n, "p": p, "cg_iters": cg_iters},
+        ),
+        f"quad_recover_pre_n{n}_p{p}": (
+            to_hlo_text(rec_pre),
+            {"kind": "quad_recover_pre", "n": n, "p": p},
+        ),
+        f"quad_hess_n{n}_p{p}": (
+            to_hlo_text(hess),
+            {"kind": "quad_hess", "n": n, "p": p},
+        ),
+    }
+
+
+def lower_logreg(n, p, m, reg, alpha, newton_iters, cg_iters):
+    """Artifacts for logistic problems at (n, p, m padded examples).
+
+    The recover artifact is warm-started: input θ₀ is the coordinator's
+    previous primal iterate, so the Newton count stays small.
+    """
+    tag = f"n{n}_p{p}_m{m}_{reg}"
+    rec = jax.jit(
+        lambda b, a, v, rs, t0: model.logreg_recover_warm_jit(
+            b, a, v, rs, t0, reg=reg, alpha=alpha,
+            newton_iters=newton_iters, cg_iters=cg_iters,
+        )
+    ).lower(s((n, m, p)), s((n, m)), s((n, p)), s((n, 1)), s((n, p)))
+    hess = jax.jit(
+        lambda b, a, th, z, rs: model.logreg_hess_apply_jit(
+            b, a, th, z, rs, reg=reg, alpha=alpha
+        )
+    ).lower(s((n, m, p)), s((n, m)), s((n, p)), s((n, p)), s((n, 1)))
+    meta = {
+        "n": n, "p": p, "m": m, "reg": reg, "alpha": alpha,
+        "newton_iters": newton_iters, "cg_iters": cg_iters,
+    }
+    return {
+        f"logreg_recover_{tag}": (to_hlo_text(rec), {"kind": "logreg_recover", **meta}),
+        f"logreg_hess_{tag}": (to_hlo_text(hess), {"kind": "logreg_hess", **meta}),
+    }
+
+
+def default_specs():
+    """The artifact set covering DESIGN.md's experiment index."""
+    out = {}
+    # Fig 1(a,b): synthetic regression, 100 nodes, p = 80.
+    out.update(lower_quad(100, 80, cg_iters=80))
+    # Fig 3(a,b) + 2(c,d): London Schools, 50 nodes, p = 27.
+    out.update(lower_quad(50, 27, cg_iters=27))
+    # Fig 3(c,d): RL, 20 nodes, p = 6.
+    out.update(lower_quad(20, 6, cg_iters=6))
+    # Small smoke shape used by tests/examples.
+    out.update(lower_quad(8, 5, cg_iters=5))
+    # Fig 1(c-f): MNIST-like, 10 nodes, p = 150, 200 examples/node.
+    # Warm-started recovers keep the Newton budget small (§Perf).
+    out.update(lower_logreg(10, 150, 200, "l2", 8.0, 6, 32))
+    out.update(lower_logreg(10, 150, 200, "sl1", 8.0, 6, 32))
+    # Fig 2(a,b): fMRI-like, 8 nodes, p = 512, 30 examples/node.
+    out.update(lower_logreg(8, 512, 32, "sl1", 8.0, 8, 48))
+    # Small logistic smoke shape.
+    out.update(lower_logreg(6, 8, 16, "l2", 8.0, 8, 16))
+    return out
+
+
+def smoke_specs():
+    out = {}
+    out.update(lower_quad(8, 5, cg_iters=5))
+    out.update(lower_logreg(6, 8, 16, "l2", 8.0, 8, 16))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--specs", default="default", choices=["default", "smoke"])
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = default_specs() if args.specs == "default" else smoke_specs()
+    manifest = {}
+    for name, (text, meta) in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {**meta, "file": f"{name}.hlo.txt", "bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused logistic margins/sigmoid/gradient assembly.
+
+The compute hot-spot of the logistic consensus experiments: for every
+node, stream the (m, p) feature block through VMEM-sized tiles, compute
+margins ``z = B theta``, the sigmoid residual ``delta = sigma(z) - a``,
+the Gauss-Newton weights ``d = sigma(1-sigma)``, and accumulate the
+data-term gradient ``B^T delta`` in a (p,)-resident accumulator.
+
+TPU mapping (DESIGN.md *Hardware-Adaptation*): the grid walks (node,
+sample-tile); each step does one (tile_m x p) @ (p,) MXU pass plus one
+(p x tile_m) @ (tile_m,) accumulation, with the (p,) accumulator pinned
+in VMEM across the inner grid dimension. ``interpret=True`` everywhere -
+the CPU PJRT plugin cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(b_ref, a_ref, theta_ref, grad_ref, dw_ref):
+    """One (node, sample-tile) grid step."""
+    b = b_ref[0]          # (tile_m, p)
+    a = a_ref[0]          # (tile_m,)
+    theta = theta_ref[0]  # (p,)
+    z = b @ theta
+    s = jax.nn.sigmoid(z)
+    delta = s - a
+    dw_ref[0, :] = s * (1.0 - s)
+
+    # Zero the accumulator on the first sample-tile of each node, then
+    # accumulate B^T delta across tiles (output index map is constant in
+    # the tile dimension, so the block stays resident).
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        grad_ref[0, :] = jnp.zeros_like(grad_ref[0, :])
+
+    grad_ref[0, :] += b.T @ delta
+
+
+def pick_tile_m(m: int, cap: int = 128) -> int:
+    """Largest divisor of m that is <= cap. Coarse tiles amortize the
+    per-grid-step overhead of interpret mode while still modelling a
+    VMEM-bounded schedule (tile_m·p·8B per slab on a real TPU)."""
+    best = 1
+    for d in range(1, min(cap, m) + 1):
+        if m % d == 0:
+            best = d
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def logistic_grad_hess(b, a, theta, tile_m=None):
+    """Pallas-fused version of ``ref.logistic_grad_hess_ref``.
+
+    Shapes: b (n, m, p), a (n, m), theta (n, p) ->
+    grad (n, p), dw (n, m).
+    """
+    n, m, p = b.shape
+    if tile_m is None:
+        tile_m = pick_tile_m(m)
+    assert m % tile_m == 0, f"m={m} not divisible by tile_m={tile_m}"
+    grid = (n, m // tile_m)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_m, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile_m), lambda i, j: (i, j)),
+            pl.BlockSpec((1, p), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_m), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), b.dtype),
+            jax.ShapeDtypeStruct((n, m), b.dtype),
+        ],
+        interpret=True,
+    )(b, a, theta)

@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are asserted against in
+``python/tests/test_kernels.py`` (and, transitively, what the rust
+``NativeBackend`` mirrors in f64).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_grad_hess_ref(b, a, theta):
+    """Per-node logistic data-term gradient and Hessian weights.
+
+    Args:
+      b: (n, m, p) feature rows per node (zero rows = padding).
+      a: (n, m) labels in {0, 1} (padding rows contribute nothing since
+         their feature row is zero).
+      theta: (n, p) current iterates.
+
+    Returns:
+      grad_data: (n, p) = B^T (sigma(B theta) - a) per node.
+      dw:        (n, m) = sigma * (1 - sigma) per example.
+    """
+    z = jnp.einsum("nmp,np->nm", b, theta)
+    s = jax.nn.sigmoid(z)
+    delta = s - a
+    grad = jnp.einsum("nmp,nm->np", b, delta)
+    dw = s * (1.0 - s)
+    return grad, dw
+
+
+def quad_apply_ref(p_mat, z):
+    """Batched quadratic Hessian application: (n,p,p),(n,p) -> (n,p) = 2 P z."""
+    return 2.0 * jnp.einsum("nij,nj->ni", p_mat, z)

@@ -1,0 +1,196 @@
+"""L2 JAX model: batched per-node local computations for the dual Newton
+methods (Eq. 6 primal recovery + Eq. 9 local Hessian application).
+
+These are the functions AOT-lowered by ``aot.py`` into
+``artifacts/*.hlo.txt`` and executed from rust via PJRT. They call the L1
+Pallas kernels (``kernels.logistic``, ``kernels.quad``); everything is
+pure HLO ops (no LAPACK custom-calls): the SPD solves are matrix-free CG
+with fixed trip counts, which XLA fuses into a tight scan body.
+
+All computations run in f64 to match the rust native oracle.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import logistic as klog
+from compile.kernels import quad as kquad
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Batched matrix-free conjugate gradients (the SPD p x p solves).
+# ---------------------------------------------------------------------------
+
+def _batched_cg(matvec, rhs, iters):
+    """Solve A x = rhs per node with fixed-iteration CG.
+
+    matvec: (n, p) -> (n, p); rhs: (n, p). Pure lax.fori_loop, no early
+    exit (AOT-friendly fixed trip count). The tiny ridge in the rho
+    denominators guards padded/converged nodes.
+    """
+    x0 = jnp.zeros_like(rhs)
+
+    def body(_, state):
+        x, r, q, rho = state
+        aq = matvec(q)
+        denom = jnp.sum(q * aq, axis=1, keepdims=True)
+        alpha = rho / (denom + 1e-300)
+        x = x + alpha * q
+        r = r - alpha * aq
+        rho_new = jnp.sum(r * r, axis=1, keepdims=True)
+        beta = rho_new / (rho + 1e-300)
+        q = r + beta * q
+        return x, r, q, rho_new
+
+    r0 = rhs
+    rho0 = jnp.sum(r0 * r0, axis=1, keepdims=True)
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, r0, rho0))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Quadratic problems (linear regression / London Schools / RL).
+# ---------------------------------------------------------------------------
+
+def quad_recover(p_mat, c, v, cg_iters):
+    """Primal recovery for quadratic locals: y_i = P_i^{-1}(c_i - v_i/2).
+
+    p_mat: (n, p, p) SPD; c: (n, p); v: (n, p) Lagrangian rows (L Lambda).
+    """
+    rhs = c - 0.5 * v
+    matvec = lambda u: jnp.einsum("nij,nj->ni", p_mat, u)
+    return _batched_cg(matvec, rhs, cg_iters)
+
+
+def quad_recover_pre(p_inv, c, v):
+    """Primal recovery with a precomputed inverse: y_i = P_i^{-1}(c_i - v_i/2).
+
+    The coordinator computes P_i^{-1} once at startup (P_i is constant for
+    quadratic problems), turning every request-path recovery into a single
+    batched matmul instead of a CG solve (see EXPERIMENTS.md §Perf).
+    """
+    rhs = c - 0.5 * v
+    return jnp.einsum("nij,nj->ni", p_inv, rhs)
+
+
+def quad_hess_apply(p_mat, z):
+    """b_i = (2 P_i) z_i via the Pallas kernel."""
+    return kquad.quad_apply(p_mat, z)
+
+
+# ---------------------------------------------------------------------------
+# Logistic problems (MNIST-like / fMRI-like).
+# ---------------------------------------------------------------------------
+
+def _reg_grad(theta, reg_scale, reg, alpha):
+    """Gradient of the regularizer. reg_scale = mu_i * m_i per node (n, 1)."""
+    if reg == "l2":
+        return 2.0 * reg_scale * theta
+    # smooth-L1 (Eq. 73): d/dx = tanh(alpha x / 2)
+    return reg_scale * jnp.tanh(alpha * theta / 2.0)
+
+
+def _reg_hess_diag(theta, reg_scale, reg, alpha):
+    if reg == "l2":
+        return 2.0 * reg_scale * jnp.ones_like(theta)
+    s = jax.nn.sigmoid(alpha * theta)
+    return 2.0 * alpha * reg_scale * s * (1.0 - s)
+
+
+def logreg_hess_apply(b, a, theta, z, reg_scale, reg="l2", alpha=8.0):
+    """b_i = nabla^2 f_i(theta_i) z_i, matrix-free:
+    B^T (d * (B z)) + reg''(theta) * z. Uses the Pallas kernel for the
+    sigmoid weights d.
+    """
+    _, dw = klog.logistic_grad_hess(b, a, theta)
+    bz = jnp.einsum("nmp,np->nm", b, z)
+    data = jnp.einsum("nmp,nm->np", b, dw * bz)
+    return data + _reg_hess_diag(theta, reg_scale, reg, alpha) * z
+
+
+def logreg_recover(
+    b, a, v, reg_scale, theta0=None, reg="l2", alpha=8.0, newton_iters=20,
+    cg_iters=40,
+):
+    """Primal recovery for logistic locals (inner Newton of Eq. 52-54).
+
+    b: (n, m, p); a: (n, m); v: (n, p); reg_scale: (n, 1) = mu_i m_i;
+    theta0: (n, p) warm start (the coordinator passes the previous primal
+    iterate — successive dual iterates are close, so a handful of Newton
+    steps suffice; see EXPERIMENTS.md §Perf).
+    Fixed newton_iters damped-by-CG steps, each assembling the gradient
+    with the Pallas kernel and solving the Newton system matrix-free.
+    """
+
+    def newton_body(_, theta):
+        grad_data, dw = klog.logistic_grad_hess(b, a, theta)
+        grad = grad_data + _reg_grad(theta, reg_scale, reg, alpha) + v
+        hdiag = _reg_hess_diag(theta, reg_scale, reg, alpha)
+
+        def hvp(u):
+            bu = jnp.einsum("nmp,np->nm", b, u)
+            return jnp.einsum("nmp,nm->np", b, dw * bu) + hdiag * u + 1e-10 * u
+
+        step = _batched_cg(hvp, grad, cg_iters)
+        return theta - step
+
+    if theta0 is None:
+        theta0 = jnp.zeros_like(v)
+    return jax.lax.fori_loop(0, newton_iters, newton_body, theta0)
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with static configuration (what aot.py lowers).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cg_iters",))
+def quad_recover_jit(p_mat, c, v, cg_iters=0):
+    return (quad_recover(p_mat, c, v, cg_iters),)
+
+
+@jax.jit
+def quad_recover_pre_jit(p_inv, c, v):
+    return (quad_recover_pre(p_inv, c, v),)
+
+
+@jax.jit
+def quad_hess_apply_jit(p_mat, z):
+    return (quad_hess_apply(p_mat, z),)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reg", "alpha", "newton_iters", "cg_iters")
+)
+def logreg_recover_jit(
+    b, a, v, reg_scale, reg="l2", alpha=8.0, newton_iters=20, cg_iters=40
+):
+    return (
+        logreg_recover(
+            b, a, v, reg_scale, reg=reg, alpha=alpha,
+            newton_iters=newton_iters, cg_iters=cg_iters,
+        ),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reg", "alpha", "newton_iters", "cg_iters")
+)
+def logreg_recover_warm_jit(
+    b, a, v, reg_scale, theta0, reg="l2", alpha=8.0, newton_iters=6,
+    cg_iters=40,
+):
+    return (
+        logreg_recover(
+            b, a, v, reg_scale, theta0=theta0, reg=reg, alpha=alpha,
+            newton_iters=newton_iters, cg_iters=cg_iters,
+        ),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("reg", "alpha"))
+def logreg_hess_apply_jit(b, a, theta, z, reg_scale, reg="l2", alpha=8.0):
+    return (logreg_hess_apply(b, a, theta, z, reg_scale, reg=reg, alpha=alpha),)

@@ -1,0 +1,111 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logistic as klog
+from compile.kernels import quad as kquad
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    m_tiles=st.integers(1, 4),
+    p=st.integers(1, 24),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logistic_kernel_matches_ref(n, m_tiles, p, dtype, seed):
+    m = 8 * m_tiles
+    key = jax.random.PRNGKey(seed)
+    kb, ka, kt = jax.random.split(key, 3)
+    b = rand(kb, (n, m, p), dtype)
+    a = (jax.random.uniform(ka, (n, m)) > 0.5).astype(dtype)
+    theta = rand(kt, (n, p), dtype)
+    g_ref, dw_ref = ref.logistic_grad_hess_ref(b, a, theta)
+    g_pl, dw_pl = klog.logistic_grad_hess(b, a, theta, tile_m=klog.pick_tile_m(m))
+    tol = 1e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(g_pl), np.asarray(g_ref), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(dw_pl), np.asarray(dw_ref), atol=tol, rtol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    p=st.integers(1, 32),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quad_kernel_matches_ref(n, p, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    kp, kz = jax.random.split(key)
+    p_mat = rand(kp, (n, p, p), dtype)
+    z = rand(kz, (n, p), dtype)
+    out_ref = ref.quad_apply_ref(p_mat, z)
+    out_pl = kquad.quad_apply(p_mat, z)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_ref), atol=tol, rtol=tol)
+
+
+def test_logistic_kernel_padding_rows_are_inert():
+    """Zero feature rows (padding) must not change grad regardless of label."""
+    key = jax.random.PRNGKey(0)
+    b = rand(key, (2, 8, 4), jnp.float64)
+    b = b.at[:, 6:, :].set(0.0)
+    a1 = jnp.zeros((2, 8))
+    a2 = a1.at[:, 6:].set(1.0)
+    theta = rand(jax.random.PRNGKey(1), (2, 4), jnp.float64)
+    g1, _ = klog.logistic_grad_hess(b, a1, theta)
+    g2, _ = klog.logistic_grad_hess(b, a2, theta)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-12)
+
+
+def test_tile_sweep_consistency():
+    """Different tile sizes must give identical results."""
+    key = jax.random.PRNGKey(7)
+    b = rand(key, (3, 64, 10), jnp.float64)
+    a = (jax.random.uniform(jax.random.PRNGKey(8), (3, 64)) > 0.5).astype(jnp.float64)
+    theta = rand(jax.random.PRNGKey(9), (3, 10), jnp.float64)
+    outs = [
+        klog.logistic_grad_hess(b, a, theta, tile_m=t) for t in (8, 16, 32, 64)
+    ]
+    for g, dw in outs[1:]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(outs[0][0]), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(outs[0][1]), atol=1e-12)
+
+
+def test_pick_tile_m():
+    assert klog.pick_tile_m(256) == 128
+    assert klog.pick_tile_m(200) == 100
+    assert klog.pick_tile_m(30) == 30
+    assert klog.pick_tile_m(7) == 7
+    assert klog.pick_tile_m(127) == 127
+    assert klog.pick_tile_m(509) == 1  # prime > cap
+
+
+def test_pick_tile_n():
+    assert kquad.pick_tile_n(100) == 25
+    assert kquad.pick_tile_n(8) == 8
+    assert kquad.pick_tile_n(50) == 25
+    assert kquad.pick_tile_n(37) == 1  # prime > cap
+
+
+@pytest.mark.parametrize("extreme", [60.0, -60.0])
+def test_logistic_kernel_extreme_margins(extreme):
+    """Saturated sigmoids must stay finite (no NaN/Inf)."""
+    b = jnp.ones((1, 8, 2), jnp.float64)
+    a = jnp.zeros((1, 8))
+    theta = jnp.full((1, 2), extreme)
+    g, dw = klog.logistic_grad_hess(b, a, theta)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.isfinite(np.asarray(dw)).all()

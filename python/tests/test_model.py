@@ -1,0 +1,107 @@
+"""L2 model correctness: primal recovery + Hessian application."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def spd_batch(key, n, p):
+    b = jax.random.normal(key, (n, p, p), dtype=jnp.float64)
+    return jnp.einsum("nij,nkj->nik", b, b) + p * jnp.eye(p)[None]
+
+
+def test_quad_recover_solves_stationarity():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, p = 5, 7
+    P = spd_batch(k1, n, p)
+    c = jax.random.normal(k2, (n, p), dtype=jnp.float64)
+    v = jax.random.normal(k3, (n, p), dtype=jnp.float64)
+    (y,) = model.quad_recover_jit(P, c, v, cg_iters=2 * p)
+    # grad f + v = 2 P y - 2 c + v = 0.
+    resid = 2 * jnp.einsum("nij,nj->ni", P, y) - 2 * c + v
+    np.testing.assert_allclose(np.asarray(resid), 0.0, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4), p=st.integers(2, 12), seed=st.integers(0, 10**6))
+def test_quad_hess_apply_matches_dense(n, p, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    P = spd_batch(k1, n, p)
+    z = jax.random.normal(k2, (n, p), dtype=jnp.float64)
+    (out,) = model.quad_hess_apply_jit(P, z)
+    expect = 2 * jnp.einsum("nij,nj->ni", P, z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-10)
+
+
+def _logreg_value_grad(b, a, theta, v, reg_scale, reg, alpha):
+    z = jnp.einsum("nmp,np->nm", b, theta)
+    loss = jnp.sum(-a * z + jnp.logaddexp(0.0, z), axis=1)
+    if reg == "l2":
+        r = reg_scale[:, 0] * jnp.sum(theta**2, axis=1)
+    else:
+        sab = (
+            jnp.logaddexp(0.0, -alpha * theta) + jnp.logaddexp(0.0, alpha * theta)
+        ) / alpha
+        r = reg_scale[:, 0] * jnp.sum(sab, axis=1)
+    return jnp.sum(loss + r + jnp.sum(theta * v, axis=1))
+
+
+def test_logreg_recover_stationarity_l2():
+    key = jax.random.PRNGKey(3)
+    kb, ka, kv = jax.random.split(key, 3)
+    n, m, p = 4, 16, 6
+    b = jax.random.normal(kb, (n, m, p), dtype=jnp.float64)
+    a = (jax.random.uniform(ka, (n, m)) > 0.5).astype(jnp.float64)
+    v = 0.5 * jax.random.normal(kv, (n, p), dtype=jnp.float64)
+    rs = jnp.full((n, 1), 0.05 * m, dtype=jnp.float64)
+    (theta,) = model.logreg_recover_jit(
+        b, a, v, rs, reg="l2", newton_iters=25, cg_iters=2 * p
+    )
+    grad = jax.grad(
+        lambda t: _logreg_value_grad(b, a, t, v, rs, "l2", 8.0)
+    )(theta)
+    np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-7)
+
+
+def test_logreg_recover_stationarity_smooth_l1():
+    key = jax.random.PRNGKey(4)
+    kb, ka, kv = jax.random.split(key, 3)
+    n, m, p = 3, 16, 5
+    b = jax.random.normal(kb, (n, m, p), dtype=jnp.float64)
+    a = (jax.random.uniform(ka, (n, m)) > 0.5).astype(jnp.float64)
+    v = 0.3 * jax.random.normal(kv, (n, p), dtype=jnp.float64)
+    rs = jnp.full((n, 1), 0.05 * m, dtype=jnp.float64)
+    (theta,) = model.logreg_recover_jit(
+        b, a, v, rs, reg="sl1", alpha=8.0, newton_iters=30, cg_iters=2 * p
+    )
+    grad = jax.grad(
+        lambda t: _logreg_value_grad(b, a, t, v, rs, "sl1", 8.0)
+    )(theta)
+    np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-6)
+
+
+def test_logreg_hess_apply_matches_autodiff():
+    key = jax.random.PRNGKey(5)
+    kb, ka, kt, kz = jax.random.split(key, 4)
+    n, m, p = 3, 8, 4
+    b = jax.random.normal(kb, (n, m, p), dtype=jnp.float64)
+    a = (jax.random.uniform(ka, (n, m)) > 0.5).astype(jnp.float64)
+    theta = jax.random.normal(kt, (n, p), dtype=jnp.float64)
+    z = jax.random.normal(kz, (n, p), dtype=jnp.float64)
+    rs = jnp.full((n, 1), 0.1 * m, dtype=jnp.float64)
+    (out,) = model.logreg_hess_apply_jit(b, a, theta, z, rs, reg="l2")
+
+    def f_sum(t):
+        zz = jnp.einsum("nmp,np->nm", b, t)
+        loss = jnp.sum(-a * zz + jnp.logaddexp(0.0, zz))
+        return loss + jnp.sum(rs[:, 0] * jnp.sum(t**2, axis=1))
+
+    hvp = jax.jvp(jax.grad(f_sum), (theta,), (z,))[1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(hvp), atol=1e-8)

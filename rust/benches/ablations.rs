@@ -1,0 +1,131 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. inner-solver accuracy ε vs outer iteration count (the ε knob of
+//!    the paper's Lemma 3 / Theorem 1 trade-off);
+//! 2. Eq.-8 first-system strategy: SDDM solve (paper-faithful) vs the
+//!    closed-form centering;
+//! 3. kernel-consistency correction on/off;
+//! 4. chain splitting: lazy (robust) vs faithful (paper Eq. 2);
+//! 5. step size: grid-searched fixed α vs Theorem 1's conservative α*.
+//!
+//!     cargo bench --bench ablations
+
+use sddnewton::algorithms::sdd_newton::{FirstSolve, SddNewton, StepSize};
+use sddnewton::algorithms::solvers::sddm_for_graph;
+use sddnewton::algorithms::{run, RunOptions};
+use sddnewton::benchkit::{result_row, section};
+use sddnewton::graph::generate;
+use sddnewton::net::CommGraph;
+use sddnewton::problems::{assumption1_bounds, datasets};
+use sddnewton::runtime::NativeBackend;
+use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions, Splitting};
+use sddnewton::util::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(31);
+    let g = generate::random_connected(40, 100, &mut rng);
+    let problem = datasets::synthetic_regression(40, 16, 4_000, 0.3, 0.05, &mut rng);
+    let (_, f_star) = problem.centralized_optimum(60, 1e-11);
+    let backend = NativeBackend;
+    let opts = RunOptions { max_iters: 30, ..Default::default() };
+
+    // --- 1. solver ε vs outer iterations --------------------------------
+    section("ablation 1: inner-solver ε vs outer iterations (tol 1e-6)");
+    for eps in [0.5, 0.1, 1e-2, 1e-4] {
+        let solver = sddm_for_graph(&g, eps, &mut rng);
+        let mut alg = SddNewton::new(&problem, &backend, &solver, StepSize::Fixed(1.0));
+        let mut comm = CommGraph::new(&g);
+        let trace = run(&mut alg, &problem, &mut comm, &opts);
+        let iters = trace.iters_to_gap(f_star, 1e-6);
+        result_row(
+            &format!("eps{eps:.0e}"),
+            format!(
+                "{} outer iters, {} messages",
+                iters.map(|i| i.to_string()).unwrap_or("—".into()),
+                trace.messages_to_gap(f_star, 1e-6).map(|m| m.to_string()).unwrap_or("—".into())
+            ),
+        );
+    }
+
+    // --- 2. first-system strategy ---------------------------------------
+    section("ablation 2: Eq.-8 first system — SDDM solve vs closed-form centering");
+    for (name, fs) in [("solver", FirstSolve::Solver), ("centering", FirstSolve::Centering)] {
+        let solver = sddm_for_graph(&g, 1e-4, &mut rng);
+        let mut alg = SddNewton::new(&problem, &backend, &solver, StepSize::Fixed(1.0))
+            .with_first_solve(fs);
+        let mut comm = CommGraph::new(&g);
+        let trace = run(&mut alg, &problem, &mut comm, &opts);
+        result_row(
+            &format!("first_solve/{name}"),
+            format!(
+                "final gap {:.2e}, {} messages",
+                (trace.final_objective() - f_star).abs() / f_star.abs(),
+                comm.stats().messages
+            ),
+        );
+    }
+
+    // --- 3. kernel correction -------------------------------------------
+    section("ablation 3: kernel-consistency correction");
+    for on in [true, false] {
+        let solver = sddm_for_graph(&g, 1e-4, &mut rng);
+        let mut alg = SddNewton::new(&problem, &backend, &solver, StepSize::Fixed(1.0))
+            .with_kernel_correction(on);
+        let mut comm = CommGraph::new(&g);
+        let trace = run(&mut alg, &problem, &mut comm, &opts);
+        result_row(
+            &format!("kernel_correction/{on}"),
+            format!(
+                "iters to 1e-6: {}, final gap {:.2e}",
+                trace.iters_to_gap(f_star, 1e-6).map(|i| i.to_string()).unwrap_or("—".into()),
+                (trace.final_objective() - f_star).abs() / f_star.abs()
+            ),
+        );
+    }
+
+    // --- 4. chain splitting ----------------------------------------------
+    section("ablation 4: chain splitting (lazy vs faithful) on a bipartite grid");
+    let grid = generate::grid(6, 6);
+    let l = sddnewton::graph::laplacian_csr(&grid);
+    let z = rng.normal_vec(36);
+    let b = l.matvec(&z);
+    for (name, sp) in [("lazy", Splitting::Lazy), ("faithful", Splitting::Faithful)] {
+        let chain = Chain::build(
+            &l,
+            &ChainOptions { splitting: sp, ..Default::default() },
+            &mut rng,
+        )
+        .unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 400 });
+        let mut stats = sddnewton::net::CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        result_row(
+            &format!("splitting/{name}"),
+            format!(
+                "depth {} λ₂ {:.4} converged={} rel={:.1e} msgs={}",
+                solver.chain.depth, solver.chain.lambda2, out.converged, out.rel_residual,
+                stats.messages
+            ),
+        );
+    }
+
+    // --- 5. step size ------------------------------------------------------
+    section("ablation 5: fixed α vs Theorem 1's α*");
+    let thetas0 = vec![0.0; 40 * 16];
+    let (gamma, big_gamma) = assumption1_bounds(&problem, &thetas0);
+    let lcsr = sddnewton::graph::laplacian_csr(&g);
+    let mun = sddnewton::graph::spectral::mu_max(&lcsr, 1e-9, 5000, &mut rng).value;
+    let mu2 = sddnewton::graph::spectral::mu_2(&lcsr, 1e-9, 50_000, &mut rng).value;
+    let theory = StepSize::Theory { gamma, big_gamma, mu2, mun, eps: 0.1 };
+    result_row("alpha_star", format!("{:.3e} (γ={gamma:.2} Γ={big_gamma:.2} μ₂={mu2:.3} μₙ={mun:.3})", theory.value()));
+    for (name, step) in [("fixed_1.0", StepSize::Fixed(1.0)), ("theory", theory)] {
+        let solver = sddm_for_graph(&g, 0.1, &mut rng);
+        let mut alg = SddNewton::new(&problem, &backend, &solver, step);
+        let mut comm = CommGraph::new(&g);
+        let trace = run(&mut alg, &problem, &mut comm, &RunOptions { max_iters: 20, ..Default::default() });
+        result_row(
+            &format!("step/{name}"),
+            format!("final gap {:.2e}", (trace.final_objective() - f_star).abs() / f_star.abs()),
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! Regenerates Fig. 1(c–f): MNIST-like logistic regression with L1
+//! (smoothed) and L2 regularizers, 10 nodes / 20 edges / p = 150.
+//!
+//!     cargo bench --bench fig1_mnist
+
+use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::config::ExperimentConfig;
+use sddnewton::harness::{report, run_experiment};
+
+fn main() {
+    for name in ["fig1-mnist-l2", "fig1-mnist-l1"] {
+        section(&format!("Fig 1({}): {name}, n=10 m=20 p=150",
+            if name.ends_with("l2") { "e,f" } else { "c,d" }));
+        let mut cfg = ExperimentConfig::preset(name).unwrap();
+        cfg.max_iters = 30;
+        // The paper keeps "the most successful algorithms from previous
+        // experiments" for this figure.
+        cfg.algorithms.truncate(4);
+        let mut res = None;
+        bench(&format!("{name}/all-algorithms"), &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
+            res = Some(run_experiment(&cfg));
+        });
+        let res = res.unwrap();
+        print!("{}", report::summary_table(&res));
+        std::fs::create_dir_all("results").ok();
+        report::write_csv(&res, format!("results/{name}.csv")).unwrap();
+        for (alg, iters) in report::iters_table(&res, 1e-3) {
+            result_row(
+                &format!("{name}/iters_to_1e-3/{alg}"),
+                iters.map(|i| i.to_string()).unwrap_or_else(|| "not reached".into()),
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,87 @@
+//! Regenerates Fig. 2(c,d): communication overhead vs accuracy demand,
+//! and running time till convergence, on the London-Schools-like task.
+//!
+//! Paper shape: SDD-Newton's message growth tracks the graph condition
+//! number (slow growth in log(1/ε)) while first-order methods' message
+//! counts blow up much faster as ε tightens; SDD-Newton has the fastest
+//! wall-clock to convergence.
+//!
+//!     cargo bench --bench fig2_comm
+
+use sddnewton::benchkit::{result_row, section};
+use sddnewton::config::{AlgoKind, ExperimentConfig};
+use sddnewton::harness::experiments::comm_overhead_experiment;
+use sddnewton::harness::{report, run_experiment};
+use sddnewton::util::Timer;
+
+fn main() {
+    // --- Fig 2(c): messages to reach accuracy ε -------------------------
+    section("Fig 2(c): communication overhead vs accuracy (London Schools)");
+    let mut cfg = ExperimentConfig::preset("fig2-comm").unwrap();
+    // First-order methods need O(1/ε) iterations; give them room.
+    cfg.max_iters = 20_000;
+    // Reduced instance keeps the 20k-iteration first-order runs tractable.
+    cfg.nodes = 30;
+    cfg.edges = 90;
+    cfg.algorithms = vec![
+        AlgoKind::SddNewton { eps: 0.1, alpha: 1.0 },
+        AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+        AlgoKind::Admm { beta: 1.0 },
+        AlgoKind::Gradient { alpha: 0.02 },
+        AlgoKind::Averaging { beta: 0.002 },
+    ];
+    let targets = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5];
+    let rows = comm_overhead_experiment(&cfg, &targets);
+    println!(
+        "{:<28} {}",
+        "algorithm",
+        targets.iter().map(|t| format!("{t:>12.0e}")).collect::<String>()
+    );
+    for (name, cells) in &rows {
+        let mut line = format!("{name:<28} ");
+        for (_, msgs) in cells {
+            match msgs {
+                Some(m) => line.push_str(&format!("{m:>12}")),
+                None => line.push_str(&format!("{:>12}", "—")),
+            }
+        }
+        println!("{line}");
+        if let (Some(first), Some(last)) = (cells.first().and_then(|c| c.1), cells.last().and_then(|c| c.1)) {
+            result_row(
+                &format!("fig2c/growth/{name}"),
+                format!("{first} → {last} ({}x)", last / first.max(1)),
+            );
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    report::write_comm_csv(&rows, "results/fig2_comm.csv").unwrap();
+
+    // --- Fig 2(d): running time till convergence ------------------------
+    section("Fig 2(d): running time till convergence (gap ≤ 1e-5)");
+    let mut tcfg = cfg.clone();
+    tcfg.max_iters = 1200;
+    let t = Timer::start();
+    let res = run_experiment(&tcfg);
+    let _total = t.secs();
+    for trace in &res.traces {
+        // Wall-clock at the first converged iterate.
+        let conv = trace
+            .records
+            .iter()
+            .find(|r| {
+                (r.objective - res.f_star).abs() / res.f_star.abs().max(1.0) <= 1e-5
+                    && r.consensus_error
+                        <= 1e-5 * trace.records[0].consensus_error.max(1.0)
+            })
+            .map(|r| r.elapsed);
+        match conv {
+            Some(s) => result_row(&format!("fig2d/time_s/{}", trace.algorithm), format!("{s:.3}")),
+            None => result_row(
+                &format!("fig2d/time_s/{}", trace.algorithm),
+                format!("not converged in {} iters ({:.1}s)",
+                    trace.records.len() - 1,
+                    trace.records.last().unwrap().elapsed),
+            ),
+        }
+    }
+}

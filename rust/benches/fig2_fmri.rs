@@ -1,0 +1,43 @@
+//! Regenerates Fig. 2(a,b): sparse fMRI-like logistic regression with
+//! smoothed-L1 regularization — the m ≪ p regime (240 samples, p = 512
+//! here standing in for the paper's 43 720 voxels; see DESIGN.md §5).
+//!
+//! Paper shape: SDD-Newton best; ADD-Newton second; ADMM and averaging
+//! worst.
+//!
+//!     cargo bench --bench fig2_fmri
+
+use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::config::ExperimentConfig;
+use sddnewton::harness::{report, run_experiment};
+
+fn main() {
+    section("Fig 2(a,b): fMRI-like sparse logistic (m ≪ p), n=8 m=16 p=512");
+    let mut cfg = ExperimentConfig::preset("fig2-fmri").unwrap();
+    cfg.max_iters = 20;
+    let mut res = None;
+    bench("fig2_fmri/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
+        res = Some(run_experiment(&cfg));
+    });
+    let res = res.unwrap();
+    print!("{}", report::summary_table(&res));
+    std::fs::create_dir_all("results").ok();
+    report::write_csv(&res, "results/fig2_fmri.csv").unwrap();
+
+    // Ranking by final gap — the paper's qualitative claim.
+    let mut gaps: Vec<(String, f64)> = res
+        .traces
+        .iter()
+        .map(|t| {
+            (
+                t.algorithm.clone(),
+                ((t.final_objective() - res.f_star).abs() / res.f_star.abs())
+                    .max(t.final_consensus_error() / res.traces[0].records[0].consensus_error.max(1.0)),
+            )
+        })
+        .collect();
+    gaps.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (i, (name, gap)) in gaps.iter().enumerate() {
+        result_row(&format!("fig2_fmri/rank{}", i + 1), format!("{name} (score {gap:.2e})"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Regenerates Fig. 3(a,b): objective and consensus error on the
+//! London-Schools-like regression task (15 362 instances, 139 school
+//! blocks, 27 features).
+//!
+//!     cargo bench --bench fig3_london
+
+use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::config::ExperimentConfig;
+use sddnewton::harness::{report, run_experiment};
+
+fn main() {
+    section("Fig 3(a,b): London Schools regression, n=50 m=150 p=27");
+    let mut cfg = ExperimentConfig::preset("fig3-london").unwrap();
+    cfg.max_iters = 60;
+    let mut res = None;
+    bench("fig3_london/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
+        res = Some(run_experiment(&cfg));
+    });
+    let res = res.unwrap();
+    print!("{}", report::summary_table(&res));
+    std::fs::create_dir_all("results").ok();
+    report::write_csv(&res, "results/fig3_london.csv").unwrap();
+    println!("{}", report::ascii_plot(&res.traces, res.f_star, 72, 16));
+    for (alg, iters) in report::iters_table(&res, 1e-4) {
+        result_row(
+            &format!("fig3ab/iters_to_1e-4/{alg}"),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "not reached".into()),
+        );
+    }
+}

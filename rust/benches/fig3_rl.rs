@@ -1,0 +1,30 @@
+//! Regenerates Fig. 3(c,d): reinforcement-learning policy search on the
+//! double cart-pole via reward-weighted regression (H.3), rollouts from
+//! the built-in DCP simulator.
+//!
+//!     cargo bench --bench fig3_rl
+
+use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::config::ExperimentConfig;
+use sddnewton::harness::{report, run_experiment};
+
+fn main() {
+    section("Fig 3(c,d): RL double cart-pole, n=20 m=50, 2000 rollouts × 50 steps");
+    let mut cfg = ExperimentConfig::preset("fig3-rl").unwrap();
+    cfg.max_iters = 40;
+    let mut res = None;
+    bench("fig3_rl/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
+        res = Some(run_experiment(&cfg));
+    });
+    let res = res.unwrap();
+    print!("{}", report::summary_table(&res));
+    std::fs::create_dir_all("results").ok();
+    report::write_csv(&res, "results/fig3_rl.csv").unwrap();
+    println!("{}", report::ascii_plot(&res.traces, res.f_star, 72, 16));
+    for (alg, iters) in report::iters_table(&res, 1e-4) {
+        result_row(
+            &format!("fig3cd/iters_to_1e-4/{alg}"),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "not reached".into()),
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! SDDM-solver scaling study (supporting material for Section 2):
+//! solve time / message complexity vs graph size, accuracy, and topology.
+//!
+//!     cargo bench --bench sddm_solver
+
+use sddnewton::algorithms::solvers::sddm_for_graph;
+use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::net::CommStats;
+use sddnewton::util::Pcg64;
+
+fn main() {
+    section("SDDM solver scaling: random graphs, eps = 1e-6");
+    for &(n, m) in &[(50usize, 125usize), (100, 250), (200, 500), (400, 1000)] {
+        let mut rng = Pcg64::new(n as u64);
+        let g = generate::random_connected(n, m, &mut rng);
+        let l = laplacian_csr(&g);
+        let solver = sddm_for_graph(&g, 1e-6, &mut rng);
+        let z = rng.normal_vec(n);
+        let b = l.matvec(&z);
+        let mut msgs = 0u64;
+        let s = bench(
+            &format!("sddm/n{n}_m{m}"),
+            &BenchOpts { warmup_iters: 1, sample_iters: 5 },
+            || {
+                let mut stats = CommStats::default();
+                let out = solver.solve(&b, 1, &mut stats);
+                assert!(out.converged);
+                msgs = stats.messages;
+            },
+        );
+        result_row(&format!("sddm/n{n}/depth"), solver.chain.depth);
+        result_row(&format!("sddm/n{n}/lambda2"), format!("{:.4}", solver.chain.lambda2));
+        result_row(&format!("sddm/n{n}/messages"), msgs);
+        result_row(&format!("sddm/n{n}/median_s"), format!("{:.5}", s.median));
+    }
+
+    section("SDDM solver vs accuracy (n=100, m=250)");
+    let mut rng = Pcg64::new(77);
+    let g = generate::random_connected(100, 250, &mut rng);
+    let l = laplacian_csr(&g);
+    let z = rng.normal_vec(100);
+    let b = l.matvec(&z);
+    for eps in [1e-1, 1e-2, 1e-4, 1e-6, 1e-8] {
+        let solver = sddm_for_graph(&g, eps, &mut rng);
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged);
+        result_row(
+            &format!("sddm/eps{eps:.0e}"),
+            format!("{} messages, {} sweeps", stats.messages, out.sweeps),
+        );
+    }
+
+    section("SDDM solver vs topology (n=64, eps=1e-6)");
+    for (name, g) in [
+        ("complete", generate::complete(64)),
+        ("random", generate::random_connected(64, 160, &mut rng)),
+        ("grid8x8", generate::grid(8, 8)),
+        ("cycle", generate::cycle(64)),
+    ] {
+        let l = laplacian_csr(&g);
+        let solver = sddm_for_graph(&g, 1e-6, &mut rng);
+        let z = rng.normal_vec(64);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let t = sddnewton::util::Timer::start();
+        let out = solver.solve(&b, 1, &mut stats);
+        result_row(
+            &format!("sddm/topology/{name}"),
+            format!(
+                "depth {} λ₂ {:.4} → {} messages, {} sweeps, {:.1} ms (converged={})",
+                solver.chain.depth,
+                solver.chain.lambda2,
+                stats.messages,
+                out.sweeps,
+                t.millis(),
+                out.converged
+            ),
+        );
+    }
+
+    section("Batched multi-RHS solves (n=100, m=250, eps=1e-6)");
+    let solver = sddm_for_graph(&g_random(), 1e-6, &mut rng);
+    for w in [1usize, 8, 32, 80] {
+        let n = 100;
+        let l = laplacian_csr(&g_random());
+        let mut bm = vec![0.0; n * w];
+        for j in 0..w {
+            let zc = rng.normal_vec(n);
+            let col = l.matvec(&zc);
+            for i in 0..n {
+                bm[i * w + j] = col[i];
+            }
+        }
+        let mut stats = CommStats::default();
+        let s = bench(
+            &format!("sddm/multirhs_w{w}"),
+            &BenchOpts { warmup_iters: 1, sample_iters: 3 },
+            || {
+                let mut st = CommStats::default();
+                let out = solver.solve(&bm, w, &mut st);
+                assert!(out.converged);
+                stats = st;
+            },
+        );
+        result_row(
+            &format!("sddm/multirhs_w{w}"),
+            format!("{} messages, {:.5}s median", stats.messages, s.median),
+        );
+    }
+}
+
+fn g_random() -> sddnewton::graph::Graph {
+    let mut rng = Pcg64::new(4242);
+    generate::random_connected(100, 250, &mut rng)
+}

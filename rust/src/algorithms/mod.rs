@@ -1,0 +1,198 @@
+//! The six consensus algorithms evaluated in the paper.
+//!
+//! | Module | Paper name | Kind |
+//! |---|---|---|
+//! | [`sdd_newton`] | Distributed SDD-Newton (the contribution) | dual 2nd-order |
+//! | [`sdd_newton`] w/ [`solvers::NeumannSolver`] | Distributed Newton ADD [8] | dual 2nd-order |
+//! | [`admm`] | Distributed ADMM [2] | dual decomposition |
+//! | [`gradient`] | Distributed (sub)gradients [1] | primal 1st-order |
+//! | [`averaging`] | Distributed averaging [13] | primal 1st-order |
+//! | [`network_newton`] | Network Newton-K [9,10] | penalty 2nd-order |
+//!
+//! All algorithms interact with other nodes *only* through
+//! [`crate::net::CommGraph`], so reported message counts are exact.
+
+pub mod solvers;
+pub mod sdd_newton;
+pub mod incremental;
+pub mod admm;
+pub mod gradient;
+pub mod averaging;
+pub mod network_newton;
+
+use crate::net::{CommGraph, CommStats};
+use crate::problems::ConsensusProblem;
+
+/// One row of a convergence trace.
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    /// Outer iteration index (0 = initial point).
+    pub iter: usize,
+    /// Global objective Σ f_i(θ_i) at the stacked iterate.
+    pub objective: f64,
+    /// Consensus error √(Σ‖θ_i − θ̄‖²).
+    pub consensus_error: f64,
+    /// Cumulative communication at the *end* of this iteration.
+    pub comm: CommStats,
+    /// Wall-clock seconds since the run started.
+    pub elapsed: f64,
+}
+
+/// A full run trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub algorithm: String,
+    pub records: Vec<IterRecord>,
+    /// Final stacked per-node iterate (n×p) — lets callers evaluate the
+    /// consensus solution (e.g. `objective_at(mean)` scoring, policy
+    /// evaluation) without re-running.
+    pub final_thetas: Vec<f64>,
+}
+
+impl Trace {
+    /// Final objective.
+    pub fn final_objective(&self) -> f64 {
+        self.records.last().map(|r| r.objective).unwrap_or(f64::NAN)
+    }
+
+    /// Final consensus error.
+    pub fn final_consensus_error(&self) -> f64 {
+        self.records.last().map(|r| r.consensus_error).unwrap_or(f64::NAN)
+    }
+
+    /// Convergence test at a record: |objective gap| within `tol`
+    /// (relative to f*) AND consensus error reduced below `tol` relative
+    /// to its starting magnitude. A non-consensus iterate can undershoot
+    /// the consensus optimum (Σ f_i(θ_i) < F(θ*)), so the objective test
+    /// alone would be meaningless.
+    fn converged_at(&self, r: &IterRecord, f_star: f64, tol: f64) -> bool {
+        let scale = f_star.abs().max(1.0);
+        let ce0 = self.records[0].consensus_error.max(1e-12);
+        (r.objective - f_star).abs() / scale <= tol && r.consensus_error <= tol * ce0.max(1.0)
+    }
+
+    /// First iteration that satisfies [`Self::converged_at`], if any.
+    pub fn iters_to_gap(&self, f_star: f64, tol: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| self.converged_at(r, f_star, tol))
+            .map(|r| r.iter)
+    }
+
+    /// Messages used up to the first converged iteration.
+    pub fn messages_to_gap(&self, f_star: f64, tol: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| self.converged_at(r, f_star, tol))
+            .map(|r| r.comm.messages)
+    }
+}
+
+/// The common interface: one outer iteration at a time, exposing the
+/// stacked per-node primal iterate for metric collection.
+pub trait ConsensusAlgorithm {
+    /// Display name (matches the paper's legend).
+    fn name(&self) -> String;
+    /// Perform one outer iteration.
+    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph);
+    /// Current stacked per-node iterate (row-major n×p).
+    fn thetas(&self) -> &[f64];
+}
+
+/// Stop conditions for [`run`].
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Maximum outer iterations.
+    pub max_iters: usize,
+    /// Stop when the relative objective gap to `f_star` drops below this
+    /// (requires `f_star`).
+    pub gap_tol: Option<f64>,
+    /// Optimal value for gap-based stopping / reporting.
+    pub f_star: Option<f64>,
+    /// Stop when cumulative messages exceed this budget.
+    pub message_budget: Option<u64>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { max_iters: 100, gap_tol: None, f_star: None, message_budget: None }
+    }
+}
+
+/// Drive an algorithm, collecting a trace (record 0 is the initial point).
+pub fn run(
+    alg: &mut dyn ConsensusAlgorithm,
+    problem: &ConsensusProblem,
+    comm: &mut CommGraph,
+    opts: &RunOptions,
+) -> Trace {
+    let timer = crate::util::Timer::start();
+    let mut records = Vec::with_capacity(opts.max_iters + 1);
+    let snapshot = |alg: &dyn ConsensusAlgorithm, comm: &CommGraph, it: usize, t: f64| IterRecord {
+        iter: it,
+        objective: problem.objective(alg.thetas()),
+        consensus_error: problem.consensus_error(alg.thetas()),
+        comm: *comm.stats(),
+        elapsed: t,
+    };
+    records.push(snapshot(alg, comm, 0, timer.secs()));
+    for it in 1..=opts.max_iters {
+        alg.step(problem, comm);
+        let rec = snapshot(alg, comm, it, timer.secs());
+        let done_gap = match (opts.gap_tol, opts.f_star) {
+            (Some(tol), Some(fs)) => (rec.objective - fs) / fs.abs().max(1.0) <= tol,
+            _ => false,
+        };
+        let done_budget = opts
+            .message_budget
+            .map(|b| rec.comm.messages >= b)
+            .unwrap_or(false);
+        records.push(rec);
+        if done_gap || done_budget {
+            break;
+        }
+    }
+    Trace { algorithm: alg.name(), records, final_thetas: alg.thetas().to_vec() }
+}
+
+/// Metropolis–Hastings doubly-stochastic weights over a graph:
+/// `w_ij = 1/(1+max(d_i,d_j))` for edges, `w_ii = 1 − Σ_j w_ij`.
+/// Shared by the first-order baselines and Network Newton.
+pub fn metropolis_weights(g: &crate::graph::Graph) -> Vec<Vec<(usize, f64)>> {
+    let n = g.n;
+    let mut w: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let mut self_w = 1.0;
+        for &j in g.neighbors(i) {
+            let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            w[i].push((j, wij));
+            self_w -= wij;
+        }
+        w[i].push((i, self_w));
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn metropolis_rows_stochastic_and_symmetric() {
+        let mut rng = crate::util::Pcg64::new(81);
+        let g = generate::random_connected(12, 25, &mut rng);
+        let w = metropolis_weights(&g);
+        for i in 0..12 {
+            let s: f64 = w[i].iter().map(|(_, v)| v).sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            for &(j, v) in &w[i] {
+                assert!(v > 0.0);
+                if j != i {
+                    let back = w[j].iter().find(|(k, _)| *k == i).unwrap().1;
+                    assert!((back - v).abs() < 1e-12);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Network Newton-K (Mokhtari, Ling & Ribeiro [9,10]).
+//!
+//! Penalty reformulation: minimize
+//! `Φ(y) = ½ yᵀ(I − Z)y + α Σ_i f_i(y_i)` with `Z` the Metropolis weight
+//! matrix (lifted blockwise to R^{np}). Gradient
+//! `g_i = (1 − z_ii) y_i − Σ_{j∈N(i)} z_ij y_j + α ∇f_i(y_i)`; Hessian
+//! `H = I − Z + α G` is split `H = D − B` with
+//! `D_i = α ∇²f_i + 2(1 − z_ii) I` and `B_ij = z_ij I (i≠j)`,
+//! `B_ii = (1 − z_ii) I`, and the NN-K direction truncates the Neumann
+//! series `d^{(k+1)} = D⁻¹(B d^{(k)} − g)`, `d^{(0)} = −D⁻¹ g`.
+//! Each hop costs one exchange round. Note the fixed penalty biases the
+//! limit away from the exact consensus optimum — visible in Fig. 1 where
+//! NN-1/2 stall above the others.
+
+use super::{metropolis_weights, ConsensusAlgorithm};
+use crate::net::CommGraph;
+use crate::problems::ConsensusProblem;
+
+/// Network Newton state.
+pub struct NetworkNewton {
+    /// Taylor truncation K (1 or 2 in the paper's experiments).
+    pub k_hops: usize,
+    /// Penalty weight α.
+    pub alpha: f64,
+    /// Step size ε.
+    pub epsilon: f64,
+    thetas: Vec<f64>,
+    weights: Vec<Vec<(usize, f64)>>,
+    p: usize,
+}
+
+impl NetworkNewton {
+    /// Initialize at θ = 0.
+    pub fn new(
+        problem: &ConsensusProblem,
+        g: &crate::graph::Graph,
+        k_hops: usize,
+        alpha: f64,
+        epsilon: f64,
+    ) -> NetworkNewton {
+        NetworkNewton {
+            k_hops,
+            alpha,
+            epsilon,
+            thetas: vec![0.0; problem.n() * problem.p],
+            weights: metropolis_weights(g),
+            p: problem.p,
+        }
+    }
+
+    fn self_weight(&self, i: usize) -> f64 {
+        self.weights[i].iter().find(|(j, _)| *j == i).unwrap().1
+    }
+}
+
+impl ConsensusAlgorithm for NetworkNewton {
+    fn name(&self) -> String {
+        format!("Network Newton-{}", self.k_hops)
+    }
+
+    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
+        let p = self.p;
+        let n = problem.n();
+
+        // Penalty gradient (one exchange round on y).
+        let gathered = comm.gather_neighbors(&self.thetas, p);
+        let mut g = vec![0.0; n * p];
+        for i in 0..n {
+            let zii = self.self_weight(i);
+            let grad_f = problem.locals[i].gradient(&self.thetas[i * p..(i + 1) * p]);
+            for r in 0..p {
+                g[i * p + r] = (1.0 - zii) * self.thetas[i * p + r] + self.alpha * grad_f[r];
+            }
+            for (j, payload) in &gathered[i] {
+                let zij = self.weights[i].iter().find(|(jj, _)| jj == j).unwrap().1;
+                for r in 0..p {
+                    g[i * p + r] -= zij * payload[r];
+                }
+            }
+        }
+
+        // Block solves with D_i = α ∇²f_i + 2(1 − z_ii) I, expressed through
+        // the structured `solve_shifted`: (αH + cI)x = r ⇔ (H + (c/α)I)x = r/α.
+        let d_solve = |i: usize, thetas: &[f64], rhs: &[f64]| -> Vec<f64> {
+            let zii = self.self_weight(i);
+            let c = 2.0 * (1.0 - zii);
+            let scaled: Vec<f64> = rhs.iter().map(|v| v / self.alpha).collect();
+            problem.locals[i].solve_shifted(
+                &thetas[i * p..(i + 1) * p],
+                &scaled,
+                c / self.alpha,
+            )
+        };
+
+        // d⁰ = −D⁻¹ g; d^{k+1} = D⁻¹(B d^k − g). Each hop: 1 exchange round.
+        let mut d = vec![0.0; n * p];
+        for i in 0..n {
+            let sol = d_solve(i, &self.thetas, &g[i * p..(i + 1) * p]);
+            for r in 0..p {
+                d[i * p + r] = -sol[r];
+            }
+        }
+        for _ in 0..self.k_hops {
+            let gathered_d = comm.gather_neighbors(&d, p);
+            let mut next = vec![0.0; n * p];
+            for i in 0..n {
+                let zii = self.self_weight(i);
+                // (B d)_i = (1 − z_ii) d_i + Σ_j z_ij d_j.
+                let mut bd = vec![0.0; p];
+                for r in 0..p {
+                    bd[r] = (1.0 - zii) * d[i * p + r];
+                }
+                for (j, payload) in &gathered_d[i] {
+                    let zij = self.weights[i].iter().find(|(jj, _)| jj == j).unwrap().1;
+                    for r in 0..p {
+                        bd[r] += zij * payload[r];
+                    }
+                }
+                for r in 0..p {
+                    bd[r] -= g[i * p + r];
+                }
+                let sol = d_solve(i, &self.thetas, &bd);
+                next[i * p..(i + 1) * p].copy_from_slice(&sol);
+            }
+            d = next;
+        }
+
+        for idx in 0..n * p {
+            self.thetas[idx] += self.epsilon * d[idx];
+        }
+    }
+
+    fn thetas(&self) -> &[f64] {
+        &self.thetas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run, RunOptions};
+    use crate::graph::generate;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn nn_descends_but_biased() {
+        let mut rng = Pcg64::new(141);
+        let g = generate::random_connected(8, 16, &mut rng);
+        let prob = datasets::synthetic_regression(8, 4, 160, 0.1, 0.05, &mut rng);
+        let (_, f_star) = prob.centralized_optimum(60, 1e-10);
+        let mut alg = NetworkNewton::new(&prob, &g, 2, 0.1, 1.0);
+        let mut comm = crate::net::CommGraph::new(&g);
+        let trace = run(
+            &mut alg,
+            &prob,
+            &mut comm,
+            &RunOptions { max_iters: 200, ..Default::default() },
+        );
+        let objs: Vec<f64> = trace.records.iter().map(|r| r.objective).collect();
+        assert!(objs.last().unwrap() < &objs[1], "no descent");
+        // Penalty bias: it should NOT match the exact optimum to high
+        // precision with a fixed α.
+        let gap = (trace.final_objective() - f_star).abs() / f_star.abs().max(1.0);
+        assert!(gap > 1e-8, "unexpectedly exact for a penalty method: {gap}");
+    }
+
+    #[test]
+    fn nn2_uses_more_rounds_than_nn1() {
+        let mut rng = Pcg64::new(142);
+        let g = generate::random_connected(6, 10, &mut rng);
+        let prob = datasets::synthetic_regression(6, 3, 60, 0.1, 0.05, &mut rng);
+        let mut comm1 = crate::net::CommGraph::new(&g);
+        let mut nn1 = NetworkNewton::new(&prob, &g, 1, 0.1, 1.0);
+        nn1.step(&prob, &mut comm1);
+        let mut comm2 = crate::net::CommGraph::new(&g);
+        let mut nn2 = NetworkNewton::new(&prob, &g, 2, 0.1, 1.0);
+        nn2.step(&prob, &mut comm2);
+        assert!(comm2.stats().rounds > comm1.stats().rounds);
+        assert_eq!(comm1.stats().rounds, 2); // gradient + 1 hop
+        assert_eq!(comm2.stats().rounds, 3); // gradient + 2 hops
+    }
+}

@@ -1,0 +1,258 @@
+//! Inner Laplacian-system solvers used by the dual Newton methods.
+//!
+//! The SDD-Newton contribution plugs the Peng–Spielman SDDM solver into
+//! the inner solves of Eq. 8/9; the "Distributed Newton ADD" baseline [8]
+//! replaces it with an N-term Taylor/Neumann expansion of the Laplacian
+//! pseudo-inverse; CG (with kernel projection) provides an exact-direction
+//! oracle for ablations.
+
+use crate::linalg::cg::{cg_solve, CgOptions};
+use crate::linalg::Csr;
+use crate::net::{CommGraph, CommStats};
+use crate::sddm::{SddmSolver, SolveOutcome};
+
+/// A distributed solver for Laplacian systems `L x_r = b_r`, batched over
+/// `w` right-hand sides (stacked row-major `n × w`).
+pub trait LaplacianSolver: Send + Sync {
+    /// Solve, recording communication into `stats`.
+    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome;
+    /// Display name for traces.
+    fn name(&self) -> &'static str;
+}
+
+impl LaplacianSolver for SddmSolver {
+    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
+        SddmSolver::solve(self, b, w, stats)
+    }
+    fn name(&self) -> &'static str {
+        "sddm"
+    }
+}
+
+/// ADD-style truncated Neumann solver: with the splitting `L = D − A`,
+/// `L⁺ b ≈ Σ_{k=0}^{N} (D⁻¹A)^k D⁻¹ b` on the mean-zero subspace. Each
+/// term is one neighbor-exchange round. The error is *fixed* by N — it
+/// cannot be driven to arbitrary ε, which is exactly the accuracy gap the
+/// paper exploits (Section 6's comparison to distributed Newton ADD).
+pub struct NeumannSolver {
+    /// Number of expansion terms beyond the diagonal (N).
+    pub terms: usize,
+    /// Degree vector D (Laplacian diagonal).
+    pub degrees: Vec<f64>,
+    /// Adjacency CSR (A).
+    pub adjacency: Csr,
+    /// Undirected edge count (for message accounting).
+    pub m_edges: usize,
+}
+
+impl NeumannSolver {
+    /// Build from a graph.
+    pub fn from_graph(g: &crate::graph::Graph, terms: usize) -> NeumannSolver {
+        NeumannSolver {
+            terms,
+            degrees: crate::graph::laplacian::degrees(g),
+            adjacency: crate::graph::laplacian::adjacency_csr(g),
+            m_edges: g.m(),
+        }
+    }
+
+    fn center(&self, v: &mut [f64], w: usize, stats: &mut CommStats) {
+        let n = self.degrees.len();
+        for j in 0..w {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += v[i * w + j];
+            }
+            let mean = s / n as f64;
+            for i in 0..n {
+                v[i * w + j] -= mean;
+            }
+        }
+        stats.record_allreduce(n, w);
+    }
+}
+
+impl LaplacianSolver for NeumannSolver {
+    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
+        let n = self.degrees.len();
+        assert_eq!(b.len(), n * w);
+        // term_0 = D^{-1} b;  x = Σ_k term_k;  term_{k+1} = D^{-1} A term_k.
+        let mut term = vec![0.0; n * w];
+        for i in 0..n {
+            for j in 0..w {
+                term[i * w + j] = b[i * w + j] / self.degrees[i];
+            }
+        }
+        let mut x = term.clone();
+        let mut tmp = vec![0.0; n * w];
+        for _ in 0..self.terms {
+            self.adjacency.matvec_multi_into(&term, w, &mut tmp);
+            stats.record_edge_round(self.m_edges, w);
+            for i in 0..n {
+                for j in 0..w {
+                    term[i * w + j] = tmp[i * w + j] / self.degrees[i];
+                }
+            }
+            for i in 0..n * w {
+                x[i] += term[i];
+            }
+        }
+        self.center(&mut x, w, stats);
+        // Residual for reporting (not used for control — N is fixed).
+        SolveOutcome { x, sweeps: self.terms, rel_residual: f64::NAN, converged: true }
+    }
+    fn name(&self) -> &'static str {
+        "neumann"
+    }
+}
+
+/// Exact-direction oracle: projected CG to machine precision. The
+/// communication model charges one exchange round per CG matvec and one
+/// all-reduce per inner product pair, matching a distributed CG.
+pub struct ExactCgSolver {
+    pub laplacian: Csr,
+    pub m_edges: usize,
+    pub tol: f64,
+}
+
+impl ExactCgSolver {
+    /// Build from a graph.
+    pub fn from_graph(g: &crate::graph::Graph, tol: f64) -> ExactCgSolver {
+        ExactCgSolver {
+            laplacian: crate::graph::laplacian::laplacian_csr(g),
+            m_edges: g.m(),
+            tol,
+        }
+    }
+}
+
+impl LaplacianSolver for ExactCgSolver {
+    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
+        let n = self.laplacian.rows;
+        let mut x = vec![0.0; n * w];
+        let mut worst = 0.0f64;
+        let mut total_iters = 0;
+        for j in 0..w {
+            let col: Vec<f64> = (0..n).map(|i| b[i * w + j]).collect();
+            let res = cg_solve(
+                &self.laplacian,
+                &col,
+                &CgOptions { tol: self.tol, max_iter: 20 * n, project_kernel: true },
+            );
+            for i in 0..n {
+                x[i * w + j] = res.x[i];
+            }
+            worst = worst.max(res.rel_residual);
+            total_iters += res.iters;
+        }
+        // Comm model: each CG iteration = 1 matvec round + 2 dot all-reduces,
+        // shared across the w batched systems (they iterate in lockstep in a
+        // distributed implementation; we charge the max column count).
+        let per_col = total_iters / w.max(1);
+        for _ in 0..per_col {
+            stats.record_edge_round(self.m_edges, w);
+            stats.record_allreduce(n, 2);
+        }
+        SolveOutcome { x, sweeps: per_col, rel_residual: worst, converged: worst <= self.tol }
+    }
+    fn name(&self) -> &'static str {
+        "exact-cg"
+    }
+}
+
+/// Convenience: build the default SDDM solver for a graph at accuracy ε.
+pub fn sddm_for_graph(
+    g: &crate::graph::Graph,
+    eps: f64,
+    rng: &mut crate::util::Pcg64,
+) -> SddmSolver {
+    let l = crate::graph::laplacian_csr(g);
+    let chain = crate::sddm::Chain::build(&l, &crate::sddm::ChainOptions::default(), rng)
+        .expect("Laplacian is SDD by construction");
+    SddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
+}
+
+/// Helper shared by dual methods: the dual gradient norm ‖M y‖ computed
+/// distributedly (used for step-size diagnostics).
+pub fn dual_grad_norm(comm: &mut CommGraph, y: &[f64], p: usize) -> f64 {
+    let g = comm.laplacian_apply(y, p);
+    comm.norm2_sq(&g, p).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn neumann_reduces_residual_but_saturates() {
+        let mut rng = Pcg64::new(91);
+        let g = generate::random_connected(20, 50, &mut rng);
+        let l = crate::graph::laplacian_csr(&g);
+        let z = rng.normal_vec(20);
+        let b = l.matvec(&z);
+        let mut prev = f64::INFINITY;
+        for terms in [0usize, 2, 6] {
+            let s = NeumannSolver::from_graph(&g, terms);
+            let mut stats = CommStats::default();
+            let out = s.solve(&b, 1, &mut stats);
+            let mut r = l.matvec(&out.x);
+            for i in 0..20 {
+                r[i] = b[i] - r[i];
+            }
+            crate::linalg::vector::center(&mut r);
+            let rel = crate::linalg::vector::norm2(&r) / crate::linalg::vector::norm2(&b);
+            assert!(rel <= prev + 1e-12, "terms={terms} rel={rel} prev={prev}");
+            prev = rel;
+        }
+        // Even with 6 terms the expansion hasn't solved the system exactly.
+        assert!(prev > 1e-6, "Neumann should not be exact: {prev}");
+    }
+
+    #[test]
+    fn exact_cg_solver_is_exact() {
+        let mut rng = Pcg64::new(92);
+        let g = generate::random_connected(15, 35, &mut rng);
+        let l = crate::graph::laplacian_csr(&g);
+        let z = rng.normal_vec(15);
+        let b = l.matvec(&z);
+        let s = ExactCgSolver::from_graph(&g, 1e-12);
+        let mut stats = CommStats::default();
+        let out = s.solve(&b, 1, &mut stats);
+        let lx = l.matvec(&out.x);
+        for i in 0..15 {
+            assert!((lx[i] - b[i]).abs() < 1e-8);
+        }
+        assert!(stats.messages > 0);
+    }
+
+    #[test]
+    fn sddm_hits_eps_where_add_style_neumann_cannot() {
+        // The property the paper exploits (Section 6): ADD's truncation
+        // fixes the direction error (N = 2 hops), while the SDDM solver
+        // reaches any requested ε.
+        let mut rng = Pcg64::new(93);
+        let g = generate::random_connected(30, 80, &mut rng);
+        let l = crate::graph::laplacian_csr(&g);
+        let z = rng.normal_vec(30);
+        let b = l.matvec(&z);
+        let rel = |x: &Vec<f64>| {
+            let mut r = l.matvec(x);
+            for i in 0..30 {
+                r[i] = b[i] - r[i];
+            }
+            crate::linalg::vector::center(&mut r);
+            crate::linalg::vector::norm2(&r) / crate::linalg::vector::norm2(&b)
+        };
+        let sddm = sddm_for_graph(&g, 1e-6, &mut rng);
+        let mut s1 = CommStats::default();
+        let o1 = LaplacianSolver::solve(&sddm, &b, 1, &mut s1);
+        assert!(rel(&o1.x) <= 1e-6, "sddm rel={}", rel(&o1.x));
+        // ADD-style truncation (N = 2 as in [8]'s experiments).
+        let nm = NeumannSolver::from_graph(&g, 2);
+        let mut s2 = CommStats::default();
+        let o2 = nm.solve(&b, 1, &mut s2);
+        assert!(rel(&o2.x) > 1e-2, "neumann unexpectedly accurate: {}", rel(&o2.x));
+    }
+}

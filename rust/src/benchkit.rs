@@ -1,0 +1,69 @@
+//! Minimal benchmarking harness (criterion substitute, offline sandbox).
+//!
+//! Benches under `rust/benches/` use `harness = false` and drive this:
+//! warmup, timed repeats, and a median/p10/p90 report, plus helpers for
+//! printing figure-shaped tables.
+
+use crate::util::{Summary, Timer};
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 1, sample_iters: 5 }
+    }
+}
+
+/// Time a closure repeatedly; prints and returns the summary (seconds).
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.sample_iters);
+    for _ in 0..opts.sample_iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name:<40} median {:>10.4}s  p10 {:>10.4}s  p90 {:>10.4}s  (n={})",
+        s.median, s.p10, s.p90, s.n
+    );
+    s
+}
+
+/// Print a section header for a figure reproduction.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a key/value result row (greppable in bench output).
+pub fn result_row(key: &str, value: impl std::fmt::Display) {
+    println!("result {key} = {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let s = bench(
+            "noop",
+            &BenchOpts { warmup_iters: 1, sample_iters: 3 },
+            || {
+                count += 1;
+            },
+        );
+        assert_eq!(count, 4);
+        assert_eq!(s.n, 3);
+        assert!(s.median >= 0.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Experiment configuration: typed configs, JSON loading, named presets
+//! matching the paper's figures (see DESIGN.md §4).
+
+pub mod json;
+
+pub use json::Json;
+
+/// Which benchmark problem to build.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProblemKind {
+    /// Fig. 1(a,b): synthetic linear regression.
+    SyntheticRegression { p: usize, m_total: usize, noise: f64, mu: f64 },
+    /// Fig. 1(c–f): MNIST-like one-vs-all logistic.
+    MnistLike { p: usize, m_total: usize, l1: bool, mu: f64 },
+    /// Fig. 2(a,b): fMRI-like sparse logistic (smoothed L1).
+    FmriLike { p: usize, m_total: usize, k_sparse: usize, mu: f64 },
+    /// Fig. 2(c,d) + 3(a,b): London-Schools-like regression.
+    LondonLike { m_total: usize, mu: f64 },
+    /// Fig. 3(c,d): RL double cart-pole.
+    RlDcp { rollouts: usize, t_len: usize, sigma: f64, mu: f64 },
+}
+
+/// Which algorithm(s) to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgoKind {
+    SddNewton { eps: f64, alpha: f64 },
+    AddNewton { terms: usize, alpha: f64 },
+    ExactNewton { alpha: f64 },
+    Admm { beta: f64 },
+    Gradient { alpha: f64 },
+    Averaging { beta: f64 },
+    NetworkNewton { k: usize, alpha: f64, epsilon: f64 },
+}
+
+impl AlgoKind {
+    /// Return a copy with the step-like hyper-parameter scaled by
+    /// `factor`. Used by the harness's stabilization loop, which mimics
+    /// the paper's per-algorithm step grid search: a diverging run is
+    /// retried with a smaller step.
+    pub fn scale_step(&self, factor: f64) -> AlgoKind {
+        match *self {
+            AlgoKind::SddNewton { eps, alpha } => AlgoKind::SddNewton { eps, alpha: alpha * factor },
+            AlgoKind::AddNewton { terms, alpha } => {
+                AlgoKind::AddNewton { terms, alpha: alpha * factor }
+            }
+            AlgoKind::ExactNewton { alpha } => AlgoKind::ExactNewton { alpha: alpha * factor },
+            AlgoKind::Admm { beta } => AlgoKind::Admm { beta: beta * factor },
+            AlgoKind::Gradient { alpha } => AlgoKind::Gradient { alpha: alpha * factor },
+            AlgoKind::Averaging { beta } => AlgoKind::Averaging { beta: beta * factor },
+            AlgoKind::NetworkNewton { k, alpha, epsilon } => {
+                AlgoKind::NetworkNewton { k, alpha, epsilon: epsilon * factor }
+            }
+        }
+    }
+
+    /// Short id used on the CLI (`--algorithms sdd,admm,...`).
+    pub fn id(&self) -> &'static str {
+        match self {
+            AlgoKind::SddNewton { .. } => "sdd",
+            AlgoKind::AddNewton { .. } => "add",
+            AlgoKind::ExactNewton { .. } => "exact",
+            AlgoKind::Admm { .. } => "admm",
+            AlgoKind::Gradient { .. } => "grad",
+            AlgoKind::Averaging { .. } => "avg",
+            AlgoKind::NetworkNewton { k, .. } => {
+                if *k <= 1 {
+                    "nn1"
+                } else {
+                    "nn2"
+                }
+            }
+        }
+    }
+
+    /// Parse a CLI id with default hyper-parameters.
+    pub fn from_id(id: &str) -> Option<AlgoKind> {
+        Some(match id {
+            "sdd" => AlgoKind::SddNewton { eps: 0.1, alpha: 1.0 },
+            "add" => AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+            "exact" => AlgoKind::ExactNewton { alpha: 1.0 },
+            "admm" => AlgoKind::Admm { beta: 1.0 },
+            "grad" => AlgoKind::Gradient { alpha: 0.01 },
+            "avg" => AlgoKind::Averaging { beta: 0.005 },
+            "nn1" => AlgoKind::NetworkNewton { k: 1, alpha: 0.1, epsilon: 1.0 },
+            "nn2" => AlgoKind::NetworkNewton { k: 2, alpha: 0.1, epsilon: 1.0 },
+            _ => return None,
+        })
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub nodes: usize,
+    pub edges: usize,
+    pub problem: ProblemKind,
+    pub algorithms: Vec<AlgoKind>,
+    pub max_iters: usize,
+    /// "native" or "pjrt".
+    pub backend: String,
+}
+
+/// All six algorithms with the paper's tuned defaults.
+pub fn default_algorithms() -> Vec<AlgoKind> {
+    vec![
+        AlgoKind::SddNewton { eps: 0.1, alpha: 1.0 },
+        AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+        AlgoKind::Admm { beta: 1.0 },
+        AlgoKind::Gradient { alpha: 0.01 },
+        AlgoKind::Averaging { beta: 0.005 },
+        AlgoKind::NetworkNewton { k: 1, alpha: 0.1, epsilon: 1.0 },
+        AlgoKind::NetworkNewton { k: 2, alpha: 0.1, epsilon: 1.0 },
+    ]
+}
+
+impl ExperimentConfig {
+    /// Named presets matching DESIGN.md §4. Sizes are the sandbox-scaled
+    /// versions of the paper's setups (see §5 substitution table).
+    pub fn preset(name: &str) -> Option<ExperimentConfig> {
+        let cfg = match name {
+            "fig1-synthetic" => ExperimentConfig {
+                name: name.into(),
+                seed: 7,
+                nodes: 100,
+                edges: 250,
+                problem: ProblemKind::SyntheticRegression {
+                    p: 80,
+                    m_total: 20_000,
+                    noise: 0.5,
+                    mu: 0.05,
+                },
+                algorithms: default_algorithms(),
+                max_iters: 60,
+                backend: "pjrt".into(),
+            },
+            "fig1-mnist-l2" | "fig1-mnist-l1" => ExperimentConfig {
+                name: name.into(),
+                seed: 11,
+                nodes: 10,
+                edges: 20,
+                problem: ProblemKind::MnistLike {
+                    p: 150,
+                    m_total: 2000,
+                    l1: name.ends_with("l1"),
+                    mu: 0.01,
+                },
+                algorithms: default_algorithms(),
+                max_iters: 50,
+                backend: "pjrt".into(),
+            },
+            "fig2-fmri" => ExperimentConfig {
+                name: name.into(),
+                seed: 13,
+                nodes: 8,
+                edges: 16,
+                problem: ProblemKind::FmriLike {
+                    p: 512,
+                    m_total: 240,
+                    k_sparse: 24,
+                    mu: 0.02,
+                },
+                algorithms: vec![
+                    AlgoKind::SddNewton { eps: 0.1, alpha: 1.0 },
+                    AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+                    AlgoKind::Admm { beta: 1.0 },
+                    AlgoKind::Averaging { beta: 0.002 },
+                ],
+                max_iters: 40,
+                backend: "pjrt".into(),
+            },
+            "fig2-comm" | "fig3-london" => ExperimentConfig {
+                name: name.into(),
+                seed: 17,
+                nodes: 50,
+                edges: 150,
+                problem: ProblemKind::LondonLike { m_total: 15_362, mu: 0.05 },
+                algorithms: default_algorithms(),
+                max_iters: 60,
+                backend: "pjrt".into(),
+            },
+            "fig3-rl" => ExperimentConfig {
+                name: name.into(),
+                seed: 19,
+                nodes: 20,
+                edges: 50,
+                problem: ProblemKind::RlDcp {
+                    rollouts: 2000,
+                    t_len: 50,
+                    sigma: 0.5,
+                    mu: 0.05,
+                },
+                algorithms: default_algorithms(),
+                max_iters: 60,
+                backend: "pjrt".into(),
+            },
+            "smoke" => ExperimentConfig {
+                name: name.into(),
+                seed: 3,
+                nodes: 8,
+                edges: 16,
+                problem: ProblemKind::SyntheticRegression {
+                    p: 5,
+                    m_total: 160,
+                    noise: 0.2,
+                    mu: 0.05,
+                },
+                algorithms: default_algorithms(),
+                max_iters: 20,
+                backend: "pjrt".into(),
+            },
+            _ => return None,
+        };
+        Some(cfg)
+    }
+
+    /// Names of all presets.
+    pub fn preset_names() -> &'static [&'static str] {
+        &[
+            "fig1-synthetic",
+            "fig1-mnist-l2",
+            "fig1-mnist-l1",
+            "fig2-fmri",
+            "fig2-comm",
+            "fig3-london",
+            "fig3-rl",
+            "smoke",
+        ]
+    }
+
+    /// Parse from a JSON document (unknown fields rejected to catch typos).
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig, String> {
+        let obj = doc.as_obj().ok_or("config must be an object")?;
+        let base_name = doc
+            .get("preset")
+            .and_then(|p| p.as_str())
+            .map(|s| s.to_string());
+        let mut cfg = match base_name {
+            Some(p) => Self::preset(&p).ok_or(format!("unknown preset '{p}'"))?,
+            None => Self::preset("smoke").unwrap(),
+        };
+        for (k, v) in obj {
+            match k.as_str() {
+                "preset" => {}
+                "name" => cfg.name = v.as_str().ok_or("name must be str")?.into(),
+                "seed" => cfg.seed = v.as_usize().ok_or("seed must be int")? as u64,
+                "nodes" => cfg.nodes = v.as_usize().ok_or("nodes must be int")?,
+                "edges" => cfg.edges = v.as_usize().ok_or("edges must be int")?,
+                "max_iters" => cfg.max_iters = v.as_usize().ok_or("max_iters must be int")?,
+                "backend" => cfg.backend = v.as_str().ok_or("backend must be str")?.into(),
+                "algorithms" => {
+                    let arr = v.as_arr().ok_or("algorithms must be array")?;
+                    cfg.algorithms = arr
+                        .iter()
+                        .map(|a| {
+                            a.as_str()
+                                .and_then(AlgoKind::from_id)
+                                .ok_or_else(|| format!("unknown algorithm {a}"))
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                other => return Err(format!("unknown config field '{other}'")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist_and_are_sane() {
+        for name in ExperimentConfig::preset_names() {
+            let c = ExperimentConfig::preset(name).unwrap();
+            assert!(c.nodes >= 2);
+            assert!(c.edges >= c.nodes - 1);
+            assert!(!c.algorithms.is_empty());
+        }
+        assert!(ExperimentConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn fig1_matches_paper_graph() {
+        let c = ExperimentConfig::preset("fig1-synthetic").unwrap();
+        assert_eq!((c.nodes, c.edges), (100, 250));
+        match c.problem {
+            ProblemKind::SyntheticRegression { p, .. } => assert_eq!(p, 80),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let doc = Json::parse(
+            r#"{"preset": "smoke", "nodes": 12, "edges": 24,
+                "algorithms": ["sdd", "admm"], "max_iters": 5}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.nodes, 12);
+        assert_eq!(c.algorithms.len(), 2);
+        assert_eq!(c.algorithms[0].id(), "sdd");
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields() {
+        let doc = Json::parse(r#"{"nodse": 12}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn algo_ids_roundtrip() {
+        for id in ["sdd", "add", "exact", "admm", "grad", "avg", "nn1", "nn2"] {
+            assert_eq!(AlgoKind::from_id(id).unwrap().id(), id);
+        }
+        assert!(AlgoKind::from_id("bogus").is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Coordinator: leader-side orchestration of experiment campaigns.
+//!
+//! The paper's runtime is a leader (the Matlab driver) plus node workers;
+//! here the leader schedules experiment jobs, runs them (optionally with
+//! the threaded per-node runtime for the averaging-style methods), and
+//! writes the report bundle (CSV traces + summary) per experiment.
+
+pub mod scheduler;
+pub mod partition;
+pub mod worker;
+
+pub use partition::Partition;
+pub use scheduler::{Campaign, JobOutcome};
+pub use worker::run_partitioned_gradient;

@@ -1,0 +1,141 @@
+//! Node→worker partitioning (the paper assigns its 100 graph nodes evenly
+//! to 8 Matlab pool workers; communication between co-located nodes is
+//! free, cross-worker edges ride MatlabMPI).
+
+use crate::graph::Graph;
+
+/// A mapping of graph nodes onto `k` workers.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// `assignment[node] = worker id` in `0..k`.
+    pub assignment: Vec<usize>,
+    pub k: usize,
+}
+
+impl Partition {
+    /// Contiguous blocks (node order).
+    pub fn contiguous(n: usize, k: usize) -> Partition {
+        assert!(k >= 1);
+        let base = n / k;
+        let extra = n % k;
+        let mut assignment = Vec::with_capacity(n);
+        for w in 0..k {
+            let cnt = base + usize::from(w < extra);
+            assignment.extend(std::iter::repeat(w).take(cnt));
+        }
+        Partition { assignment, k }
+    }
+
+    /// Round-robin.
+    pub fn round_robin(n: usize, k: usize) -> Partition {
+        assert!(k >= 1);
+        Partition { assignment: (0..n).map(|i| i % k).collect(), k }
+    }
+
+    /// Greedy edge-locality partition: BFS order chunked into blocks, which
+    /// keeps neighborhoods co-located on typical sparse graphs.
+    pub fn bfs_blocks(g: &Graph, k: usize) -> Partition {
+        assert!(k >= 1);
+        let n = g.n;
+        let mut order = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            let mut q = std::collections::VecDeque::from([s]);
+            seen[s] = true;
+            while let Some(u) = q.pop_front() {
+                order.push(u);
+                for &v in g.neighbors(u) {
+                    if !seen[v] {
+                        seen[v] = true;
+                        q.push_back(v);
+                    }
+                }
+            }
+        }
+        let mut assignment = vec![0; n];
+        let base = n / k;
+        let extra = n % k;
+        let mut idx = 0;
+        for w in 0..k {
+            let cnt = base + usize::from(w < extra);
+            for _ in 0..cnt {
+                assignment[order[idx]] = w;
+                idx += 1;
+            }
+        }
+        Partition { assignment, k }
+    }
+
+    /// Nodes owned by worker `w`.
+    pub fn nodes_of(&self, w: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == w)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of graph edges crossing worker boundaries (the MPI traffic).
+    pub fn cut_edges(&self, g: &Graph) -> usize {
+        g.edges
+            .iter()
+            .filter(|&&(u, v)| self.assignment[u] != self.assignment[v])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn contiguous_balanced() {
+        let p = Partition::contiguous(10, 3);
+        assert_eq!(p.nodes_of(0).len(), 4);
+        assert_eq!(p.nodes_of(1).len(), 3);
+        assert_eq!(p.nodes_of(2).len(), 3);
+        assert_eq!(p.assignment.len(), 10);
+    }
+
+    #[test]
+    fn round_robin_covers_all() {
+        let p = Partition::round_robin(7, 2);
+        assert_eq!(p.nodes_of(0), vec![0, 2, 4, 6]);
+        assert_eq!(p.nodes_of(1), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn bfs_blocks_cut_no_worse_than_random_on_grid() {
+        let g = generate::grid(6, 6);
+        let bfs = Partition::bfs_blocks(&g, 4);
+        let rr = Partition::round_robin(36, 4);
+        assert!(
+            bfs.cut_edges(&g) <= rr.cut_edges(&g),
+            "bfs {} vs rr {}",
+            bfs.cut_edges(&g),
+            rr.cut_edges(&g)
+        );
+        let mut rng = Pcg64::new(1);
+        let _ = rng.next_u64();
+    }
+
+    #[test]
+    fn all_partitions_are_total() {
+        let g = generate::grid(4, 5);
+        for p in [
+            Partition::contiguous(20, 3),
+            Partition::round_robin(20, 3),
+            Partition::bfs_blocks(&g, 3),
+        ] {
+            let total: usize = (0..3).map(|w| p.nodes_of(w).len()).sum();
+            assert_eq!(total, 20);
+            assert!(p.assignment.iter().all(|&a| a < 3));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Campaign scheduler: run a queue of experiment configs, persist results.
+
+use crate::config::ExperimentConfig;
+use crate::harness::report;
+use crate::harness::run_experiment;
+use std::path::{Path, PathBuf};
+
+/// A batch of experiments plus an output directory.
+pub struct Campaign {
+    pub jobs: Vec<ExperimentConfig>,
+    pub out_dir: PathBuf,
+}
+
+/// Result of one scheduled job.
+pub struct JobOutcome {
+    pub name: String,
+    pub csv_path: PathBuf,
+    pub summary: String,
+    pub seconds: f64,
+}
+
+impl Campaign {
+    /// Create a campaign from preset names (unknown names are errors).
+    pub fn from_presets(names: &[&str], out_dir: impl AsRef<Path>) -> Result<Campaign, String> {
+        let jobs = names
+            .iter()
+            .map(|n| ExperimentConfig::preset(n).ok_or_else(|| format!("unknown preset '{n}'")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Campaign { jobs, out_dir: out_dir.as_ref().to_path_buf() })
+    }
+
+    /// Run every job sequentially (the sandbox has one core; jobs are
+    /// internally bulk-synchronous anyway), writing `<name>.csv` and
+    /// returning summaries.
+    pub fn run(&self) -> std::io::Result<Vec<JobOutcome>> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let mut outcomes = Vec::with_capacity(self.jobs.len());
+        for cfg in &self.jobs {
+            let t = crate::util::Timer::start();
+            let res = run_experiment(cfg);
+            let csv_path = self.out_dir.join(format!("{}.csv", cfg.name));
+            report::write_csv(&res, &csv_path)?;
+            let summary = report::summary_table(&res);
+            outcomes.push(JobOutcome {
+                name: cfg.name.clone(),
+                csv_path,
+                summary,
+                seconds: t.secs(),
+            });
+        }
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn campaign_runs_and_writes() {
+        let dir = std::env::temp_dir().join("sddn_campaign_test");
+        let mut campaign = Campaign::from_presets(&["smoke"], &dir).unwrap();
+        campaign.jobs[0].max_iters = 3;
+        campaign.jobs[0].algorithms.truncate(2);
+        let outcomes = campaign.run().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].csv_path.exists());
+        assert!(outcomes[0].summary.contains("algorithm"));
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(Campaign::from_presets(&["nope"], "/tmp").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Partitioned multi-threaded execution: graph nodes are divided among
+//! `k` worker OS threads (as the paper divides 100 nodes over 8 Matlab
+//! pool workers). Cross-worker edges exchange payloads over channels;
+//! intra-worker edges are local memory. The leader thread aggregates
+//! per-iteration metrics.
+//!
+//! The diffusion-style algorithms (distributed gradients here) map
+//! directly onto this runtime; the result is bit-for-bit identical to the
+//! bulk-synchronous `algorithms::gradient::DistGradient`, which the tests
+//! assert.
+
+use super::partition::Partition;
+use crate::algorithms::metropolis_weights;
+use crate::graph::Graph;
+use crate::problems::ConsensusProblem;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Per-iteration metric row from a partitioned run.
+#[derive(Debug, Clone)]
+pub struct WorkerIter {
+    pub iter: usize,
+    pub objective: f64,
+    pub consensus_error: f64,
+    /// Cross-worker messages so far (the MPI traffic of the deployment).
+    pub cross_messages: u64,
+}
+
+/// Run distributed gradient descent on `k` worker threads.
+/// Returns per-iteration metrics and the final stacked iterate.
+pub fn run_partitioned_gradient(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    alpha: f64,
+    iters: usize,
+) -> (Vec<WorkerIter>, Vec<f64>) {
+    let n = g.n;
+    let p = problem.p;
+    let k = part.k;
+    let weights = metropolis_weights(g);
+
+    // Channels: worker→worker payload fan-in, worker→leader metrics.
+    // Payloads carry their iteration number: a fast peer may run ahead, so
+    // receivers buffer future-iteration payloads instead of consuming them
+    // as the current round's.
+    type Payload = (usize, Vec<(usize, Vec<f64>)>); // (iter, [(node, theta)])
+    let mut to_worker_tx: Vec<Sender<Payload>> = Vec::with_capacity(k);
+    let mut to_worker_rx: Vec<Option<Receiver<Payload>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel();
+        to_worker_tx.push(tx);
+        to_worker_rx.push(Some(rx));
+    }
+    let (leader_tx, leader_rx) = channel::<(usize, Vec<(usize, Vec<f64>)>, u64)>();
+
+    // Which peers each worker must hear from, and which boundary nodes it
+    // must send where — precomputed from the cut edges.
+    let mut send_plan: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); k]; // w -> [(peer, nodes)]
+    let mut recv_count: Vec<usize> = vec![0; k];
+    for w in 0..k {
+        let mut per_peer: std::collections::BTreeMap<usize, std::collections::BTreeSet<usize>> =
+            Default::default();
+        for &u in &part.nodes_of(w) {
+            for &v in g.neighbors(u) {
+                let pw = part.assignment[v];
+                if pw != w {
+                    per_peer.entry(pw).or_default().insert(u);
+                }
+            }
+        }
+        for (peer, nodes) in per_peer {
+            send_plan[w].push((peer, nodes.into_iter().collect()));
+        }
+    }
+    for w in 0..k {
+        recv_count[w] = (0..k)
+            .filter(|&o| o != w && send_plan[o].iter().any(|(peer, _)| *peer == w))
+            .count();
+    }
+
+    let final_thetas = std::sync::Mutex::new(vec![0.0; n * p]);
+    let records = std::sync::Mutex::new(Vec::<WorkerIter>::new());
+
+    std::thread::scope(|scope| {
+        for w in 0..k {
+            let my_nodes = part.nodes_of(w);
+            let my_rx = to_worker_rx[w].take().unwrap();
+            let peer_tx: Vec<(usize, Sender<Payload>)> = send_plan[w]
+                .iter()
+                .map(|(peer, _)| (*peer, to_worker_tx[*peer].clone()))
+                .collect();
+            let send_nodes: Vec<(usize, Vec<usize>)> = send_plan[w].clone();
+            let leader = leader_tx.clone();
+            let weights = &weights;
+            let expect_from = recv_count[w];
+            let final_thetas = &final_thetas;
+            scope.spawn(move || {
+                // Worker-local state: θ for owned nodes + cache of remote
+                // neighbor values.
+                let mut theta: std::collections::HashMap<usize, Vec<f64>> =
+                    my_nodes.iter().map(|&u| (u, vec![0.0; p])).collect();
+                let mut remote: std::collections::HashMap<usize, Vec<f64>> = Default::default();
+                let mut future: Vec<Payload> = Vec::new();
+                let mut cross_msgs: u64 = 0;
+                for it in 0..iters {
+                    // 1. Ship boundary values to each peer, tagged with `it`.
+                    for ((peer, tx), (_, nodes)) in peer_tx.iter().zip(&send_nodes) {
+                        let _ = peer;
+                        let values: Vec<(usize, Vec<f64>)> =
+                            nodes.iter().map(|&u| (u, theta[&u].clone())).collect();
+                        cross_msgs += values.len() as u64;
+                        tx.send((it, values)).expect("peer worker died");
+                    }
+                    // 2. Collect this iteration's payload from each
+                    //    in-neighbor worker, buffering any that arrive early.
+                    let mut got = 0usize;
+                    future.retain(|(pit, values)| {
+                        if *pit == it {
+                            for (u, t) in values {
+                                remote.insert(*u, t.clone());
+                            }
+                            got += 1;
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    while got < expect_from {
+                        let (pit, values) = my_rx.recv().expect("peer worker died");
+                        if pit == it {
+                            for (u, t) in values {
+                                remote.insert(u, t);
+                            }
+                            got += 1;
+                        } else {
+                            future.push((pit, values));
+                        }
+                    }
+                    // 3. Local mixing + gradient step for every owned node.
+                    let mut next: std::collections::HashMap<usize, Vec<f64>> =
+                        std::collections::HashMap::with_capacity(my_nodes.len());
+                    for &u in &my_nodes {
+                        let mut mixed = vec![0.0; p];
+                        for &(j, wij) in &weights[u] {
+                            let tj = if j == u {
+                                &theta[&u]
+                            } else if let Some(t) = theta.get(&j) {
+                                t
+                            } else {
+                                remote.get(&j).expect("missing remote neighbor value")
+                            };
+                            for r in 0..p {
+                                mixed[r] += wij * tj[r];
+                            }
+                        }
+                        let grad = problem.locals[u].gradient(&theta[&u]);
+                        for r in 0..p {
+                            mixed[r] -= alpha * grad[r];
+                        }
+                        next.insert(u, mixed);
+                    }
+                    theta = next;
+                    // 4. Report owned states to the leader (metrics only).
+                    let snapshot: Vec<(usize, Vec<f64>)> =
+                        my_nodes.iter().map(|&u| (u, theta[&u].clone())).collect();
+                    leader.send((w, snapshot, cross_msgs)).expect("leader died");
+                }
+                // Final state.
+                let mut ft = final_thetas.lock().unwrap();
+                for (&u, t) in &theta {
+                    ft[u * p..(u + 1) * p].copy_from_slice(t);
+                }
+            });
+        }
+        drop(leader_tx);
+
+        // Leader: per iteration, gather k snapshots and compute metrics.
+        let mut stacked = vec![0.0; n * p];
+        for it in 0..iters {
+            let mut cross_total = 0u64;
+            for _ in 0..k {
+                let (_, snapshot, cross) = leader_rx.recv().expect("worker died");
+                cross_total += cross;
+                for (u, t) in snapshot {
+                    stacked[u * p..(u + 1) * p].copy_from_slice(&t);
+                }
+            }
+            records.lock().unwrap().push(WorkerIter {
+                iter: it + 1,
+                objective: problem.objective(&stacked),
+                consensus_error: problem.consensus_error(&stacked),
+                cross_messages: cross_total,
+            });
+        }
+    });
+
+    (records.into_inner().unwrap(), final_thetas.into_inner().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::gradient::{DistGradient, GradSchedule};
+    use crate::algorithms::ConsensusAlgorithm;
+    use crate::coordinator::partition::Partition;
+    use crate::graph::generate;
+    use crate::net::CommGraph;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn partitioned_matches_bulk_synchronous_exactly() {
+        let mut rng = Pcg64::new(501);
+        let g = generate::random_connected(12, 26, &mut rng);
+        let prob = datasets::synthetic_regression(12, 4, 240, 0.2, 0.05, &mut rng);
+        let alpha = 1e-4;
+        let iters = 15;
+
+        // Bulk-synchronous reference.
+        let mut reference = DistGradient::new(&prob, &g, GradSchedule::Constant(alpha));
+        let mut comm = CommGraph::new(&g);
+        for _ in 0..iters {
+            reference.step(&prob, &mut comm);
+        }
+
+        for part in [
+            Partition::contiguous(12, 3),
+            Partition::round_robin(12, 4),
+            Partition::bfs_blocks(&g, 2),
+        ] {
+            let (records, thetas) = run_partitioned_gradient(&prob, &g, &part, alpha, iters);
+            assert_eq!(records.len(), iters);
+            for (a, b) in thetas.iter().zip(reference.thetas()) {
+                assert!((a - b).abs() < 1e-12, "partitioned deviates: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_messages_depend_on_cut() {
+        let mut rng = Pcg64::new(502);
+        let g = generate::grid(4, 6);
+        let prob = datasets::synthetic_regression(24, 3, 240, 0.2, 0.05, &mut rng);
+        let bfs = Partition::bfs_blocks(&g, 3);
+        let rr = Partition::round_robin(24, 3);
+        let (rec_bfs, _) = run_partitioned_gradient(&prob, &g, &bfs, 1e-4, 3);
+        let (rec_rr, _) = run_partitioned_gradient(&prob, &g, &rr, 1e-4, 3);
+        assert!(
+            rec_bfs.last().unwrap().cross_messages <= rec_rr.last().unwrap().cross_messages,
+            "locality partition should cut MPI traffic"
+        );
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_sequential() {
+        let mut rng = Pcg64::new(503);
+        let g = generate::cycle(8);
+        let prob = datasets::synthetic_regression(8, 3, 80, 0.2, 0.05, &mut rng);
+        let part = Partition::contiguous(8, 1);
+        let (records, _) = run_partitioned_gradient(&prob, &g, &part, 1e-4, 5);
+        assert_eq!(records.last().unwrap().cross_messages, 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Random graph generators matching the paper's experimental setup
+//! ("edges were chosen uniformly at random" over a connected topology).
+
+use super::Graph;
+use crate::util::Pcg64;
+
+/// Random connected graph with exactly `n` nodes and `m` edges
+/// (`m ≥ n−1`): a uniform random spanning tree (via a random permutation
+/// walk) guarantees connectivity; remaining `m − (n−1)` edges are chosen
+/// uniformly at random among the non-edges.
+pub fn random_connected(n: usize, m: usize, rng: &mut Pcg64) -> Graph {
+    assert!(n >= 1);
+    let max_edges = n * (n - 1) / 2;
+    assert!(m >= n.saturating_sub(1), "need at least n-1 edges for connectivity");
+    assert!(m <= max_edges, "m={m} exceeds complete graph {max_edges}");
+
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(m);
+    let mut present = std::collections::HashSet::with_capacity(m * 2);
+
+    // Random spanning tree: random permutation, attach each node to a
+    // uniformly random earlier node (random recursive tree).
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    for i in 1..n {
+        let j = rng.next_below(i as u64) as usize;
+        let (u, v) = (perm[i].min(perm[j]), perm[i].max(perm[j]));
+        edges.push((u, v));
+        present.insert((u, v));
+    }
+
+    // Fill with uniform random non-edges.
+    while edges.len() < m {
+        let a = rng.next_below(n as u64) as usize;
+        let b = rng.next_below(n as u64) as usize;
+        if a == b {
+            continue;
+        }
+        let (u, v) = (a.min(b), a.max(b));
+        if present.insert((u, v)) {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Cycle graph (ring) — useful as a badly-conditioned test topology
+/// (μ₂ = 2(1 − cos 2π/n) is tiny).
+pub fn cycle(n: usize) -> Graph {
+    assert!(n >= 3);
+    let edges = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    Graph::from_edges(n, edges)
+}
+
+/// Path graph.
+pub fn path(n: usize) -> Graph {
+    assert!(n >= 2);
+    let edges = (0..n - 1).map(|i| (i, i + 1)).collect();
+    Graph::from_edges(n, edges)
+}
+
+/// Complete graph — the best-conditioned topology (μ₂ = μ_n = n).
+pub fn complete(n: usize) -> Graph {
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            edges.push((i, j));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Star graph (hub 0).
+pub fn star(n: usize) -> Graph {
+    assert!(n >= 2);
+    Graph::from_edges(n, (1..n).map(|i| (0, i)).collect())
+}
+
+/// 2-D grid graph with `r*c` nodes.
+pub fn grid(r: usize, c: usize) -> Graph {
+    let id = |i: usize, j: usize| i * c + j;
+    let mut edges = Vec::new();
+    for i in 0..r {
+        for j in 0..c {
+            if i + 1 < r {
+                edges.push((id(i, j), id(i + 1, j)));
+            }
+            if j + 1 < c {
+                edges.push((id(i, j), id(i, j + 1)));
+            }
+        }
+    }
+    Graph::from_edges(r * c, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_connected_has_exact_counts() {
+        let mut rng = Pcg64::new(1);
+        for &(n, m) in &[(10usize, 20usize), (100, 250), (50, 49)] {
+            let g = random_connected(n, m, &mut rng);
+            assert_eq!(g.n, n);
+            assert_eq!(g.m(), m);
+            assert!(g.is_connected(), "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn random_graphs_differ_by_seed() {
+        let mut r1 = Pcg64::new(1);
+        let mut r2 = Pcg64::new(2);
+        let g1 = random_connected(30, 60, &mut r1);
+        let g2 = random_connected(30, 60, &mut r2);
+        assert_ne!(g1.edges, g2.edges);
+    }
+
+    #[test]
+    fn named_topologies() {
+        assert_eq!(cycle(5).m(), 5);
+        assert_eq!(path(5).m(), 4);
+        assert_eq!(complete(5).m(), 10);
+        assert_eq!(star(5).m(), 4);
+        assert_eq!(grid(3, 4).m(), 17);
+        assert!(grid(3, 4).is_connected());
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_edges_panics() {
+        let mut rng = Pcg64::new(1);
+        let _ = random_connected(10, 5, &mut rng);
+    }
+}

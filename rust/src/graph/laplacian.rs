@@ -1,0 +1,110 @@
+//! Unweighted graph Laplacian `L = D − A` (Eq. 4 of the paper) in CSR
+//! form, plus the standard splitting `L = D₀ − A₀` used by the SDDM
+//! solver (Section 2).
+
+use super::Graph;
+use crate::linalg::Csr;
+
+/// CSR Laplacian of an undirected graph.
+pub fn laplacian_csr(g: &Graph) -> Csr {
+    let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(g.n + 4 * g.m());
+    for i in 0..g.n {
+        trips.push((i, i, g.degree(i) as f64));
+    }
+    for &(u, v) in &g.edges {
+        trips.push((u, v, -1.0));
+        trips.push((v, u, -1.0));
+    }
+    Csr::from_triplets(g.n, g.n, &trips)
+}
+
+/// Adjacency matrix A₀ (non-negative off-diagonal part of the splitting).
+pub fn adjacency_csr(g: &Graph) -> Csr {
+    let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(4 * g.m());
+    for &(u, v) in &g.edges {
+        trips.push((u, v, 1.0));
+        trips.push((v, u, 1.0));
+    }
+    Csr::from_triplets(g.n, g.n, &trips)
+}
+
+/// Degree vector D₀ (diagonal of the Laplacian).
+pub fn degrees(g: &Graph) -> Vec<f64> {
+    (0..g.n).map(|i| g.degree(i) as f64).collect()
+}
+
+/// Verify a CSR matrix is SDD in the paper's sense: symmetric, non-positive
+/// off-diagonals, and diagonally dominant `[M]_ii ≥ −Σ_{j≠i} [M]_ij`.
+pub fn is_sdd(m: &Csr, tol: f64) -> bool {
+    if m.rows != m.cols {
+        return false;
+    }
+    let dense = m.to_dense();
+    if !dense.is_symmetric(tol) {
+        return false;
+    }
+    for i in 0..m.rows {
+        let mut off = 0.0;
+        for j in 0..m.cols {
+            if i != j {
+                if dense[(i, j)] > tol {
+                    return false; // positive off-diagonal
+                }
+                off += dense[(i, j)];
+            }
+        }
+        if dense[(i, i)] + off < -tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let mut rng = Pcg64::new(3);
+        let g = generate::random_connected(20, 40, &mut rng);
+        let l = laplacian_csr(&g);
+        let ones = vec![1.0; 20];
+        let y = l.matvec(&ones);
+        assert!(y.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn laplacian_is_sdd() {
+        let mut rng = Pcg64::new(4);
+        let g = generate::random_connected(15, 30, &mut rng);
+        let l = laplacian_csr(&g);
+        assert!(is_sdd(&l, 1e-12));
+    }
+
+    #[test]
+    fn splitting_consistent() {
+        let g = generate::cycle(6);
+        let l = laplacian_csr(&g);
+        let a = adjacency_csr(&g);
+        let d = degrees(&g);
+        // L = D - A
+        let ld = l.to_dense();
+        let ad = a.to_dense();
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { d[i] } else { 0.0 } - ad[(i, j)];
+                assert!((ld[(i, j)] - expect).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn non_sdd_rejected() {
+        // positive off-diagonal
+        let m = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 0.5), (1, 0, 0.5), (1, 1, 1.0)]);
+        assert!(!is_sdd(&m, 1e-12));
+    }
+}

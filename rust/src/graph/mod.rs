@@ -1,0 +1,142 @@
+//! Graph substrate: processor-network topology, Laplacians, spectra.
+//!
+//! The paper's experiments place `n` processors on a random connected
+//! undirected graph with a given edge budget (e.g. 100 nodes / 250 edges
+//! for Fig. 1(a,b), 10 nodes / 20 edges for MNIST). All algorithms only
+//! communicate along these edges; the SDDM solver's behaviour is governed
+//! by the Laplacian spectrum (μ₂, μ_n) of this graph.
+
+pub mod generate;
+pub mod laplacian;
+pub mod spectral;
+
+pub use generate::random_connected;
+pub use laplacian::laplacian_csr;
+
+/// An undirected graph over nodes `0..n`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Number of nodes.
+    pub n: usize,
+    /// Undirected edge list, each `(u, v)` with `u < v`, no duplicates.
+    pub edges: Vec<(usize, usize)>,
+    /// Adjacency lists.
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build from an edge list (validates, sorts adjacency).
+    pub fn from_edges(n: usize, edges: Vec<(usize, usize)>) -> Graph {
+        let mut adj = vec![Vec::new(); n];
+        let mut norm: Vec<(usize, usize)> = Vec::with_capacity(edges.len());
+        for &(a, b) in &edges {
+            assert!(a < n && b < n, "edge ({a},{b}) out of range");
+            assert_ne!(a, b, "self-loop ({a},{a})");
+            let (u, v) = if a < b { (a, b) } else { (b, a) };
+            norm.push((u, v));
+        }
+        norm.sort_unstable();
+        norm.dedup();
+        for &(u, v) in &norm {
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        Graph { n, edges: norm, adj }
+    }
+
+    /// Number of undirected edges m = |E|.
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Degree of node i.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    /// Neighbors of node i.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via BFS from every node (small graphs only).
+    pub fn diameter(&self) -> usize {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            let mut q = std::collections::VecDeque::new();
+            dist[s] = 0;
+            q.push_back(s);
+            while let Some(u) = q.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            diam = diam.max(*dist.iter().filter(|&&d| d != usize::MAX).max().unwrap());
+        }
+        diam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_normalizes() {
+        let g = Graph::from_edges(3, vec![(1, 0), (0, 1), (2, 1)]);
+        assert_eq!(g.edges, vec![(0, 1), (1, 2)]);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, vec![(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn path_diameter() {
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.diameter(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_panics() {
+        let _ = Graph::from_edges(2, vec![(0, 0)]);
+    }
+}

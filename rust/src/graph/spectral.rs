@@ -1,0 +1,143 @@
+//! Spectral estimation for graph Laplacians: μ_n (largest eigenvalue) and
+//! μ₂ (algebraic connectivity). These drive the theoretical step size α*
+//! and the error mapping of Lemma 3 / Theorem 1.
+
+use crate::linalg::vector::{center, norm2, scale};
+use crate::linalg::Csr;
+use crate::util::Pcg64;
+
+/// Result of an eigenvalue estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct EigEstimate {
+    pub value: f64,
+    pub iters: usize,
+}
+
+/// Largest Laplacian eigenvalue μ_n by power iteration.
+pub fn mu_max(l: &Csr, tol: f64, max_iter: usize, rng: &mut Pcg64) -> EigEstimate {
+    let n = l.rows;
+    let mut x = rng.normal_vec(n);
+    let nx = norm2(&x);
+    scale(&mut x, 1.0 / nx);
+    let mut y = vec![0.0; n];
+    let mut lambda = 0.0;
+    let mut iters = 0;
+    for k in 0..max_iter {
+        l.matvec_into(&x, &mut y);
+        let ny = norm2(&y);
+        if ny < 1e-300 {
+            break;
+        }
+        let new_lambda = ny; // Rayleigh-ish via norm growth of unit vector
+        for i in 0..n {
+            x[i] = y[i] / ny;
+        }
+        iters = k + 1;
+        if (new_lambda - lambda).abs() <= tol * new_lambda.max(1e-300) {
+            lambda = new_lambda;
+            break;
+        }
+        lambda = new_lambda;
+    }
+    EigEstimate { value: lambda, iters }
+}
+
+/// Second-smallest Laplacian eigenvalue μ₂ (algebraic connectivity) by
+/// power iteration on `μ̂ I − L` restricted to the mean-zero subspace
+/// (spectral shift + deflation of the known kernel `1`).
+pub fn mu_2(l: &Csr, tol: f64, max_iter: usize, rng: &mut Pcg64) -> EigEstimate {
+    let n = l.rows;
+    let shift = mu_max(l, 1e-8, 2_000, rng).value * 1.0001 + 1e-9;
+    let mut x = rng.normal_vec(n);
+    center(&mut x);
+    let nx = norm2(&x).max(1e-300);
+    scale(&mut x, 1.0 / nx);
+    let mut y = vec![0.0; n];
+    let mut lambda = 0.0;
+    let mut iters = 0;
+    for k in 0..max_iter {
+        // y = (shift I - L) x
+        l.matvec_into(&x, &mut y);
+        for i in 0..n {
+            y[i] = shift * x[i] - y[i];
+        }
+        center(&mut y);
+        let ny = norm2(&y);
+        if ny < 1e-300 {
+            break;
+        }
+        let new_lambda = ny;
+        for i in 0..n {
+            x[i] = y[i] / ny;
+        }
+        iters = k + 1;
+        if (new_lambda - lambda).abs() <= tol * new_lambda.max(1e-300) {
+            break;
+        }
+        lambda = new_lambda;
+    }
+    // Rayleigh quotient for a final polish: μ₂ = xᵀ L x (x unit, mean-zero).
+    l.matvec_into(&x, &mut y);
+    let rq = crate::linalg::vector::dot(&x, &y);
+    EigEstimate { value: rq.max(0.0), iters }
+}
+
+/// Condition number of the Laplacian restricted to range(L): μ_n / μ₂.
+pub fn laplacian_condition(l: &Csr, rng: &mut Pcg64) -> f64 {
+    let hi = mu_max(l, 1e-9, 5_000, rng).value;
+    let lo = mu_2(l, 1e-9, 20_000, rng).value;
+    hi / lo.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::graph::laplacian::laplacian_csr;
+
+    #[test]
+    fn complete_graph_spectrum() {
+        // K_n has μ₂ = … = μ_n = n.
+        let g = generate::complete(8);
+        let l = laplacian_csr(&g);
+        let mut rng = Pcg64::new(5);
+        let hi = mu_max(&l, 1e-10, 5_000, &mut rng).value;
+        let lo = mu_2(&l, 1e-10, 20_000, &mut rng).value;
+        assert!((hi - 8.0).abs() < 1e-5, "mu_n={hi}");
+        assert!((lo - 8.0).abs() < 1e-5, "mu_2={lo}");
+    }
+
+    #[test]
+    fn cycle_graph_mu2() {
+        // C_n: μ₂ = 2(1 − cos(2π/n)), μ_n = 2(1 − cos(π·⌊n/2⌋·2/n)) ≈ 4 for even n.
+        let n = 12;
+        let g = generate::cycle(n);
+        let l = laplacian_csr(&g);
+        let mut rng = Pcg64::new(6);
+        let expect2 = 2.0 * (1.0 - (2.0 * std::f64::consts::PI / n as f64).cos());
+        let lo = mu_2(&l, 1e-12, 100_000, &mut rng).value;
+        assert!((lo - expect2).abs() < 1e-6, "mu2={lo} expect={expect2}");
+        let hi = mu_max(&l, 1e-12, 100_000, &mut rng).value;
+        assert!((hi - 4.0).abs() < 1e-4, "mu_n={hi}");
+    }
+
+    #[test]
+    fn star_graph_mu_max() {
+        // Star on n nodes: μ_n = n.
+        let g = generate::star(10);
+        let l = laplacian_csr(&g);
+        let mut rng = Pcg64::new(7);
+        let hi = mu_max(&l, 1e-10, 10_000, &mut rng).value;
+        assert!((hi - 10.0).abs() < 1e-4, "mu_n={hi}");
+    }
+
+    #[test]
+    fn condition_number_ordering() {
+        // Complete graph much better conditioned than a cycle.
+        let mut rng = Pcg64::new(8);
+        let k = laplacian_condition(&laplacian_csr(&generate::complete(10)), &mut rng);
+        let c = laplacian_condition(&laplacian_csr(&generate::cycle(10)), &mut rng);
+        assert!(k < 1.01, "complete kappa={k}");
+        assert!(c > 5.0, "cycle kappa={c}");
+    }
+}

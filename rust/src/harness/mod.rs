@@ -1,0 +1,7 @@
+//! Experiment harness: builds problems/graphs from configs, runs the
+//! algorithm roster, and produces the traces behind every figure.
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{build_graph, build_problem, run_experiment, run_single, ExperimentResult};

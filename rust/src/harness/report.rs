@@ -1,0 +1,166 @@
+//! Report writers: CSV traces and human-readable summaries.
+
+use super::experiments::ExperimentResult;
+use crate::algorithms::Trace;
+use std::io::Write;
+use std::path::Path;
+
+/// Write all traces of an experiment as one CSV:
+/// `algorithm,iter,objective,consensus_error,messages,floats,rounds,elapsed_s`.
+pub fn write_csv(res: &ExperimentResult, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "algorithm,iter,objective,consensus_error,messages,floats,rounds,elapsed_s")?;
+    for t in &res.traces {
+        for r in &t.records {
+            writeln!(
+                f,
+                "{},{},{:.12e},{:.12e},{},{},{},{:.6}",
+                t.algorithm,
+                r.iter,
+                r.objective,
+                r.consensus_error,
+                r.comm.messages,
+                r.comm.floats,
+                r.comm.rounds,
+                r.elapsed
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Render a plain-text summary table (shown by the CLI and the benches).
+pub fn summary_table(res: &ExperimentResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "experiment {}  (n={} m={} backend={} μ₂={:.4} μ_n={:.4} f*={:.6e})\n",
+        res.config.name,
+        res.config.nodes,
+        res.config.edges,
+        res.backend_used,
+        res.mu2,
+        res.mun,
+        res.f_star
+    ));
+    out.push_str(&format!(
+        "{:<28} {:>6} {:>14} {:>12} {:>12} {:>10}\n",
+        "algorithm", "iters", "final gap", "consensus", "messages", "time (s)"
+    ));
+    for t in &res.traces {
+        let last = t.records.last().unwrap();
+        let gap = (last.objective - res.f_star) / res.f_star.abs().max(1.0);
+        out.push_str(&format!(
+            "{:<28} {:>6} {:>14.4e} {:>12.4e} {:>12} {:>10.3}\n",
+            t.algorithm,
+            last.iter,
+            gap,
+            last.consensus_error,
+            last.comm.messages,
+            last.elapsed
+        ));
+    }
+    out
+}
+
+/// Iterations each algorithm needs to reach a relative gap (for the
+/// "~40 vs ~200 iterations" headline of Fig. 1).
+pub fn iters_table(res: &ExperimentResult, tol: f64) -> Vec<(String, Option<usize>)> {
+    res.traces
+        .iter()
+        .map(|t| (t.algorithm.clone(), t.iters_to_gap(res.f_star, tol)))
+        .collect()
+}
+
+/// CSV for the Fig. 2(c) communication-overhead rows.
+pub fn write_comm_csv(
+    rows: &[(String, Vec<(f64, Option<u64>)>)],
+    path: impl AsRef<Path>,
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "algorithm,accuracy,messages")?;
+    for (name, cells) in rows {
+        for (acc, msgs) in cells {
+            match msgs {
+                Some(m) => writeln!(f, "{name},{acc:e},{m}")?,
+                None => writeln!(f, "{name},{acc:e},")?,
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Simple ASCII convergence plot (objective gap vs iteration, log-y), so
+/// figure shapes are visible without matplotlib.
+pub fn ascii_plot(traces: &[Trace], f_star: f64, width: usize, height: usize) -> String {
+    let scale = f_star.abs().max(1.0);
+    // Gather log10 gaps.
+    let series: Vec<(String, Vec<f64>)> = traces
+        .iter()
+        .map(|t| {
+            let g: Vec<f64> = t
+                .records
+                .iter()
+                .map(|r| ((r.objective - f_star).abs() / scale).max(1e-16).log10())
+                .collect();
+            (t.algorithm.clone(), g)
+        })
+        .collect();
+    let ymax = series
+        .iter()
+        .flat_map(|(_, g)| g.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, g)| g.iter())
+        .cloned()
+        .fold(f64::MAX, f64::min);
+    let span = (ymax - ymin).max(1e-9);
+    let max_iter = series.iter().map(|(_, g)| g.len()).max().unwrap_or(1);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'+', b'o', b'x', b'#', b'@', b'%', b'&'];
+    for (si, (_, g)) in series.iter().enumerate() {
+        for (i, &v) in g.iter().enumerate() {
+            let x = i * (width - 1) / max_iter.max(1);
+            let y = ((ymax - v) / span * (height - 1) as f64).round() as usize;
+            let y = y.min(height - 1);
+            grid[y][x] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("log10(relative gap): {ymax:.1} (top) … {ymin:.1} (bottom)\n"));
+    for row in grid {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()] as char, name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::harness::run_experiment;
+
+    #[test]
+    fn csv_and_summary_roundtrip() {
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.max_iters = 3;
+        cfg.algorithms.truncate(2);
+        let res = run_experiment(&cfg);
+        let dir = std::env::temp_dir().join("sddn_test_report");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        write_csv(&res, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() >= 1 + 2 * 4);
+        assert!(text.starts_with("algorithm,iter"));
+        let table = summary_table(&res);
+        assert!(table.contains("SDD-Newton"));
+        let plot = ascii_plot(&res.traces, res.f_star, 40, 10);
+        assert!(plot.lines().count() >= 10);
+    }
+}

@@ -1,0 +1,35 @@
+//! # sddnewton — Distributed SDD-Newton for Large-Scale Consensus Optimization
+//!
+//! Reproduction of Tutunov, Bou Ammar & Jadbabaie, *"A Distributed Newton
+//! Method for Large Scale Consensus Optimization"* (2016).
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: the distributed coordinator — graph substrate,
+//!   message-passing simulation with communication accounting, the
+//!   Spielman–Peng/Tutunov SDDM solver, the SDD-Newton algorithm and all
+//!   five baselines (ADMM, distributed gradients, distributed averaging,
+//!   Network Newton-K, ADD-Newton), experiment harness.
+//! - **L2 (python/compile/model.py)**: per-node local computations (primal
+//!   recovery, local Hessian application) written in JAX and AOT-lowered to
+//!   HLO text at build time.
+//! - **L1 (python/compile/kernels/)**: Pallas kernels for the per-node
+//!   compute hot-spot (logistic grad/Hessian assembly, batched quadratic
+//!   forms), lowered inside the L2 modules.
+//!
+//! Python never runs on the request path: the rust binary loads the AOT
+//! artifacts via PJRT (`runtime`) and falls back to the native `linalg`
+//! implementation when an artifact for the requested shape is absent.
+
+pub mod util;
+pub mod linalg;
+pub mod graph;
+pub mod net;
+pub mod sddm;
+pub mod problems;
+pub mod dcp;
+pub mod algorithms;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+pub mod harness;
+pub mod benchkit;

@@ -1,0 +1,168 @@
+//! Conjugate-gradient solver over matrix-free operators.
+//!
+//! Used (a) as the reference solver the SDDM chain solver is validated
+//! against, and (b) for singular Laplacian systems via projection onto the
+//! mean-zero subspace (`project_kernel = true`).
+
+use super::vector::{axpy, center, dot, norm2};
+
+/// A symmetric positive (semi-)definite linear operator.
+pub trait LinOp {
+    /// Problem dimension.
+    fn dim(&self) -> usize;
+    /// y = A x.
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+}
+
+/// Dense-matrix operator adapter.
+impl LinOp for super::matrix::Matrix {
+    fn dim(&self) -> usize {
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.matvec(x);
+        y.copy_from_slice(&r);
+    }
+}
+
+/// CG solve configuration.
+#[derive(Debug, Clone)]
+pub struct CgOptions {
+    /// Relative residual tolerance ‖r‖/‖b‖.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Project iterates and RHS onto the mean-zero subspace — required for
+    /// consensus Laplacians whose kernel is span{1}.
+    pub project_kernel: bool,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { tol: 1e-10, max_iter: 10_000, project_kernel: false }
+    }
+}
+
+/// CG solve result.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    /// Approximate solution.
+    pub x: Vec<f64>,
+    /// Iterations performed.
+    pub iters: usize,
+    /// Final relative residual.
+    pub rel_residual: f64,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+}
+
+/// Solve `A x = b` by conjugate gradients.
+pub fn cg_solve(a: &dyn LinOp, b: &[f64], opts: &CgOptions) -> CgResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let mut b = b.to_vec();
+    if opts.project_kernel {
+        center(&mut b);
+    }
+    let bnorm = norm2(&b).max(1e-300);
+
+    let mut x = vec![0.0; n];
+    let mut r = b.clone();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rs_old = dot(&r, &r);
+    let mut iters = 0;
+
+    while iters < opts.max_iter {
+        if rs_old.sqrt() / bnorm <= opts.tol {
+            break;
+        }
+        a.apply(&p, &mut ap);
+        if opts.project_kernel {
+            center(&mut ap);
+        }
+        let denom = dot(&p, &ap);
+        if denom.abs() < 1e-300 {
+            break;
+        }
+        let alpha = rs_old / denom;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+        iters += 1;
+    }
+    if opts.project_kernel {
+        center(&mut x);
+    }
+    let rel = rs_old.sqrt() / bnorm;
+    CgResult { x, iters, rel_residual: rel, converged: rel <= opts.tol }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn cg_matches_direct_solve() {
+        let mut rng = Pcg64::new(9);
+        let n = 20;
+        let mut b = Matrix::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let x_true = rng.normal_vec(n);
+        let rhs = a.matvec(&x_true);
+        let res = cg_solve(&a, &rhs, &CgOptions::default());
+        assert!(res.converged, "rel={}", res.rel_residual);
+        for (xs, xt) in res.x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn cg_singular_laplacian_with_projection() {
+        // Path graph Laplacian on 4 nodes: singular, kernel = 1.
+        let a = Matrix::from_rows(
+            4,
+            4,
+            vec![
+                1.0, -1.0, 0.0, 0.0, //
+                -1.0, 2.0, -1.0, 0.0, //
+                0.0, -1.0, 2.0, -1.0, //
+                0.0, 0.0, -1.0, 1.0,
+            ],
+        );
+        // RHS in range(L): L * [1,2,3,4].
+        let rhs = a.matvec(&[1.0, 2.0, 3.0, 4.0]);
+        let opts = CgOptions { project_kernel: true, ..Default::default() };
+        let res = cg_solve(&a, &rhs, &opts);
+        assert!(res.converged);
+        // Solution should satisfy L x = rhs and have zero mean.
+        let lx = a.matvec(&res.x);
+        for (u, v) in lx.iter().zip(&rhs) {
+            assert!((u - v).abs() < 1e-8);
+        }
+        let mean: f64 = res.x.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+    }
+
+    #[test]
+    fn cg_zero_rhs_returns_zero() {
+        let a = Matrix::eye(5);
+        let res = cg_solve(&a, &[0.0; 5], &CgOptions::default());
+        assert!(res.converged);
+        assert!(res.x.iter().all(|&v| v == 0.0));
+        assert_eq!(res.iters, 0);
+    }
+}

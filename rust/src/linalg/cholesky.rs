@@ -1,0 +1,189 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used for the per-node `p×p` local solves in the native (non-PJRT)
+//! compute path, and as the oracle the AOT artifacts are verified against.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+/// Errors from factorization.
+#[derive(Debug, thiserror::Error)]
+pub enum CholeskyError {
+    /// Matrix not positive definite (or badly conditioned) at pivot `i`.
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    /// Matrix not square.
+    #[error("matrix not square: {0}x{1}")]
+    NotSquare(usize, usize),
+}
+
+impl Cholesky {
+    /// Factor `a = L Lᵀ`.
+    pub fn factor(a: &Matrix) -> Result<Cholesky, CholeskyError> {
+        if a.rows != a.cols {
+            return Err(CholeskyError::NotSquare(a.rows, a.cols));
+        }
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(CholeskyError::NotPositiveDefinite(i, sum));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve `A x = b` using the factorization.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve for several right-hand sides (columns of `B`, returned as
+    /// a matrix of the same shape).
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows;
+        assert_eq!(b.rows, n);
+        let mut out = Matrix::zeros(n, b.cols);
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// log(det A) = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Access the factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+}
+
+/// Convenience: solve SPD system from scratch.
+pub fn spd_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, CholeskyError> {
+    Ok(Cholesky::factor(a)?.solve(b))
+}
+
+/// Inverse of an SPD matrix (used only off the hot path).
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix, CholeskyError> {
+    let ch = Cholesky::factor(a)?;
+    Ok(ch.solve_mat(&Matrix::eye(a.rows)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        // BBᵀ + n·I is SPD.
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = random_spd(12, 1);
+        let mut rng = Pcg64::new(2);
+        let x_true = rng.normal_vec(12);
+        let b = a.matvec(&x_true);
+        let x = spd_solve(&a, &b).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-9, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(Cholesky::factor(&a), Err(CholeskyError::NotSquare(2, 3))));
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(8, 3);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(8)) < 1e-9);
+    }
+
+    #[test]
+    fn log_det_identity_zero() {
+        let ch = Cholesky::factor(&Matrix::eye(5)).unwrap();
+        assert!(ch.log_det().abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_mat_matches_solve() {
+        let a = random_spd(6, 4);
+        let ch = Cholesky::factor(&a).unwrap();
+        let b = Matrix::from_rows(6, 2, (0..12).map(|i| i as f64).collect());
+        let xm = ch.solve_mat(&b);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..6).map(|i| b[(i, j)]).collect();
+            let x = ch.solve(&col);
+            for i in 0..6 {
+                assert!((xm[(i, j)] - x[i]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense and sparse linear algebra substrate (f64).
+//!
+//! Everything the coordinator needs that would normally come from
+//! `nalgebra`/`ndarray`: dense matrices, Cholesky factorization,
+//! conjugate gradients, CSR sparse matrices and matrix-free operators.
+//! This module is also the *native reference* implementation for the
+//! per-node local computations whose hot path lives in the AOT JAX/Pallas
+//! artifacts (`crate::runtime`).
+
+pub mod vector;
+pub mod matrix;
+pub mod cholesky;
+pub mod cg;
+pub mod sparse;
+pub mod lanczos;
+
+pub use matrix::Matrix;
+pub use sparse::Csr;
+pub use vector::{axpy, dot, norm2, scale, sub};

@@ -1,0 +1,271 @@
+//! CSR sparse matrix — the storage format for graph Laplacians and the
+//! SDDM chain levels. Matvec here is the L3 hot path of the SDD solver.
+
+use super::cg::LinOp;
+use super::matrix::Matrix;
+
+/// Compressed sparse row matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, len = rows + 1.
+    pub indptr: Vec<usize>,
+    /// Column indices, len = nnz.
+    pub indices: Vec<usize>,
+    /// Values, len = nnz.
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO triplets (duplicates are summed).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        let mut sorted: Vec<(usize, usize, f64)> = triplets.to_vec();
+        sorted.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] += 1;
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// y = A x (allocating).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a preallocated buffer (hot path — no allocation).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            for k in s..e {
+                acc += self.values[k] * x[self.indices[k]];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Multi-RHS matvec: Y = A X where X is row-major `cols × w`.
+    /// This is the batched per-dimension solve path (p systems at once).
+    pub fn matvec_multi_into(&self, x: &[f64], w: usize, y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols * w);
+        assert_eq!(y.len(), self.rows * w);
+        for i in 0..self.rows {
+            let yrow = &mut y[i * w..(i + 1) * w];
+            yrow.fill(0.0);
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            for k in s..e {
+                let v = self.values[k];
+                let xrow = &x[self.indices[k] * w..self.indices[k] * w + w];
+                for j in 0..w {
+                    yrow[j] += v * xrow[j];
+                }
+            }
+        }
+    }
+
+    /// Dense conversion (tests / small problems only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[k])] += self.values[k];
+            }
+        }
+        m
+    }
+
+    /// Diagonal entries as a vector.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.rows.min(self.cols)];
+        for i in 0..d.len() {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                if self.indices[k] == i {
+                    d[i] += self.values[k];
+                }
+            }
+        }
+        d
+    }
+
+    /// Row-scale: returns diag(s) * A.
+    pub fn scale_rows(&self, s: &[f64]) -> Csr {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for k in out.indptr[i]..out.indptr[i + 1] {
+                out.values[k] *= s[i];
+            }
+        }
+        out
+    }
+
+    /// Sparse-sparse product (used to build chain levels A_{i+1} ~ (D⁻¹A)²).
+    pub fn matmul(&self, other: &Csr) -> Csr {
+        assert_eq!(self.cols, other.rows);
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices: Vec<usize> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        // Gustavson's algorithm with a dense accumulator row.
+        let mut acc = vec![0.0f64; other.cols];
+        let mut mark = vec![usize::MAX; other.cols];
+        let mut touched: Vec<usize> = Vec::new();
+        for i in 0..self.rows {
+            touched.clear();
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                let a = self.values[k];
+                let kk = self.indices[k];
+                for l in other.indptr[kk]..other.indptr[kk + 1] {
+                    let j = other.indices[l];
+                    if mark[j] != i {
+                        mark[j] = i;
+                        acc[j] = 0.0;
+                        touched.push(j);
+                    }
+                    acc[j] += a * other.values[l];
+                }
+            }
+            touched.sort_unstable();
+            for &j in &touched {
+                indices.push(j);
+                values.push(acc[j]);
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Csr { rows: self.rows, cols: other.cols, indptr, indices, values }
+    }
+
+    /// Drop entries with |v| <= tol (sparsification used by the chain).
+    pub fn prune(&self, tol: f64) -> Csr {
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                if self.values[k].abs() > tol {
+                    indices.push(self.indices[k]);
+                    values.push(self.values[k]);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+impl LinOp for Csr {
+    fn dim(&self) -> usize {
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[2, -1, 0], [-1, 2, -1], [0, -1, 2]]
+        Csr::from_triplets(
+            3,
+            3,
+            &[
+                (0, 0, 2.0),
+                (0, 1, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 2.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 2.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = small();
+        let d = a.to_dense();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(a.matvec(&x), d.matvec(&x));
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 1.0)]);
+        assert_eq!(a.to_dense()[(0, 0)], 3.0);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let a = small();
+        assert_eq!(a.diagonal(), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn matmul_matches_dense() {
+        let a = small();
+        let b = small();
+        let c = a.matmul(&b);
+        let cd = a.to_dense().matmul(&b.to_dense());
+        assert!(c.to_dense().max_abs_diff(&cd) < 1e-12);
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let a = small();
+        let x = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]; // 3 rows, w=2
+        let mut y = vec![0.0; 6];
+        a.matvec_multi_into(&x, 2, &mut y);
+        let x0: Vec<f64> = vec![1.0, 2.0, 3.0];
+        let x1: Vec<f64> = vec![4.0, 5.0, 6.0];
+        let y0 = a.matvec(&x0);
+        let y1 = a.matvec(&x1);
+        for i in 0..3 {
+            assert_eq!(y[i * 2], y0[i]);
+            assert_eq!(y[i * 2 + 1], y1[i]);
+        }
+    }
+
+    #[test]
+    fn prune_drops_small() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 1e-15), (1, 1, 2.0)]);
+        let p = a.prune(1e-12);
+        assert_eq!(p.nnz(), 2);
+    }
+
+    #[test]
+    fn scale_rows_works() {
+        let a = small();
+        let s = a.scale_rows(&[1.0, 0.5, 2.0]);
+        assert_eq!(s.to_dense()[(1, 1)], 1.0);
+        assert_eq!(s.to_dense()[(2, 2)], 4.0);
+    }
+}

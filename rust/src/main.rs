@@ -1,0 +1,300 @@
+//! `sddnewton` — CLI launcher for the distributed SDD-Newton system.
+//!
+//! Subcommands:
+//!   run      — run an experiment preset (or JSON config) and write traces
+//!   campaign — run several presets and write a report bundle
+//!   comm     — Fig. 2(c) communication-overhead sweep
+//!   solve    — demo the distributed SDDM solver on a random Laplacian
+//!   info     — platform + artifact inventory
+//!
+//! (clap is unavailable offline; the parser is hand-rolled.)
+
+use sddnewton::config::{AlgoKind, ExperimentConfig, Json};
+use sddnewton::coordinator::Campaign;
+use sddnewton::harness::{self, report};
+use sddnewton::net::CommStats;
+use sddnewton::util::Pcg64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("campaign") => cmd_campaign(&args[1..]),
+        Some("comm") => cmd_comm(&args[1..]),
+        Some("solve") => cmd_solve(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | Some("-h") | Some("--help") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "sddnewton — distributed Newton for consensus optimization\n\
+         \n\
+         USAGE:\n\
+           sddnewton run --experiment <preset> [--iters N] [--algorithms a,b,c]\n\
+                         [--backend native|pjrt] [--seed S] [--out trace.csv] [--plot]\n\
+           sddnewton run --config <file.json> [--out trace.csv]\n\
+           sddnewton campaign [--out results/] [preset...]\n\
+           sddnewton comm [--experiment <preset>] [--targets 1e-1,1e-2,...] [--out comm.csv]\n\
+           sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S]\n\
+           sddnewton info\n\
+         \n\
+         PRESETS: {}",
+        ExperimentConfig::preset_names().join(", ")
+    );
+}
+
+/// Tiny flag parser: --key value pairs plus positionals.
+struct Flags {
+    kv: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+    positional: Vec<String>,
+}
+
+fn parse_flags(args: &[String], boolean: &[&str]) -> Result<Flags, String> {
+    let mut kv = std::collections::HashMap::new();
+    let mut flags = std::collections::HashSet::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if boolean.contains(&key) {
+                flags.insert(key.to_string());
+                i += 1;
+            } else {
+                let v = args.get(i + 1).ok_or(format!("--{key} needs a value"))?;
+                kv.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Flags { kv, flags, positional })
+}
+
+fn build_config(f: &Flags) -> Result<ExperimentConfig, String> {
+    let mut cfg = if let Some(path) = f.kv.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+        ExperimentConfig::from_json(&doc)?
+    } else {
+        let name = f.kv.get("experiment").map(String::as_str).unwrap_or("smoke");
+        ExperimentConfig::preset(name).ok_or(format!("unknown preset '{name}'"))?
+    };
+    if let Some(n) = f.kv.get("iters") {
+        cfg.max_iters = n.parse().map_err(|_| "bad --iters")?;
+    }
+    if let Some(s) = f.kv.get("seed") {
+        cfg.seed = s.parse().map_err(|_| "bad --seed")?;
+    }
+    if let Some(b) = f.kv.get("backend") {
+        cfg.backend = b.clone();
+    }
+    if let Some(list) = f.kv.get("algorithms") {
+        cfg.algorithms = list
+            .split(',')
+            .map(|id| AlgoKind::from_id(id.trim()).ok_or(format!("unknown algorithm '{id}'")))
+            .collect::<Result<_, _>>()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &["plot"]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match build_config(&f) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!("running experiment '{}' …", cfg.name);
+    let res = harness::run_experiment(&cfg);
+    print!("{}", report::summary_table(&res));
+    let tol = 1e-4;
+    println!("\niterations to reach relative gap ≤ {tol:.0e}:");
+    for (name, iters) in report::iters_table(&res, tol) {
+        match iters {
+            Some(k) => println!("  {name:<28} {k}"),
+            None => println!("  {name:<28} —"),
+        }
+    }
+    if f.flags.contains("plot") {
+        println!("\n{}", report::ascii_plot(&res.traces, res.f_star, 72, 20));
+    }
+    if let Some(path) = f.kv.get("out") {
+        if let Err(e) = report::write_csv(&res, path) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_campaign(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let out = f.kv.get("out").cloned().unwrap_or_else(|| "results".to_string());
+    let names: Vec<&str> = if f.positional.is_empty() {
+        vec!["fig1-synthetic", "fig1-mnist-l2", "fig3-london", "fig3-rl"]
+    } else {
+        f.positional.iter().map(String::as_str).collect()
+    };
+    let campaign = match Campaign::from_presets(&names, &out) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match campaign.run() {
+        Ok(outcomes) => {
+            for o in outcomes {
+                println!("--- {} ({:.1}s) → {}", o.name, o.seconds, o.csv_path.display());
+                print!("{}", o.summary);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("campaign failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_comm(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut cfg = match build_config(&f) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if !f.kv.contains_key("experiment") && !f.kv.contains_key("config") {
+        cfg = ExperimentConfig::preset("fig2-comm").unwrap();
+    }
+    cfg.max_iters = cfg.max_iters.max(400);
+    let targets: Vec<f64> = f
+        .kv
+        .get("targets")
+        .map(|t| t.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1e-1, 1e-2, 1e-3, 1e-4, 1e-5]);
+    println!("communication overhead sweep on '{}' targets {targets:?}", cfg.name);
+    let rows = harness::experiments::comm_overhead_experiment(&cfg, &targets);
+    println!("{:<28} {}", "algorithm", targets.iter().map(|t| format!("{t:>12.0e}")).collect::<String>());
+    for (name, cells) in &rows {
+        let mut line = format!("{name:<28} ");
+        for (_, msgs) in cells {
+            match msgs {
+                Some(m) => line.push_str(&format!("{m:>12}")),
+                None => line.push_str(&format!("{:>12}", "—")),
+            }
+        }
+        println!("{line}");
+    }
+    if let Some(path) = f.kv.get("out") {
+        if let Err(e) = report::write_comm_csv(&rows, path) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_solve(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let n: usize = f.kv.get("nodes").and_then(|v| v.parse().ok()).unwrap_or(100);
+    let m: usize = f.kv.get("edges").and_then(|v| v.parse().ok()).unwrap_or(250);
+    let eps: f64 = f.kv.get("eps").and_then(|v| v.parse().ok()).unwrap_or(1e-6);
+    let seed: u64 = f.kv.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let mut rng = Pcg64::new(seed);
+    let g = sddnewton::graph::generate::random_connected(n, m, &mut rng);
+    let l = sddnewton::graph::laplacian_csr(&g);
+    let solver = sddnewton::algorithms::solvers::sddm_for_graph(&g, eps, &mut rng);
+    println!(
+        "graph n={n} m={m}  chain depth d={}  λ₂(walk)={:.4}",
+        solver.chain.depth, solver.chain.lambda2
+    );
+    let x_true = rng.normal_vec(n);
+    let b = l.matvec(&x_true);
+    let mut stats = CommStats::default();
+    let t = sddnewton::util::Timer::start();
+    let out = solver.solve(&b, 1, &mut stats);
+    println!(
+        "solved to rel residual {:.2e} in {} Richardson sweeps, {:.2} ms",
+        out.rel_residual,
+        out.sweeps,
+        t.millis()
+    );
+    println!(
+        "communication: {} messages, {} floats, {} rounds, {} all-reduces",
+        stats.messages, stats.floats, stats.rounds, stats.allreduces
+    );
+    i32::from(!out.converged)
+}
+
+fn cmd_info() -> i32 {
+    println!("sddnewton {}", env!("CARGO_PKG_VERSION"));
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt platform: {} ({} devices)", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    let dir = harness::experiments::artifacts_dir();
+    match std::fs::read_to_string(dir.join("manifest.json")) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(m) => {
+                let obj = m.as_obj().cloned().unwrap_or_default();
+                println!("artifacts in {} ({}):", dir.display(), obj.len());
+                for (name, meta) in obj {
+                    println!(
+                        "  {name} [{}]",
+                        meta.get("kind").and_then(Json::as_str).unwrap_or("?")
+                    );
+                }
+            }
+            Err(e) => println!("manifest parse error: {e}"),
+        },
+        Err(_) => println!("no artifacts built (run `make artifacts`)"),
+    }
+    println!("presets: {}", ExperimentConfig::preset_names().join(", "));
+    0
+}

@@ -1,0 +1,254 @@
+//! Message-passing substrate.
+//!
+//! The paper runs on MatlabMPI over a Matlab parallel pool; the quantity
+//! it reports (Fig. 2(c)) is *local communication exchange* — messages
+//! between neighboring processors. We reproduce that with a synchronous,
+//! round-based model:
+//!
+//! - [`CommGraph`] is the only window algorithms get onto other nodes'
+//!   state: neighbor exchange and tree all-reduce primitives, each of
+//!   which increments exact message/float counters. Algorithm code
+//!   physically cannot read non-neighbor state except through these
+//!   primitives, which keeps the implementations honestly distributed
+//!   while running fast on one core.
+//! - [`threaded`] runs the same node programs on real OS threads with
+//!   channels (an MPI stand-in), used by the `end_to_end` example to
+//!   demonstrate true parallel execution.
+
+pub mod stats;
+pub mod threaded;
+
+use crate::graph::Graph;
+pub use stats::CommStats;
+
+/// Synchronous neighbor-communication view of a graph with accounting.
+pub struct CommGraph<'g> {
+    g: &'g Graph,
+    stats: CommStats,
+}
+
+impl<'g> CommGraph<'g> {
+    /// Wrap a graph.
+    pub fn new(g: &'g Graph) -> Self {
+        CommGraph { g, stats: CommStats::default() }
+    }
+
+    /// The underlying topology.
+    pub fn graph(&self) -> &Graph {
+        self.g
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.g.n
+    }
+
+    /// Communication counters so far.
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Mutable counters — lets sub-solvers (SDDM, Neumann, CG) record their
+    /// exchanges into the same ledger.
+    pub fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+
+    /// Reset counters (e.g. between experiment phases).
+    pub fn reset_stats(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    /// One synchronous exchange round: every node sends its `w`-float
+    /// payload to every neighbor. Returns, for each node, the *sum* of its
+    /// neighbors' payloads (the primitive underlying Laplacian products,
+    /// Jacobi sweeps and diffusion averaging).
+    ///
+    /// `x` is row-major `n × w`. Cost: `2m` messages of `w` floats.
+    pub fn neighbor_sum(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+        let n = self.g.n;
+        assert_eq!(x.len(), n * w, "payload shape mismatch");
+        let mut out = vec![0.0; n * w];
+        for &(u, v) in &self.g.edges {
+            for j in 0..w {
+                out[u * w + j] += x[v * w + j];
+                out[v * w + j] += x[u * w + j];
+            }
+        }
+        self.stats.record_edge_round(self.g.m(), w);
+        out
+    }
+
+    /// In-place variant of [`neighbor_sum`] writing into `out`.
+    pub fn neighbor_sum_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
+        let n = self.g.n;
+        assert_eq!(x.len(), n * w);
+        assert_eq!(out.len(), n * w);
+        out.fill(0.0);
+        for &(u, v) in &self.g.edges {
+            for j in 0..w {
+                out[u * w + j] += x[v * w + j];
+                out[v * w + j] += x[u * w + j];
+            }
+        }
+        self.stats.record_edge_round(self.g.m(), w);
+    }
+
+    /// Laplacian application `y = (I_w ⊗ L) x` as one exchange round:
+    /// `y_i = d(i)·x_i − Σ_{j∈N(i)} x_j`. Cost: `2m` messages of `w` floats.
+    pub fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+        let n = self.g.n;
+        let mut y = self.neighbor_sum(x, w);
+        for i in 0..n {
+            let d = self.g.degree(i) as f64;
+            for j in 0..w {
+                y[i * w + j] = d * x[i * w + j] - y[i * w + j];
+            }
+        }
+        y
+    }
+
+    /// Per-neighbor gather: for each node, the list of `(neighbor, payload)`
+    /// pairs. Needed by ADMM/averaging updates that weight neighbors
+    /// individually. Cost: `2m` messages of `w` floats.
+    pub fn gather_neighbors(&mut self, x: &[f64], w: usize) -> Vec<Vec<(usize, Vec<f64>)>> {
+        let n = self.g.n;
+        assert_eq!(x.len(), n * w);
+        let mut out: Vec<Vec<(usize, Vec<f64>)>> = (0..n)
+            .map(|i| Vec::with_capacity(self.g.degree(i)))
+            .collect();
+        for i in 0..n {
+            for &j in self.g.neighbors(i) {
+                out[i].push((j, x[j * w..(j + 1) * w].to_vec()));
+            }
+        }
+        self.stats.record_edge_round(self.g.m(), w);
+        out
+    }
+
+    /// Tree all-reduce (sum) of per-node scalars: every node ends with the
+    /// global sum. Cost: `2(n−1)` messages of `w` floats (up + down a
+    /// spanning tree), 2 rounds.
+    pub fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+        let n = self.g.n;
+        assert_eq!(locals.len(), n * w);
+        let mut total = vec![0.0; w];
+        for i in 0..n {
+            for j in 0..w {
+                total[j] += locals[i * w + j];
+            }
+        }
+        self.stats.record_allreduce(n, w);
+        total
+    }
+
+    /// Distributed mean-centering: subtract the global per-column mean from
+    /// each node's `w`-float payload. One all-reduce.
+    pub fn center(&mut self, x: &mut [f64], w: usize) {
+        let n = self.g.n;
+        let total = self.allreduce_sum(x, w);
+        for i in 0..n {
+            for j in 0..w {
+                x[i * w + j] -= total[j] / n as f64;
+            }
+        }
+    }
+
+    /// Distributed squared 2-norm of a stacked per-node vector.
+    pub fn norm2_sq(&mut self, x: &[f64], w: usize) -> f64 {
+        let n = self.g.n;
+        let locals: Vec<f64> = (0..n)
+            .map(|i| x[i * w..(i + 1) * w].iter().map(|v| v * v).sum())
+            .collect();
+        self.allreduce_sum(&locals, 1)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::graph::laplacian::laplacian_csr;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn laplacian_apply_matches_csr() {
+        let mut rng = Pcg64::new(10);
+        let g = generate::random_connected(12, 25, &mut rng);
+        let l = laplacian_csr(&g);
+        let mut comm = CommGraph::new(&g);
+        let x = rng.normal_vec(12);
+        let via_comm = comm.laplacian_apply(&x, 1);
+        let via_csr = l.matvec(&x);
+        for (a, b) in via_comm.iter().zip(&via_csr) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(comm.stats().messages, 2 * g.m() as u64);
+        assert_eq!(comm.stats().floats, 2 * g.m() as u64);
+    }
+
+    #[test]
+    fn laplacian_apply_multiwidth() {
+        let mut rng = Pcg64::new(11);
+        let g = generate::random_connected(8, 14, &mut rng);
+        let l = laplacian_csr(&g);
+        let w = 3;
+        let x = rng.normal_vec(8 * w);
+        let mut comm = CommGraph::new(&g);
+        let y = comm.laplacian_apply(&x, w);
+        // Compare column-by-column.
+        for j in 0..w {
+            let col: Vec<f64> = (0..8).map(|i| x[i * w + j]).collect();
+            let ycol = l.matvec(&col);
+            for i in 0..8 {
+                assert!((y[i * w + j] - ycol[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_and_center() {
+        let g = generate::complete(5);
+        let mut comm = CommGraph::new(&g);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = comm.allreduce_sum(&x, 1);
+        assert_eq!(s, vec![15.0]);
+        comm.center(&mut x, 1);
+        assert!(x.iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let g = generate::cycle(6);
+        let mut comm = CommGraph::new(&g);
+        let x1 = vec![0.0; 6];
+        let x2 = vec![0.0; 12];
+        let _ = comm.neighbor_sum(&x1, 1);
+        let _ = comm.neighbor_sum(&x2, 2);
+        assert_eq!(comm.stats().messages, 24); // 2 rounds × 2m, m = 6
+        assert_eq!(comm.stats().floats, 12 + 24);
+        assert_eq!(comm.stats().rounds, 2);
+        comm.reset_stats();
+        assert_eq!(comm.stats().messages, 0);
+    }
+
+    #[test]
+    fn gather_matches_topology() {
+        let g = generate::path(4);
+        let mut comm = CommGraph::new(&g);
+        let x = vec![10.0, 20.0, 30.0, 40.0];
+        let gathered = comm.gather_neighbors(&x, 1);
+        assert_eq!(gathered[0], vec![(1usize, vec![20.0])]);
+        assert_eq!(gathered[1], vec![(0, vec![10.0]), (2, vec![30.0])]);
+    }
+
+    #[test]
+    fn norm2_sq_matches() {
+        let g = generate::complete(4);
+        let mut comm = CommGraph::new(&g);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let n2 = comm.norm2_sq(&x, 2);
+        let direct: f64 = x.iter().map(|v| v * v).sum();
+        assert!((n2 - direct).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Communication accounting — the measurement behind Fig. 2(c).
+
+/// Counters for message-passing activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Point-to-point messages sent (each neighbor payload = 1 message).
+    pub messages: u64,
+    /// Total floats moved (messages × payload width).
+    pub floats: u64,
+    /// Synchronous rounds.
+    pub rounds: u64,
+    /// All-reduce operations (tree broadcasts count as 2 rounds each).
+    pub allreduces: u64,
+}
+
+impl CommStats {
+    /// One edge-exchange round over `m` undirected edges with `w`-float
+    /// payloads: `2m` directed messages.
+    pub fn record_edge_round(&mut self, m: usize, w: usize) {
+        self.messages += 2 * m as u64;
+        self.floats += 2 * m as u64 * w as u64;
+        self.rounds += 1;
+    }
+
+    /// One tree all-reduce over `n` nodes with `w`-float payloads:
+    /// `2(n−1)` messages, 2 rounds.
+    pub fn record_allreduce(&mut self, n: usize, w: usize) {
+        let msgs = 2 * (n as u64 - 1);
+        self.messages += msgs;
+        self.floats += msgs * w as u64;
+        self.rounds += 2;
+        self.allreduces += 1;
+    }
+
+    /// Bytes on the wire assuming f64 payloads.
+    pub fn bytes(&self) -> u64 {
+        self.floats * 8
+    }
+
+    /// Difference (self − earlier); useful for per-iteration deltas.
+    pub fn since(&self, earlier: &CommStats) -> CommStats {
+        CommStats {
+            messages: self.messages - earlier.messages,
+            floats: self.floats - earlier.floats,
+            rounds: self.rounds - earlier.rounds,
+            allreduces: self.allreduces - earlier.allreduces,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut s = CommStats::default();
+        s.record_edge_round(10, 4);
+        assert_eq!(s.messages, 20);
+        assert_eq!(s.floats, 80);
+        assert_eq!(s.bytes(), 640);
+        s.record_allreduce(5, 1);
+        assert_eq!(s.messages, 28);
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.rounds, 3);
+    }
+
+    #[test]
+    fn since_delta() {
+        let mut s = CommStats::default();
+        s.record_edge_round(3, 1);
+        let snap = s;
+        s.record_edge_round(3, 1);
+        let d = s.since(&snap);
+        assert_eq!(d.messages, 6);
+        assert_eq!(d.rounds, 1);
+    }
+}

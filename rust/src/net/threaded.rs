@@ -1,0 +1,221 @@
+//! Threaded message-passing runtime: an MPI stand-in on std::thread +
+//! mpsc channels. Each graph node becomes a worker thread that can only
+//! `send`/`recv` along graph edges plus participate in all-reduces routed
+//! through the leader. The `end_to_end` example runs distributed
+//! averaging-style programs on this runtime to demonstrate the node
+//! programs are honestly local.
+
+use crate::graph::Graph;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// A message between nodes: (source, payload).
+type Msg = (usize, Vec<f64>);
+
+/// Per-node communication handle passed to the node program.
+pub struct NodeCtx {
+    /// This node's id.
+    pub id: usize,
+    /// Neighbor ids (sorted).
+    pub neighbors: Vec<usize>,
+    senders: Vec<(usize, Sender<Msg>)>,
+    inbox: Receiver<Msg>,
+    /// Per-sender reorder buffer: a fast neighbor may already have sent
+    /// its next-round message; it must not be consumed as someone else's
+    /// current-round message.
+    pending: std::cell::RefCell<std::collections::HashMap<usize, std::collections::VecDeque<Vec<f64>>>>,
+    to_leader: Sender<(usize, Vec<f64>)>,
+    from_leader: Receiver<Vec<f64>>,
+}
+
+impl NodeCtx {
+    /// Send a payload to a neighbor (panics if not adjacent).
+    pub fn send(&self, to: usize, payload: Vec<f64>) {
+        let s = self
+            .senders
+            .iter()
+            .find(|(id, _)| *id == to)
+            .unwrap_or_else(|| panic!("node {} is not adjacent to {}", self.id, to));
+        s.1.send((self.id, payload)).expect("peer hung up");
+    }
+
+    /// Broadcast the same payload to all neighbors.
+    pub fn send_all(&self, payload: &[f64]) {
+        for (_, s) in &self.senders {
+            s.send((self.id, payload.to_vec())).expect("peer hung up");
+        }
+    }
+
+    /// Receive one message from a specific neighbor, buffering messages
+    /// from other (possibly faster) senders for later rounds.
+    pub fn recv_from(&self, from: usize) -> Vec<f64> {
+        {
+            let mut pend = self.pending.borrow_mut();
+            if let Some(q) = pend.get_mut(&from) {
+                if let Some(m) = q.pop_front() {
+                    return m;
+                }
+            }
+        }
+        loop {
+            let (src, payload) = self.inbox.recv().expect("peer hung up");
+            if src == from {
+                return payload;
+            }
+            self.pending
+                .borrow_mut()
+                .entry(src)
+                .or_default()
+                .push_back(payload);
+        }
+    }
+
+    /// Receive exactly one message from each neighbor (in neighbor order),
+    /// returning (neighbor, payload) pairs. This is the synchronous-round
+    /// receive used by diffusion-style algorithms.
+    pub fn recv_round(&self) -> Vec<(usize, Vec<f64>)> {
+        self.neighbors
+            .iter()
+            .map(|&j| (j, self.recv_from(j)))
+            .collect()
+    }
+
+    /// All-reduce (sum) a local vector through the leader; every node gets
+    /// the global sum back.
+    pub fn allreduce_sum(&self, local: Vec<f64>) -> Vec<f64> {
+        self.to_leader.send((self.id, local)).expect("leader hung up");
+        self.from_leader.recv().expect("leader hung up")
+    }
+}
+
+/// Outcome of a threaded run: per-node results in node order.
+pub struct RunOutput<T> {
+    pub per_node: Vec<T>,
+}
+
+/// Spawn one thread per node, run `program` on each, and drive leader-side
+/// all-reduce aggregation until all nodes finish. The node program gets its
+/// `NodeCtx` and must perform the *same number* of all-reduce calls on
+/// every node (standard BSP contract).
+pub fn run_threaded<T, F>(g: &Graph, program: F) -> RunOutput<T>
+where
+    T: Send + 'static,
+    F: Fn(NodeCtx) -> T + Send + Sync + Clone + 'static,
+{
+    let n = g.n;
+    // Edge channels.
+    let mut senders_for: Vec<Vec<(usize, Sender<Msg>)>> = (0..n).map(|_| Vec::new()).collect();
+    let mut inbox_rx: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(n);
+    let mut inbox_tx: Vec<Sender<Msg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Msg>();
+        inbox_tx.push(tx);
+        inbox_rx.push(Some(rx));
+    }
+    for i in 0..n {
+        for &j in g.neighbors(i) {
+            senders_for[i].push((j, inbox_tx[j].clone()));
+        }
+    }
+    // Leader channels.
+    let (to_leader_tx, to_leader_rx) = channel::<(usize, Vec<f64>)>();
+    let mut from_leader_tx: Vec<Sender<Vec<f64>>> = Vec::with_capacity(n);
+    let mut from_leader_rx: Vec<Option<Receiver<Vec<f64>>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Vec<f64>>();
+        from_leader_tx.push(tx);
+        from_leader_rx.push(Some(rx));
+    }
+
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let ctx = NodeCtx {
+            id: i,
+            neighbors: g.neighbors(i).to_vec(),
+            senders: std::mem::take(&mut senders_for[i]),
+            inbox: inbox_rx[i].take().unwrap(),
+            pending: std::cell::RefCell::new(std::collections::HashMap::new()),
+            to_leader: to_leader_tx.clone(),
+            from_leader: from_leader_rx[i].take().unwrap(),
+        };
+        let prog = program.clone();
+        handles.push(thread::spawn(move || prog(ctx)));
+    }
+    drop(to_leader_tx);
+
+    // Leader loop: collect n contributions per all-reduce, broadcast sums.
+    // Terminates when all node senders are dropped (threads finished).
+    loop {
+        let mut contributions: Vec<(usize, Vec<f64>)> = Vec::with_capacity(n);
+        match to_leader_rx.recv() {
+            Ok(first) => contributions.push(first),
+            Err(_) => break, // all nodes done
+        }
+        for _ in 1..n {
+            contributions.push(to_leader_rx.recv().expect("node died mid-allreduce"));
+        }
+        let w = contributions[0].1.len();
+        let mut total = vec![0.0; w];
+        for (_, v) in &contributions {
+            assert_eq!(v.len(), w, "ragged all-reduce");
+            for j in 0..w {
+                total[j] += v[j];
+            }
+        }
+        for tx in &from_leader_tx {
+            let _ = tx.send(total.clone());
+        }
+    }
+
+    let per_node = handles.into_iter().map(|h| h.join().expect("node panicked")).collect();
+    RunOutput { per_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn allreduce_sums_ids() {
+        let g = generate::cycle(5);
+        let out = run_threaded(&g, |ctx: NodeCtx| {
+            let s = ctx.allreduce_sum(vec![ctx.id as f64]);
+            s[0]
+        });
+        for v in out.per_node {
+            assert_eq!(v, 10.0); // 0+1+2+3+4
+        }
+    }
+
+    #[test]
+    fn neighbor_exchange_round() {
+        let g = generate::path(4);
+        let out = run_threaded(&g, |ctx: NodeCtx| {
+            ctx.send_all(&[ctx.id as f64]);
+            let got = ctx.recv_round();
+            got.iter().map(|(_, p)| p[0]).sum::<f64>()
+        });
+        // Path 0-1-2-3: neighbor sums are [1, 2, 4, 2].
+        assert_eq!(out.per_node, vec![1.0, 2.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn diffusion_converges_to_mean() {
+        // x_{t+1}(i) = x_t(i) + 0.3 * sum_{j∈N(i)} (x_t(j) − x_t(i))
+        let g = generate::complete(4);
+        let out = run_threaded(&g, |ctx: NodeCtx| {
+            let mut x = ctx.id as f64; // initial values 0,1,2,3 → mean 1.5
+            for _ in 0..60 {
+                ctx.send_all(&[x]);
+                let got = ctx.recv_round();
+                let s: f64 = got.iter().map(|(_, p)| p[0] - x).sum();
+                x += 0.2 * s;
+            }
+            x
+        });
+        for v in out.per_node {
+            assert!((v - 1.5).abs() < 1e-6, "v={v}");
+        }
+    }
+}

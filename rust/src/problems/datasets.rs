@@ -1,0 +1,262 @@
+//! Synthetic dataset generators matching the paper's benchmarks (see
+//! DESIGN.md §5 for the substitution rationale).
+
+use super::logistic::{sigmoid, LogisticLocal, Reg};
+use super::quadratic::QuadraticLocal;
+use super::ConsensusProblem;
+use crate::dcp;
+use crate::linalg::Matrix;
+use crate::util::Pcg64;
+
+/// Split `m_total` examples as evenly as possible over `n` nodes.
+pub fn split_counts(m_total: usize, n: usize) -> Vec<usize> {
+    let base = m_total / n;
+    let extra = m_total % n;
+    (0..n).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Synthetic linear-regression consensus task (Fig. 1(a,b)):
+/// `X ~ N(0,1)^{m×p}`, `y = Xθ* + ζ`, squared loss + ridge `μ` per node.
+pub fn synthetic_regression(
+    n_nodes: usize,
+    p: usize,
+    m_total: usize,
+    noise: f64,
+    mu: f64,
+    rng: &mut Pcg64,
+) -> ConsensusProblem {
+    let theta_star = rng.normal_vec(p);
+    let counts = split_counts(m_total, n_nodes);
+    let mut locals: Vec<Box<dyn super::LocalObjective>> = Vec::with_capacity(n_nodes);
+    for &mi in &counts {
+        let mut b = Matrix::zeros(p, mi);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let a: Vec<f64> = (0..mi)
+            .map(|j| {
+                let z: f64 = (0..p).map(|i| b[(i, j)] * theta_star[i]).sum();
+                z + noise * rng.normal()
+            })
+            .collect();
+        locals.push(Box::new(QuadraticLocal::from_data(&b, &a, mu)));
+    }
+    ConsensusProblem::new(locals)
+}
+
+/// MNIST-like classification blobs (Fig. 1(c–f)): 10 Gaussian class
+/// clusters in `p` dimensions (PCA-150 stand-in); one-vs-all binary task
+/// for `target_class`.
+pub fn mnist_like(
+    n_nodes: usize,
+    p: usize,
+    m_total: usize,
+    target_class: usize,
+    reg: Reg,
+    mu: f64,
+    rng: &mut Pcg64,
+) -> ConsensusProblem {
+    let n_classes = 10;
+    assert!(target_class < n_classes);
+    // Class means on a sphere of radius 3.
+    let means: Vec<Vec<f64>> = (0..n_classes)
+        .map(|_| {
+            let mut m = rng.normal_vec(p);
+            let n2 = crate::linalg::vector::norm2(&m).max(1e-12);
+            for v in m.iter_mut() {
+                *v *= 3.0 / n2;
+            }
+            m
+        })
+        .collect();
+    let counts = split_counts(m_total, n_nodes);
+    let mut locals: Vec<Box<dyn super::LocalObjective>> = Vec::with_capacity(n_nodes);
+    for &mi in &counts {
+        let mut b = Matrix::zeros(p, mi);
+        let mut a = Vec::with_capacity(mi);
+        for j in 0..mi {
+            let cls = rng.next_below(n_classes as u64) as usize;
+            for i in 0..p {
+                b[(i, j)] = means[cls][i] + rng.normal();
+            }
+            a.push(if cls == target_class { 1.0 } else { 0.0 });
+        }
+        locals.push(Box::new(LogisticLocal::new(b, a, mu, reg)));
+    }
+    ConsensusProblem::new(locals)
+}
+
+/// fMRI-like sparse task (Fig. 2(a,b)): very few samples (`m_total = 240`
+/// in the paper), many features, k-sparse ground truth, L1-regularized
+/// logistic loss. Preserves the m ≪ p regime.
+pub fn fmri_like(
+    n_nodes: usize,
+    p: usize,
+    m_total: usize,
+    k_sparse: usize,
+    alpha_smooth: f64,
+    mu: f64,
+    rng: &mut Pcg64,
+) -> ConsensusProblem {
+    let support = rng.sample_indices(p, k_sparse);
+    let mut w = vec![0.0; p];
+    for &s in &support {
+        w[s] = rng.normal_ms(0.0, 2.0);
+    }
+    let counts = split_counts(m_total, n_nodes);
+    let mut locals: Vec<Box<dyn super::LocalObjective>> = Vec::with_capacity(n_nodes);
+    for &mi in &counts {
+        let mut b = Matrix::zeros(p, mi);
+        for v in b.data.iter_mut() {
+            // Sparse-ish voxel activations: mostly small, occasional spikes.
+            *v = if rng.bernoulli(0.1) { rng.normal_ms(0.0, 1.5) } else { 0.1 * rng.normal() };
+        }
+        let a: Vec<f64> = (0..mi)
+            .map(|j| {
+                let z: f64 = (0..p).map(|i| b[(i, j)] * w[i]).sum();
+                f64::from(u8::from(rng.next_f64() < sigmoid(z)))
+            })
+            .collect();
+        locals.push(Box::new(LogisticLocal::new(
+            b,
+            a,
+            mu,
+            Reg::SmoothL1 { alpha: alpha_smooth },
+        )));
+    }
+    ConsensusProblem::new(locals)
+}
+
+/// London-Schools-like regression (Fig. 2(c,d), Fig. 3(a,b)): 139 school
+/// blocks, 27 features per instance following [14]'s encoding — 4
+/// school-specific + 3 student-specific categorical variables as binary
+/// features, examination year, and a bias term. Scores are a linear
+/// function of the encoding plus school-level effects and noise.
+pub fn london_like(
+    n_nodes: usize,
+    m_total: usize,
+    mu: f64,
+    rng: &mut Pcg64,
+) -> ConsensusProblem {
+    let p = 27;
+    let n_schools = 139;
+    // Ground-truth weights + per-school intercept offsets.
+    let w = rng.normal_vec(p);
+    let school_effect: Vec<f64> = (0..n_schools).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+    // Categorical cardinalities for the 7 encoded variables (binary slots
+    // summing to 25, plus year + bias = 27).
+    let cards = [4usize, 3, 4, 4, 2, 4, 4];
+    let counts = split_counts(m_total, n_nodes);
+    let mut locals: Vec<Box<dyn super::LocalObjective>> = Vec::with_capacity(n_nodes);
+    for &mi in &counts {
+        let mut b = Matrix::zeros(p, mi);
+        let mut a = Vec::with_capacity(mi);
+        for j in 0..mi {
+            let school = rng.next_below(n_schools as u64) as usize;
+            let mut off = 0usize;
+            for &c in &cards {
+                let pick = rng.next_below(c as u64) as usize;
+                b[(off + pick, j)] = 1.0;
+                off += c;
+            }
+            b[(25, j)] = rng.uniform(0.0, 1.0); // normalized exam year
+            b[(26, j)] = 1.0; // bias
+            let z: f64 = (0..p).map(|i| b[(i, j)] * w[i]).sum();
+            a.push(z + school_effect[school] + 0.3 * rng.normal());
+        }
+        locals.push(Box::new(QuadraticLocal::from_data(&b, &a, mu)));
+    }
+    ConsensusProblem::new(locals)
+}
+
+/// RL policy-search consensus task (Fig. 3(c,d)) from the DCP simulator:
+/// rollouts are distributed across nodes; each node builds the
+/// reward-weighted quadratic of Eq. 85/86.
+pub fn rl_dcp(
+    n_nodes: usize,
+    rollouts: usize,
+    t_len: usize,
+    sigma: f64,
+    mu: f64,
+    rng: &mut Pcg64,
+) -> ConsensusProblem {
+    let params = dcp::DcpParams::default();
+    let policy = dcp::behaviour_policy(sigma);
+    let all = dcp::generate_rollouts(&params, &policy, rollouts, t_len, rng);
+    let counts = split_counts(rollouts, n_nodes);
+    let mut locals: Vec<Box<dyn super::LocalObjective>> = Vec::with_capacity(n_nodes);
+    let mut idx = 0usize;
+    for &mi in &counts {
+        let trajs: Vec<(Matrix, Vec<f64>, f64)> = all[idx..idx + mi]
+            .iter()
+            .map(|r| (r.features.clone(), r.actions.clone(), r.reward))
+            .collect();
+        idx += mi;
+        locals.push(Box::new(QuadraticLocal::from_weighted_trajectories(&trajs, mu)));
+    }
+    ConsensusProblem::new(locals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_counts_sums() {
+        assert_eq!(split_counts(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_counts(9, 3), vec![3, 3, 3]);
+        assert_eq!(split_counts(2, 3), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn synthetic_regression_shapes() {
+        let mut rng = Pcg64::new(61);
+        let prob = synthetic_regression(5, 8, 100, 0.1, 0.05, &mut rng);
+        assert_eq!(prob.n(), 5);
+        assert_eq!(prob.p, 8);
+        // Optimal value should be near the noise floor.
+        let (_, f) = prob.centralized_optimum(50, 1e-9);
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn mnist_like_learnable() {
+        let mut rng = Pcg64::new(62);
+        let prob = mnist_like(3, 10, 300, 0, Reg::L2, 0.01, &mut rng);
+        let (theta, f_star) = prob.centralized_optimum(60, 1e-8);
+        // Training loss at optimum must beat the trivial θ = 0 predictor.
+        let f_zero = prob.objective_at(&vec![0.0; 10]);
+        assert!(f_star < f_zero, "f*={f_star} f0={f_zero}");
+        assert!(theta.iter().any(|v| v.abs() > 1e-3));
+    }
+
+    #[test]
+    fn fmri_like_is_m_ll_p() {
+        let mut rng = Pcg64::new(63);
+        let prob = fmri_like(4, 64, 48, 8, 8.0, 0.02, &mut rng);
+        assert_eq!(prob.p, 64);
+        assert_eq!(prob.n(), 4);
+        let f = prob.objective_at(&vec![0.0; 64]);
+        assert!(f.is_finite() && f > 0.0);
+    }
+
+    #[test]
+    fn london_like_has_27_features() {
+        let mut rng = Pcg64::new(64);
+        let prob = london_like(4, 200, 0.05, &mut rng);
+        assert_eq!(prob.p, 27);
+        let (_, f) = prob.centralized_optimum(30, 1e-8);
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn rl_dcp_builds_quadratics() {
+        let mut rng = Pcg64::new(65);
+        let prob = rl_dcp(3, 12, 30, 0.5, 0.05, &mut rng);
+        assert_eq!(prob.p, 6);
+        assert_eq!(prob.n(), 3);
+        let (theta, _) = prob.centralized_optimum(30, 1e-8);
+        // Reward-weighted regression should produce a finite policy.
+        assert!(theta.iter().all(|v| v.is_finite()));
+    }
+}

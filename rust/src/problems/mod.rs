@@ -1,0 +1,292 @@
+//! Consensus optimization problems (Section 3 + Appendix H).
+//!
+//! A [`ConsensusProblem`] is a set of per-node local objectives
+//! `f_i : R^p → R`; the global task is
+//! `min Σ f_i(x_i)  s.t.  x_1 = … = x_n` (Eq. 3). Appendix H's reductions
+//! are implemented as concrete local objectives:
+//!
+//! - [`quadratic::QuadraticLocal`] — linear regression (H.1), London
+//!   Schools, and RL reward-weighted regression (H.3), all of the form
+//!   `θᵀP_iθ − 2c_iᵀθ + u_i`;
+//! - [`logistic::LogisticLocal`] — logistic regression with L2 (H.2.1) or
+//!   smoothed-L1 (H.2.2, Eq. 73) regularization.
+
+pub mod quadratic;
+pub mod logistic;
+pub mod datasets;
+
+use crate::linalg::cholesky::spd_solve;
+use crate::linalg::Matrix;
+
+/// Borrowed view of a local objective's data, used by the PJRT backend to
+/// feed the AOT artifacts. `Opaque` objectives run native-only.
+pub enum ExportData<'a> {
+    /// Quadratic sufficient statistics (H.1/H.3): `P_i`, `c_i`.
+    Quadratic { p_mat: &'a Matrix, c: &'a [f64] },
+    /// Logistic raw data (H.2): features `B_i` (p × m_i, columns are
+    /// examples), labels, regularization.
+    Logistic { b: &'a Matrix, a: &'a [f64], mu: f64, reg: logistic::Reg },
+    /// No exportable structure.
+    Opaque,
+}
+
+/// A per-node local objective `f_i` with the oracles the algorithms need.
+pub trait LocalObjective: Send + Sync {
+    /// Feature dimension p.
+    fn p(&self) -> usize;
+    /// Objective value `f_i(θ)`.
+    fn value(&self, theta: &[f64]) -> f64;
+    /// Gradient `∇f_i(θ)`.
+    fn gradient(&self, theta: &[f64]) -> Vec<f64>;
+    /// Hessian `∇²f_i(θ)` (dense p×p).
+    fn hessian(&self, theta: &[f64]) -> Matrix;
+    /// Primal recovery (Eq. 6): `θ = argmin f_i(θ) + θᵀv`, i.e. solve
+    /// `∇f_i(θ) = −v` for the Lagrangian-row input `v = (LΛ)(i,:)`.
+    fn primal_recover(&self, v: &[f64]) -> Vec<f64>;
+    /// Hessian-vector product (default: materialize the Hessian).
+    fn hess_vec(&self, theta: &[f64], z: &[f64]) -> Vec<f64> {
+        self.hessian(theta).matvec(z)
+    }
+    /// Data export for the PJRT artifacts (default: opaque → native only).
+    fn export(&self) -> ExportData<'_> {
+        ExportData::Opaque
+    }
+    /// Solve `(∇²f_i(θ) + shift·I) x = rhs` — the inner Newton system of
+    /// primal recovery, ADMM and Network Newton. Default: dense Cholesky.
+    /// Structured objectives override this with matrix-free solvers (the
+    /// logistic local uses CG over `B D Bᵀ + diag`, which is what makes the
+    /// m ≪ p fMRI regime tractable).
+    fn solve_shifted(&self, theta: &[f64], rhs: &[f64], shift: f64) -> Vec<f64> {
+        let mut h = self.hessian(theta);
+        for i in 0..h.rows {
+            h[(i, i)] += shift + 1e-12;
+        }
+        match crate::linalg::cholesky::Cholesky::factor(&h) {
+            Ok(ch) => ch.solve(rhs),
+            Err(_) => rhs.to_vec(),
+        }
+    }
+}
+
+/// The distributed problem: one local objective per graph node.
+pub struct ConsensusProblem {
+    /// Per-node objectives, indexed by node id.
+    pub locals: Vec<Box<dyn LocalObjective>>,
+    /// Feature dimension p (same for all nodes).
+    pub p: usize,
+}
+
+impl ConsensusProblem {
+    /// Bundle local objectives (validates equal dimensions).
+    pub fn new(locals: Vec<Box<dyn LocalObjective>>) -> ConsensusProblem {
+        assert!(!locals.is_empty());
+        let p = locals[0].p();
+        assert!(locals.iter().all(|l| l.p() == p), "mixed feature dims");
+        ConsensusProblem { p, locals }
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Global objective at a *stacked* per-node iterate θ (row-major n×p):
+    /// `Σ_i f_i(θ_i)`.
+    pub fn objective(&self, thetas: &[f64]) -> f64 {
+        let p = self.p;
+        assert_eq!(thetas.len(), self.n() * p);
+        self.locals
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.value(&thetas[i * p..(i + 1) * p]))
+            .sum()
+    }
+
+    /// Global objective if every node held the same `θ`.
+    pub fn objective_at(&self, theta: &[f64]) -> f64 {
+        self.locals.iter().map(|l| l.value(theta)).sum()
+    }
+
+    /// Consensus error: `√(Σ_i ‖θ_i − θ̄‖²)` over the stacked iterate.
+    pub fn consensus_error(&self, thetas: &[f64]) -> f64 {
+        let (n, p) = (self.n(), self.p);
+        let mut mean = vec![0.0; p];
+        for i in 0..n {
+            for j in 0..p {
+                mean[j] += thetas[i * p + j];
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut sq = 0.0;
+        for i in 0..n {
+            for j in 0..p {
+                let d = thetas[i * p + j] - mean[j];
+                sq += d * d;
+            }
+        }
+        sq.sqrt()
+    }
+
+    /// Average iterate θ̄ across nodes.
+    pub fn mean_iterate(&self, thetas: &[f64]) -> Vec<f64> {
+        let (n, p) = (self.n(), self.p);
+        let mut mean = vec![0.0; p];
+        for i in 0..n {
+            for j in 0..p {
+                mean[j] += thetas[i * p + j] / n as f64;
+            }
+        }
+        mean
+    }
+
+    /// Centralized optimum by (damped) Newton on `F(θ) = Σ f_i(θ)`.
+    /// Returns `(θ*, F(θ*))`. Used only for reporting optimality gaps.
+    pub fn centralized_optimum(&self, max_iter: usize, tol: f64) -> (Vec<f64>, f64) {
+        let p = self.p;
+        let mut theta = vec![0.0; p];
+        for _ in 0..max_iter {
+            let mut grad = vec![0.0; p];
+            let mut hess = Matrix::zeros(p, p);
+            for l in &self.locals {
+                let g = l.gradient(&theta);
+                for j in 0..p {
+                    grad[j] += g[j];
+                }
+                hess.add_scaled(1.0, &l.hessian(&theta));
+            }
+            let gn = crate::linalg::vector::norm2(&grad);
+            if gn < tol {
+                break;
+            }
+            let step = spd_solve(&hess, &grad).expect("centralized Hessian SPD");
+            // Backtracking line search on the global objective.
+            let f0 = self.objective_at(&theta);
+            let descent = crate::linalg::vector::dot(&grad, &step);
+            let mut alpha = 1.0;
+            loop {
+                let cand: Vec<f64> =
+                    theta.iter().zip(&step).map(|(t, s)| t - alpha * s).collect();
+                if self.objective_at(&cand) <= f0 - 1e-4 * alpha * descent {
+                    theta = cand;
+                    break;
+                }
+                alpha *= 0.5;
+                if alpha < 1e-12 {
+                    theta = cand_at(&theta, &step, 1e-12);
+                    break;
+                }
+            }
+        }
+        let f = self.objective_at(&theta);
+        (theta, f)
+    }
+}
+
+fn cand_at(theta: &[f64], step: &[f64], alpha: f64) -> Vec<f64> {
+    theta.iter().zip(step).map(|(t, s)| t - alpha * s).collect()
+}
+
+/// Eigenvalue bounds (λ_min, λ_max) of a dense symmetric PSD matrix via
+/// power iteration + spectral shift. Used to estimate Assumption 1's γ, Γ.
+pub fn sym_eig_bounds(a: &Matrix, iters: usize) -> (f64, f64) {
+    let n = a.rows;
+    let mut rng = crate::util::Pcg64::new(0x5eed);
+    // λ_max
+    let mut v = rng.normal_vec(n);
+    let mut lmax = 0.0;
+    for _ in 0..iters {
+        let y = a.matvec(&v);
+        let ny = crate::linalg::vector::norm2(&y).max(1e-300);
+        lmax = ny;
+        for i in 0..n {
+            v[i] = y[i] / ny;
+        }
+    }
+    // λ_min via power iteration on (λ_max I − A)
+    let mut w = rng.normal_vec(n);
+    let mut shift_max = 0.0;
+    for _ in 0..iters {
+        let y = a.matvec(&w);
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            z[i] = lmax * w[i] - y[i];
+        }
+        let nz = crate::linalg::vector::norm2(&z).max(1e-300);
+        shift_max = nz;
+        for i in 0..n {
+            w[i] = z[i] / nz;
+        }
+    }
+    ((lmax - shift_max).max(0.0), lmax)
+}
+
+/// Assumption-1 constants (γ, Γ) for a problem: extremal eigenvalues of the
+/// local Hessians across nodes, evaluated at the given stacked iterate.
+pub fn assumption1_bounds(problem: &ConsensusProblem, thetas: &[f64]) -> (f64, f64) {
+    let p = problem.p;
+    let mut gamma = f64::INFINITY;
+    let mut big_gamma: f64 = 0.0;
+    for (i, l) in problem.locals.iter().enumerate() {
+        let h = l.hessian(&thetas[i * p..(i + 1) * p]);
+        let (lo, hi) = sym_eig_bounds(&h, 60);
+        gamma = gamma.min(lo);
+        big_gamma = big_gamma.max(hi);
+    }
+    (gamma, big_gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use quadratic::QuadraticLocal;
+
+    fn tiny_problem() -> ConsensusProblem {
+        // Two nodes, p = 2; f_i(θ) = θᵀP_iθ − 2c_iᵀθ.
+        let p1 = Matrix::from_rows(2, 2, vec![2.0, 0.0, 0.0, 1.0]);
+        let p2 = Matrix::from_rows(2, 2, vec![1.0, 0.0, 0.0, 3.0]);
+        let l1 = QuadraticLocal::new(p1, vec![1.0, 0.0], 0.0);
+        let l2 = QuadraticLocal::new(p2, vec![0.0, 3.0], 0.0);
+        ConsensusProblem::new(vec![Box::new(l1), Box::new(l2)])
+    }
+
+    #[test]
+    fn objective_and_consensus_error() {
+        let prob = tiny_problem();
+        let thetas = vec![1.0, 0.0, 1.0, 0.0];
+        assert!(prob.consensus_error(&thetas) < 1e-15);
+        let thetas2 = vec![1.0, 0.0, 0.0, 0.0];
+        assert!(prob.consensus_error(&thetas2) > 0.0);
+        let f = prob.objective(&thetas);
+        // f1(1,0) = 2 − 2 = 0 ; f2(1,0) = 1 − 0 = 1.
+        assert!((f - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centralized_optimum_quadratic() {
+        let prob = tiny_problem();
+        // Global: θᵀ(P1+P2)θ − 2(c1+c2)ᵀθ → θ* = (P1+P2)^{-1}(c1+c2) = [1/3, 3/4].
+        let (theta, _) = prob.centralized_optimum(50, 1e-10);
+        assert!((theta[0] - 1.0 / 3.0).abs() < 1e-8, "{theta:?}");
+        assert!((theta[1] - 3.0 / 4.0).abs() < 1e-8, "{theta:?}");
+    }
+
+    #[test]
+    fn eig_bounds_diagonal() {
+        let a = Matrix::diag(&[1.0, 5.0, 9.0]);
+        let (lo, hi) = sym_eig_bounds(&a, 200);
+        assert!((hi - 9.0).abs() < 1e-6, "hi={hi}");
+        assert!((lo - 1.0).abs() < 1e-4, "lo={lo}");
+    }
+
+    #[test]
+    fn assumption1_bounds_quadratic() {
+        let prob = tiny_problem();
+        let thetas = vec![0.0; 4];
+        let (g, gg) = assumption1_bounds(&prob, &thetas);
+        // Hessians are 2P_i: eigenvalues {4,2} and {2,6}.
+        assert!((g - 2.0).abs() < 1e-4, "gamma={g}");
+        assert!((gg - 6.0).abs() < 1e-4, "Gamma={gg}");
+    }
+}

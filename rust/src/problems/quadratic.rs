@@ -1,0 +1,219 @@
+//! Quadratic local objectives `f_i(θ) = θᵀP_iθ − 2c_iᵀθ + u_i` — the
+//! reduction of linear regression (Appendix H.1, Eq. 44), the London
+//! Schools task, and the RL reward-weighted regression (H.3, Eq. 85/86).
+
+use super::LocalObjective;
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::Matrix;
+
+/// A quadratic local objective with cached Cholesky factor of `P_i`
+/// (`P_i` must be SPD — guaranteed by the ridge term `μ_i m_i I`).
+pub struct QuadraticLocal {
+    /// SPD matrix `P_i` (p × p).
+    pub p_mat: Matrix,
+    /// Linear term `c_i`.
+    pub c: Vec<f64>,
+    /// Constant `u_i` (keeps objective values comparable with the paper).
+    pub u: f64,
+    chol: Cholesky,
+}
+
+impl QuadraticLocal {
+    /// Build from `P_i`, `c_i`, `u_i`. Panics if `P_i` is not SPD.
+    pub fn new(p_mat: Matrix, c: Vec<f64>, u: f64) -> QuadraticLocal {
+        assert_eq!(p_mat.rows, p_mat.cols);
+        assert_eq!(c.len(), p_mat.rows);
+        let chol = Cholesky::factor(&p_mat).expect("P_i must be SPD (add ridge)");
+        QuadraticLocal { p_mat, c, u, chol }
+    }
+
+    /// Build from raw data: columns `b_j` (p × m_i), targets `a` (m_i),
+    /// ridge `μ_i`: `P = BBᵀ + μ m I`, `c = B a`, `u = aᵀa` (Eq. 44).
+    pub fn from_data(b: &Matrix, a: &[f64], mu: f64) -> QuadraticLocal {
+        let p = b.rows;
+        let m = b.cols;
+        assert_eq!(a.len(), m);
+        let mut p_mat = b.matmul(&b.transpose());
+        for i in 0..p {
+            p_mat[(i, i)] += mu * m as f64;
+        }
+        // c = B a
+        let mut c = vec![0.0; p];
+        for j in 0..m {
+            for i in 0..p {
+                c[i] += b[(i, j)] * a[j];
+            }
+        }
+        let u = a.iter().map(|v| v * v).sum();
+        QuadraticLocal::new(p_mat, c, u)
+    }
+
+    /// Weighted variant for RL (H.3): `P = Σ_j R_j B_j B_jᵀ + μ m I`,
+    /// `c = Σ_j R_j B_j a_j`, `u = Σ_j R_j a_jᵀa_j` where each trajectory
+    /// contributes columns `B_j` (p × T) and actions `a_j` (T).
+    pub fn from_weighted_trajectories(
+        trajs: &[(Matrix, Vec<f64>, f64)],
+        mu: f64,
+    ) -> QuadraticLocal {
+        assert!(!trajs.is_empty());
+        let p = trajs[0].0.rows;
+        let m = trajs.len();
+        let mut p_mat = Matrix::zeros(p, p);
+        let mut c = vec![0.0; p];
+        let mut u = 0.0;
+        for (b, a, r) in trajs {
+            assert_eq!(b.rows, p);
+            assert_eq!(a.len(), b.cols);
+            let bbt = b.matmul(&b.transpose());
+            p_mat.add_scaled(*r, &bbt);
+            for j in 0..b.cols {
+                for i in 0..p {
+                    c[i] += r * b[(i, j)] * a[j];
+                }
+            }
+            u += r * a.iter().map(|v| v * v).sum::<f64>();
+        }
+        for i in 0..p {
+            p_mat[(i, i)] += mu * m as f64;
+        }
+        QuadraticLocal::new(p_mat, c, u)
+    }
+}
+
+impl LocalObjective for QuadraticLocal {
+    fn p(&self) -> usize {
+        self.p_mat.rows
+    }
+
+    fn value(&self, theta: &[f64]) -> f64 {
+        self.p_mat.quad_form(theta, theta) - 2.0 * crate::linalg::vector::dot(&self.c, theta)
+            + self.u
+    }
+
+    fn gradient(&self, theta: &[f64]) -> Vec<f64> {
+        // ∇f = 2Pθ − 2c.
+        let mut g = self.p_mat.matvec(theta);
+        for i in 0..g.len() {
+            g[i] = 2.0 * g[i] - 2.0 * self.c[i];
+        }
+        g
+    }
+
+    fn hessian(&self, _theta: &[f64]) -> Matrix {
+        // ∇²f = 2P (constant).
+        let mut h = self.p_mat.clone();
+        for v in h.data.iter_mut() {
+            *v *= 2.0;
+        }
+        h
+    }
+
+    fn primal_recover(&self, v: &[f64]) -> Vec<f64> {
+        // ∇f(θ) = −v ⇒ 2Pθ − 2c = −v ⇒ θ = P⁻¹(c − v/2)  (paper H.1).
+        let rhs: Vec<f64> = self.c.iter().zip(v).map(|(c, vi)| c - 0.5 * vi).collect();
+        self.chol.solve(&rhs)
+    }
+
+    fn hess_vec(&self, _theta: &[f64], z: &[f64]) -> Vec<f64> {
+        let mut y = self.p_mat.matvec(z);
+        for v in y.iter_mut() {
+            *v *= 2.0;
+        }
+        y
+    }
+
+    fn export(&self) -> super::ExportData<'_> {
+        super::ExportData::Quadratic { p_mat: &self.p_mat, c: &self.c }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_local(p: usize, m: usize, seed: u64) -> QuadraticLocal {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Matrix::zeros(p, m);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let a = rng.normal_vec(m);
+        QuadraticLocal::from_data(&b, &a, 0.05)
+    }
+
+    #[test]
+    fn gradient_is_finite_difference() {
+        let l = random_local(5, 12, 31);
+        let mut rng = Pcg64::new(32);
+        let theta = rng.normal_vec(5);
+        let g = l.gradient(&theta);
+        let h = 1e-6;
+        for j in 0..5 {
+            let mut tp = theta.clone();
+            tp[j] += h;
+            let mut tm = theta.clone();
+            tm[j] -= h;
+            let fd = (l.value(&tp) - l.value(&tm)) / (2.0 * h);
+            assert!((g[j] - fd).abs() < 1e-4, "g[{j}]={} fd={fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn primal_recover_solves_stationarity() {
+        let l = random_local(6, 15, 33);
+        let mut rng = Pcg64::new(34);
+        let v = rng.normal_vec(6);
+        let theta = l.primal_recover(&v);
+        // ∇f(θ) + v = 0.
+        let g = l.gradient(&theta);
+        for j in 0..6 {
+            assert!((g[j] + v[j]).abs() < 1e-9, "{} vs {}", g[j], -v[j]);
+        }
+    }
+
+    #[test]
+    fn hess_vec_matches_hessian() {
+        let l = random_local(4, 9, 35);
+        let mut rng = Pcg64::new(36);
+        let theta = rng.normal_vec(4);
+        let z = rng.normal_vec(4);
+        let hv = l.hess_vec(&theta, &z);
+        let h = l.hessian(&theta);
+        let hz = h.matvec(&z);
+        for (a, b) in hv.iter().zip(&hz) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn value_nonnegative_for_least_squares() {
+        // f(θ) = ‖a − Bᵀθ‖² + ridge ≥ 0.
+        let l = random_local(3, 8, 37);
+        let mut rng = Pcg64::new(38);
+        for _ in 0..10 {
+            let theta = rng.normal_vec(3);
+            assert!(l.value(&theta) >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn weighted_trajectories_match_manual() {
+        let mut rng = Pcg64::new(39);
+        let b1 = Matrix::from_rows(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let a1 = vec![1.0, 2.0];
+        let b2 = Matrix::from_rows(2, 1, vec![1.0, 1.0]);
+        let a2 = vec![3.0];
+        let l = QuadraticLocal::from_weighted_trajectories(
+            &[(b1, a1, 2.0), (b2, a2, 0.5)],
+            0.0,
+        );
+        // P = 2·I + 0.5·[1;1][1,1]
+        assert!((l.p_mat[(0, 0)] - 2.5).abs() < 1e-12);
+        assert!((l.p_mat[(0, 1)] - 0.5).abs() < 1e-12);
+        // c = 2·[1,2] + 0.5·3·[1,1] = [3.5, 5.5]
+        assert!((l.c[0] - 3.5).abs() < 1e-12);
+        assert!((l.c[1] - 5.5).abs() < 1e-12);
+        let _ = rng.next_u64();
+    }
+}

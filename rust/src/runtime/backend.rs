@@ -1,0 +1,95 @@
+//! The `LocalBackend` abstraction and its native implementation.
+
+use crate::problems::ConsensusProblem;
+
+/// Batched per-node compute used on the hot path of the dual Newton
+/// methods. Inputs/outputs are stacked row-major `n × p`.
+///
+/// Deliberately *not* `Send`/`Sync`: the PJRT client wraps raw pointers;
+/// the bulk-synchronous driver runs on one thread and the threaded
+/// runtime (`net::threaded`) uses per-node native programs instead.
+pub trait LocalBackend {
+    /// For every node `i`: `out_i = argmin_θ f_i(θ) + θᵀ v_i` (Eq. 6).
+    fn primal_recover_all(&self, problem: &ConsensusProblem, v: &[f64], out: &mut [f64]);
+
+    /// For every node `i`: `out_i = ∇²f_i(θ_i) z_i` (the `b` vectors of
+    /// Eq. 9).
+    fn hess_apply_all(&self, problem: &ConsensusProblem, thetas: &[f64], z: &[f64], out: &mut [f64]);
+
+    /// Aggregated Hessian `Σ_i ∇²f_i(θ_i)` (p×p). Used by the kernel-
+    /// consistency correction of the SDD-Newton step (see
+    /// `algorithms::sdd_newton`); the corresponding all-reduce is accounted
+    /// by the caller. Default: sum the local oracles.
+    fn hess_sum(&self, problem: &ConsensusProblem, thetas: &[f64]) -> crate::linalg::Matrix {
+        let p = problem.p;
+        let mut sum = crate::linalg::Matrix::zeros(p, p);
+        for (i, l) in problem.locals.iter().enumerate() {
+            sum.add_scaled(1.0, &l.hessian(&thetas[i * p..(i + 1) * p]));
+        }
+        sum
+    }
+
+    /// Human-readable backend name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend delegating to the `LocalObjective` oracles. This is
+/// the correctness reference for the PJRT artifacts.
+pub struct NativeBackend;
+
+impl LocalBackend for NativeBackend {
+    fn primal_recover_all(&self, problem: &ConsensusProblem, v: &[f64], out: &mut [f64]) {
+        let p = problem.p;
+        assert_eq!(v.len(), problem.n() * p);
+        assert_eq!(out.len(), problem.n() * p);
+        for (i, l) in problem.locals.iter().enumerate() {
+            let y = l.primal_recover(&v[i * p..(i + 1) * p]);
+            out[i * p..(i + 1) * p].copy_from_slice(&y);
+        }
+    }
+
+    fn hess_apply_all(
+        &self,
+        problem: &ConsensusProblem,
+        thetas: &[f64],
+        z: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        for (i, l) in problem.locals.iter().enumerate() {
+            let b = l.hess_vec(&thetas[i * p..(i + 1) * p], &z[i * p..(i + 1) * p]);
+            out[i * p..(i + 1) * p].copy_from_slice(&b);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn native_backend_matches_locals() {
+        let mut rng = Pcg64::new(71);
+        let prob = datasets::synthetic_regression(4, 6, 80, 0.1, 0.05, &mut rng);
+        let v = rng.normal_vec(4 * 6);
+        let mut out = vec![0.0; 24];
+        NativeBackend.primal_recover_all(&prob, &v, &mut out);
+        for i in 0..4 {
+            let y = prob.locals[i].primal_recover(&v[i * 6..(i + 1) * 6]);
+            assert_eq!(&out[i * 6..(i + 1) * 6], y.as_slice());
+        }
+        let z = rng.normal_vec(24);
+        let mut hz = vec![0.0; 24];
+        NativeBackend.hess_apply_all(&prob, &out, &z, &mut hz);
+        for i in 0..4 {
+            let b = prob.locals[i].hess_vec(&out[i * 6..(i + 1) * 6], &z[i * 6..(i + 1) * 6]);
+            assert_eq!(&hz[i * 6..(i + 1) * 6], b.as_slice());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime: the per-node compute backends.
+//!
+//! The dual-Newton algorithms touch node data only through
+//! [`LocalBackend`]: batched primal recovery (Eq. 6) and batched local
+//! Hessian application (the `b` vectors of Eq. 9). Two implementations:
+//!
+//! - [`backend::NativeBackend`] — pure-rust reference (`problems::*`);
+//! - [`pjrt::PjrtBackend`] — loads the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them on the PJRT CPU client.
+//!   Python never runs here; the HLO was produced once at build time.
+
+pub mod backend;
+pub mod pjrt;
+
+pub use backend::{LocalBackend, NativeBackend};
+pub use pjrt::PjrtBackend;

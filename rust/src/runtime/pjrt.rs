@@ -1,0 +1,391 @@
+//! PJRT backend: executes the AOT-compiled JAX/Pallas artifacts from rust.
+//!
+//! Build-time python (`make artifacts`) lowered the L2 model to HLO text;
+//! here we load it (`HloModuleProto::from_text_file`), compile it on the
+//! PJRT CPU client, and drive it with the problem's sufficient statistics.
+//! Python is never on this path.
+
+use crate::config::json::Json;
+use crate::problems::logistic::Reg;
+use crate::problems::{ConsensusProblem, ExportData};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::backend::LocalBackend;
+
+/// Compiled artifact pair + cached constant inputs for one problem.
+enum Mode {
+    Quad {
+        /// CG-based recover artifact (fallback / ablation).
+        recover: xla::PjRtLoadedExecutable,
+        /// Precomputed-inverse recover artifact: one batched matmul per
+        /// call. `P_i⁻¹` is computed once at startup (§Perf).
+        recover_pre: Option<xla::PjRtLoadedExecutable>,
+        hess: xla::PjRtLoadedExecutable,
+        /// P stacked (n,p,p), built once.
+        p_lit: xla::Literal,
+        /// P⁻¹ stacked (n,p,p), built once.
+        pinv_lit: Option<xla::Literal>,
+        /// c stacked (n,p).
+        c_lit: xla::Literal,
+    },
+    Logreg {
+        recover: xla::PjRtLoadedExecutable,
+        hess: xla::PjRtLoadedExecutable,
+        /// B stacked (n, m_pad, p) with zero-padded rows.
+        b_lit: xla::Literal,
+        /// labels (n, m_pad).
+        a_lit: xla::Literal,
+        /// reg_scale (n, 1) = μ_i · m_i (true counts, not padded).
+        rs_lit: xla::Literal,
+        /// Warm-start state: the previous primal iterate (reset to zero
+        /// whenever `v = 0`, i.e. a fresh λ = 0 run).
+        warm: std::cell::RefCell<Vec<f64>>,
+    },
+}
+
+/// The PJRT-backed [`LocalBackend`].
+pub struct PjrtBackend {
+    mode: Mode,
+    n: usize,
+    p: usize,
+}
+
+fn lit2(data: &[f64], d0: usize, d1: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), d0 * d1);
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+}
+
+fn lit3(data: &[f64], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), d0 * d1 * d2);
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64, d2 as i64])?)
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Find a manifest entry matching a predicate; returns (name, entry).
+fn find_entry<'j>(
+    manifest: &'j Json,
+    pred: impl Fn(&Json) -> bool,
+) -> Option<(&'j str, &'j Json)> {
+    manifest
+        .as_obj()?
+        .iter()
+        .find(|(_, v)| pred(v))
+        .map(|(k, v)| (k.as_str(), v))
+}
+
+impl PjrtBackend {
+    /// Build a backend for `problem` from the artifacts in `dir`.
+    /// Fails (so callers can fall back to [`super::NativeBackend`]) when no
+    /// artifact matches the problem's shape/regularizer.
+    pub fn for_problem(problem: &ConsensusProblem, dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let (n, p) = (problem.n(), problem.p);
+        let client = xla::PjRtClient::cpu()?;
+
+        match problem.locals[0].export() {
+            ExportData::Quadratic { .. } => {
+                let want = |kind: &'static str| {
+                    move |e: &Json| {
+                        e.get("kind").and_then(Json::as_str) == Some(kind)
+                            && e.get("n").and_then(Json::as_usize) == Some(n)
+                            && e.get("p").and_then(Json::as_usize) == Some(p)
+                    }
+                };
+                let (_, rec) = find_entry(&manifest, want("quad_recover"))
+                    .ok_or_else(|| anyhow!("no quad_recover artifact for n={n} p={p}"))?;
+                let (_, hes) = find_entry(&manifest, want("quad_hess"))
+                    .ok_or_else(|| anyhow!("no quad_hess artifact for n={n} p={p}"))?;
+                let recover = compile(&client, &dir.join(rec.get("file").unwrap().as_str().unwrap()))?;
+                let hess = compile(&client, &dir.join(hes.get("file").unwrap().as_str().unwrap()))?;
+                let recover_pre = find_entry(&manifest, want("quad_recover_pre"))
+                    .map(|(_, e)| compile(&client, &dir.join(e.get("file").unwrap().as_str().unwrap())))
+                    .transpose()?;
+
+                // Stack P and c; precompute P⁻¹ once (startup, not hot path).
+                let mut pdata = vec![0.0; n * p * p];
+                let mut pinv_data = vec![0.0; n * p * p];
+                let mut cdata = vec![0.0; n * p];
+                for (i, l) in problem.locals.iter().enumerate() {
+                    match l.export() {
+                        ExportData::Quadratic { p_mat, c } => {
+                            pdata[i * p * p..(i + 1) * p * p].copy_from_slice(&p_mat.data);
+                            cdata[i * p..(i + 1) * p].copy_from_slice(c);
+                            if recover_pre.is_some() {
+                                let inv = crate::linalg::cholesky::spd_inverse(p_mat)
+                                    .map_err(|e| anyhow!("P_{i} not SPD: {e}"))?;
+                                pinv_data[i * p * p..(i + 1) * p * p]
+                                    .copy_from_slice(&inv.data);
+                            }
+                        }
+                        _ => bail!("mixed problem kinds"),
+                    }
+                }
+                let pinv_lit = if recover_pre.is_some() {
+                    Some(lit3(&pinv_data, n, p, p)?)
+                } else {
+                    None
+                };
+                Ok(PjrtBackend {
+                    mode: Mode::Quad {
+                        recover,
+                        recover_pre,
+                        hess,
+                        p_lit: lit3(&pdata, n, p, p)?,
+                        pinv_lit,
+                        c_lit: lit2(&cdata, n, p)?,
+                    },
+                    n,
+                    p,
+                })
+            }
+            ExportData::Logistic { reg, .. } => {
+                let reg_tag = match reg {
+                    Reg::L2 => "l2",
+                    Reg::SmoothL1 { .. } => "sl1",
+                };
+                let m_max = problem
+                    .locals
+                    .iter()
+                    .map(|l| match l.export() {
+                        ExportData::Logistic { a, .. } => a.len(),
+                        _ => 0,
+                    })
+                    .max()
+                    .unwrap();
+                let want = |kind: &'static str| {
+                    move |e: &Json| {
+                        e.get("kind").and_then(Json::as_str) == Some(kind)
+                            && e.get("n").and_then(Json::as_usize) == Some(n)
+                            && e.get("p").and_then(Json::as_usize) == Some(p)
+                            && e.get("m").and_then(Json::as_usize).map(|m| m >= m_max) == Some(true)
+                            && e.get("reg").and_then(Json::as_str) == Some(reg_tag)
+                    }
+                };
+                let (_, rec) = find_entry(&manifest, want("logreg_recover")).ok_or_else(|| {
+                    anyhow!("no logreg_recover artifact for n={n} p={p} m>={m_max} reg={reg_tag}")
+                })?;
+                let m_pad = rec.get("m").unwrap().as_usize().unwrap();
+                let (_, hes) = find_entry(&manifest, move |e: &Json| {
+                    e.get("kind").and_then(Json::as_str) == Some("logreg_hess")
+                        && e.get("n").and_then(Json::as_usize) == Some(n)
+                        && e.get("p").and_then(Json::as_usize) == Some(p)
+                        && e.get("m").and_then(Json::as_usize) == Some(m_pad)
+                        && e.get("reg").and_then(Json::as_str) == Some(reg_tag)
+                })
+                .ok_or_else(|| anyhow!("no matching logreg_hess artifact"))?;
+                let recover = compile(&client, &dir.join(rec.get("file").unwrap().as_str().unwrap()))?;
+                let hess = compile(&client, &dir.join(hes.get("file").unwrap().as_str().unwrap()))?;
+
+                // Stack B (rows = examples, zero-padded), a, reg_scale.
+                let mut bdata = vec![0.0; n * m_pad * p];
+                let mut adata = vec![0.0; n * m_pad];
+                let mut rsdata = vec![0.0; n];
+                for (i, l) in problem.locals.iter().enumerate() {
+                    match l.export() {
+                        ExportData::Logistic { b, a, mu, .. } => {
+                            // b is p×m_i column-major examples; artifact wants (m, p) rows.
+                            for j in 0..a.len() {
+                                for r in 0..p {
+                                    bdata[i * m_pad * p + j * p + r] = b[(r, j)];
+                                }
+                                adata[i * m_pad + j] = a[j];
+                            }
+                            rsdata[i] = mu * a.len() as f64;
+                        }
+                        _ => bail!("mixed problem kinds"),
+                    }
+                }
+                Ok(PjrtBackend {
+                    mode: Mode::Logreg {
+                        recover,
+                        hess,
+                        b_lit: lit3(&bdata, n, m_pad, p)?,
+                        a_lit: lit2(&adata, n, m_pad)?,
+                        rs_lit: lit2(&rsdata, n, 1)?,
+                        warm: std::cell::RefCell::new(vec![0.0; n * p]),
+                    },
+                    n,
+                    p,
+                })
+            }
+            ExportData::Opaque => bail!("problem does not export data for PJRT"),
+        }
+    }
+
+    fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<Vec<f64>> {
+        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}
+
+impl LocalBackend for PjrtBackend {
+    fn primal_recover_all(&self, problem: &ConsensusProblem, v: &[f64], out: &mut [f64]) {
+        let (n, p) = (self.n, self.p);
+        debug_assert_eq!(problem.n(), n);
+        let v_lit = lit2(v, n, p).expect("literal");
+        let res = match &self.mode {
+            Mode::Quad { recover, recover_pre, p_lit, pinv_lit, c_lit, .. } => {
+                match (recover_pre, pinv_lit) {
+                    (Some(pre), Some(pinv)) => self.run1(pre, &[pinv, c_lit, &v_lit]),
+                    _ => self.run1(recover, &[p_lit, c_lit, &v_lit]),
+                }
+            }
+            Mode::Logreg { recover, b_lit, a_lit, rs_lit, warm, .. } => {
+                // Fresh λ = 0 run (v = 0): reset the warm start.
+                if v.iter().all(|&x| x == 0.0) {
+                    warm.borrow_mut().fill(0.0);
+                }
+                let t0_lit = lit2(&warm.borrow(), n, p).expect("literal");
+                let res = self.run1(recover, &[b_lit, a_lit, &v_lit, rs_lit, &t0_lit]);
+                if let Ok(ref y) = res {
+                    warm.borrow_mut().copy_from_slice(y);
+                }
+                res
+            }
+        }
+        .expect("pjrt execution failed");
+        out.copy_from_slice(&res);
+    }
+
+    fn hess_apply_all(
+        &self,
+        problem: &ConsensusProblem,
+        thetas: &[f64],
+        z: &[f64],
+        out: &mut [f64],
+    ) {
+        let (n, p) = (self.n, self.p);
+        debug_assert_eq!(problem.n(), n);
+        let res = match &self.mode {
+            Mode::Quad { hess, p_lit, .. } => {
+                let z_lit = lit2(z, n, p).expect("literal");
+                self.run1(hess, &[p_lit, &z_lit])
+            }
+            Mode::Logreg { hess, b_lit, a_lit, rs_lit, .. } => {
+                let t_lit = lit2(thetas, n, p).expect("literal");
+                let z_lit = lit2(z, n, p).expect("literal");
+                self.run1(hess, &[b_lit, a_lit, &t_lit, &z_lit, rs_lit])
+            }
+        }
+        .expect("pjrt execution failed");
+        out.copy_from_slice(&res);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::datasets;
+    use crate::runtime::NativeBackend;
+    use crate::util::Pcg64;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn pjrt_quad_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let mut rng = Pcg64::new(201);
+        // Must match the smoke artifact shape n=8, p=5.
+        let prob = datasets::synthetic_regression(8, 5, 160, 0.2, 0.05, &mut rng);
+        let pjrt = match PjrtBackend::for_problem(&prob, artifacts_dir()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        let v = rng.normal_vec(8 * 5);
+        let mut out_p = vec![0.0; 40];
+        let mut out_n = vec![0.0; 40];
+        pjrt.primal_recover_all(&prob, &v, &mut out_p);
+        NativeBackend.primal_recover_all(&prob, &v, &mut out_n);
+        for (a, b) in out_p.iter().zip(&out_n) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        let z = rng.normal_vec(40);
+        let mut hz_p = vec![0.0; 40];
+        let mut hz_n = vec![0.0; 40];
+        pjrt.hess_apply_all(&prob, &out_p, &z, &mut hz_p);
+        NativeBackend.hess_apply_all(&prob, &out_n, &z, &mut hz_n);
+        for (a, b) in hz_p.iter().zip(&hz_n) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pjrt_logreg_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let mut rng = Pcg64::new(202);
+        // Smoke logistic artifact shape: n=6, p=8, m_pad=16 (examples/node ≤ 16).
+        let prob = datasets::mnist_like(
+            6,
+            8,
+            90,
+            0,
+            crate::problems::logistic::Reg::L2,
+            0.05,
+            &mut rng,
+        );
+        let pjrt = match PjrtBackend::for_problem(&prob, artifacts_dir()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        let v: Vec<f64> = rng.normal_vec(6 * 8).iter().map(|x| 0.3 * x).collect();
+        let mut out_p = vec![0.0; 48];
+        let mut out_n = vec![0.0; 48];
+        pjrt.primal_recover_all(&prob, &v, &mut out_p);
+        NativeBackend.primal_recover_all(&prob, &v, &mut out_n);
+        for (a, b) in out_p.iter().zip(&out_n) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        let z = rng.normal_vec(48);
+        let mut hz_p = vec![0.0; 48];
+        let mut hz_n = vec![0.0; 48];
+        pjrt.hess_apply_all(&prob, &out_n, &z, &mut hz_p);
+        NativeBackend.hess_apply_all(&prob, &out_n, &z, &mut hz_n);
+        for (a, b) in hz_p.iter().zip(&hz_n) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_reported() {
+        let mut rng = Pcg64::new(203);
+        let prob = datasets::synthetic_regression(3, 2, 30, 0.2, 0.05, &mut rng);
+        let res = PjrtBackend::for_problem(&prob, "/nonexistent-dir");
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! Distributed SDDM solver (Section 2 of the paper).
+//!
+//! Implements the Peng–Spielman parallel solver [11] in the distributed
+//! formulation of Tutunov–Bou Ammar–Jadbabaie [12]:
+//!
+//! 1. split `M = D₀ − A₀` (standard) or the *lazy* variant
+//!    `M = 2D₀ − (D₀ + A₀)` which keeps the walk spectrum in `[0, 1]` on
+//!    any graph (the standard splitting fails to decay on bipartite
+//!    topologies where `D₀⁻¹A₀` has eigenvalue −1);
+//! 2. build the inverse approximated chain `C = {D_i, A_i}` with
+//!    `D_i = D̃`, `A_i = D̃ X^{2^i}`, `X = D̃⁻¹Ã` (Eq. 2's recursion);
+//! 3. "crude" solve by the forward/backward sweeps of Algorithm 1;
+//! 4. refine to any ε by Richardson preconditioned iteration
+//!    (Algorithm 2): `y ← y + Z₀(b − M y)`.
+//!
+//! Every operator application is expressed through neighbor-exchange
+//! rounds so communication is accounted exactly (`net::CommStats`): an
+//! `X`-application costs one round of `2m` messages; `X^{2^i}` costs `2^i`
+//! rounds (the distributed solver repeats local averaging — no node ever
+//! materializes a multi-hop matrix).
+//!
+//! Consensus Laplacians are singular with kernel `span{1}`; the solver
+//! detects this and works on the mean-zero subspace (each projection is an
+//! accounted all-reduce).
+
+pub mod chain;
+pub mod solver;
+pub mod squared;
+
+pub use chain::{Chain, ChainOptions, Splitting};
+pub use solver::{SddmSolver, SolveOutcome, SolverOptions};
+pub use squared::SquaredChain;

@@ -1,0 +1,323 @@
+//! The "crude" (Algorithm 1) and "exact" (Algorithm 2) SDD solvers.
+
+use super::chain::Chain;
+use crate::net::CommStats;
+
+/// Solver options.
+#[derive(Debug, Clone)]
+pub struct SolverOptions {
+    /// Relative residual target ‖b − My‖₂ / ‖b‖₂ for the exact solver.
+    /// (Def. 1's ε in the M-norm is bounded by √κ(M)·this; the residual is
+    /// the distributedly computable surrogate.)
+    pub eps: f64,
+    /// Cap on Richardson sweeps (q = O(log 1/ε) expected).
+    pub max_richardson: usize,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions { eps: 0.1, max_richardson: 200 }
+    }
+}
+
+/// Result of a solve.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// Stacked solution (`n × w` row-major).
+    pub x: Vec<f64>,
+    /// Richardson sweeps used.
+    pub sweeps: usize,
+    /// Final relative residual (max over the `w` columns).
+    pub rel_residual: f64,
+    /// Whether `eps` was reached within the sweep budget.
+    pub converged: bool,
+}
+
+/// SDDM solver bundling a chain with solve options.
+#[derive(Debug, Clone)]
+pub struct SddmSolver {
+    pub chain: Chain,
+    pub opts: SolverOptions,
+}
+
+impl SddmSolver {
+    /// Wrap a chain.
+    pub fn new(chain: Chain, opts: SolverOptions) -> Self {
+        SddmSolver { chain, opts }
+    }
+
+    /// "Crude" solve (Algorithm 1): one forward/backward sweep of the
+    /// chain, returning `x ≈ Z₀ b` with a constant-factor error.
+    /// `b` is stacked `n × w`. Communication is recorded in `stats`.
+    pub fn crude_solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> Vec<f64> {
+        let c = &self.chain;
+        let n = c.n;
+        assert_eq!(b.len(), n * w);
+        let d = c.depth;
+        let len = n * w;
+
+        let mut scratch_a = vec![0.0; len];
+        let mut scratch_b = vec![0.0; len];
+
+        // Forward: b_{i+1} = (I + A_i D̃^{-1}) b_i,  A_i D̃^{-1} v = D̃ X^{2^i} D̃^{-1} v.
+        let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
+        let mut cur = b.to_vec();
+        c.project(&mut cur, w, stats);
+        bs.push(cur.clone());
+        let mut tmp = vec![0.0; len];
+        for i in 0..d {
+            // tmp = D̃^{-1} cur
+            for r in 0..n {
+                for j in 0..w {
+                    tmp[r * w + j] = c.dinv[r] * cur[r * w + j];
+                }
+            }
+            c.apply_x_pow(i, &tmp, w, &mut scratch_a, &mut scratch_b, stats);
+            // cur = cur + D̃ * scratch_a
+            for r in 0..n {
+                for j in 0..w {
+                    cur[r * w + j] += c.dvec[r] * scratch_a[r * w + j];
+                }
+            }
+            c.project(&mut cur, w, stats);
+            bs.push(cur.clone());
+        }
+
+        // Last level: x_d = D̃^{-1} b_d.
+        let mut x = vec![0.0; len];
+        for r in 0..n {
+            for j in 0..w {
+                x[r * w + j] = c.dinv[r] * bs[d][r * w + j];
+            }
+        }
+        c.project(&mut x, w, stats);
+
+        // Backward: x_i = ½ [D̃^{-1} b_i + x_{i+1} + X^{2^i} x_{i+1}].
+        for i in (0..d).rev() {
+            c.apply_x_pow(i, &x, w, &mut scratch_a, &mut scratch_b, stats);
+            for r in 0..n {
+                for j in 0..w {
+                    let idx = r * w + j;
+                    x[idx] = 0.5 * (c.dinv[r] * bs[i][idx] + x[idx] + scratch_a[idx]);
+                }
+            }
+            c.project(&mut x, w, stats);
+        }
+        x
+    }
+
+    /// "Exact" solve (Algorithm 2): Richardson iteration preconditioned by
+    /// the crude solver, run until the relative residual falls below
+    /// `opts.eps` (or the sweep budget is exhausted).
+    pub fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
+        let c = &self.chain;
+        let n = c.n;
+        assert_eq!(b.len(), n * w);
+        let len = n * w;
+
+        let mut b0 = b.to_vec();
+        c.project(&mut b0, w, stats);
+        let bnorms = col_norms(&b0, n, w);
+
+        // y₀ = crude(b).
+        let mut y = self.crude_solve(&b0, w, stats);
+        let mut residual = vec![0.0; len];
+        let mut my = vec![0.0; len];
+        let mut sweeps = 0;
+        let mut rel = f64::INFINITY;
+
+        for k in 0..=self.opts.max_richardson {
+            // r = b − M y.
+            c.apply_m(&y, w, &mut my, stats);
+            for i in 0..len {
+                residual[i] = b0[i] - my[i];
+            }
+            c.project(&mut residual, w, stats);
+            rel = max_rel(&residual, &bnorms, n, w);
+            // Residual norm check is an accounted all-reduce.
+            stats.record_allreduce(n, 1);
+            if rel <= self.opts.eps {
+                sweeps = k;
+                break;
+            }
+            if k == self.opts.max_richardson {
+                sweeps = k;
+                break;
+            }
+            // y ← y + Z₀ r.
+            let dz = self.crude_solve(&residual, w, stats);
+            for i in 0..len {
+                y[i] += dz[i];
+            }
+            sweeps = k + 1;
+        }
+        SolveOutcome { x: y, sweeps, rel_residual: rel, converged: rel <= self.opts.eps }
+    }
+}
+
+fn col_norms(v: &[f64], n: usize, w: usize) -> Vec<f64> {
+    let mut out = vec![0.0; w];
+    for i in 0..n {
+        for j in 0..w {
+            out[j] += v[i * w + j] * v[i * w + j];
+        }
+    }
+    for o in out.iter_mut() {
+        *o = o.sqrt().max(1e-300);
+    }
+    out
+}
+
+fn max_rel(res: &[f64], bnorms: &[f64], n: usize, w: usize) -> f64 {
+    let rn = col_norms(res, n, w);
+    rn.iter().zip(bnorms).map(|(r, b)| r / b).fold(0.0f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, laplacian::laplacian_csr};
+    use crate::linalg::cg::{cg_solve, CgOptions};
+    use crate::sddm::chain::{ChainOptions, Splitting};
+    use crate::util::Pcg64;
+
+    fn setup(n: usize, m: usize, seed: u64) -> (crate::linalg::Csr, SddmSolver, Pcg64) {
+        let mut rng = Pcg64::new(seed);
+        let g = generate::random_connected(n, m, &mut rng);
+        let l = laplacian_csr(&g);
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-8, max_richardson: 500 });
+        (l, solver, rng)
+    }
+
+    #[test]
+    fn exact_solve_matches_cg() {
+        let (l, solver, mut rng) = setup(30, 70, 21);
+        // RHS in range(L).
+        let z = rng.normal_vec(30);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged, "rel={}", out.rel_residual);
+        let cg = cg_solve(&l, &b, &CgOptions { project_kernel: true, ..Default::default() });
+        for (a, c) in out.x.iter().zip(&cg.x) {
+            assert!((a - c).abs() < 1e-5, "{a} vs {c}");
+        }
+        assert!(stats.messages > 0);
+    }
+
+    #[test]
+    fn crude_solve_is_constant_factor() {
+        let (l, solver, mut rng) = setup(25, 60, 22);
+        let z = rng.normal_vec(25);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let x = solver.crude_solve(&b, 1, &mut stats);
+        // Residual should be noticeably reduced vs the zero guess.
+        let mut lx = vec![0.0; 25];
+        l.matvec_into(&x, &mut lx);
+        let mut r: Vec<f64> = b.iter().zip(&lx).map(|(a, c)| a - c).collect();
+        crate::linalg::vector::center(&mut r);
+        let rel = crate::linalg::vector::norm2(&r) / crate::linalg::vector::norm2(&b);
+        assert!(rel < 0.9, "crude rel residual {rel}");
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let (l, solver, mut rng) = setup(20, 45, 23);
+        let w = 3;
+        let mut b = vec![0.0; 20 * w];
+        for j in 0..w {
+            let z = rng.normal_vec(20);
+            let col = l.matvec(&z);
+            for i in 0..20 {
+                b[i * w + j] = col[i];
+            }
+        }
+        let mut s_multi = CommStats::default();
+        let multi = solver.solve(&b, w, &mut s_multi);
+        assert!(multi.converged);
+        for j in 0..w {
+            let col: Vec<f64> = (0..20).map(|i| b[i * w + j]).collect();
+            let mut s1 = CommStats::default();
+            let single = solver.solve(&col, 1, &mut s1);
+            for i in 0..20 {
+                assert!(
+                    (multi.x[i * w + j] - single.x[i]).abs() < 1e-5,
+                    "col {j} row {i}: {} vs {}",
+                    multi.x[i * w + j],
+                    single.x[i]
+                );
+            }
+        }
+        // Batched solve should use fewer messages than w separate solves
+        // would (same rounds, wider payloads).
+        let mut s_sep = CommStats::default();
+        for j in 0..w {
+            let col: Vec<f64> = (0..20).map(|i| b[i * w + j]).collect();
+            let _ = solver.solve(&col, 1, &mut s_sep);
+        }
+        assert!(s_multi.messages < s_sep.messages);
+    }
+
+    #[test]
+    fn eps_controls_accuracy() {
+        let (l, solver, mut rng) = setup(30, 80, 24);
+        let z = rng.normal_vec(30);
+        let b = l.matvec(&z);
+        for eps in [0.3, 1e-2, 1e-6] {
+            let s = SddmSolver::new(solver.chain.clone(), SolverOptions { eps, max_richardson: 500 });
+            let mut stats = CommStats::default();
+            let out = s.solve(&b, 1, &mut stats);
+            assert!(out.converged);
+            assert!(out.rel_residual <= eps);
+        }
+    }
+
+    #[test]
+    fn tighter_eps_costs_more_messages() {
+        let (l, solver, mut rng) = setup(30, 80, 25);
+        let z = rng.normal_vec(30);
+        let b = l.matvec(&z);
+        let mut msgs = Vec::new();
+        for eps in [1e-1, 1e-6, 1e-10] {
+            let s = SddmSolver::new(solver.chain.clone(), SolverOptions { eps, max_richardson: 500 });
+            let mut stats = CommStats::default();
+            let _ = s.solve(&b, 1, &mut stats);
+            msgs.push(stats.messages);
+        }
+        assert!(msgs[0] <= msgs[1] && msgs[1] <= msgs[2], "{msgs:?}");
+        assert!(msgs[0] < msgs[2], "{msgs:?}");
+    }
+
+    #[test]
+    fn faithful_splitting_on_nonbipartite() {
+        // Random graph with triangles — faithful splitting also works.
+        let mut rng = Pcg64::new(26);
+        let g = generate::random_connected(20, 60, &mut rng);
+        let l = laplacian_csr(&g);
+        let opts = ChainOptions { splitting: Splitting::Faithful, ..Default::default() };
+        let chain = Chain::build(&l, &opts, &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 500 });
+        let z = rng.normal_vec(20);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged, "rel={}", out.rel_residual);
+    }
+
+    #[test]
+    fn works_on_path_graph_with_lazy() {
+        // Path graphs are bipartite — the lazy splitting must still converge.
+        let mut rng = Pcg64::new(27);
+        let g = generate::path(16);
+        let l = laplacian_csr(&g);
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 2000 });
+        let z = rng.normal_vec(16);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged, "rel={}", out.rel_residual);
+    }
+}

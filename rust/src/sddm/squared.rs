@@ -1,0 +1,245 @@
+//! Explicit-squaring chain (the preprocessed variant of [12]).
+//!
+//! [`super::chain::Chain`] applies `X^{2^i}` *implicitly* as `2^i`
+//! neighbor-exchange rounds. The distributed solver of Tutunov et al.
+//! [12] instead precomputes the level matrices
+//! `X_{i+1} = X_i²` once (each node learns its 2^i-hop neighborhood
+//! weights) so that every level application is a *single* exchange round
+//! over the denser support. This module implements that mode:
+//!
+//! - per-level CSR matrices `X_i = X^{2^i}` built by repeated sparse
+//!   squaring (with optional pruning of tiny entries);
+//! - message accounting charges one round of `nnz(X_i) − n` directed
+//!   messages (the extended-neighborhood exchange);
+//! - trade-off: far fewer *rounds* (latency) at the cost of denser
+//!   messages and a preprocessing phase — the `ablations` bench compares
+//!   both modes.
+
+use super::chain::{Chain, ChainError, ChainOptions};
+use crate::linalg::Csr;
+use crate::net::CommStats;
+use crate::util::Pcg64;
+
+/// A chain with explicitly squared level matrices.
+#[derive(Debug, Clone)]
+pub struct SquaredChain {
+    /// The base chain (provides D̃, splitting, depth, singularity).
+    pub base: Chain,
+    /// `levels[i] = X^{2^i}` for `i ∈ 0..=depth`.
+    pub levels: Vec<Csr>,
+    /// Prune threshold used during squaring (0 = exact).
+    pub prune_tol: f64,
+}
+
+impl SquaredChain {
+    /// Build by repeated squaring of the base chain's walk matrix.
+    /// `prune_tol` drops entries with |v| ≤ tol after each squaring
+    /// (introducing a controlled approximation; 0 keeps everything).
+    pub fn build(
+        m: &Csr,
+        opts: &ChainOptions,
+        prune_tol: f64,
+        rng: &mut Pcg64,
+    ) -> Result<SquaredChain, ChainError> {
+        let base = Chain::build(m, opts, rng)?;
+        let mut levels = Vec::with_capacity(base.depth + 1);
+        levels.push(base.x.clone());
+        for i in 0..base.depth {
+            let sq = levels[i].matmul(&levels[i]);
+            let sq = if prune_tol > 0.0 { sq.prune(prune_tol) } else { sq };
+            levels.push(sq);
+        }
+        Ok(SquaredChain { base, levels, prune_tol })
+    }
+
+    /// Apply `X^{2^level}` in ONE extended-neighborhood round.
+    pub fn apply_level(
+        &self,
+        level: usize,
+        v: &[f64],
+        w: usize,
+        out: &mut [f64],
+        stats: &mut CommStats,
+    ) {
+        let x = &self.levels[level];
+        x.matvec_multi_into(v, w, out);
+        // Message model: each stored off-diagonal entry is one directed
+        // message of w floats in the preprocessed overlay network.
+        let n = self.base.n;
+        let offdiag = x.nnz().saturating_sub(n);
+        stats.messages += offdiag as u64;
+        stats.floats += (offdiag * w) as u64;
+        stats.rounds += 1;
+    }
+
+    /// "Crude" solve (Algorithm 1) with single-round level applications.
+    pub fn crude_solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> Vec<f64> {
+        let c = &self.base;
+        let n = c.n;
+        assert_eq!(b.len(), n * w);
+        let d = c.depth;
+        let len = n * w;
+        let mut scratch = vec![0.0; len];
+
+        let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
+        let mut cur = b.to_vec();
+        c.project(&mut cur, w, stats);
+        bs.push(cur.clone());
+        let mut tmp = vec![0.0; len];
+        for i in 0..d {
+            for r in 0..n {
+                for j in 0..w {
+                    tmp[r * w + j] = c.dinv[r] * cur[r * w + j];
+                }
+            }
+            self.apply_level(i, &tmp, w, &mut scratch, stats);
+            for r in 0..n {
+                for j in 0..w {
+                    cur[r * w + j] += c.dvec[r] * scratch[r * w + j];
+                }
+            }
+            c.project(&mut cur, w, stats);
+            bs.push(cur.clone());
+        }
+
+        let mut x = vec![0.0; len];
+        for r in 0..n {
+            for j in 0..w {
+                x[r * w + j] = c.dinv[r] * bs[d][r * w + j];
+            }
+        }
+        c.project(&mut x, w, stats);
+
+        for i in (0..d).rev() {
+            self.apply_level(i, &x, w, &mut scratch, stats);
+            for r in 0..n {
+                for j in 0..w {
+                    let idx = r * w + j;
+                    x[idx] = 0.5 * (c.dinv[r] * bs[i][idx] + x[idx] + scratch[idx]);
+                }
+            }
+            c.project(&mut x, w, stats);
+        }
+        x
+    }
+
+    /// Richardson-refined solve to relative residual `eps`.
+    pub fn solve(
+        &self,
+        b: &[f64],
+        w: usize,
+        eps: f64,
+        max_sweeps: usize,
+        stats: &mut CommStats,
+    ) -> super::solver::SolveOutcome {
+        let c = &self.base;
+        let n = c.n;
+        let len = n * w;
+        let mut b0 = b.to_vec();
+        c.project(&mut b0, w, stats);
+        let bnorm = crate::linalg::vector::norm2(&b0).max(1e-300);
+
+        let mut y = self.crude_solve(&b0, w, stats);
+        let mut my = vec![0.0; len];
+        let mut residual = vec![0.0; len];
+        let mut rel = f64::INFINITY;
+        let mut sweeps = 0;
+        for k in 0..=max_sweeps {
+            c.apply_m(&y, w, &mut my, stats);
+            for i in 0..len {
+                residual[i] = b0[i] - my[i];
+            }
+            c.project(&mut residual, w, stats);
+            rel = crate::linalg::vector::norm2(&residual) / bnorm;
+            stats.record_allreduce(n, 1);
+            if rel <= eps || k == max_sweeps {
+                sweeps = k;
+                break;
+            }
+            let dz = self.crude_solve(&residual, w, stats);
+            for i in 0..len {
+                y[i] += dz[i];
+            }
+            sweeps = k + 1;
+        }
+        super::solver::SolveOutcome { x: y, sweeps, rel_residual: rel, converged: rel <= eps }
+    }
+
+    /// Total stored entries across levels (preprocessing memory).
+    pub fn total_nnz(&self) -> usize {
+        self.levels.iter().map(Csr::nnz).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, laplacian_csr};
+    use crate::sddm::{SddmSolver, SolverOptions};
+
+    #[test]
+    fn squared_levels_match_implicit_application() {
+        let mut rng = Pcg64::new(301);
+        let g = generate::random_connected(18, 40, &mut rng);
+        let l = laplacian_csr(&g);
+        let sq = SquaredChain::build(&l, &ChainOptions::default(), 0.0, &mut rng).unwrap();
+        let v = rng.normal_vec(18);
+        for level in 0..=sq.base.depth.min(3) {
+            let mut out_sq = vec![0.0; 18];
+            let mut s1 = CommStats::default();
+            sq.apply_level(level, &v, 1, &mut out_sq, &mut s1);
+            let mut out_im = vec![0.0; 18];
+            let mut scratch = vec![0.0; 18];
+            let mut s2 = CommStats::default();
+            sq.base.apply_x_pow(level, &v, 1, &mut out_im, &mut scratch, &mut s2);
+            for (a, b) in out_sq.iter().zip(&out_im) {
+                assert!((a - b).abs() < 1e-10, "level {level}");
+            }
+            // Squared mode: always exactly 1 round; implicit: 2^level rounds.
+            assert_eq!(s1.rounds, 1);
+            assert_eq!(s2.rounds, 1 << level);
+        }
+    }
+
+    #[test]
+    fn squared_solve_matches_implicit_solver() {
+        let mut rng = Pcg64::new(302);
+        let g = generate::random_connected(25, 60, &mut rng);
+        let l = laplacian_csr(&g);
+        let z = rng.normal_vec(25);
+        let b = l.matvec(&z);
+
+        let sq = SquaredChain::build(&l, &ChainOptions::default(), 0.0, &mut rng).unwrap();
+        let mut s1 = CommStats::default();
+        let out_sq = sq.solve(&b, 1, 1e-8, 300, &mut s1);
+        assert!(out_sq.converged);
+
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-8, max_richardson: 300 });
+        let mut s2 = CommStats::default();
+        let out_im = solver.solve(&b, 1, &mut s2);
+
+        for (a, c) in out_sq.x.iter().zip(&out_im.x) {
+            assert!((a - c).abs() < 1e-5);
+        }
+        // Squared mode needs far fewer rounds (latency) at denser messages.
+        assert!(s1.rounds < s2.rounds, "rounds: squared {} vs implicit {}", s1.rounds, s2.rounds);
+    }
+
+    #[test]
+    fn pruning_trades_accuracy_for_sparsity() {
+        let mut rng = Pcg64::new(303);
+        let g = generate::random_connected(30, 70, &mut rng);
+        let l = laplacian_csr(&g);
+        let exact = SquaredChain::build(&l, &ChainOptions::default(), 0.0, &mut rng).unwrap();
+        let pruned =
+            SquaredChain::build(&l, &ChainOptions::default(), 1e-3, &mut rng).unwrap();
+        assert!(pruned.total_nnz() <= exact.total_nnz());
+        // Pruned chain still solves (Richardson absorbs the perturbation).
+        let z = rng.normal_vec(30);
+        let b = l.matvec(&z);
+        let mut stats = CommStats::default();
+        let out = pruned.solve(&b, 1, 1e-6, 500, &mut stats);
+        assert!(out.converged, "rel={}", out.rel_residual);
+    }
+}

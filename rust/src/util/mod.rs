@@ -1,0 +1,12 @@
+//! Small self-contained utilities: PRNG, timing, summary statistics and a
+//! minimal logger. The sandbox has no network access to crates.io, so these
+//! replace `rand`, `log`/`env_logger` and friends.
+
+pub mod rng;
+pub mod timer;
+pub mod stats;
+pub mod logging;
+
+pub use rng::Pcg64;
+pub use timer::Timer;
+pub use stats::Summary;

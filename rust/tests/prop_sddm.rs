@@ -1,0 +1,182 @@
+//! Property tests on the SDDM solver: Definition 1's ε-guarantee in the
+//! M-norm against the CG oracle, across random graphs, topologies, batch
+//! widths, and accuracies. Plus failure-injection checks.
+
+use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::linalg::cg::{cg_solve, CgOptions};
+use sddnewton::linalg::Csr;
+use sddnewton::net::CommStats;
+use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions};
+use sddnewton::util::Pcg64;
+
+fn m_norm(l: &Csr, v: &[f64]) -> f64 {
+    sddnewton::linalg::vector::dot(v, &l.matvec(v)).max(0.0).sqrt()
+}
+
+/// Definition 1: ‖x* − x̃‖_M ≤ ε‖x*‖_M. The solver controls the residual
+/// surrogate; verify the induced M-norm error is proportional (within the
+/// κ(M) slack) and, importantly, decreases with ε.
+#[test]
+fn prop_def1_error_tracks_eps() {
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 10 + rng.next_below(40) as usize;
+        let m = (n - 1) + rng.next_below((2 * n) as u64) as usize;
+        let g = generate::random_connected(n, m, &mut rng);
+        let l = laplacian_csr(&g);
+        let z = rng.normal_vec(n);
+        let b = l.matvec(&z);
+        let exact = cg_solve(&l, &b, &CgOptions { tol: 1e-14, project_kernel: true, max_iter: 100 * n, ..Default::default() });
+        let xnorm = m_norm(&l, &exact.x).max(1e-300);
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let mut prev_err = f64::INFINITY;
+        for eps in [0.5, 1e-2, 1e-5] {
+            let solver =
+                SddmSolver::new(chain.clone(), SolverOptions { eps, max_richardson: 500 });
+            let mut stats = CommStats::default();
+            let out = solver.solve(&b, 1, &mut stats);
+            assert!(out.converged, "seed={seed} eps={eps}");
+            let diff: Vec<f64> =
+                out.x.iter().zip(&exact.x).map(|(a, c)| a - c).collect();
+            let err = m_norm(&l, &diff) / xnorm;
+            assert!(err <= prev_err + 1e-12, "seed={seed}: err {err} > prev {prev_err}");
+            prev_err = err;
+        }
+        assert!(prev_err < 1e-4, "seed={seed}: final err {prev_err}");
+    }
+}
+
+#[test]
+fn prop_batched_widths_consistent() {
+    for seed in 20..26u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 12 + rng.next_below(20) as usize;
+        let g = generate::random_connected(n, 2 * n, &mut rng);
+        let l = laplacian_csr(&g);
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-8, max_richardson: 300 });
+        let w = 1 + rng.next_below(6) as usize;
+        let mut b = vec![0.0; n * w];
+        for j in 0..w {
+            let z = rng.normal_vec(n);
+            let col = l.matvec(&z);
+            for i in 0..n {
+                b[i * w + j] = col[i];
+            }
+        }
+        let mut stats = CommStats::default();
+        let multi = solver.solve(&b, w, &mut stats);
+        for j in 0..w {
+            let col: Vec<f64> = (0..n).map(|i| b[i * w + j]).collect();
+            let mut s = CommStats::default();
+            let single = solver.solve(&col, 1, &mut s);
+            for i in 0..n {
+                assert!(
+                    (multi.x[i * w + j] - single.x[i]).abs() < 1e-5,
+                    "seed={seed} w={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_topologies_all_converge() {
+    let mut rng = Pcg64::new(99);
+    let graphs = vec![
+        ("path", generate::path(17)),      // bipartite, badly conditioned
+        ("cycle_even", generate::cycle(16)), // bipartite cycle
+        ("cycle_odd", generate::cycle(17)),
+        ("star", generate::star(20)),
+        ("grid", generate::grid(4, 5)),
+        ("complete", generate::complete(12)),
+    ];
+    for (name, g) in graphs {
+        let l = laplacian_csr(&g);
+        let z = rng.normal_vec(g.n);
+        let b = l.matvec(&z);
+        let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-7, max_richardson: 3000 });
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged, "{name}: rel={}", out.rel_residual);
+    }
+}
+
+#[test]
+fn failure_injection_budget_too_small_reported() {
+    let mut rng = Pcg64::new(7);
+    let g = generate::cycle(40); // poorly conditioned
+    let l = laplacian_csr(&g);
+    let z = rng.normal_vec(40);
+    let b = l.matvec(&z);
+    let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+    // One Richardson sweep cannot reach 1e-12 on a cycle.
+    let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-12, max_richardson: 1 });
+    let mut stats = CommStats::default();
+    let out = solver.solve(&b, 1, &mut stats);
+    assert!(!out.converged, "must report non-convergence honestly");
+    assert!(out.rel_residual > 1e-12);
+}
+
+#[test]
+fn failure_injection_non_sdd_rejected() {
+    let mut rng = Pcg64::new(8);
+    // Positive off-diagonal entry.
+    let m = Csr::from_triplets(
+        3,
+        3,
+        &[(0, 0, 2.0), (0, 1, 0.5), (1, 0, 0.5), (1, 1, 2.0), (2, 2, 1.0)],
+    );
+    assert!(Chain::build(&m, &ChainOptions::default(), &mut rng).is_err());
+    // Zero diagonal (isolated row).
+    let m2 = Csr::from_triplets(2, 2, &[(0, 0, 1.0)]);
+    assert!(Chain::build(&m2, &ChainOptions::default(), &mut rng).is_err());
+}
+
+#[test]
+fn prop_nonsingular_sddm_systems() {
+    // Laplacian + random positive diagonal: nonsingular SDDM, no kernel
+    // projection involved.
+    for seed in 30..38u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 10 + rng.next_below(30) as usize;
+        let g = generate::random_connected(n, 2 * n, &mut rng);
+        let l = laplacian_csr(&g);
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for k in l.indptr[i]..l.indptr[i + 1] {
+                trips.push((i, l.indices[k], l.values[k]));
+            }
+            trips.push((i, i, 0.1 + rng.next_f64()));
+        }
+        let m = Csr::from_triplets(n, n, &trips);
+        let chain = Chain::build(&m, &ChainOptions::default(), &mut rng).unwrap();
+        assert!(!chain.singular, "seed={seed}");
+        let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-9, max_richardson: 500 });
+        let x_true = rng.normal_vec(n);
+        let b = m.matvec(&x_true);
+        let mut stats = CommStats::default();
+        let out = solver.solve(&b, 1, &mut stats);
+        assert!(out.converged, "seed={seed}");
+        for (a, c) in out.x.iter().zip(&x_true) {
+            assert!((a - c).abs() < 1e-5, "seed={seed}: {a} vs {c}");
+        }
+    }
+}
+
+#[test]
+fn message_accounting_deterministic() {
+    let mut rng = Pcg64::new(55);
+    let g = generate::random_connected(20, 50, &mut rng);
+    let l = laplacian_csr(&g);
+    let z = rng.normal_vec(20);
+    let b = l.matvec(&z);
+    let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
+    let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 300 });
+    let mut s1 = CommStats::default();
+    let mut s2 = CommStats::default();
+    let _ = solver.solve(&b, 1, &mut s1);
+    let _ = solver.solve(&b, 1, &mut s2);
+    assert_eq!(s1, s2, "same solve must cost the same messages");
+}

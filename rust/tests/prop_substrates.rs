@@ -1,0 +1,153 @@
+//! Property-style tests over the substrates (proptest is unavailable
+//! offline; randomized sweeps over many seeds play its role — failures
+//! print the seed for reproduction).
+
+use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::linalg::cg::{cg_solve, CgOptions};
+use sddnewton::linalg::cholesky::{spd_solve, Cholesky};
+use sddnewton::linalg::{Csr, Matrix};
+use sddnewton::util::Pcg64;
+
+fn random_matrix(r: usize, c: usize, rng: &mut Pcg64) -> Matrix {
+    let mut m = Matrix::zeros(r, c);
+    for v in m.data.iter_mut() {
+        *v = rng.normal();
+    }
+    m
+}
+
+fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+    let b = random_matrix(n, n, rng);
+    let mut a = b.matmul(&b.transpose());
+    for i in 0..n {
+        a[(i, i)] += n as f64;
+    }
+    a
+}
+
+#[test]
+fn prop_cholesky_solves_random_spd() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 2 + (rng.next_below(14) as usize);
+        let a = random_spd(n, &mut rng);
+        let x_true = rng.normal_vec(n);
+        let b = a.matvec(&x_true);
+        let x = spd_solve(&a, &b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8, "seed={seed} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_factor_reconstructs() {
+    for seed in 100..120u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 3 + (rng.next_below(10) as usize);
+        let a = random_spd(n, &mut rng);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_csr_roundtrip_and_ops() {
+    for seed in 200..240u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 2 + rng.next_below(12) as usize;
+        let mut trips = Vec::new();
+        for _ in 0..(3 * n) {
+            trips.push((
+                rng.next_below(n as u64) as usize,
+                rng.next_below(n as u64) as usize,
+                rng.normal(),
+            ));
+        }
+        let a = Csr::from_triplets(n, n, &trips);
+        let dense = a.to_dense();
+        let x = rng.normal_vec(n);
+        let ys = a.matvec(&x);
+        let yd = dense.matvec(&x);
+        for (u, v) in ys.iter().zip(&yd) {
+            assert!((u - v).abs() < 1e-10, "seed={seed}");
+        }
+        // matmul consistency
+        let prod = a.matmul(&a).to_dense();
+        let dprod = dense.matmul(&dense);
+        assert!(prod.max_abs_diff(&dprod) < 1e-9, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_random_graphs_connected_with_exact_counts() {
+    for seed in 300..360u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 3 + rng.next_below(60) as usize;
+        let max_m = n * (n - 1) / 2;
+        let m = (n - 1) + rng.next_below((max_m - n + 2) as u64) as usize;
+        let g = generate::random_connected(n, m, &mut rng);
+        assert_eq!(g.n, n, "seed={seed}");
+        assert_eq!(g.m(), m, "seed={seed}");
+        assert!(g.is_connected(), "seed={seed}");
+        // Degree sum = 2m.
+        let degsum: usize = (0..n).map(|i| g.degree(i)).sum();
+        assert_eq!(degsum, 2 * m, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_laplacian_psd_and_kernel() {
+    for seed in 400..420u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 4 + rng.next_below(30) as usize;
+        let m = (n - 1) + rng.next_below(n as u64) as usize;
+        let g = generate::random_connected(n, m, &mut rng);
+        let l = laplacian_csr(&g);
+        // xᵀLx = Σ_(u,v)∈E (x_u − x_v)² ≥ 0 and 0 only on constants.
+        for _ in 0..5 {
+            let x = rng.normal_vec(n);
+            let quad = sddnewton::linalg::vector::dot(&x, &l.matvec(&x));
+            let manual: f64 = g.edges.iter().map(|&(u, v)| (x[u] - x[v]).powi(2)).sum();
+            assert!((quad - manual).abs() < 1e-8 * manual.max(1.0), "seed={seed}");
+            assert!(quad >= -1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_cg_matches_cholesky_on_spd() {
+    for seed in 500..520u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 3 + rng.next_below(12) as usize;
+        let a = random_spd(n, &mut rng);
+        let b = rng.normal_vec(n);
+        let direct = spd_solve(&a, &b).unwrap();
+        let cg = cg_solve(&a, &b, &CgOptions::default());
+        assert!(cg.converged, "seed={seed}");
+        for (u, v) in cg.x.iter().zip(&direct) {
+            assert!((u - v).abs() < 1e-6, "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_pcg64_uniformity_chi2() {
+    // Coarse chi-squared test over 16 buckets, several seeds.
+    for seed in [1u64, 77, 4242] {
+        let mut rng = Pcg64::new(seed);
+        let n = 32_000;
+        let mut buckets = [0u32; 16];
+        for _ in 0..n {
+            buckets[(rng.next_u64() >> 60) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        let chi2: f64 = buckets
+            .iter()
+            .map(|&b| (b as f64 - expect).powi(2) / expect)
+            .sum();
+        // 15 dof: P(chi2 > 37.7) ≈ 0.001.
+        assert!(chi2 < 37.7, "seed={seed} chi2={chi2}");
+    }
+}
