@@ -22,12 +22,16 @@ use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions, Splitting}
 use sddnewton::util::Pcg64;
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
+    let smoke = sddnewton::benchkit::is_smoke();
+    let (n_nodes, n_edges, p, m_total, max_iters) =
+        if smoke { (12, 30, 4, 240, 8) } else { (40, 100, 16, 4_000, 30) };
     let mut rng = Pcg64::new(31);
-    let g = generate::random_connected(40, 100, &mut rng);
-    let problem = datasets::synthetic_regression(40, 16, 4_000, 0.3, 0.05, &mut rng);
+    let g = generate::random_connected(n_nodes, n_edges, &mut rng);
+    let problem = datasets::synthetic_regression(n_nodes, p, m_total, 0.3, 0.05, &mut rng);
     let (_, f_star) = problem.centralized_optimum(60, 1e-11);
     let backend = NativeBackend;
-    let opts = RunOptions { max_iters: 30, ..Default::default() };
+    let opts = RunOptions { max_iters, ..Default::default() };
 
     // --- 1. solver ε vs outer iterations --------------------------------
     section("ablation 1: inner-solver ε vs outer iterations (tol 1e-6)");
@@ -111,7 +115,7 @@ fn main() {
 
     // --- 5. step size ------------------------------------------------------
     section("ablation 5: fixed α vs Theorem 1's α*");
-    let thetas0 = vec![0.0; 40 * 16];
+    let thetas0 = vec![0.0; n_nodes * p];
     let (gamma, big_gamma) = assumption1_bounds(&problem, &thetas0);
     let lcsr = sddnewton::graph::laplacian_csr(&g);
     let mun = sddnewton::graph::spectral::mu_max(&lcsr, 1e-9, 5000, &mut rng).value;

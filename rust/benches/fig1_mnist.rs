@@ -3,11 +3,12 @@
 //!
 //!     cargo bench --bench fig1_mnist
 
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
-use sddnewton::config::ExperimentConfig;
+use sddnewton::benchkit::{bench, is_smoke, result_row, section, BenchOpts};
+use sddnewton::config::{ExperimentConfig, ProblemKind};
 use sddnewton::harness::{report, run_experiment};
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     for name in ["fig1-mnist-l2", "fig1-mnist-l1"] {
         section(&format!("Fig 1({}): {name}, n=10 m=20 p=150",
             if name.ends_with("l2") { "e,f" } else { "c,d" }));
@@ -16,6 +17,18 @@ fn main() {
         // The paper keeps "the most successful algorithms from previous
         // experiments" for this figure.
         cfg.algorithms.truncate(4);
+        if is_smoke() {
+            cfg.nodes = 6;
+            cfg.edges = 12;
+            cfg.max_iters = 5;
+            cfg.problem = ProblemKind::MnistLike {
+                p: 20,
+                m_total: 240,
+                l1: name.ends_with("l1"),
+                mu: 0.01,
+            };
+            cfg.algorithms.truncate(2);
+        }
         let mut res = None;
         bench(&format!("{name}/all-algorithms"), &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
             res = Some(run_experiment(&cfg));

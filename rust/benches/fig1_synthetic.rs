@@ -8,14 +8,23 @@
 //!
 //!     cargo bench --bench fig1_synthetic
 
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
-use sddnewton::config::ExperimentConfig;
+use sddnewton::benchkit::{bench, is_smoke, result_row, section, BenchOpts};
+use sddnewton::config::{ExperimentConfig, ProblemKind};
 use sddnewton::harness::{report, run_experiment};
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     section("Fig 1(a,b): synthetic regression, n=100 m=250 p=80");
     let mut cfg = ExperimentConfig::preset("fig1-synthetic").unwrap();
     cfg.max_iters = 60;
+    if is_smoke() {
+        cfg.nodes = 12;
+        cfg.edges = 30;
+        cfg.max_iters = 6;
+        cfg.problem =
+            ProblemKind::SyntheticRegression { p: 8, m_total: 480, noise: 0.5, mu: 0.05 };
+        cfg.algorithms.truncate(3);
+    }
     let mut res = None;
     bench("fig1_synthetic/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
         res = Some(run_experiment(&cfg));

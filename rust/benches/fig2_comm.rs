@@ -8,13 +8,14 @@
 //!
 //!     cargo bench --bench fig2_comm
 
-use sddnewton::benchkit::{result_row, section};
-use sddnewton::config::{AlgoKind, ExperimentConfig};
+use sddnewton::benchkit::{is_smoke, result_row, section};
+use sddnewton::config::{AlgoKind, ExperimentConfig, ProblemKind};
 use sddnewton::harness::experiments::comm_overhead_experiment;
 use sddnewton::harness::{report, run_experiment};
 use sddnewton::util::Timer;
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     // --- Fig 2(c): messages to reach accuracy ε -------------------------
     section("Fig 2(c): communication overhead vs accuracy (London Schools)");
     let mut cfg = ExperimentConfig::preset("fig2-comm").unwrap();
@@ -30,7 +31,15 @@ fn main() {
         AlgoKind::Gradient { alpha: 0.02 },
         AlgoKind::Averaging { beta: 0.002 },
     ];
-    let targets = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5];
+    let mut targets = vec![1e-1, 1e-2, 1e-3, 1e-4, 1e-5];
+    if is_smoke() {
+        cfg.nodes = 10;
+        cfg.edges = 20;
+        cfg.max_iters = 200;
+        cfg.problem = ProblemKind::LondonLike { m_total: 400, mu: 0.05 };
+        cfg.algorithms.truncate(2);
+        targets = vec![1e-1, 1e-2];
+    }
     let rows = comm_overhead_experiment(&cfg, &targets);
     println!(
         "{:<28} {}",
@@ -59,7 +68,7 @@ fn main() {
     // --- Fig 2(d): running time till convergence ------------------------
     section("Fig 2(d): running time till convergence (gap ≤ 1e-5)");
     let mut tcfg = cfg.clone();
-    tcfg.max_iters = 1200;
+    tcfg.max_iters = if is_smoke() { 100 } else { 1200 };
     let t = Timer::start();
     let res = run_experiment(&tcfg);
     let _total = t.secs();

@@ -7,14 +7,20 @@
 //!
 //!     cargo bench --bench fig2_fmri
 
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
-use sddnewton::config::ExperimentConfig;
+use sddnewton::benchkit::{bench, is_smoke, result_row, section, BenchOpts};
+use sddnewton::config::{ExperimentConfig, ProblemKind};
 use sddnewton::harness::{report, run_experiment};
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     section("Fig 2(a,b): fMRI-like sparse logistic (m ≪ p), n=8 m=16 p=512");
     let mut cfg = ExperimentConfig::preset("fig2-fmri").unwrap();
     cfg.max_iters = 20;
+    if is_smoke() {
+        cfg.max_iters = 4;
+        cfg.problem = ProblemKind::FmriLike { p: 48, m_total: 48, k_sparse: 6, mu: 0.02 };
+        cfg.algorithms.truncate(2);
+    }
     let mut res = None;
     bench("fig2_fmri/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
         res = Some(run_experiment(&cfg));

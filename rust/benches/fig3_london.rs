@@ -4,14 +4,22 @@
 //!
 //!     cargo bench --bench fig3_london
 
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
-use sddnewton::config::ExperimentConfig;
+use sddnewton::benchkit::{bench, is_smoke, result_row, section, BenchOpts};
+use sddnewton::config::{ExperimentConfig, ProblemKind};
 use sddnewton::harness::{report, run_experiment};
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     section("Fig 3(a,b): London Schools regression, n=50 m=150 p=27");
     let mut cfg = ExperimentConfig::preset("fig3-london").unwrap();
     cfg.max_iters = 60;
+    if is_smoke() {
+        cfg.nodes = 8;
+        cfg.edges = 16;
+        cfg.max_iters = 5;
+        cfg.problem = ProblemKind::LondonLike { m_total: 400, mu: 0.05 };
+        cfg.algorithms.truncate(2);
+    }
     let mut res = None;
     bench("fig3_london/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
         res = Some(run_experiment(&cfg));

@@ -4,14 +4,22 @@
 //!
 //!     cargo bench --bench fig3_rl
 
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
-use sddnewton::config::ExperimentConfig;
+use sddnewton::benchkit::{bench, is_smoke, result_row, section, BenchOpts};
+use sddnewton::config::{ExperimentConfig, ProblemKind};
 use sddnewton::harness::{report, run_experiment};
 
 fn main() {
+    let _ = sddnewton::benchkit::cli_opts();
     section("Fig 3(c,d): RL double cart-pole, n=20 m=50, 2000 rollouts × 50 steps");
     let mut cfg = ExperimentConfig::preset("fig3-rl").unwrap();
     cfg.max_iters = 40;
+    if is_smoke() {
+        cfg.nodes = 6;
+        cfg.edges = 12;
+        cfg.max_iters = 5;
+        cfg.problem = ProblemKind::RlDcp { rollouts: 60, t_len: 25, sigma: 0.5, mu: 0.05 };
+        cfg.algorithms.truncate(2);
+    }
     let mut res = None;
     bench("fig3_rl/all-algorithms", &BenchOpts { warmup_iters: 0, sample_iters: 1 }, || {
         res = Some(run_experiment(&cfg));

@@ -1,17 +1,29 @@
 //! SDDM-solver scaling study (supporting material for Section 2):
-//! solve time / message complexity vs graph size, accuracy, and topology.
+//! solve time / message complexity vs graph size, accuracy, and topology,
+//! plus the serial-vs-parallel speedup table for the CSR matvec hot path.
 //!
 //!     cargo bench --bench sddm_solver
+//!     cargo bench --bench sddm_solver -- --smoke      # CI smoke run
+//!     cargo bench --bench sddm_solver -- --threads 4  # pin the pool
 
 use sddnewton::algorithms::solvers::sddm_for_graph;
-use sddnewton::benchkit::{bench, result_row, section, BenchOpts};
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
 use sddnewton::graph::{generate, laplacian_csr};
 use sddnewton::net::CommStats;
 use sddnewton::util::Pcg64;
 
 fn main() {
+    let opts = cli_opts();
+    let smoke = is_smoke();
+    result_row("parallelism/threads", sddnewton::par::threads());
+
     section("SDDM solver scaling: random graphs, eps = 1e-6");
-    for &(n, m) in &[(50usize, 125usize), (100, 250), (200, 500), (400, 1000)] {
+    let sizes: &[(usize, usize)] = if smoke {
+        &[(50, 125), (100, 250)]
+    } else {
+        &[(50, 125), (100, 250), (200, 500), (400, 1000)]
+    };
+    for &(n, m) in sizes {
         let mut rng = Pcg64::new(n as u64);
         let g = generate::random_connected(n, m, &mut rng);
         let l = laplacian_csr(&g);
@@ -19,16 +31,12 @@ fn main() {
         let z = rng.normal_vec(n);
         let b = l.matvec(&z);
         let mut msgs = 0u64;
-        let s = bench(
-            &format!("sddm/n{n}_m{m}"),
-            &BenchOpts { warmup_iters: 1, sample_iters: 5 },
-            || {
-                let mut stats = CommStats::default();
-                let out = solver.solve(&b, 1, &mut stats);
-                assert!(out.converged);
-                msgs = stats.messages;
-            },
-        );
+        let s = bench(&format!("sddm/n{n}_m{m}"), &opts, || {
+            let mut stats = CommStats::default();
+            let out = solver.solve(&b, 1, &mut stats);
+            assert!(out.converged);
+            msgs = stats.messages;
+        });
         result_row(&format!("sddm/n{n}/depth"), solver.chain.depth);
         result_row(&format!("sddm/n{n}/lambda2"), format!("{:.4}", solver.chain.lambda2));
         result_row(&format!("sddm/n{n}/messages"), msgs);
@@ -41,7 +49,8 @@ fn main() {
     let l = laplacian_csr(&g);
     let z = rng.normal_vec(100);
     let b = l.matvec(&z);
-    for eps in [1e-1, 1e-2, 1e-4, 1e-6, 1e-8] {
+    let eps_list: &[f64] = if smoke { &[1e-2, 1e-6] } else { &[1e-1, 1e-2, 1e-4, 1e-6, 1e-8] };
+    for &eps in eps_list {
         let solver = sddm_for_graph(&g, eps, &mut rng);
         let mut stats = CommStats::default();
         let out = solver.solve(&b, 1, &mut stats);
@@ -82,7 +91,8 @@ fn main() {
 
     section("Batched multi-RHS solves (n=100, m=250, eps=1e-6)");
     let solver = sddm_for_graph(&g_random(), 1e-6, &mut rng);
-    for w in [1usize, 8, 32, 80] {
+    let widths: &[usize] = if smoke { &[1, 8] } else { &[1, 8, 32, 80] };
+    for &w in widths {
         let n = 100;
         let l = laplacian_csr(&g_random());
         let mut bm = vec![0.0; n * w];
@@ -94,21 +104,86 @@ fn main() {
             }
         }
         let mut stats = CommStats::default();
-        let s = bench(
-            &format!("sddm/multirhs_w{w}"),
-            &BenchOpts { warmup_iters: 1, sample_iters: 3 },
-            || {
-                let mut st = CommStats::default();
-                let out = solver.solve(&bm, w, &mut st);
-                assert!(out.converged);
-                stats = st;
-            },
-        );
+        let s = bench(&format!("sddm/multirhs_w{w}"), &opts, || {
+            let mut st = CommStats::default();
+            let out = solver.solve(&bm, w, &mut st);
+            assert!(out.converged);
+            stats = st;
+        });
         result_row(
             &format!("sddm/multirhs_w{w}"),
             format!("{} messages, {:.5}s median", stats.messages, s.median),
         );
     }
+
+    // ---- Parallel execution substrate: serial vs parallel speedup ------
+    // The L3 hot path of the SDD solver is the multi-RHS CSR matvec; on a
+    // 10k-node chain (path) graph the row blocks are perfectly
+    // independent, so the speedup table below is the headline number for
+    // the `par` substrate. Results are bit-for-bit identical across
+    // thread counts (see tests/prop_parallel.rs).
+    section("Parallel multi-RHS CSR matvec: 10k-node chain");
+    let n = 10_000;
+    let w = if smoke { 16 } else { 64 };
+    let reps = if smoke { 4 } else { 32 };
+    let chain_g = generate::path(n);
+    let lc = laplacian_csr(&chain_g);
+    let mut rng2 = Pcg64::new(4321);
+    let x: Vec<f64> = (0..n * w).map(|_| rng2.normal()).collect();
+    let mut y = vec![0.0; n * w];
+    let mut medians: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let s = bench(&format!("matvec_multi/n{n}_w{w}_t{threads}"), &opts, || {
+            for _ in 0..reps {
+                lc.matvec_multi_into_threads(&x, w, &mut y, threads);
+            }
+        });
+        medians.push((threads, s.median));
+    }
+    let t1 = medians[0].1.max(1e-12);
+    for &(t, med) in &medians[1..] {
+        result_row(
+            &format!("matvec_multi/speedup_t{t}"),
+            format!("{:.2}x (serial {:.5}s vs {:.5}s)", t1 / med.max(1e-12), t1, med),
+        );
+    }
+
+    // Solver-level effect: a wide crude solve on the same chain graph.
+    // Depth is pinned: the implicit chain applies X^{2^i} as 2^i rounds,
+    // and a 10k path's walk spectrum would otherwise drive the auto depth
+    // (and with it the round count) through the roof.
+    section("Parallel crude solve: 10k-node chain, batched RHS");
+    let wide_w = if smoke { 4 } else { 16 };
+    let chain = sddnewton::sddm::Chain::build(
+        &lc,
+        &sddnewton::sddm::ChainOptions { depth: Some(3), ..Default::default() },
+        &mut rng2,
+    )
+    .expect("path Laplacian is SDD");
+    let solver_chain =
+        sddnewton::sddm::SddmSolver::new(chain, sddnewton::sddm::SolverOptions::default());
+    let mut bw = vec![0.0; n * wide_w];
+    for j in 0..wide_w {
+        let zc = rng2.normal_vec(n);
+        let col = lc.matvec(&zc);
+        for i in 0..n {
+            bw[i * wide_w + j] = col[i];
+        }
+    }
+    let mut solve_medians: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 4] {
+        sddnewton::par::set_threads(threads);
+        let s = bench(&format!("crude_solve/n{n}_w{wide_w}_t{threads}"), &opts, || {
+            let mut st = CommStats::default();
+            let _ = solver_chain.crude_solve(&bw, wide_w, &mut st);
+        });
+        solve_medians.push((threads, s.median));
+    }
+    sddnewton::par::set_threads(0);
+    result_row(
+        "crude_solve/speedup_t4",
+        format!("{:.2}x", solve_medians[0].1.max(1e-12) / solve_medians[1].1.max(1e-12)),
+    );
 }
 
 fn g_random() -> sddnewton::graph::Graph {

@@ -19,6 +19,38 @@ impl Default for BenchOpts {
     }
 }
 
+impl BenchOpts {
+    /// CI smoke settings: 1 warmup / 1 sample, just enough to prove the
+    /// bench target still builds and runs.
+    pub fn smoke() -> Self {
+        BenchOpts { warmup_iters: 1, sample_iters: 1 }
+    }
+}
+
+/// True when the bench was invoked with `--smoke`
+/// (`cargo bench --bench <name> -- --smoke`). Benches shrink their
+/// workloads under smoke so CI can keep every target green.
+pub fn is_smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Parse the shared bench CLI (benches use `harness = false`):
+/// `--smoke` selects [`BenchOpts::smoke`]; `--threads N` pins the
+/// process-wide parallelism knob (see [`crate::par`]).
+pub fn cli_opts() -> BenchOpts {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        if let Some(n) = args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+            crate::par::set_threads(n);
+        }
+    }
+    if is_smoke() {
+        BenchOpts::smoke()
+    } else {
+        BenchOpts::default()
+    }
+}
+
 /// Time a closure repeatedly; prints and returns the summary (seconds).
 pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> Summary {
     for _ in 0..opts.warmup_iters {

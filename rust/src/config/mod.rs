@@ -5,6 +5,8 @@ pub mod json;
 
 pub use json::Json;
 
+use crate::par::Parallelism;
+
 /// Which benchmark problem to build.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ProblemKind {
@@ -100,6 +102,9 @@ pub struct ExperimentConfig {
     pub max_iters: usize,
     /// "native" or "pjrt".
     pub backend: String,
+    /// Worker-thread budget for the parallel execution substrate
+    /// (`crate::par`); `Parallelism::auto()` detects the machine.
+    pub parallelism: Parallelism,
 }
 
 /// All six algorithms with the paper's tuned defaults.
@@ -134,6 +139,7 @@ impl ExperimentConfig {
                 algorithms: default_algorithms(),
                 max_iters: 60,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             "fig1-mnist-l2" | "fig1-mnist-l1" => ExperimentConfig {
                 name: name.into(),
@@ -149,6 +155,7 @@ impl ExperimentConfig {
                 algorithms: default_algorithms(),
                 max_iters: 50,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             "fig2-fmri" => ExperimentConfig {
                 name: name.into(),
@@ -169,6 +176,7 @@ impl ExperimentConfig {
                 ],
                 max_iters: 40,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             "fig2-comm" | "fig3-london" => ExperimentConfig {
                 name: name.into(),
@@ -179,6 +187,7 @@ impl ExperimentConfig {
                 algorithms: default_algorithms(),
                 max_iters: 60,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             "fig3-rl" => ExperimentConfig {
                 name: name.into(),
@@ -194,6 +203,7 @@ impl ExperimentConfig {
                 algorithms: default_algorithms(),
                 max_iters: 60,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             "smoke" => ExperimentConfig {
                 name: name.into(),
@@ -209,6 +219,7 @@ impl ExperimentConfig {
                 algorithms: default_algorithms(),
                 max_iters: 20,
                 backend: "pjrt".into(),
+                parallelism: Parallelism::auto(),
             },
             _ => return None,
         };
@@ -249,6 +260,10 @@ impl ExperimentConfig {
                 "edges" => cfg.edges = v.as_usize().ok_or("edges must be int")?,
                 "max_iters" => cfg.max_iters = v.as_usize().ok_or("max_iters must be int")?,
                 "backend" => cfg.backend = v.as_str().ok_or("backend must be str")?.into(),
+                "threads" => {
+                    cfg.parallelism =
+                        Parallelism { threads: v.as_usize().ok_or("threads must be int")? }
+                }
                 "algorithms" => {
                     let arr = v.as_arr().ok_or("algorithms must be array")?;
                     cfg.algorithms = arr
@@ -296,13 +311,14 @@ mod tests {
     fn from_json_overrides() {
         let doc = Json::parse(
             r#"{"preset": "smoke", "nodes": 12, "edges": 24,
-                "algorithms": ["sdd", "admm"], "max_iters": 5}"#,
+                "algorithms": ["sdd", "admm"], "max_iters": 5, "threads": 3}"#,
         )
         .unwrap();
         let c = ExperimentConfig::from_json(&doc).unwrap();
         assert_eq!(c.nodes, 12);
         assert_eq!(c.algorithms.len(), 2);
         assert_eq!(c.algorithms[0].id(), "sdd");
+        assert_eq!(c.parallelism, Parallelism { threads: 3 });
     }
 
     #[test]

@@ -81,6 +81,11 @@ pub fn run_partitioned_gradient(
     let final_thetas = std::sync::Mutex::new(vec![0.0; n * p]);
     let records = std::sync::Mutex::new(Vec::<WorkerIter>::new());
 
+    // Divide the process-wide thread budget among the k workers for the
+    // per-node local gradient evaluation (the compute hot spot of each
+    // BSP superstep); every worker keeps at least its own thread.
+    let inner_threads = (crate::par::threads() / k.max(1)).max(1);
+
     std::thread::scope(|scope| {
         for w in 0..k {
             let my_nodes = part.nodes_of(w);
@@ -136,10 +141,17 @@ pub fn run_partitioned_gradient(
                             future.push((pit, values));
                         }
                     }
-                    // 3. Local mixing + gradient step for every owned node.
+                    // 3. Per-node local gradients, fanned out over this
+                    //    worker's slice of the thread budget (the oracles
+                    //    are independent across nodes), then sequential
+                    //    mixing with the same arithmetic as before.
+                    let grads: Vec<Vec<f64>> =
+                        crate::par::par_map(&my_nodes, inner_threads, |&u| {
+                            problem.locals[u].gradient(&theta[&u])
+                        });
                     let mut next: std::collections::HashMap<usize, Vec<f64>> =
                         std::collections::HashMap::with_capacity(my_nodes.len());
-                    for &u in &my_nodes {
+                    for (ui, &u) in my_nodes.iter().enumerate() {
                         let mut mixed = vec![0.0; p];
                         for &(j, wij) in &weights[u] {
                             let tj = if j == u {
@@ -153,7 +165,7 @@ pub fn run_partitioned_gradient(
                                 mixed[r] += wij * tj[r];
                             }
                         }
-                        let grad = problem.locals[u].gradient(&theta[&u]);
+                        let grad = &grads[ui];
                         for r in 0..p {
                             mixed[r] -= alpha * grad[r];
                         }

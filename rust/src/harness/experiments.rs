@@ -197,6 +197,11 @@ pub fn run_single_stable(
 /// Run a full experiment: all configured algorithms on the same problem
 /// instance and graph, plus the centralized optimum for gap reporting.
 pub fn run_experiment(cfg: &ExperimentConfig) -> ExperimentResult {
+    // Only an explicit config value overrides the process-wide knob —
+    // auto (0) must not clobber a --threads / SDDN_THREADS pin.
+    if cfg.parallelism.threads != 0 {
+        crate::par::set_threads(cfg.parallelism.threads);
+    }
     let mut rng = Pcg64::new(cfg.seed);
     let g = build_graph(cfg, &mut rng);
     let problem = build_problem(cfg, &mut rng);
@@ -226,6 +231,9 @@ pub fn comm_overhead_experiment(
     cfg: &ExperimentConfig,
     targets: &[f64],
 ) -> Vec<(String, Vec<(f64, Option<u64>)>)> {
+    if cfg.parallelism.threads != 0 {
+        crate::par::set_threads(cfg.parallelism.threads);
+    }
     let mut rng = Pcg64::new(cfg.seed);
     let g = build_graph(cfg, &mut rng);
     let problem = build_problem(cfg, &mut rng);

@@ -12,15 +12,26 @@ pub struct Cholesky {
 }
 
 /// Errors from factorization.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum CholeskyError {
     /// Matrix not positive definite (or badly conditioned) at pivot `i`.
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
     /// Matrix not square.
-    #[error("matrix not square: {0}x{1}")]
     NotSquare(usize, usize),
 }
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(i, v) => {
+                write!(f, "matrix not positive definite at pivot {i} (value {v})")
+            }
+            CholeskyError::NotSquare(r, c) => write!(f, "matrix not square: {r}x{c}"),
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 impl Cholesky {
     /// Factor `a = L Lᵀ`.

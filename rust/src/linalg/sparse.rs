@@ -56,37 +56,61 @@ impl Csr {
     }
 
     /// y = A x into a preallocated buffer (hot path — no allocation).
+    /// Parallelized over row blocks when the matrix is large enough under
+    /// the global [`crate::par`] thread budget; results are bit-for-bit
+    /// identical to the serial loop for any thread count.
     #[inline]
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        let threads = crate::par::plan_for(self.nnz());
+        self.matvec_into_threads(x, y, threads);
+    }
+
+    /// [`Self::matvec_into`] with an explicit thread count (no work
+    /// threshold — used by tests and benches to force a parallel split).
+    pub fn matvec_into_threads(&self, x: &[f64], y: &mut [f64], threads: usize) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            let mut acc = 0.0;
-            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
-            for k in s..e {
-                acc += self.values[k] * x[self.indices[k]];
+        crate::par::par_chunks_mut(y, 1, threads, |row0, yblock| {
+            for (k, yi) in yblock.iter_mut().enumerate() {
+                let i = row0 + k;
+                let mut acc = 0.0;
+                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+                for kk in s..e {
+                    acc += self.values[kk] * x[self.indices[kk]];
+                }
+                *yi = acc;
             }
-            y[i] = acc;
-        }
+        });
     }
 
     /// Multi-RHS matvec: Y = A X where X is row-major `cols × w`.
     /// This is the batched per-dimension solve path (p systems at once).
+    /// Parallelized over row blocks (each output row is owned by exactly
+    /// one thread), bit-for-bit identical to the serial sweep.
     pub fn matvec_multi_into(&self, x: &[f64], w: usize, y: &mut [f64]) {
+        let threads = crate::par::plan_for(self.nnz().saturating_mul(w));
+        self.matvec_multi_into_threads(x, w, y, threads);
+    }
+
+    /// [`Self::matvec_multi_into`] with an explicit thread count.
+    pub fn matvec_multi_into_threads(&self, x: &[f64], w: usize, y: &mut [f64], threads: usize) {
         assert_eq!(x.len(), self.cols * w);
         assert_eq!(y.len(), self.rows * w);
-        for i in 0..self.rows {
-            let yrow = &mut y[i * w..(i + 1) * w];
-            yrow.fill(0.0);
-            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
-            for k in s..e {
-                let v = self.values[k];
-                let xrow = &x[self.indices[k] * w..self.indices[k] * w + w];
-                for j in 0..w {
-                    yrow[j] += v * xrow[j];
+        assert!(w > 0, "payload width must be positive");
+        crate::par::par_chunks_mut(y, w, threads, |row0, yblock| {
+            for (k, yrow) in yblock.chunks_mut(w).enumerate() {
+                let i = row0 + k;
+                yrow.fill(0.0);
+                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+                for kk in s..e {
+                    let v = self.values[kk];
+                    let xrow = &x[self.indices[kk] * w..self.indices[kk] * w + w];
+                    for j in 0..w {
+                        yrow[j] += v * xrow[j];
+                    }
                 }
             }
-        }
+        });
     }
 
     /// Dense conversion (tests / small problems only).
@@ -251,6 +275,45 @@ mod tests {
         for i in 0..3 {
             assert_eq!(y[i * 2], y0[i]);
             assert_eq!(y[i * 2 + 1], y1[i]);
+        }
+    }
+
+    #[test]
+    fn duplicates_summed_when_scattered() {
+        // Duplicate coordinates that are *not* adjacent in the input order
+        // must still collapse into one stored entry.
+        let a = Csr::from_triplets(
+            2,
+            3,
+            &[(1, 2, 4.0), (0, 0, 1.0), (1, 2, -1.5), (0, 2, 2.0), (1, 2, 0.5)],
+        );
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.to_dense()[(1, 2)], 3.0);
+        assert_eq!(a.to_dense()[(0, 2)], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_row_out_of_bounds_panics() {
+        let _ = Csr::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_col_out_of_bounds_panics() {
+        let _ = Csr::from_triplets(2, 2, &[(0, 2, 1.0)]);
+    }
+
+    #[test]
+    fn parallel_matvec_bit_for_bit_small() {
+        let a = small();
+        let x = vec![0.25, -1.5, 3.0];
+        let mut serial = vec![0.0; 3];
+        a.matvec_into_threads(&x, &mut serial, 1);
+        for t in [2usize, 3, 8] {
+            let mut par = vec![0.0; 3];
+            a.matvec_into_threads(&x, &mut par, t);
+            assert_eq!(serial, par, "threads={t}");
         }
     }
 

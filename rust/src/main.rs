@@ -42,11 +42,12 @@ fn print_usage() {
          \n\
          USAGE:\n\
            sddnewton run --experiment <preset> [--iters N] [--algorithms a,b,c]\n\
-                         [--backend native|pjrt] [--seed S] [--out trace.csv] [--plot]\n\
+                         [--backend native|pjrt] [--seed S] [--threads T]\n\
+                         [--out trace.csv] [--plot]\n\
            sddnewton run --config <file.json> [--out trace.csv]\n\
            sddnewton campaign [--out results/] [preset...]\n\
            sddnewton comm [--experiment <preset>] [--targets 1e-1,1e-2,...] [--out comm.csv]\n\
-           sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S]\n\
+           sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
            sddnewton info\n\
          \n\
          PRESETS: {}",
@@ -102,6 +103,10 @@ fn build_config(f: &Flags) -> Result<ExperimentConfig, String> {
     }
     if let Some(b) = f.kv.get("backend") {
         cfg.backend = b.clone();
+    }
+    if let Some(t) = f.kv.get("threads") {
+        let threads: usize = t.parse().map_err(|_| "bad --threads")?;
+        cfg.parallelism = sddnewton::par::Parallelism { threads };
     }
     if let Some(list) = f.kv.get("algorithms") {
         cfg.algorithms = list
@@ -246,6 +251,9 @@ fn cmd_solve(args: &[String]) -> i32 {
     let m: usize = f.kv.get("edges").and_then(|v| v.parse().ok()).unwrap_or(250);
     let eps: f64 = f.kv.get("eps").and_then(|v| v.parse().ok()).unwrap_or(1e-6);
     let seed: u64 = f.kv.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
+    if let Some(t) = f.kv.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        sddnewton::par::set_threads(t);
+    }
     let mut rng = Pcg64::new(seed);
     let g = sddnewton::graph::generate::random_connected(n, m, &mut rng);
     let l = sddnewton::graph::laplacian_csr(&g);
@@ -274,10 +282,15 @@ fn cmd_solve(args: &[String]) -> i32 {
 
 fn cmd_info() -> i32 {
     println!("sddnewton {}", env!("CARGO_PKG_VERSION"));
+    println!("parallelism: {} threads (SDDN_THREADS / --threads to override)",
+        sddnewton::par::threads());
+    #[cfg(feature = "pjrt")]
     match xla::PjRtClient::cpu() {
         Ok(c) => println!("pjrt platform: {} ({} devices)", c.platform_name(), c.device_count()),
         Err(e) => println!("pjrt unavailable: {e}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt support not compiled in (enable the `pjrt` cargo feature)");
     let dir = harness::experiments::artifacts_dir();
     match std::fs::read_to_string(dir.join("manifest.json")) {
         Ok(text) => match Json::parse(&text) {

@@ -70,6 +70,26 @@ impl NodeCtx {
         }
     }
 
+    /// Receive one message from *any* neighbor. Messages parked in the
+    /// reorder buffer are older than anything still in the inbox (they
+    /// were pulled off the channel while waiting for someone else), so
+    /// the buffer MUST be drained before blocking on the inbox —
+    /// otherwise a fast neighbor's early sends would starve behind its
+    /// own later traffic. Buffered messages drain in neighbor order.
+    pub fn recv(&self) -> (usize, Vec<f64>) {
+        {
+            let mut pend = self.pending.borrow_mut();
+            for &j in &self.neighbors {
+                if let Some(q) = pend.get_mut(&j) {
+                    if let Some(m) = q.pop_front() {
+                        return (j, m);
+                    }
+                }
+            }
+        }
+        self.inbox.recv().expect("peer hung up")
+    }
+
     /// Receive exactly one message from each neighbor (in neighbor order),
     /// returning (neighbor, payload) pairs. This is the synchronous-round
     /// receive used by diffusion-style algorithms.
@@ -198,6 +218,67 @@ mod tests {
         });
         // Path 0-1-2-3: neighbor sums are [1, 2, 4, 2].
         assert_eq!(out.per_node, vec![1.0, 2.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn fast_neighbor_rounds_stay_ordered() {
+        // Node 1 races two rounds ahead; the slow endpoints must receive
+        // its round-1 payload before its round-2 payload (FIFO through
+        // the reorder buffer), never swapped or dropped.
+        let g = generate::path(3);
+        let out = run_threaded(&g, |ctx: NodeCtx| {
+            if ctx.id == 1 {
+                // Deliberately fast: fire both rounds back-to-back.
+                for round in [1.0, 2.0] {
+                    ctx.send(0, vec![round]);
+                    ctx.send(2, vec![round]);
+                }
+                0.0
+            } else {
+                // Deliberately slow: both messages are already queued.
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                let a = ctx.recv_from(1);
+                let b = ctx.recv_from(1);
+                assert_eq!(a, vec![1.0], "node {} got rounds out of order", ctx.id);
+                assert_eq!(b, vec![2.0], "node {} got rounds out of order", ctx.id);
+                a[0] * 10.0 + b[0]
+            }
+        });
+        assert_eq!(out.per_node, vec![12.0, 0.0, 12.0]);
+    }
+
+    #[test]
+    fn recv_drains_pending_before_blocking_on_inbox() {
+        // Star: node 0 talks to 1 and 2. Node 1 sends immediately; node 2
+        // sends late. Node 0 first blocks on recv_from(2), which parks 1's
+        // early message in the reorder buffer. The subsequent recv() must
+        // return that buffered message — if recv skipped the buffer and
+        // blocked on the inbox it would instead pick up 1's *second*
+        // message ([99.0]) and the assertion below would fail.
+        let g = generate::star(3);
+        let out = run_threaded(&g, |ctx: NodeCtx| match ctx.id {
+            0 => {
+                let from2 = ctx.recv_from(2);
+                assert_eq!(from2, vec![20.0]);
+                let (src, payload) = ctx.recv();
+                assert_eq!((src, payload), (1, vec![10.0]), "pending buffer not drained");
+                let tail = ctx.recv_from(1);
+                assert_eq!(tail, vec![99.0]);
+                1.0
+            }
+            1 => {
+                ctx.send(0, vec![10.0]);
+                std::thread::sleep(std::time::Duration::from_millis(60));
+                ctx.send(0, vec![99.0]);
+                0.0
+            }
+            _ => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                ctx.send(0, vec![20.0]);
+                0.0
+            }
+        });
+        assert_eq!(out.per_node, vec![1.0, 0.0, 0.0]);
     }
 
     #[test]

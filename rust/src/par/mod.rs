@@ -1,0 +1,283 @@
+//! Scoped-thread parallel execution substrate (no external deps).
+//!
+//! The SDD solver's L3 hot paths — CSR `matvec`/`matvec_multi_into`, the
+//! per-level forward/backward sweeps of the chain solver, and the batched
+//! per-node local computations — are embarrassingly parallel across rows
+//! (respectively nodes). This module provides the minimal primitives to
+//! exploit that with `std::thread::scope` (stable since 1.63), keeping the
+//! crate dependency-free:
+//!
+//! - [`par_chunks_mut`] — partition a mutable slice into contiguous,
+//!   chunk-aligned blocks and process them on worker threads;
+//! - [`par_for`] — partition an index range;
+//! - [`par_map`] — map a slice to an owned `Vec` in parallel.
+//!
+//! All primitives partition work **contiguously and deterministically**:
+//! every output element is computed by exactly the same scalar operations
+//! in the same order as the serial code, so parallel results are
+//! bit-for-bit identical to serial ones (asserted by
+//! `tests/prop_parallel.rs`). Reductions (dot products, norms) stay serial
+//! throughout the crate for the same reason.
+//!
+//! The global thread budget is a process-wide knob ([`set_threads`] /
+//! [`threads`]) threaded through `config::ExperimentConfig` (as a
+//! [`Parallelism`] field), the CLI (`--threads`) and `benchkit`
+//! (`--threads` bench flag); `SDDN_THREADS` overrides the default of
+//! `std::thread::available_parallelism`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Minimum scalar work (≈ fused multiply-adds) a thread must receive
+/// before spawning pays for itself; below this everything runs inline.
+/// Spawning a scoped OS thread costs tens of microseconds, so the bar is
+/// set around ~100 µs of arithmetic (≈ 1e5 FMAs) per extra thread —
+/// mid-sized kernels stay serial rather than paying spawn/join per call.
+pub const MIN_WORK_PER_THREAD: usize = 1 << 17;
+
+/// Global thread budget; 0 = auto (env/`available_parallelism`).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Degree-of-parallelism knob carried by configs and benches.
+/// The default (`threads: 0`) means auto-detect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Parallelism {
+    /// Worker-thread budget; 0 = auto-detect.
+    pub threads: usize,
+}
+
+impl Parallelism {
+    /// Auto-detect (`SDDN_THREADS` env var, else available parallelism).
+    pub fn auto() -> Parallelism {
+        Parallelism { threads: 0 }
+    }
+
+    /// Strictly serial execution.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// Resolve to a concrete thread count (≥ 1).
+    pub fn resolved(&self) -> usize {
+        if self.threads == 0 {
+            default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Cached auto-detected default (0 = not yet resolved). `plan_for` sits
+/// on hot paths, so the env/`available_parallelism` probe runs once.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn default_threads() -> usize {
+    let cached = DEFAULT_THREADS.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let resolved = match std::env::var("SDDN_THREADS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    DEFAULT_THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Set the process-wide thread budget (0 = auto).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Current process-wide thread budget, resolved (≥ 1).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t == 0 {
+        default_threads()
+    } else {
+        t
+    }
+}
+
+/// Threads to use for a task of `work` scalar operations under the
+/// current global budget: never more than the budget, never so many that
+/// a thread gets less than [`MIN_WORK_PER_THREAD`].
+pub fn plan_for(work: usize) -> usize {
+    plan(threads(), work)
+}
+
+/// [`plan_for`] with an explicit budget.
+pub fn plan(budget: usize, work: usize) -> usize {
+    let cap = (work + MIN_WORK_PER_THREAD - 1) / MIN_WORK_PER_THREAD;
+    budget.min(cap).max(1)
+}
+
+/// Split `data` into up to `threads` contiguous blocks whose boundaries
+/// are multiples of `chunk`, and run `f(first_chunk_index, block)` on each
+/// block concurrently (the last block runs on the calling thread).
+/// `data.len()` must be a multiple of `chunk`.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk must be positive");
+    debug_assert_eq!(data.len() % chunk, 0, "data not chunk-aligned");
+    let n_chunks = data.len() / chunk;
+    let t = threads.min(n_chunks).max(1);
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = (n_chunks + t - 1) / t;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = (per * chunk).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let s = start;
+            if rest.is_empty() {
+                f(s, head);
+            } else {
+                scope.spawn(move || f(s, head));
+            }
+            start += take / chunk;
+        }
+    });
+}
+
+/// Partition `0..n` into up to `threads` contiguous ranges and run `f` on
+/// each concurrently (the last range runs on the calling thread).
+pub fn par_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let t = threads.min(n).max(1);
+    if t <= 1 {
+        f(0..n);
+        return;
+    }
+    let per = (n + t - 1) / t;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + per).min(n);
+            if end == n {
+                f(start..end);
+            } else {
+                scope.spawn(move || f(start..end));
+            }
+            start = end;
+        }
+    });
+}
+
+/// Parallel map over a slice, preserving order.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    par_chunks_mut(&mut out, 1, threads, |start, block| {
+        for (k, slot) in block.iter_mut().enumerate() {
+            *slot = Some(f(&items[start + k]));
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_index_once() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for n_chunks in [0usize, 1, 2, 5, 64, 1000] {
+                let chunk = 3;
+                let mut data = vec![usize::MAX; n_chunks * chunk];
+                par_chunks_mut(&mut data, chunk, threads, |start, block| {
+                    for (k, v) in block.iter_mut().enumerate() {
+                        *v = start * chunk + k;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i, "threads={threads} n_chunks={n_chunks}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_are_aligned() {
+        let chunk = 4;
+        let mut data = vec![0usize; 10 * chunk];
+        par_chunks_mut(&mut data, chunk, 3, |start, block| {
+            assert_eq!(block.len() % chunk, 0);
+            let _ = start;
+        });
+    }
+
+    #[test]
+    fn par_for_covers_range() {
+        use std::sync::Mutex;
+        for threads in [1usize, 2, 5] {
+            let seen = Mutex::new(vec![0u32; 103]);
+            par_for(103, threads, |range| {
+                let mut s = seen.lock().unwrap();
+                for i in range {
+                    s[i] += 1;
+                }
+            });
+            assert!(seen.into_inner().unwrap().iter().all(|&c| c == 1));
+        }
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<usize> = (0..57).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let par = par_map(&items, threads, |&x| x * x + 1);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn plan_respects_budget_and_minimum_work() {
+        assert_eq!(plan(8, 0), 1);
+        assert_eq!(plan(8, 100), 1);
+        assert_eq!(plan(8, MIN_WORK_PER_THREAD), 1);
+        assert_eq!(plan(8, 2 * MIN_WORK_PER_THREAD), 2);
+        assert_eq!(plan(8, 100 * MIN_WORK_PER_THREAD), 8);
+        assert_eq!(plan(1, 100 * MIN_WORK_PER_THREAD), 1);
+    }
+
+    #[test]
+    fn parallelism_knob_resolves() {
+        assert_eq!(Parallelism::serial().resolved(), 1);
+        assert!(Parallelism::auto().resolved() >= 1);
+        assert_eq!(Parallelism { threads: 3 }.resolved(), 3);
+        assert_eq!(Parallelism::default(), Parallelism::auto());
+    }
+
+    #[test]
+    fn global_budget_roundtrip() {
+        // Other tests may run concurrently, but only this one writes a
+        // non-auto value transiently; results elsewhere are thread-count
+        // independent (bit-for-bit identical), so this is safe.
+        let before = super::THREADS.load(Ordering::Relaxed);
+        set_threads(5);
+        assert_eq!(threads(), 5);
+        set_threads(before);
+        assert!(threads() >= 1);
+    }
+}

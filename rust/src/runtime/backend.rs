@@ -35,17 +35,33 @@ pub trait LocalBackend {
 
 /// Pure-rust backend delegating to the `LocalObjective` oracles. This is
 /// the correctness reference for the PJRT artifacts.
+///
+/// The per-node oracles are independent (`LocalObjective: Send + Sync`),
+/// so both batched entry points fan the nodes out over the
+/// [`crate::par`] substrate when the batch is large enough; each node's
+/// output block is owned by exactly one thread, so results are identical
+/// to the serial sweep for any thread count.
 pub struct NativeBackend;
+
+/// Work heuristic for the per-node fan-out: primal recovery / Hessian
+/// application cost at least O(p²) per node.
+fn node_batch_threads(n: usize, p: usize) -> usize {
+    crate::par::plan_for(n.saturating_mul(p).saturating_mul(p.max(16)))
+}
 
 impl LocalBackend for NativeBackend {
     fn primal_recover_all(&self, problem: &ConsensusProblem, v: &[f64], out: &mut [f64]) {
         let p = problem.p;
         assert_eq!(v.len(), problem.n() * p);
         assert_eq!(out.len(), problem.n() * p);
-        for (i, l) in problem.locals.iter().enumerate() {
-            let y = l.primal_recover(&v[i * p..(i + 1) * p]);
-            out[i * p..(i + 1) * p].copy_from_slice(&y);
-        }
+        let threads = node_batch_threads(problem.n(), p);
+        crate::par::par_chunks_mut(out, p, threads, |i0, block| {
+            for (k, orow) in block.chunks_mut(p).enumerate() {
+                let i = i0 + k;
+                let y = problem.locals[i].primal_recover(&v[i * p..(i + 1) * p]);
+                orow.copy_from_slice(&y);
+            }
+        });
     }
 
     fn hess_apply_all(
@@ -56,10 +72,16 @@ impl LocalBackend for NativeBackend {
         out: &mut [f64],
     ) {
         let p = problem.p;
-        for (i, l) in problem.locals.iter().enumerate() {
-            let b = l.hess_vec(&thetas[i * p..(i + 1) * p], &z[i * p..(i + 1) * p]);
-            out[i * p..(i + 1) * p].copy_from_slice(&b);
-        }
+        assert_eq!(out.len(), problem.n() * p);
+        let threads = node_batch_threads(problem.n(), p);
+        crate::par::par_chunks_mut(out, p, threads, |i0, block| {
+            for (k, orow) in block.chunks_mut(p).enumerate() {
+                let i = i0 + k;
+                let b = problem.locals[i]
+                    .hess_vec(&thetas[i * p..(i + 1) * p], &z[i * p..(i + 1) * p]);
+                orow.copy_from_slice(&b);
+            }
+        });
     }
 
     fn name(&self) -> &'static str {

@@ -8,10 +8,31 @@
 use crate::config::json::Json;
 use crate::problems::logistic::Reg;
 use crate::problems::{ConsensusProblem, ExportData};
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 use super::backend::LocalBackend;
+
+/// PJRT-path error (anyhow is unavailable offline).
+#[derive(Debug, Clone)]
+pub struct PjrtError(pub String);
+
+impl std::fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+type Result<T> = std::result::Result<T, PjrtError>;
+
+macro_rules! perr {
+    ($($t:tt)*) => { PjrtError(format!($($t)*)) };
+}
+
+macro_rules! pbail {
+    ($($t:tt)*) => { return Err(perr!($($t)*)) };
+}
 
 /// Compiled artifact pair + cached constant inputs for one problem.
 enum Mode {
@@ -53,21 +74,25 @@ pub struct PjrtBackend {
 
 fn lit2(data: &[f64], d0: usize, d1: usize) -> Result<xla::Literal> {
     assert_eq!(data.len(), d0 * d1);
-    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64])?)
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64])
+        .map_err(|e| perr!("reshape ({d0},{d1}): {e}"))
 }
 
 fn lit3(data: &[f64], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
     assert_eq!(data.len(), d0 * d1 * d2);
-    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64, d2 as i64])?)
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64, d2 as i64])
+        .map_err(|e| perr!("reshape ({d0},{d1},{d2}): {e}"))
 }
 
 fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        path.to_str().ok_or_else(|| perr!("non-utf8 path"))?,
     )
-    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    .map_err(|e| perr!("parsing HLO text {}: {e}", path.display()))?;
     let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
+    client.compile(&comp).map_err(|e| perr!("compiling {}: {e}", path.display()))
 }
 
 /// Find a manifest entry matching a predicate; returns (name, entry).
@@ -89,11 +114,11 @@ impl PjrtBackend {
     pub fn for_problem(problem: &ConsensusProblem, dir: impl AsRef<Path>) -> Result<PjrtBackend> {
         let dir: PathBuf = dir.as_ref().to_path_buf();
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+            .map_err(|e| perr!("reading {}/manifest.json: {e}", dir.display()))?;
         let manifest =
-            Json::parse(&manifest_text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+            Json::parse(&manifest_text).map_err(|e| perr!("manifest parse: {e}"))?;
         let (n, p) = (problem.n(), problem.p);
-        let client = xla::PjRtClient::cpu()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| perr!("pjrt cpu client: {e}"))?;
 
         match problem.locals[0].export() {
             ExportData::Quadratic { .. } => {
@@ -105,9 +130,9 @@ impl PjrtBackend {
                     }
                 };
                 let (_, rec) = find_entry(&manifest, want("quad_recover"))
-                    .ok_or_else(|| anyhow!("no quad_recover artifact for n={n} p={p}"))?;
+                    .ok_or_else(|| perr!("no quad_recover artifact for n={n} p={p}"))?;
                 let (_, hes) = find_entry(&manifest, want("quad_hess"))
-                    .ok_or_else(|| anyhow!("no quad_hess artifact for n={n} p={p}"))?;
+                    .ok_or_else(|| perr!("no quad_hess artifact for n={n} p={p}"))?;
                 let recover = compile(&client, &dir.join(rec.get("file").unwrap().as_str().unwrap()))?;
                 let hess = compile(&client, &dir.join(hes.get("file").unwrap().as_str().unwrap()))?;
                 let recover_pre = find_entry(&manifest, want("quad_recover_pre"))
@@ -125,12 +150,12 @@ impl PjrtBackend {
                             cdata[i * p..(i + 1) * p].copy_from_slice(c);
                             if recover_pre.is_some() {
                                 let inv = crate::linalg::cholesky::spd_inverse(p_mat)
-                                    .map_err(|e| anyhow!("P_{i} not SPD: {e}"))?;
+                                    .map_err(|e| perr!("P_{i} not SPD: {e}"))?;
                                 pinv_data[i * p * p..(i + 1) * p * p]
                                     .copy_from_slice(&inv.data);
                             }
                         }
-                        _ => bail!("mixed problem kinds"),
+                        _ => pbail!("mixed problem kinds"),
                     }
                 }
                 let pinv_lit = if recover_pre.is_some() {
@@ -175,7 +200,7 @@ impl PjrtBackend {
                     }
                 };
                 let (_, rec) = find_entry(&manifest, want("logreg_recover")).ok_or_else(|| {
-                    anyhow!("no logreg_recover artifact for n={n} p={p} m>={m_max} reg={reg_tag}")
+                    perr!("no logreg_recover artifact for n={n} p={p} m>={m_max} reg={reg_tag}")
                 })?;
                 let m_pad = rec.get("m").unwrap().as_usize().unwrap();
                 let (_, hes) = find_entry(&manifest, move |e: &Json| {
@@ -185,7 +210,7 @@ impl PjrtBackend {
                         && e.get("m").and_then(Json::as_usize) == Some(m_pad)
                         && e.get("reg").and_then(Json::as_str) == Some(reg_tag)
                 })
-                .ok_or_else(|| anyhow!("no matching logreg_hess artifact"))?;
+                .ok_or_else(|| perr!("no matching logreg_hess artifact"))?;
                 let recover = compile(&client, &dir.join(rec.get("file").unwrap().as_str().unwrap()))?;
                 let hess = compile(&client, &dir.join(hes.get("file").unwrap().as_str().unwrap()))?;
 
@@ -205,7 +230,7 @@ impl PjrtBackend {
                             }
                             rsdata[i] = mu * a.len() as f64;
                         }
-                        _ => bail!("mixed problem kinds"),
+                        _ => pbail!("mixed problem kinds"),
                     }
                 }
                 Ok(PjrtBackend {
@@ -221,14 +246,18 @@ impl PjrtBackend {
                     p,
                 })
             }
-            ExportData::Opaque => bail!("problem does not export data for PJRT"),
+            ExportData::Opaque => pbail!("problem does not export data for PJRT"),
         }
     }
 
     fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<Vec<f64>> {
-        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| perr!("pjrt execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| perr!("pjrt device→host: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| perr!("pjrt untuple: {e}"))?;
+        out.to_vec::<f64>().map_err(|e| perr!("pjrt literal→vec: {e}"))
     }
 }
 

@@ -1,0 +1,75 @@
+//! Stub PJRT backend compiled when the `pjrt` feature is off (the
+//! default — the sandbox cannot fetch the `xla` crate). `for_problem`
+//! always fails with a descriptive error so `harness::make_backend`
+//! falls back to [`super::NativeBackend`]; the type otherwise mirrors the
+//! real backend's API so callers compile unchanged.
+
+use crate::problems::ConsensusProblem;
+use std::path::Path;
+
+/// Error raised by every stub operation.
+#[derive(Debug, Clone)]
+pub struct PjrtError(pub String);
+
+impl std::fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+/// Placeholder for the PJRT-backed [`super::LocalBackend`]. Cannot be
+/// constructed without the `pjrt` feature.
+pub struct PjrtBackend {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl PjrtBackend {
+    /// Always fails: PJRT support is not compiled in.
+    pub fn for_problem(
+        _problem: &ConsensusProblem,
+        dir: impl AsRef<Path>,
+    ) -> Result<PjrtBackend, PjrtError> {
+        Err(PjrtError(format!(
+            "pjrt support not compiled in (build with `--features pjrt` and a vendored \
+             xla crate); artifacts dir: {}",
+            dir.as_ref().display()
+        )))
+    }
+}
+
+impl super::backend::LocalBackend for PjrtBackend {
+    fn primal_recover_all(&self, _problem: &ConsensusProblem, _v: &[f64], _out: &mut [f64]) {
+        match self._unconstructible {}
+    }
+
+    fn hess_apply_all(
+        &self,
+        _problem: &ConsensusProblem,
+        _thetas: &[f64],
+        _z: &[f64],
+        _out: &mut [f64],
+    ) {
+        match self._unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn stub_reports_unavailability() {
+        let mut rng = Pcg64::new(1);
+        let prob = datasets::synthetic_regression(3, 2, 30, 0.2, 0.05, &mut rng);
+        let err = PjrtBackend::for_problem(&prob, "/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("pjrt support not compiled in"));
+    }
+}

@@ -64,15 +64,32 @@ pub struct Chain {
 }
 
 /// Errors in chain construction.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ChainError {
-    #[error("matrix is not square: {0}x{1}")]
+    /// Matrix is not square (rows, cols).
     NotSquare(usize, usize),
-    #[error("matrix is not SDD (positive off-diagonal or dominance violated at row {0})")]
+    /// Positive off-diagonal or diagonal dominance violated at the row.
     NotSdd(usize),
-    #[error("zero diagonal at row {0} — isolated node or invalid SDD matrix")]
+    /// Zero diagonal at the row — isolated node or invalid SDD matrix.
     ZeroDiagonal(usize),
 }
+
+impl std::fmt::Display for ChainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChainError::NotSquare(r, c) => write!(f, "matrix is not square: {r}x{c}"),
+            ChainError::NotSdd(i) => write!(
+                f,
+                "matrix is not SDD (positive off-diagonal or dominance violated at row {i})"
+            ),
+            ChainError::ZeroDiagonal(i) => {
+                write!(f, "zero diagonal at row {i} — isolated node or invalid SDD matrix")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ChainError {}
 
 impl Chain {
     /// Build the chain from an SDD matrix `M` (typically a graph
@@ -185,14 +202,20 @@ impl Chain {
         }
     }
 
-    /// Apply `M = D̃(I − X)` (one round).
+    /// Apply `M = D̃(I − X)` (one round). The per-row combine is
+    /// independent across rows and runs on the par substrate.
     pub fn apply_m(&self, v: &[f64], w: usize, out: &mut [f64], stats: &mut CommStats) {
         self.apply_x(v, w, out, stats);
-        for i in 0..self.n {
-            for j in 0..w {
-                out[i * w + j] = self.dvec[i] * (v[i * w + j] - out[i * w + j]);
+        let threads = crate::par::plan_for(out.len());
+        crate::par::par_chunks_mut(out, w, threads, |r0, block| {
+            for (k, row) in block.chunks_mut(w).enumerate() {
+                let i = r0 + k;
+                let d = self.dvec[i];
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = d * (v[i * w + j] - *o);
+                }
             }
-        }
+        });
     }
 
     /// Project onto the working subspace (mean-zero per column) when the

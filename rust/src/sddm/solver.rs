@@ -60,6 +60,9 @@ impl SddmSolver {
         let mut scratch_b = vec![0.0; len];
 
         // Forward: b_{i+1} = (I + A_i D̃^{-1}) b_i,  A_i D̃^{-1} v = D̃ X^{2^i} D̃^{-1} v.
+        // The per-level row sweeps are independent across the n rows (and
+        // the w RHS columns), so they run on the par substrate; each row
+        // is owned by exactly one thread → bit-for-bit serial-identical.
         let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
         let mut cur = b.to_vec();
         c.project(&mut cur, w, stats);
@@ -67,40 +70,23 @@ impl SddmSolver {
         let mut tmp = vec![0.0; len];
         for i in 0..d {
             // tmp = D̃^{-1} cur
-            for r in 0..n {
-                for j in 0..w {
-                    tmp[r * w + j] = c.dinv[r] * cur[r * w + j];
-                }
-            }
+            diag_mul_into(&c.dinv, &cur, w, &mut tmp);
             c.apply_x_pow(i, &tmp, w, &mut scratch_a, &mut scratch_b, stats);
             // cur = cur + D̃ * scratch_a
-            for r in 0..n {
-                for j in 0..w {
-                    cur[r * w + j] += c.dvec[r] * scratch_a[r * w + j];
-                }
-            }
+            diag_axpy(&c.dvec, &scratch_a, w, &mut cur);
             c.project(&mut cur, w, stats);
             bs.push(cur.clone());
         }
 
         // Last level: x_d = D̃^{-1} b_d.
         let mut x = vec![0.0; len];
-        for r in 0..n {
-            for j in 0..w {
-                x[r * w + j] = c.dinv[r] * bs[d][r * w + j];
-            }
-        }
+        diag_mul_into(&c.dinv, &bs[d], w, &mut x);
         c.project(&mut x, w, stats);
 
         // Backward: x_i = ½ [D̃^{-1} b_i + x_{i+1} + X^{2^i} x_{i+1}].
         for i in (0..d).rev() {
             c.apply_x_pow(i, &x, w, &mut scratch_a, &mut scratch_b, stats);
-            for r in 0..n {
-                for j in 0..w {
-                    let idx = r * w + j;
-                    x[idx] = 0.5 * (c.dinv[r] * bs[i][idx] + x[idx] + scratch_a[idx]);
-                }
-            }
+            backward_combine(&c.dinv, &bs[i], &scratch_a, w, &mut x);
             c.project(&mut x, w, stats);
         }
         x
@@ -129,9 +115,7 @@ impl SddmSolver {
         for k in 0..=self.opts.max_richardson {
             // r = b − M y.
             c.apply_m(&y, w, &mut my, stats);
-            for i in 0..len {
-                residual[i] = b0[i] - my[i];
-            }
+            sub_into(&b0, &my, w, &mut residual);
             c.project(&mut residual, w, stats);
             rel = max_rel(&residual, &bnorms, n, w);
             // Residual norm check is an accounted all-reduce.
@@ -153,6 +137,63 @@ impl SddmSolver {
         }
         SolveOutcome { x: y, sweeps, rel_residual: rel, converged: rel <= self.opts.eps }
     }
+}
+
+/// dst[r,·] = diag[r] · src[r,·] over a stacked `n × w` buffer, row blocks
+/// split across the par substrate.
+fn diag_mul_into(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
+    let threads = crate::par::plan_for(dst.len());
+    crate::par::par_chunks_mut(dst, w, threads, |r0, block| {
+        for (k, row) in block.chunks_mut(w).enumerate() {
+            let r = r0 + k;
+            let d = diag[r];
+            let s = &src[r * w..(r + 1) * w];
+            for (o, v) in row.iter_mut().zip(s) {
+                *o = d * v;
+            }
+        }
+    });
+}
+
+/// dst[r,·] += diag[r] · src[r,·].
+fn diag_axpy(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
+    let threads = crate::par::plan_for(dst.len());
+    crate::par::par_chunks_mut(dst, w, threads, |r0, block| {
+        for (k, row) in block.chunks_mut(w).enumerate() {
+            let r = r0 + k;
+            let d = diag[r];
+            let s = &src[r * w..(r + 1) * w];
+            for (o, v) in row.iter_mut().zip(s) {
+                *o += d * v;
+            }
+        }
+    });
+}
+
+/// Backward-sweep combine: x[r,·] = ½ (dinv[r]·b[r,·] + x[r,·] + xpow[r,·]).
+fn backward_combine(dinv: &[f64], b: &[f64], xpow: &[f64], w: usize, x: &mut [f64]) {
+    let threads = crate::par::plan_for(x.len());
+    crate::par::par_chunks_mut(x, w, threads, |r0, block| {
+        for (k, row) in block.chunks_mut(w).enumerate() {
+            let r = r0 + k;
+            let d = dinv[r];
+            let off = r * w;
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = 0.5 * (d * b[off + j] + *o + xpow[off + j]);
+            }
+        }
+    });
+}
+
+/// dst = a − b, row blocks split across the par substrate.
+fn sub_into(a: &[f64], b: &[f64], w: usize, dst: &mut [f64]) {
+    let threads = crate::par::plan_for(dst.len());
+    crate::par::par_chunks_mut(dst, w, threads, |r0, block| {
+        let off = r0 * w;
+        for (k, o) in block.iter_mut().enumerate() {
+            *o = a[off + k] - b[off + k];
+        }
+    });
 }
 
 fn col_norms(v: &[f64], n: usize, w: usize) -> Vec<f64> {

@@ -1,0 +1,140 @@
+//! Property tests for the scoped-thread parallel substrate (`par`):
+//! every parallel kernel must be **bit-for-bit** identical to its serial
+//! sweep — row blocks are owned by exactly one thread and each output
+//! element is produced by the same scalar operations in the same order.
+
+use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::linalg::Csr;
+use sddnewton::net::CommStats;
+use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions};
+use sddnewton::util::Pcg64;
+
+fn random_csr(rows: usize, cols: usize, nnz: usize, rng: &mut Pcg64) -> Csr {
+    let mut trips = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        trips.push((
+            rng.next_below(rows as u64) as usize,
+            rng.next_below(cols as u64) as usize,
+            rng.normal(),
+        ));
+    }
+    Csr::from_triplets(rows, cols, &trips)
+}
+
+#[test]
+fn prop_parallel_matvec_bit_for_bit() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(seed);
+        let rows = 1 + rng.next_below(300) as usize;
+        let cols = 1 + rng.next_below(300) as usize;
+        let nnz = 1 + rng.next_below((rows * cols / 2 + 1) as u64) as usize;
+        let a = random_csr(rows, cols, nnz, &mut rng);
+        let x = rng.normal_vec(cols);
+        let mut serial = vec![0.0; rows];
+        a.matvec_into_threads(&x, &mut serial, 1);
+        for threads in [2usize, 3, 4, 7, 16] {
+            let mut par = vec![0.0; rows];
+            a.matvec_into_threads(&x, &mut par, threads);
+            assert_eq!(serial, par, "seed={seed} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_matvec_multi_bit_for_bit() {
+    for seed in 100..130u64 {
+        let mut rng = Pcg64::new(seed);
+        let rows = 1 + rng.next_below(200) as usize;
+        let cols = 1 + rng.next_below(200) as usize;
+        let w = 1 + rng.next_below(9) as usize;
+        let nnz = 1 + rng.next_below((rows * cols / 2 + 1) as u64) as usize;
+        let a = random_csr(rows, cols, nnz, &mut rng);
+        let x = rng.normal_vec(cols * w);
+        let mut serial = vec![0.0; rows * w];
+        a.matvec_multi_into_threads(&x, w, &mut serial, 1);
+        for threads in [2usize, 4, 5, 11] {
+            let mut par = vec![0.0; rows * w];
+            a.matvec_multi_into_threads(&x, w, &mut par, threads);
+            assert_eq!(serial, par, "seed={seed} w={w} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_auto_matvec_matches_explicit_serial() {
+    // The auto (global-budget, work-thresholded) entry point must agree
+    // with the forced-serial and forced-parallel paths.
+    let mut rng = Pcg64::new(77);
+    let g = generate::random_connected(120, 360, &mut rng);
+    let l = laplacian_csr(&g);
+    let x = rng.normal_vec(120);
+    let auto = l.matvec(&x);
+    let mut serial = vec![0.0; 120];
+    l.matvec_into_threads(&x, &mut serial, 1);
+    assert_eq!(auto, serial);
+}
+
+#[test]
+fn sddm_crude_solve_is_thread_count_invariant() {
+    // A 20k-node chain at w=8 puts both the matvec (nnz·w ≈ 480k ops)
+    // and the per-level row sweeps (n·w = 160k ops) over the
+    // MIN_WORK_PER_THREAD bar, so the parallel paths genuinely engage
+    // when the global budget allows; depth is pinned to keep the
+    // implicit X^{2^i} round count debug-fast.
+    let mut rng = Pcg64::new(2024);
+    let n = 20_000;
+    let w = 8;
+    let g = generate::path(n);
+    let l = laplacian_csr(&g);
+    let chain =
+        Chain::build(&l, &ChainOptions { depth: Some(2), ..Default::default() }, &mut rng)
+            .unwrap();
+    let solver = SddmSolver::new(chain, SolverOptions::default());
+    let mut b = vec![0.0; n * w];
+    for j in 0..w {
+        let z = rng.normal_vec(n);
+        let col = l.matvec(&z);
+        for i in 0..n {
+            b[i * w + j] = col[i];
+        }
+    }
+    let crude_with = |threads: usize| {
+        sddnewton::par::set_threads(threads);
+        let mut stats = CommStats::default();
+        let x = solver.crude_solve(&b, w, &mut stats);
+        sddnewton::par::set_threads(0);
+        (x, stats)
+    };
+    let (x1, stats1) = crude_with(1);
+    for threads in [2usize, 4] {
+        let (xt, statst) = crude_with(threads);
+        assert_eq!(x1, xt, "threads={threads}: solution drifted");
+        assert_eq!(stats1, statst, "threads={threads}: message accounting drifted");
+    }
+}
+
+#[test]
+fn native_backend_batches_are_thread_count_invariant() {
+    use sddnewton::problems::datasets;
+    use sddnewton::runtime::{LocalBackend, NativeBackend};
+    let mut rng = Pcg64::new(31);
+    // n·p·p = 256·32·32 clears MIN_WORK_PER_THREAD so the per-node
+    // fan-out genuinely engages when the budget allows.
+    let (n, p) = (256usize, 32usize);
+    let prob = datasets::synthetic_regression(n, p, 8 * n, 0.2, 0.05, &mut rng);
+    let v = rng.normal_vec(n * p);
+    let run_with = |threads: usize| {
+        sddnewton::par::set_threads(threads);
+        let mut out = vec![0.0; n * p];
+        NativeBackend.primal_recover_all(&prob, &v, &mut out);
+        let z = rng.clone().normal_vec(n * p);
+        let mut hz = vec![0.0; n * p];
+        NativeBackend.hess_apply_all(&prob, &out, &z, &mut hz);
+        sddnewton::par::set_threads(0);
+        (out, hz)
+    };
+    let (y1, h1) = run_with(1);
+    let (y4, h4) = run_with(4);
+    assert_eq!(y1, y4);
+    assert_eq!(h1, h4);
+}
