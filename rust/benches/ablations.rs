@@ -101,14 +101,14 @@ fn main() {
         )
         .unwrap();
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 400 });
-        let mut stats = sddnewton::net::CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&grid);
+        let out = solver.solve(&b, 1, &mut comm);
         result_row(
             &format!("splitting/{name}"),
             format!(
                 "depth {} λ₂ {:.4} converged={} rel={:.1e} msgs={}",
                 solver.chain.depth, solver.chain.lambda2, out.converged, out.rel_residual,
-                stats.messages
+                comm.stats().messages
             ),
         );
     }

@@ -1,0 +1,90 @@
+//! Partitioned SDD-Newton: serial (bulk-synchronous) vs sharded worker
+//! runtime — wall-clock speedup plus the cross-worker message table (the
+//! MPI traffic a real deployment pays, by partitioning strategy).
+//!
+//! The partitioned run is bit-for-bit identical to the serial path (the
+//! bench asserts it every sample), so the table isolates pure runtime
+//! cost: channel latency + sharded compute vs one big sweep.
+//!
+//!     cargo bench --bench partitioned_newton
+//!     cargo bench --bench partitioned_newton -- --smoke    # CI smoke run
+//!     cargo bench --bench partitioned_newton -- --threads 4
+
+use sddnewton::algorithms::sdd_newton::{SddNewton, StepSize};
+use sddnewton::algorithms::solvers::sddm_for_graph;
+use sddnewton::algorithms::ConsensusAlgorithm;
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
+use sddnewton::coordinator::{run_partitioned_newton, Partition};
+use sddnewton::graph::generate;
+use sddnewton::net::CommGraph;
+use sddnewton::problems::{datasets, logistic::Reg};
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::Pcg64;
+
+fn main() {
+    let opts = cli_opts();
+    let smoke = is_smoke();
+    result_row("parallelism/threads", sddnewton::par::threads());
+
+    // Logistic locals: per-node primal recovery is an inner Newton loop,
+    // so the compute the shards divide actually dominates.
+    let (n, m_edges, p, m_total, iters) =
+        if smoke { (24, 60, 4, 480, 2) } else { (96, 240, 10, 7_680, 4) };
+    let mut rng = Pcg64::new(2718);
+    let g = generate::random_connected(n, m_edges, &mut rng);
+    let prob = datasets::mnist_like(n, p, m_total, 0, Reg::L2, 0.05, &mut rng);
+    let solver = sddm_for_graph(&g, 1e-4, &mut rng);
+    let backend = NativeBackend;
+    let step = StepSize::Fixed(1.0);
+
+    section(&format!(
+        "Partitioned SDD-Newton: n={n} nodes, m={m_edges} edges, p={p}, {iters} iterations"
+    ));
+
+    // Serial bulk-synchronous baseline.
+    let mut serial_thetas: Vec<f64> = Vec::new();
+    let mut serial_msgs = 0u64;
+    let s_serial = bench("newton/serial", &opts, || {
+        let mut alg = SddNewton::new(&prob, &backend, &solver, step);
+        let mut comm = CommGraph::new(&g);
+        for _ in 0..iters {
+            alg.step(&prob, &mut comm);
+        }
+        serial_thetas = alg.thetas().to_vec();
+        serial_msgs = comm.stats().messages;
+    });
+    result_row("newton/serial/modeled_messages", serial_msgs);
+    result_row("newton/serial/median_s", format!("{:.5}", s_serial.median));
+
+    // Sharded workers, by worker count × partitioning strategy.
+    let ks: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    section("worker table: partitioning | speedup | cut edges | cross-worker msgs");
+    for &k in ks {
+        for (pname, part) in [
+            ("contiguous", Partition::contiguous(n, k)),
+            ("round_robin", Partition::round_robin(n, k)),
+            ("bfs_blocks", Partition::bfs_blocks(&g, k)),
+        ] {
+            let mut last = None;
+            let s = bench(&format!("newton/partitioned/{pname}_k{k}"), &opts, || {
+                last = Some(run_partitioned_newton(&prob, &g, &part, &solver, step, iters));
+            });
+            let out = last.unwrap();
+            assert_eq!(
+                out.thetas, serial_thetas,
+                "{pname}/k{k}: partitioned run drifted from the serial path"
+            );
+            assert_eq!(out.comm.messages, serial_msgs, "modeled ledger drifted");
+            let speedup = s_serial.median.max(1e-12) / s.median.max(1e-12);
+            result_row(
+                &format!("newton/partitioned/{pname}_k{k}"),
+                format!(
+                    "{speedup:.2}x vs serial | {} cut edges | {} cross-worker msgs | {:.5}s median",
+                    part.cut_edges(&g),
+                    out.cross_messages,
+                    s.median
+                ),
+            );
+        }
+    }
+}

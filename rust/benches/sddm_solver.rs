@@ -9,7 +9,7 @@
 use sddnewton::algorithms::solvers::sddm_for_graph;
 use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
 use sddnewton::graph::{generate, laplacian_csr};
-use sddnewton::net::CommStats;
+use sddnewton::net::CommGraph;
 use sddnewton::util::Pcg64;
 
 fn main() {
@@ -32,10 +32,10 @@ fn main() {
         let b = l.matvec(&z);
         let mut msgs = 0u64;
         let s = bench(&format!("sddm/n{n}_m{m}"), &opts, || {
-            let mut stats = CommStats::default();
-            let out = solver.solve(&b, 1, &mut stats);
+            let mut comm = CommGraph::new(&g);
+            let out = solver.solve(&b, 1, &mut comm);
             assert!(out.converged);
-            msgs = stats.messages;
+            msgs = comm.stats().messages;
         });
         result_row(&format!("sddm/n{n}/depth"), solver.chain.depth);
         result_row(&format!("sddm/n{n}/lambda2"), format!("{:.4}", solver.chain.lambda2));
@@ -52,12 +52,12 @@ fn main() {
     let eps_list: &[f64] = if smoke { &[1e-2, 1e-6] } else { &[1e-1, 1e-2, 1e-4, 1e-6, 1e-8] };
     for &eps in eps_list {
         let solver = sddm_for_graph(&g, eps, &mut rng);
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged);
         result_row(
             &format!("sddm/eps{eps:.0e}"),
-            format!("{} messages, {} sweeps", stats.messages, out.sweeps),
+            format!("{} messages, {} sweeps", comm.stats().messages, out.sweeps),
         );
     }
 
@@ -72,16 +72,16 @@ fn main() {
         let solver = sddm_for_graph(&g, 1e-6, &mut rng);
         let z = rng.normal_vec(64);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
+        let mut comm = CommGraph::new(&g);
         let t = sddnewton::util::Timer::start();
-        let out = solver.solve(&b, 1, &mut stats);
+        let out = solver.solve(&b, 1, &mut comm);
         result_row(
             &format!("sddm/topology/{name}"),
             format!(
                 "depth {} λ₂ {:.4} → {} messages, {} sweeps, {:.1} ms (converged={})",
                 solver.chain.depth,
                 solver.chain.lambda2,
-                stats.messages,
+                comm.stats().messages,
                 out.sweeps,
                 t.millis(),
                 out.converged
@@ -90,11 +90,12 @@ fn main() {
     }
 
     section("Batched multi-RHS solves (n=100, m=250, eps=1e-6)");
-    let solver = sddm_for_graph(&g_random(), 1e-6, &mut rng);
+    let g_batch = g_random();
+    let solver = sddm_for_graph(&g_batch, 1e-6, &mut rng);
     let widths: &[usize] = if smoke { &[1, 8] } else { &[1, 8, 32, 80] };
     for &w in widths {
         let n = 100;
-        let l = laplacian_csr(&g_random());
+        let l = laplacian_csr(&g_batch);
         let mut bm = vec![0.0; n * w];
         for j in 0..w {
             let zc = rng.normal_vec(n);
@@ -103,16 +104,16 @@ fn main() {
                 bm[i * w + j] = col[i];
             }
         }
-        let mut stats = CommStats::default();
+        let mut msgs = 0u64;
         let s = bench(&format!("sddm/multirhs_w{w}"), &opts, || {
-            let mut st = CommStats::default();
-            let out = solver.solve(&bm, w, &mut st);
+            let mut comm = CommGraph::new(&g_batch);
+            let out = solver.solve(&bm, w, &mut comm);
             assert!(out.converged);
-            stats = st;
+            msgs = comm.stats().messages;
         });
         result_row(
             &format!("sddm/multirhs_w{w}"),
-            format!("{} messages, {:.5}s median", stats.messages, s.median),
+            format!("{} messages, {:.5}s median", msgs, s.median),
         );
     }
 
@@ -174,8 +175,8 @@ fn main() {
     for threads in [1usize, 4] {
         sddnewton::par::set_threads(threads);
         let s = bench(&format!("crude_solve/n{n}_w{wide_w}_t{threads}"), &opts, || {
-            let mut st = CommStats::default();
-            let _ = solver_chain.crude_solve(&bw, wide_w, &mut st);
+            let mut comm = CommGraph::new(&chain_g);
+            let _ = solver_chain.crude_solve(&bw, wide_w, &mut comm);
         });
         solve_medians.push((threads, s.median));
     }

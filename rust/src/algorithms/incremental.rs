@@ -12,7 +12,7 @@
 
 use super::solvers::LaplacianSolver;
 use super::ConsensusAlgorithm;
-use crate::net::CommGraph;
+use crate::net::{CommGraph, Exchange};
 use crate::problems::ConsensusProblem;
 use crate::runtime::LocalBackend;
 
@@ -118,7 +118,7 @@ impl ConsensusAlgorithm for IncrementalSddNewton<'_> {
                 b[i] += bc[i];
             }
         }
-        let d = self.solver.solve(&b, p, comm.stats_mut()).x;
+        let d = self.solver.solve(&b, p, comm).x;
 
         // (6) dual ascent.
         for i in 0..n * p {

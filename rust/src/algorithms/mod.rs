@@ -9,8 +9,10 @@
 //! | [`averaging`] | Distributed averaging [13] | primal 1st-order |
 //! | [`network_newton`] | Network Newton-K [9,10] | penalty 2nd-order |
 //!
-//! All algorithms interact with other nodes *only* through
-//! [`crate::net::CommGraph`], so reported message counts are exact.
+//! All algorithms interact with other nodes *only* through the
+//! [`crate::net::Exchange`] transports, so reported message counts are
+//! exact. SDD-Newton additionally runs sharded on the partitioned worker
+//! runtime (`coordinator::run_partitioned_newton`).
 
 pub mod solvers;
 pub mod sdd_newton;

@@ -14,10 +14,17 @@
 //! Plugging [`crate::algorithms::solvers::NeumannSolver`] in as the inner
 //! solver yields the paper's "Distributed Newton ADD" baseline; the SDDM
 //! solver yields SDD-Newton proper.
+//!
+//! The whole step runs against the [`Exchange`] trait
+//! ([`SddNewton::step_ex`]): on the bulk-synchronous
+//! [`CommGraph`] one instance owns every node; on the partitioned worker
+//! runtime (`coordinator::run_partitioned_newton`) each worker drives its
+//! own sharded instance over a channel transport — bit-for-bit
+//! identically.
 
 use super::solvers::LaplacianSolver;
 use super::ConsensusAlgorithm;
-use crate::net::CommGraph;
+use crate::net::{CommGraph, Exchange};
 use crate::problems::ConsensusProblem;
 use crate::runtime::LocalBackend;
 
@@ -55,50 +62,76 @@ pub enum FirstSolve {
     Centering,
 }
 
-/// The SDD-Newton algorithm state.
+/// The SDD-Newton algorithm state (one shard's view: all nodes on the
+/// bulk-synchronous driver, one worker's nodes on the partitioned
+/// runtime).
 pub struct SddNewton<'a> {
     backend: &'a dyn LocalBackend,
     solver: &'a dyn LaplacianSolver,
     step: StepSize,
     first_solve: FirstSolve,
     kernel_correction: bool,
-    /// Dual iterate, stacked n×p (node i holds λ_1(i)…λ_p(i)).
+    /// Global ids of the nodes this instance owns (ascending).
+    owned: Vec<usize>,
+    /// Whether the shard covers every node — enables the backend's
+    /// whole-problem batched entry points (PJRT artifacts are fixed-shape).
+    full: bool,
+    /// Dual iterate, stacked local_n×p (row r holds λ(owned[r])).
     lambda: Vec<f64>,
-    /// Current primal iterate y(λ), stacked n×p.
+    /// Current primal iterate y(λ), stacked local_n×p.
     y: Vec<f64>,
     p: usize,
     label: String,
 }
 
 impl<'a> SddNewton<'a> {
-    /// Initialize at λ = 0 (so `y₀` is each node's local optimum).
+    /// Initialize at λ = 0 (so `y₀` is each node's local optimum),
+    /// owning every node.
     pub fn new(
         problem: &ConsensusProblem,
         backend: &'a dyn LocalBackend,
         solver: &'a dyn LaplacianSolver,
         step: StepSize,
     ) -> SddNewton<'a> {
-        let (n, p) = (problem.n(), problem.p);
-        let lambda = vec![0.0; n * p];
-        let mut y = vec![0.0; n * p];
-        let v0 = vec![0.0; n * p];
-        backend.primal_recover_all(problem, &v0, &mut y);
-        let label = match solver.name() {
-            "neumann" => "Distributed ADD-Newton".to_string(),
-            "exact-cg" => "Distributed Newton (exact)".to_string(),
-            _ => "Distributed SDD-Newton".to_string(),
-        };
-        SddNewton {
+        Self::new_sharded(problem, backend, solver, step, (0..problem.n()).collect())
+    }
+
+    /// Initialize a shard-local instance owning the given global nodes
+    /// (ascending) — one per worker on the partitioned runtime.
+    pub fn new_sharded(
+        problem: &ConsensusProblem,
+        backend: &'a dyn LocalBackend,
+        solver: &'a dyn LaplacianSolver,
+        step: StepSize,
+        owned: Vec<usize>,
+    ) -> SddNewton<'a> {
+        let p = problem.p;
+        let full = owned.len() == problem.n();
+        let ln = owned.len();
+        let lambda = vec![0.0; ln * p];
+        let mut alg = SddNewton {
             backend,
             solver,
             step,
             first_solve: FirstSolve::Solver,
             kernel_correction: true,
+            owned,
+            full,
             lambda,
-            y,
+            y: vec![0.0; ln * p],
             p,
-            label,
-        }
+            label: String::new(),
+        };
+        alg.label = match solver.name() {
+            "neumann" => "Distributed ADD-Newton".to_string(),
+            "exact-cg" => "Distributed Newton (exact)".to_string(),
+            _ => "Distributed SDD-Newton".to_string(),
+        };
+        let v0 = vec![0.0; ln * p];
+        let mut y0 = std::mem::take(&mut alg.y);
+        alg.recover(problem, &v0, &mut y0);
+        alg.y = y0;
+        alg
     }
 
     /// Switch the Eq.-8 first-system strategy (ablation).
@@ -113,16 +146,109 @@ impl<'a> SddNewton<'a> {
         self
     }
 
-    /// Current dual iterate (stacked n×p).
+    /// Current dual iterate (stacked local_n×p).
     pub fn lambda(&self) -> &[f64] {
         &self.lambda
     }
 
-    /// Dual gradient norm ‖M y‖₂ at the current iterate (diagnostic; costs
-    /// one exchange round when called).
-    pub fn dual_grad_norm(&self, comm: &mut CommGraph) -> f64 {
-        let g = comm.laplacian_apply(&self.y, self.p);
-        comm.norm2_sq(&g, self.p).sqrt()
+    /// Global ids of the owned nodes.
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    /// Primal recovery over the owned nodes. On a full shard this is the
+    /// backend's whole-problem batched entry point (so PJRT artifacts keep
+    /// working); on a partial shard the node-list variant — both compute
+    /// the identical per-node oracles.
+    fn recover(&self, problem: &ConsensusProblem, v: &[f64], out: &mut [f64]) {
+        if self.full {
+            self.backend.primal_recover_all(problem, v, out);
+        } else {
+            self.backend.primal_recover_nodes(problem, &self.owned, v, out);
+        }
+    }
+
+    /// Hessian application over the owned nodes (same dispatch).
+    fn hess_apply(&self, problem: &ConsensusProblem, thetas: &[f64], z: &[f64], out: &mut [f64]) {
+        if self.full {
+            self.backend.hess_apply_all(problem, thetas, z, out);
+        } else {
+            self.backend.hess_apply_nodes(problem, &self.owned, thetas, z, out);
+        }
+    }
+
+    /// One SDD-Newton outer iteration against any transport.
+    pub fn step_ex(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
+        let p = self.p;
+        let ln = self.owned.len();
+        debug_assert_eq!(exch.local_n(), ln);
+
+        // (1) primal recovery at current λ: v = (I_p ⊗ L) λ.
+        let v = exch.laplacian_apply(&self.lambda, p);
+        let mut y = std::mem::take(&mut self.y);
+        self.recover(problem, &v, &mut y);
+        self.y = y;
+
+        // (2) dual gradient g = M y.
+        let g = exch.laplacian_apply(&self.y, p);
+
+        // (3) M z = g.
+        let z = match self.first_solve {
+            FirstSolve::Solver => self.solver.solve(&g, p, exch).x,
+            FirstSolve::Centering => {
+                let mut z = self.y.clone();
+                exch.center(&mut z, p);
+                z
+            }
+        };
+
+        // (4) b_i = ∇²f_i(y_i) z_i — local.
+        let mut b = vec![0.0; ln * p];
+        self.hess_apply(problem, &self.y, &z, &mut b);
+
+        // (4b) Kernel-consistency correction. `M z = g` pins `z` only up to
+        // a per-dimension constant `1 ⊗ c`; the second system `M d = ∇²f z`
+        // is consistent only for the choice with `Σ_i ∇²f_i z_i = 0`.
+        // Solve `(Σ_i ∇²f_i) c = −Σ_i b_i` — the sums are one p²+p
+        // all-reduce — and shift `b ← b + ∇²f (1 ⊗ c)`.
+        if self.kernel_correction {
+            let wk = p * p + p;
+            let mut hblocks = vec![0.0; ln * p * p];
+            self.backend.hess_nodes(problem, &self.owned, &self.y, &mut hblocks);
+            let mut locals = vec![0.0; ln * wk];
+            for li in 0..ln {
+                locals[li * wk..li * wk + p * p]
+                    .copy_from_slice(&hblocks[li * p * p..(li + 1) * p * p]);
+                locals[li * wk + p * p..(li + 1) * wk]
+                    .copy_from_slice(&b[li * p..(li + 1) * p]);
+            }
+            let tot = exch.allreduce_sum(&locals, wk);
+            let hsum = crate::linalg::Matrix::from_rows(p, p, tot[..p * p].to_vec());
+            let bsum = &tot[p * p..];
+            if let Ok(c) = crate::linalg::cholesky::spd_solve(&hsum, bsum) {
+                let tiled: Vec<f64> = (0..ln).flat_map(|_| c.iter().map(|v| -v)).collect();
+                let mut bc = vec![0.0; ln * p];
+                self.hess_apply(problem, &self.y, &tiled, &mut bc);
+                for i in 0..ln * p {
+                    b[i] += bc[i];
+                }
+            }
+        }
+
+        // (5) M d = b.
+        let d = self.solver.solve(&b, p, exch).x;
+
+        // (6) dual ascent λ ← λ + α d.
+        let alpha = self.step.value();
+        for i in 0..ln * p {
+            self.lambda[i] += alpha * d[i];
+        }
+
+        // Refresh the primal iterate for metric collection.
+        let v2 = exch.laplacian_apply(&self.lambda, p);
+        let mut y = std::mem::take(&mut self.y);
+        self.recover(problem, &v2, &mut y);
+        self.y = y;
     }
 }
 
@@ -132,67 +258,7 @@ impl ConsensusAlgorithm for SddNewton<'_> {
     }
 
     fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
-        let p = self.p;
-        let n = problem.n();
-        debug_assert_eq!(comm.n(), n);
-
-        // (1) primal recovery at current λ: v = (I_p ⊗ L) λ.
-        let v = comm.laplacian_apply(&self.lambda, p);
-        self.backend.primal_recover_all(problem, &v, &mut self.y);
-
-        // (2) dual gradient g = M y.
-        let g = comm.laplacian_apply(&self.y, p);
-
-        // (3) M z = g.
-        let z = match self.first_solve {
-            FirstSolve::Solver => self.solver.solve(&g, p, comm.stats_mut()).x,
-            FirstSolve::Centering => {
-                let mut z = self.y.clone();
-                comm.center(&mut z, p);
-                z
-            }
-        };
-
-        // (4) b_i = ∇²f_i(y_i) z_i — local.
-        let mut b = vec![0.0; n * p];
-        self.backend.hess_apply_all(problem, &self.y, &z, &mut b);
-
-        // (4b) Kernel-consistency correction. `M z = g` pins `z` only up to
-        // a per-dimension constant `1 ⊗ c`; the second system `M d = ∇²f z`
-        // is consistent only for the choice with `Σ_i ∇²f_i z_i = 0`.
-        // Solve `(Σ_i ∇²f_i) c = −Σ_i b_i` (one p²+p all-reduce) and shift
-        // `b ← b + ∇²f (1 ⊗ c)`.
-        if self.kernel_correction {
-            let hsum = self.backend.hess_sum(problem, &self.y);
-            let mut bsum = vec![0.0; p];
-            for i in 0..n {
-                for r in 0..p {
-                    bsum[r] += b[i * p + r];
-                }
-            }
-            comm.stats_mut().record_allreduce(n, p * p + p);
-            if let Ok(c) = crate::linalg::cholesky::spd_solve(&hsum, &bsum) {
-                let tiled: Vec<f64> = (0..n).flat_map(|_| c.iter().map(|v| -v)).collect();
-                let mut bc = vec![0.0; n * p];
-                self.backend.hess_apply_all(problem, &self.y, &tiled, &mut bc);
-                for i in 0..n * p {
-                    b[i] += bc[i];
-                }
-            }
-        }
-
-        // (5) M d = b.
-        let d = self.solver.solve(&b, p, comm.stats_mut()).x;
-
-        // (6) dual ascent λ ← λ + α d.
-        let alpha = self.step.value();
-        for i in 0..n * p {
-            self.lambda[i] += alpha * d[i];
-        }
-
-        // Refresh the primal iterate for metric collection.
-        let v2 = comm.laplacian_apply(&self.lambda, p);
-        self.backend.primal_recover_all(problem, &v2, &mut self.y);
+        self.step_ex(problem, comm);
     }
 
     fn thetas(&self) -> &[f64] {

@@ -4,25 +4,26 @@
 //! the inner solves of Eq. 8/9; the "Distributed Newton ADD" baseline [8]
 //! replaces it with an N-term Taylor/Neumann expansion of the Laplacian
 //! pseudo-inverse; CG (with kernel projection) provides an exact-direction
-//! oracle for ablations.
+//! oracle for ablations. All three run against the [`Exchange`] trait, so
+//! the same solver code executes on the bulk-synchronous simulation and on
+//! the partitioned worker runtime.
 
-use crate::linalg::cg::{cg_solve, CgOptions};
 use crate::linalg::Csr;
-use crate::net::{CommGraph, CommStats};
+use crate::net::Exchange;
 use crate::sddm::{SddmSolver, SolveOutcome};
 
 /// A distributed solver for Laplacian systems `L x_r = b_r`, batched over
-/// `w` right-hand sides (stacked row-major `n × w`).
+/// `w` right-hand sides (stacked shard-local `local_n × w` row-major).
 pub trait LaplacianSolver: Send + Sync {
-    /// Solve, recording communication into `stats`.
-    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome;
+    /// Solve, recording communication into the exchange's ledger.
+    fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome;
     /// Display name for traces.
     fn name(&self) -> &'static str;
 }
 
 impl LaplacianSolver for SddmSolver {
-    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
-        SddmSolver::solve(self, b, w, stats)
+    fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
+        SddmSolver::solve(self, b, w, exch)
     }
     fn name(&self) -> &'static str {
         "sddm"
@@ -37,7 +38,7 @@ impl LaplacianSolver for SddmSolver {
 pub struct NeumannSolver {
     /// Number of expansion terms beyond the diagonal (N).
     pub terms: usize,
-    /// Degree vector D (Laplacian diagonal).
+    /// Degree vector D (Laplacian diagonal), indexed by global node.
     pub degrees: Vec<f64>,
     /// Adjacency CSR (A).
     pub adjacency: Csr,
@@ -55,49 +56,34 @@ impl NeumannSolver {
             m_edges: g.m(),
         }
     }
-
-    fn center(&self, v: &mut [f64], w: usize, stats: &mut CommStats) {
-        let n = self.degrees.len();
-        for j in 0..w {
-            let mut s = 0.0;
-            for i in 0..n {
-                s += v[i * w + j];
-            }
-            let mean = s / n as f64;
-            for i in 0..n {
-                v[i * w + j] -= mean;
-            }
-        }
-        stats.record_allreduce(n, w);
-    }
 }
 
 impl LaplacianSolver for NeumannSolver {
-    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
-        let n = self.degrees.len();
-        assert_eq!(b.len(), n * w);
+    fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
+        let ln = exch.local_n();
+        assert_eq!(b.len(), ln * w);
+        let owned = exch.owned().to_vec();
         // term_0 = D^{-1} b;  x = Σ_k term_k;  term_{k+1} = D^{-1} A term_k.
-        let mut term = vec![0.0; n * w];
-        for i in 0..n {
+        let mut term = vec![0.0; ln * w];
+        for (r, &u) in owned.iter().enumerate() {
             for j in 0..w {
-                term[i * w + j] = b[i * w + j] / self.degrees[i];
+                term[r * w + j] = b[r * w + j] / self.degrees[u];
             }
         }
         let mut x = term.clone();
-        let mut tmp = vec![0.0; n * w];
+        let mut tmp = vec![0.0; ln * w];
         for _ in 0..self.terms {
-            self.adjacency.matvec_multi_into(&term, w, &mut tmp);
-            stats.record_edge_round(self.m_edges, w);
-            for i in 0..n {
+            exch.exchange_apply(&self.adjacency, 2 * self.m_edges as u64, &term, w, &mut tmp);
+            for (r, &u) in owned.iter().enumerate() {
                 for j in 0..w {
-                    term[i * w + j] = tmp[i * w + j] / self.degrees[i];
+                    term[r * w + j] = tmp[r * w + j] / self.degrees[u];
                 }
             }
-            for i in 0..n * w {
+            for i in 0..ln * w {
                 x[i] += term[i];
             }
         }
-        self.center(&mut x, w, stats);
+        exch.center(&mut x, w);
         // Residual for reporting (not used for control — N is fixed).
         SolveOutcome { x, sweeps: self.terms, rel_residual: f64::NAN, converged: true }
     }
@@ -106,9 +92,12 @@ impl LaplacianSolver for NeumannSolver {
     }
 }
 
-/// Exact-direction oracle: projected CG to machine precision. The
-/// communication model charges one exchange round per CG matvec and one
-/// all-reduce per inner product pair, matching a distributed CG.
+/// Exact-direction oracle: projected CG to machine precision, batched over
+/// the `w` right-hand sides in **lockstep** — every column advances each
+/// round (converged columns freeze), so the round count is the *maximum*
+/// per-column iteration count, which is what a distributed deployment
+/// pays. Per iteration: one exchange round of width `w` plus the
+/// projection/inner-product all-reduces.
 pub struct ExactCgSolver {
     pub laplacian: Csr,
     pub m_edges: usize,
@@ -126,34 +115,96 @@ impl ExactCgSolver {
     }
 }
 
+/// Per-column global inner products `Σ_i a[i,·] ⊙ b[i,·]` — one
+/// all-reduce of width `w`.
+fn col_dots(exch: &mut dyn Exchange, a: &[f64], b: &[f64], w: usize) -> Vec<f64> {
+    let locals: Vec<f64> = a.iter().zip(b).map(|(x, y)| x * y).collect();
+    exch.allreduce_sum(&locals, w)
+}
+
 impl LaplacianSolver for ExactCgSolver {
-    fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
-        let n = self.laplacian.rows;
-        let mut x = vec![0.0; n * w];
-        let mut worst = 0.0f64;
-        let mut total_iters = 0;
-        for j in 0..w {
-            let col: Vec<f64> = (0..n).map(|i| b[i * w + j]).collect();
-            let res = cg_solve(
-                &self.laplacian,
-                &col,
-                &CgOptions { tol: self.tol, max_iter: 20 * n, project_kernel: true },
-            );
-            for i in 0..n {
-                x[i * w + j] = res.x[i];
+    fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
+        let n = exch.n();
+        let ln = exch.local_n();
+        assert_eq!(b.len(), ln * w);
+        let len = ln * w;
+
+        // Kernel projection of the RHS (consensus Laplacian: kernel = 1).
+        let mut b0 = b.to_vec();
+        exch.center(&mut b0, w);
+        let bnorms: Vec<f64> = col_dots(exch, &b0, &b0, w)
+            .into_iter()
+            .map(|v| v.sqrt().max(1e-300))
+            .collect();
+
+        let mut x = vec![0.0; len];
+        let mut r = b0.clone();
+        let mut p = r.clone();
+        let mut ap = vec![0.0; len];
+        let mut rs = col_dots(exch, &r, &r, w);
+        let mut active: Vec<bool> =
+            (0..w).map(|j| rs[j].sqrt() / bnorms[j] > self.tol).collect();
+        let max_iter = 20 * n;
+        let mut iters = 0usize;
+
+        while iters < max_iter && active.iter().any(|&a| a) {
+            exch.exchange_apply(&self.laplacian, 2 * self.m_edges as u64, &p, w, &mut ap);
+            exch.center(&mut ap, w);
+            let pap = col_dots(exch, &p, &ap, w);
+            // Columns whose curvature vanished freeze (matches the serial
+            // CG's denominator guard); the rest take their own step.
+            let mut alpha = vec![0.0; w];
+            let mut stepping = vec![false; w];
+            for j in 0..w {
+                if !active[j] {
+                    continue;
+                }
+                if pap[j].abs() < 1e-300 {
+                    active[j] = false;
+                } else {
+                    alpha[j] = rs[j] / pap[j];
+                    stepping[j] = true;
+                }
             }
-            worst = worst.max(res.rel_residual);
-            total_iters += res.iters;
+            for row in 0..ln {
+                for j in 0..w {
+                    if stepping[j] {
+                        let idx = row * w + j;
+                        x[idx] += alpha[j] * p[idx];
+                        r[idx] -= alpha[j] * ap[idx];
+                    }
+                }
+            }
+            let rs_new = col_dots(exch, &r, &r, w);
+            let mut beta = vec![0.0; w];
+            for j in 0..w {
+                if stepping[j] {
+                    beta[j] = rs_new[j] / rs[j];
+                }
+            }
+            for row in 0..ln {
+                for j in 0..w {
+                    if stepping[j] {
+                        let idx = row * w + j;
+                        p[idx] = r[idx] + beta[j] * p[idx];
+                    }
+                }
+            }
+            for j in 0..w {
+                if stepping[j] {
+                    rs[j] = rs_new[j];
+                    if rs[j].sqrt() / bnorms[j] <= self.tol {
+                        active[j] = false;
+                    }
+                }
+            }
+            iters += 1;
         }
-        // Comm model: each CG iteration = 1 matvec round + 2 dot all-reduces,
-        // shared across the w batched systems (they iterate in lockstep in a
-        // distributed implementation; we charge the max column count).
-        let per_col = total_iters / w.max(1);
-        for _ in 0..per_col {
-            stats.record_edge_round(self.m_edges, w);
-            stats.record_allreduce(n, 2);
-        }
-        SolveOutcome { x, sweeps: per_col, rel_residual: worst, converged: worst <= self.tol }
+        exch.center(&mut x, w);
+        let worst = (0..w)
+            .map(|j| rs[j].sqrt() / bnorms[j])
+            .fold(0.0f64, f64::max);
+        SolveOutcome { x, sweeps: iters, rel_residual: worst, converged: worst <= self.tol }
     }
     fn name(&self) -> &'static str {
         "exact-cg"
@@ -172,17 +223,11 @@ pub fn sddm_for_graph(
     SddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
 }
 
-/// Helper shared by dual methods: the dual gradient norm ‖M y‖ computed
-/// distributedly (used for step-size diagnostics).
-pub fn dual_grad_norm(comm: &mut CommGraph, y: &[f64], p: usize) -> f64 {
-    let g = comm.laplacian_apply(y, p);
-    comm.norm2_sq(&g, p).sqrt()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generate;
+    use crate::net::CommGraph;
     use crate::util::Pcg64;
 
     #[test]
@@ -195,8 +240,8 @@ mod tests {
         let mut prev = f64::INFINITY;
         for terms in [0usize, 2, 6] {
             let s = NeumannSolver::from_graph(&g, terms);
-            let mut stats = CommStats::default();
-            let out = s.solve(&b, 1, &mut stats);
+            let mut comm = CommGraph::new(&g);
+            let out = s.solve(&b, 1, &mut comm);
             let mut r = l.matvec(&out.x);
             for i in 0..20 {
                 r[i] = b[i] - r[i];
@@ -218,13 +263,56 @@ mod tests {
         let z = rng.normal_vec(15);
         let b = l.matvec(&z);
         let s = ExactCgSolver::from_graph(&g, 1e-12);
-        let mut stats = CommStats::default();
-        let out = s.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = s.solve(&b, 1, &mut comm);
         let lx = l.matvec(&out.x);
         for i in 0..15 {
             assert!((lx[i] - b[i]).abs() < 1e-8);
         }
-        assert!(stats.messages > 0);
+        assert!(comm.stats().messages > 0);
+    }
+
+    /// Regression for the ragged multi-RHS accounting: batched CG runs
+    /// the columns in lockstep until the *slowest* converges, so the
+    /// charged rounds are the per-column maximum — not the truncating
+    /// integer mean the old model used (which undercounted whenever the
+    /// columns were ragged).
+    #[test]
+    fn exact_cg_charges_ragged_batches_at_the_max_column() {
+        let mut rng = Pcg64::new(94);
+        let g = generate::random_connected(25, 55, &mut rng);
+        let l = crate::graph::laplacian_csr(&g);
+        let z = rng.normal_vec(25);
+        let hard = l.matvec(&z); // needs many CG iterations
+        let easy = vec![0.0; 25]; // converges in zero iterations
+        let s = ExactCgSolver::from_graph(&g, 1e-10);
+
+        let mut c_hard = CommGraph::new(&g);
+        let solo_hard = s.solve(&hard, 1, &mut c_hard);
+        let mut c_easy = CommGraph::new(&g);
+        let solo_easy = s.solve(&easy, 1, &mut c_easy);
+        assert!(solo_hard.sweeps > 2, "hard column should iterate");
+        assert_eq!(solo_easy.sweeps, 0, "zero RHS converges immediately");
+
+        let mut b = vec![0.0; 25 * 2];
+        for i in 0..25 {
+            b[i * 2] = hard[i];
+            b[i * 2 + 1] = easy[i];
+        }
+        let mut c_batch = CommGraph::new(&g);
+        let batched = s.solve(&b, 2, &mut c_batch);
+        // Max, not mean: the old `total_iters / w` model would have
+        // charged roughly half these rounds.
+        assert_eq!(batched.sweeps, solo_hard.sweeps);
+        assert!(batched.sweeps > (solo_hard.sweeps + solo_easy.sweeps) / 2);
+        // Every lockstep iteration moves one full-width edge round.
+        let edge_msgs = 2 * g.m() as u64 * batched.sweeps as u64;
+        assert!(c_batch.stats().messages >= edge_msgs, "rounds must cover the max column");
+        // The frozen easy column must not perturb the hard column.
+        for i in 0..25 {
+            assert!((batched.x[i * 2] - solo_hard.x[i]).abs() < 1e-12);
+            assert_eq!(batched.x[i * 2 + 1], 0.0);
+        }
     }
 
     #[test]
@@ -246,13 +334,13 @@ mod tests {
             crate::linalg::vector::norm2(&r) / crate::linalg::vector::norm2(&b)
         };
         let sddm = sddm_for_graph(&g, 1e-6, &mut rng);
-        let mut s1 = CommStats::default();
-        let o1 = LaplacianSolver::solve(&sddm, &b, 1, &mut s1);
+        let mut c1 = CommGraph::new(&g);
+        let o1 = LaplacianSolver::solve(&sddm, &b, 1, &mut c1);
         assert!(rel(&o1.x) <= 1e-6, "sddm rel={}", rel(&o1.x));
         // ADD-style truncation (N = 2 as in [8]'s experiments).
         let nm = NeumannSolver::from_graph(&g, 2);
-        let mut s2 = CommStats::default();
-        let o2 = nm.solve(&b, 1, &mut s2);
+        let mut c2 = CommGraph::new(&g);
+        let o2 = nm.solve(&b, 1, &mut c2);
         assert!(rel(&o2.x) > 1e-2, "neumann unexpectedly accurate: {}", rel(&o2.x));
     }
 }

@@ -8,7 +8,38 @@
 pub mod scheduler;
 pub mod partition;
 pub mod worker;
+pub mod newton;
 
+pub use newton::{run_partitioned_newton, NewtonIter, PartitionedNewtonRun};
 pub use partition::Partition;
 pub use scheduler::{Campaign, JobOutcome};
 pub use worker::run_partitioned_gradient;
+
+/// Leader-side aggregation discipline shared by the partitioned runtimes:
+/// collect exactly `k` messages tagged with each iteration `0..iters` (in
+/// order), parking messages from workers that have raced ahead until
+/// their iteration comes up. This keying — never popping by count — is
+/// what keeps a fast worker's iteration `t+1` snapshot out of iteration
+/// `t`'s metrics.
+pub(crate) fn gather_by_iteration<T>(
+    rx: &std::sync::mpsc::Receiver<T>,
+    k: usize,
+    iters: usize,
+    tag_of: impl Fn(&T) -> usize,
+    mut per_iteration: impl FnMut(usize, Vec<T>),
+) {
+    let mut early: Vec<Vec<T>> = (0..iters).map(|_| Vec::new()).collect();
+    for it in 0..iters {
+        let mut got: Vec<T> = std::mem::take(&mut early[it]);
+        while got.len() < k {
+            let msg = rx.recv().expect("worker died");
+            let tag = tag_of(&msg);
+            if tag == it {
+                got.push(msg);
+            } else {
+                early[tag].push(msg);
+            }
+        }
+        per_iteration(it, got);
+    }
+}

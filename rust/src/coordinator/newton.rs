@@ -1,0 +1,241 @@
+//! Partitioned SDD-Newton: the full dual Newton pipeline (primal
+//! recovery, dual gradient, two inner Laplacian solves, kernel
+//! correction, dual ascent) executed on `k` worker OS threads that own
+//! node shards — the deployment shape of the paper's 8-worker MatlabMPI
+//! pool. Mirrors [`super::worker::run_partitioned_gradient`], but where
+//! the gradient runtime hand-rolls its exchange, this one drives the
+//! *unmodified* [`SddNewton::step_ex`] over a
+//! [`crate::net::partitioned::ShardExchange`] per worker: every chain
+//! X-application and all-reduce of the inner SDDM solver rides the
+//! channel transport, and the result is bit-for-bit identical to the
+//! bulk-synchronous `SddNewton` + `CommGraph` path (asserted in
+//! `tests/prop_parallel.rs`).
+
+use super::partition::Partition;
+use crate::algorithms::sdd_newton::{SddNewton, StepSize};
+use crate::algorithms::solvers::LaplacianSolver;
+use crate::algorithms::ConsensusAlgorithm;
+use crate::graph::{laplacian_csr, Graph};
+use crate::net::partitioned::{build_shard_plans, run_reducer, ReduceMsg, ShardExchange, WireMsg};
+use crate::net::{CommStats, Exchange};
+use crate::problems::ConsensusProblem;
+use crate::runtime::NativeBackend;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// Per-iteration metric row from a partitioned Newton run, aggregated by
+/// the leader keyed on the iteration tag (a fast worker's iteration `t+1`
+/// snapshot is buffered, never blended into iteration `t`).
+#[derive(Debug, Clone)]
+pub struct NewtonIter {
+    pub iter: usize,
+    /// Global objective Σ f_i(y_i) at the stacked primal iterate.
+    pub objective: f64,
+    /// Consensus error at the stacked primal iterate.
+    pub consensus_error: f64,
+    /// Cumulative real cross-worker channel payloads (the MPI traffic of
+    /// the deployment), summed over workers.
+    pub cross_messages: u64,
+    /// Modeled per-node communication — identical on every worker, and
+    /// identical to what the bulk-synchronous path records.
+    pub comm: CommStats,
+}
+
+/// Outcome of a partitioned Newton run.
+#[derive(Debug, Clone)]
+pub struct PartitionedNewtonRun {
+    pub records: Vec<NewtonIter>,
+    /// Final stacked primal iterate (global `n × p`).
+    pub thetas: Vec<f64>,
+    /// Final stacked dual iterate (global `n × p`).
+    pub lambda: Vec<f64>,
+    /// Final modeled communication counters.
+    pub comm: CommStats,
+    /// Final cumulative cross-worker channel payloads.
+    pub cross_messages: u64,
+}
+
+/// Metric message: (iteration, worker, owned y rows, cumulative cross
+/// messages, modeled stats snapshot).
+type MetricMsg = (usize, usize, Vec<f64>, u64, CommStats);
+
+/// Run SDD-Newton on `k` worker threads owning the partition's shards.
+///
+/// Each worker constructs a sharded [`SddNewton`] over a
+/// [`NativeBackend`] and steps it against its [`ShardExchange`]; the
+/// inner `solver` (SDDM chain, Neumann, or lockstep CG) is shared
+/// read-only across workers. The leader aggregates per-iteration metrics
+/// keyed by iteration.
+pub fn run_partitioned_newton(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    solver: &dyn LaplacianSolver,
+    step: StepSize,
+    iters: usize,
+) -> PartitionedNewtonRun {
+    let n = g.n;
+    let p = problem.p;
+    let k = part.k;
+    assert_eq!(problem.n(), n, "problem/graph size mismatch");
+    let lap = laplacian_csr(g);
+    let plans = build_shard_plans(g, part);
+    let owned_lists: Vec<Vec<usize>> = plans.iter().map(|pl| pl.owned.clone()).collect();
+
+    // Worker↔worker boundary channels.
+    let mut wire_tx: Vec<Sender<WireMsg>> = Vec::with_capacity(k);
+    let mut wire_rx: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<WireMsg>();
+        wire_tx.push(tx);
+        wire_rx.push(Some(rx));
+    }
+    // All-reduce channels through the reducer.
+    let (red_tx, red_rx) = channel::<ReduceMsg>();
+    let mut red_out_tx: Vec<Sender<Vec<f64>>> = Vec::with_capacity(k);
+    let mut red_out_rx: Vec<Option<Receiver<Vec<f64>>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<Vec<f64>>();
+        red_out_tx.push(tx);
+        red_out_rx.push(Some(rx));
+    }
+    // Worker→leader metrics.
+    let (met_tx, met_rx) = channel::<MetricMsg>();
+
+    let final_thetas = Mutex::new(vec![0.0; n * p]);
+    let final_lambda = Mutex::new(vec![0.0; n * p]);
+    let mut records = Vec::with_capacity(iters);
+
+    std::thread::scope(|scope| {
+        {
+            let owned_of = owned_lists.clone();
+            let txs = red_out_tx.clone();
+            scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
+        }
+        for (wid, plan) in plans.into_iter().enumerate() {
+            let peer_txs: Vec<Sender<WireMsg>> =
+                plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
+            let inbox = wire_rx[wid].take().unwrap();
+            let from_red = red_out_rx[wid].take().unwrap();
+            let red = red_tx.clone();
+            let met = met_tx.clone();
+            let lap = &lap;
+            let (final_thetas, final_lambda) = (&final_thetas, &final_lambda);
+            scope.spawn(move || {
+                let mut exch =
+                    ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
+                let backend = NativeBackend;
+                let mut alg = SddNewton::new_sharded(
+                    problem,
+                    &backend,
+                    solver,
+                    step,
+                    exch.owned().to_vec(),
+                );
+                for it in 0..iters {
+                    alg.step_ex(problem, &mut exch);
+                    met.send((it, wid, alg.thetas().to_vec(), exch.cross_messages(), *exch.stats()))
+                        .expect("leader died");
+                }
+                let mut ft = final_thetas.lock().unwrap();
+                let mut fl = final_lambda.lock().unwrap();
+                for (li, &u) in alg.owned().iter().enumerate() {
+                    ft[u * p..(u + 1) * p].copy_from_slice(&alg.thetas()[li * p..(li + 1) * p]);
+                    fl[u * p..(u + 1) * p].copy_from_slice(&alg.lambda()[li * p..(li + 1) * p]);
+                }
+            });
+        }
+        drop(red_tx);
+        drop(red_out_tx);
+        drop(met_tx);
+
+        // Leader: aggregate metrics strictly by iteration tag (see
+        // `gather_by_iteration`).
+        let mut stacked = vec![0.0; n * p];
+        super::gather_by_iteration(&met_rx, k, iters, |m: &MetricMsg| m.0, |it, got| {
+            let mut cross_total = 0u64;
+            let mut comm = CommStats::default();
+            for (_, wid, snapshot, cross, stats) in got {
+                for (li, &u) in owned_lists[wid].iter().enumerate() {
+                    stacked[u * p..(u + 1) * p]
+                        .copy_from_slice(&snapshot[li * p..(li + 1) * p]);
+                }
+                cross_total += cross;
+                // Every worker tallies the identical modeled ledger.
+                debug_assert!(comm == CommStats::default() || comm == stats);
+                comm = stats;
+            }
+            records.push(NewtonIter {
+                iter: it + 1,
+                objective: problem.objective(&stacked),
+                consensus_error: problem.consensus_error(&stacked),
+                cross_messages: cross_total,
+                comm,
+            });
+        });
+    });
+
+    let comm = records.last().map(|r| r.comm).unwrap_or_default();
+    let cross_messages = records.last().map(|r| r.cross_messages).unwrap_or(0);
+    PartitionedNewtonRun {
+        records,
+        thetas: final_thetas.into_inner().unwrap(),
+        lambda: final_lambda.into_inner().unwrap(),
+        comm,
+        cross_messages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::solvers::sddm_for_graph;
+    use crate::algorithms::{run, RunOptions};
+    use crate::graph::generate;
+    use crate::net::CommGraph;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn partitioned_newton_smoke_matches_bulk() {
+        let mut rng = Pcg64::new(701);
+        let g = generate::random_connected(10, 22, &mut rng);
+        let prob = datasets::synthetic_regression(10, 3, 150, 0.2, 0.05, &mut rng);
+        let solver = sddm_for_graph(&g, 1e-5, &mut rng);
+        let backend = crate::runtime::NativeBackend;
+        let iters = 4;
+
+        let mut alg = SddNewton::new(&prob, &backend, &solver, StepSize::Fixed(1.0));
+        let mut comm = CommGraph::new(&g);
+        let trace = run(
+            &mut alg,
+            &prob,
+            &mut comm,
+            &RunOptions { max_iters: iters, ..Default::default() },
+        );
+
+        let part = Partition::contiguous(10, 3);
+        let out =
+            run_partitioned_newton(&prob, &g, &part, &solver, StepSize::Fixed(1.0), iters);
+        assert_eq!(out.records.len(), iters);
+        assert_eq!(out.thetas, trace.final_thetas, "partitioned iterate drifted");
+        assert_eq!(out.lambda, alg.lambda(), "partitioned dual drifted");
+        assert_eq!(out.comm, *comm.stats(), "modeled comm drifted");
+        for (r, ref_r) in out.records.iter().zip(&trace.records[1..]) {
+            assert_eq!(r.objective, ref_r.objective, "iter {} metrics drifted", r.iter);
+        }
+        assert!(out.cross_messages > 0, "3 shards on a connected graph must talk");
+    }
+
+    #[test]
+    fn single_worker_is_the_bulk_path_with_zero_traffic() {
+        let mut rng = Pcg64::new(702);
+        let g = generate::random_connected(8, 16, &mut rng);
+        let prob = datasets::synthetic_regression(8, 3, 120, 0.2, 0.05, &mut rng);
+        let solver = sddm_for_graph(&g, 1e-4, &mut rng);
+        let part = Partition::contiguous(8, 1);
+        let out = run_partitioned_newton(&prob, &g, &part, &solver, StepSize::Fixed(1.0), 3);
+        assert_eq!(out.cross_messages, 0);
+        assert!(out.records[2].objective.is_finite());
+    }
+}

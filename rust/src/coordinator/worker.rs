@@ -51,7 +51,11 @@ pub fn run_partitioned_gradient(
         to_worker_tx.push(tx);
         to_worker_rx.push(Some(rx));
     }
-    let (leader_tx, leader_rx) = channel::<(usize, Vec<(usize, Vec<f64>)>, u64)>();
+    // Leader metrics carry the iteration tag: the leader aggregates keyed
+    // on it, so a fast worker's iteration t+1 snapshot can never be
+    // blended into iteration t's objective/consensus metrics.
+    type LeaderMsg = (usize, Vec<(usize, Vec<f64>)>, u64); // (iter, [(node, theta)], cross)
+    let (leader_tx, leader_rx) = channel::<LeaderMsg>();
 
     // Which peers each worker must hear from, and which boundary nodes it
     // must send where — precomputed from the cut edges.
@@ -172,10 +176,11 @@ pub fn run_partitioned_gradient(
                         next.insert(u, mixed);
                     }
                     theta = next;
-                    // 4. Report owned states to the leader (metrics only).
+                    // 4. Report owned states to the leader (metrics only),
+                    //    tagged with the iteration they belong to.
                     let snapshot: Vec<(usize, Vec<f64>)> =
                         my_nodes.iter().map(|&u| (u, theta[&u].clone())).collect();
-                    leader.send((w, snapshot, cross_msgs)).expect("leader died");
+                    leader.send((it, snapshot, cross_msgs)).expect("leader died");
                 }
                 // Final state.
                 let mut ft = final_thetas.lock().unwrap();
@@ -186,12 +191,15 @@ pub fn run_partitioned_gradient(
         }
         drop(leader_tx);
 
-        // Leader: per iteration, gather k snapshots and compute metrics.
+        // Leader: per iteration, gather the k snapshots *tagged with that
+        // iteration* and compute metrics (see `gather_by_iteration` —
+        // snapshots from workers that have raced ahead are buffered for
+        // their own iteration instead of being blended into the current
+        // one).
         let mut stacked = vec![0.0; n * p];
-        for it in 0..iters {
+        super::gather_by_iteration(&leader_rx, k, iters, |m: &LeaderMsg| m.0, |it, got| {
             let mut cross_total = 0u64;
-            for _ in 0..k {
-                let (_, snapshot, cross) = leader_rx.recv().expect("worker died");
+            for (_, snapshot, cross) in got {
                 cross_total += cross;
                 for (u, t) in snapshot {
                     stacked[u * p..(u + 1) * p].copy_from_slice(&t);
@@ -203,7 +211,7 @@ pub fn run_partitioned_gradient(
                 consensus_error: problem.consensus_error(&stacked),
                 cross_messages: cross_total,
             });
-        }
+        });
     });
 
     (records.into_inner().unwrap(), final_thetas.into_inner().unwrap())
@@ -271,5 +279,55 @@ mod tests {
         let part = Partition::contiguous(8, 1);
         let (records, _) = run_partitioned_gradient(&prob, &g, &part, 1e-4, 5);
         assert_eq!(records.last().unwrap().cross_messages, 0);
+    }
+
+    /// Regression for the leader metrics race: worker 0 owns an isolated
+    /// component with a trivial local problem, so it has no peers to wait
+    /// for and blasts all its iteration snapshots at the leader
+    /// immediately, while worker 1 grinds through real per-node work. A
+    /// leader that pops k snapshots per iteration *by count* blends worker
+    /// 0's iteration t+1 (even t+14) state into iteration t's metrics;
+    /// keyed on the iteration tag, every per-iteration objective must
+    /// match the bulk-synchronous reference exactly.
+    #[test]
+    fn fast_worker_cannot_skew_leader_metrics() {
+        let mut rng = Pcg64::new(504);
+        // Component A: the single node 0 (isolated). Component B: a dense
+        // clique over nodes 1..=8 with heavy local objectives.
+        let n = 9;
+        let mut edges = Vec::new();
+        for u in 1..n {
+            for v in (u + 1)..n {
+                edges.push((u, v));
+            }
+        }
+        let g = Graph::from_edges(n, edges);
+        let prob = datasets::synthetic_regression(n, 6, 1800, 0.2, 0.05, &mut rng);
+        let alpha = 1e-4;
+        let iters = 15;
+
+        // Bulk-synchronous per-iteration reference.
+        let mut reference = DistGradient::new(&prob, &g, GradSchedule::Constant(alpha));
+        let mut comm = CommGraph::new(&g);
+        let mut ref_objectives = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            reference.step(&prob, &mut comm);
+            ref_objectives.push(prob.objective(reference.thetas()));
+        }
+
+        // Worker 0 = {node 0} (free to race), worker 1 = the clique.
+        let assignment: Vec<usize> = (0..n).map(|u| usize::from(u != 0)).collect();
+        let part = Partition { assignment, k: 2 };
+        let (records, _) = run_partitioned_gradient(&prob, &g, &part, alpha, iters);
+        assert_eq!(records.len(), iters);
+        for (rec, expect) in records.iter().zip(&ref_objectives) {
+            let scale = expect.abs().max(1.0);
+            assert!(
+                (rec.objective - expect).abs() <= 1e-12 * scale,
+                "iter {}: leader blended a racing snapshot ({} vs {expect})",
+                rec.iter,
+                rec.objective
+            );
+        }
     }
 }

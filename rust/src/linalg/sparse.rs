@@ -99,18 +99,27 @@ impl Csr {
         assert!(w > 0, "payload width must be positive");
         crate::par::par_chunks_mut(y, w, threads, |row0, yblock| {
             for (k, yrow) in yblock.chunks_mut(w).enumerate() {
-                let i = row0 + k;
-                yrow.fill(0.0);
-                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
-                for kk in s..e {
-                    let v = self.values[kk];
-                    let xrow = &x[self.indices[kk] * w..self.indices[kk] * w + w];
-                    for j in 0..w {
-                        yrow[j] += v * xrow[j];
-                    }
-                }
+                self.row_matvec_multi(row0 + k, x, w, yrow);
             }
         });
+    }
+
+    /// One output row of the multi-RHS matvec: `yrow = (A X)[r, ·]` where
+    /// `X` is row-major `cols × w`. Shared by the full block sweep above
+    /// and the partitioned per-owned-row path (`net::partitioned`) so both
+    /// execute the identical scalar operations in the identical order —
+    /// the bit-for-bit contract between the two transports rests on this.
+    #[inline]
+    pub fn row_matvec_multi(&self, r: usize, x: &[f64], w: usize, yrow: &mut [f64]) {
+        yrow.fill(0.0);
+        let (s, e) = (self.indptr[r], self.indptr[r + 1]);
+        for kk in s..e {
+            let v = self.values[kk];
+            let xrow = &x[self.indices[kk] * w..self.indices[kk] * w + w];
+            for j in 0..w {
+                yrow[j] += v * xrow[j];
+            }
+        }
     }
 
     /// Dense conversion (tests / small problems only).

@@ -12,7 +12,6 @@
 use sddnewton::config::{AlgoKind, ExperimentConfig, Json};
 use sddnewton::coordinator::Campaign;
 use sddnewton::harness::{self, report};
-use sddnewton::net::CommStats;
 use sddnewton::util::Pcg64;
 
 fn main() {
@@ -264,15 +263,16 @@ fn cmd_solve(args: &[String]) -> i32 {
     );
     let x_true = rng.normal_vec(n);
     let b = l.matvec(&x_true);
-    let mut stats = CommStats::default();
+    let mut comm = sddnewton::net::CommGraph::new(&g);
     let t = sddnewton::util::Timer::start();
-    let out = solver.solve(&b, 1, &mut stats);
+    let out = solver.solve(&b, 1, &mut comm);
     println!(
         "solved to rel residual {:.2e} in {} Richardson sweeps, {:.2} ms",
         out.rel_residual,
         out.sweeps,
         t.millis()
     );
+    let stats = comm.stats();
     println!(
         "communication: {} messages, {} floats, {} rounds, {} all-reduces",
         stats.messages, stats.floats, stats.rounds, stats.allreduces

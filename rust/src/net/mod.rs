@@ -2,35 +2,144 @@
 //!
 //! The paper runs on MatlabMPI over a Matlab parallel pool; the quantity
 //! it reports (Fig. 2(c)) is *local communication exchange* — messages
-//! between neighboring processors. We reproduce that with a synchronous,
-//! round-based model:
+//! between neighboring processors. Every algorithm in this crate talks to
+//! other nodes exclusively through the [`Exchange`] trait, which offers
+//! exactly the primitives the paper's runtime has (neighbor exchange,
+//! tree all-reduce) and meters each one:
 //!
-//! - [`CommGraph`] is the only window algorithms get onto other nodes'
-//!   state: neighbor exchange and tree all-reduce primitives, each of
-//!   which increments exact message/float counters. Algorithm code
-//!   physically cannot read non-neighbor state except through these
-//!   primitives, which keeps the implementations honestly distributed
-//!   while running fast on one core.
-//! - [`threaded`] runs the same node programs on real OS threads with
-//!   channels (an MPI stand-in), used by the `end_to_end` example to
-//!   demonstrate true parallel execution.
+//! - [`CommGraph`] is the bulk-synchronous transport: one process owns
+//!   every node and each primitive is a metered in-memory sweep. Algorithm
+//!   code physically cannot read non-neighbor state except through the
+//!   trait, which keeps the implementations honestly distributed while
+//!   running fast on one core.
+//! - [`partitioned::ShardExchange`] is the partitioned transport: graph
+//!   nodes are divided among worker OS threads (as the paper divides 100
+//!   nodes over 8 pool workers) and boundary payloads ride mpsc channels,
+//!   tagged with round numbers and reorder-buffered. It produces
+//!   bit-for-bit the same iterates and the same modeled counters as
+//!   [`CommGraph`] (see `tests/prop_parallel.rs`).
+//! - [`threaded`] runs one thread per *node* (rather than per worker),
+//!   used by the `end_to_end` example to demonstrate fully local node
+//!   programs.
 
+pub mod partitioned;
 pub mod stats;
 pub mod threaded;
 
+use crate::graph::laplacian::laplacian_csr;
 use crate::graph::Graph;
+use crate::linalg::Csr;
 pub use stats::CommStats;
 
-/// Synchronous neighbor-communication view of a graph with accounting.
+/// The communication window algorithms get onto the rest of the network.
+///
+/// An `Exchange` handle *owns* a set of graph nodes (all of them for the
+/// bulk-synchronous [`CommGraph`], one shard for
+/// [`partitioned::ShardExchange`]). Stacked buffers passed to the trait
+/// are **shard-local**: row `r` holds the `w` floats of global node
+/// `owned()[r]`. Both transports execute the same scalar operations in
+/// the same order, so a program written against this trait produces
+/// bit-for-bit identical iterates on either.
+///
+/// The synchronous (BSP) contract: every handle of a run must issue the
+/// same sequence of collective calls. Convergence decisions must be made
+/// from globally-reduced values only — every primitive here returns
+/// values that are identical on all workers.
+pub trait Exchange {
+    /// Global node count.
+    fn n(&self) -> usize;
+
+    /// Global ids of the nodes this handle owns, ascending. Local stacked
+    /// buffers hold rows in this order.
+    fn owned(&self) -> &[usize];
+
+    /// Neighbor exchange: write the owned rows of `a · x̂` into `out`,
+    /// where `x̂` is the global `n × w` stack assembled from every
+    /// handle's local `x`. The operator `a` is a global `n × n` CSR whose
+    /// support must stay within the graph neighborhoods (plus diagonal);
+    /// the round is charged as `directed_messages` messages of `w` floats.
+    fn exchange_apply(
+        &mut self,
+        a: &Csr,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    );
+
+    /// Laplacian application `y = (I_w ⊗ L) x` over the transport's graph
+    /// — one neighbor-exchange round of `2m` messages.
+    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64>;
+
+    /// Tree all-reduce (sum): per-column global sums of the `local_n × w`
+    /// locals. Every handle returns the same `w` floats; the reduction is
+    /// performed in global node order so the result is independent of the
+    /// partitioning. Cost: `2(n−1)` messages of `w` floats, 2 rounds.
+    fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64>;
+
+    /// Communication counters so far (the modeled system-wide cost; on the
+    /// partitioned transport every worker tallies the identical ledger).
+    fn stats(&self) -> &CommStats;
+
+    /// Mutable counters — lets sub-solvers record custom exchanges into
+    /// the same ledger.
+    fn stats_mut(&mut self) -> &mut CommStats;
+
+    /// Number of owned nodes.
+    fn local_n(&self) -> usize {
+        self.owned().len()
+    }
+
+    /// Distributed mean-centering: subtract the global per-column mean
+    /// from each owned row. One all-reduce.
+    fn center(&mut self, x: &mut [f64], w: usize) {
+        let total = self.allreduce_sum(x, w);
+        let n = self.n() as f64;
+        for row in x.chunks_mut(w) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v -= total[j] / n;
+            }
+        }
+    }
+
+    /// Distributed squared 2-norm of a stacked per-node vector. One
+    /// all-reduce of width 1.
+    fn norm2_sq(&mut self, x: &[f64], w: usize) -> f64 {
+        let locals: Vec<f64> = x
+            .chunks(w)
+            .map(|row| row.iter().map(|v| v * v).sum())
+            .collect();
+        self.allreduce_sum(&locals, 1)[0]
+    }
+
+    /// Dual gradient norm ‖M y‖₂ at a stacked primal iterate `y` — the
+    /// step-size diagnostic shared by the dual Newton methods. Costs one
+    /// exchange round plus one all-reduce.
+    fn dual_grad_norm(&mut self, y: &[f64], p: usize) -> f64 {
+        let g = self.laplacian_apply(y, p);
+        self.norm2_sq(&g, p).sqrt()
+    }
+}
+
+/// Bulk-synchronous transport: a single process owns every node of the
+/// graph and each primitive is an accounted in-memory sweep.
 pub struct CommGraph<'g> {
     g: &'g Graph,
     stats: CommStats,
+    owned: Vec<usize>,
+    /// Graph Laplacian, built lazily for `laplacian_apply`.
+    lap: Option<Csr>,
 }
 
 impl<'g> CommGraph<'g> {
     /// Wrap a graph.
     pub fn new(g: &'g Graph) -> Self {
-        CommGraph { g, stats: CommStats::default() }
+        CommGraph {
+            g,
+            stats: CommStats::default(),
+            owned: (0..g.n).collect(),
+            lap: None,
+        }
     }
 
     /// The underlying topology.
@@ -61,25 +170,17 @@ impl<'g> CommGraph<'g> {
 
     /// One synchronous exchange round: every node sends its `w`-float
     /// payload to every neighbor. Returns, for each node, the *sum* of its
-    /// neighbors' payloads (the primitive underlying Laplacian products,
-    /// Jacobi sweeps and diffusion averaging).
+    /// neighbors' payloads (the primitive underlying Jacobi sweeps and
+    /// diffusion averaging).
     ///
     /// `x` is row-major `n × w`. Cost: `2m` messages of `w` floats.
     pub fn neighbor_sum(&mut self, x: &[f64], w: usize) -> Vec<f64> {
-        let n = self.g.n;
-        assert_eq!(x.len(), n * w, "payload shape mismatch");
-        let mut out = vec![0.0; n * w];
-        for &(u, v) in &self.g.edges {
-            for j in 0..w {
-                out[u * w + j] += x[v * w + j];
-                out[v * w + j] += x[u * w + j];
-            }
-        }
-        self.stats.record_edge_round(self.g.m(), w);
+        let mut out = vec![0.0; x.len()];
+        self.neighbor_sum_into(x, w, &mut out);
         out
     }
 
-    /// In-place variant of [`neighbor_sum`] writing into `out`.
+    /// In-place variant of [`neighbor_sum`](Self::neighbor_sum) writing into `out`.
     pub fn neighbor_sum_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
         let n = self.g.n;
         assert_eq!(x.len(), n * w);
@@ -92,20 +193,6 @@ impl<'g> CommGraph<'g> {
             }
         }
         self.stats.record_edge_round(self.g.m(), w);
-    }
-
-    /// Laplacian application `y = (I_w ⊗ L) x` as one exchange round:
-    /// `y_i = d(i)·x_i − Σ_{j∈N(i)} x_j`. Cost: `2m` messages of `w` floats.
-    pub fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
-        let n = self.g.n;
-        let mut y = self.neighbor_sum(x, w);
-        for i in 0..n {
-            let d = self.g.degree(i) as f64;
-            for j in 0..w {
-                y[i * w + j] = d * x[i * w + j] - y[i * w + j];
-            }
-        }
-        y
     }
 
     /// Per-neighbor gather: for each node, the list of `(neighbor, payload)`
@@ -125,11 +212,42 @@ impl<'g> CommGraph<'g> {
         self.stats.record_edge_round(self.g.m(), w);
         out
     }
+}
 
-    /// Tree all-reduce (sum) of per-node scalars: every node ends with the
-    /// global sum. Cost: `2(n−1)` messages of `w` floats (up + down a
-    /// spanning tree), 2 rounds.
-    pub fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+impl Exchange for CommGraph<'_> {
+    fn n(&self) -> usize {
+        self.g.n
+    }
+
+    fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    fn exchange_apply(
+        &mut self,
+        a: &Csr,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
+        a.matvec_multi_into(x, w, out);
+        self.stats.record_exchange(directed_messages, w);
+    }
+
+    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
+        if self.lap.is_none() {
+            self.lap = Some(laplacian_csr(self.g));
+        }
+        let mut y = vec![0.0; x.len()];
+        self.lap.as_ref().unwrap().matvec_multi_into(x, w, &mut y);
+        self.stats.record_edge_round(self.g.m(), w);
+        y
+    }
+
+    fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
         let n = self.g.n;
         assert_eq!(locals.len(), n * w);
         let mut total = vec![0.0; w];
@@ -142,25 +260,12 @@ impl<'g> CommGraph<'g> {
         total
     }
 
-    /// Distributed mean-centering: subtract the global per-column mean from
-    /// each node's `w`-float payload. One all-reduce.
-    pub fn center(&mut self, x: &mut [f64], w: usize) {
-        let n = self.g.n;
-        let total = self.allreduce_sum(x, w);
-        for i in 0..n {
-            for j in 0..w {
-                x[i * w + j] -= total[j] / n as f64;
-            }
-        }
+    fn stats(&self) -> &CommStats {
+        &self.stats
     }
 
-    /// Distributed squared 2-norm of a stacked per-node vector.
-    pub fn norm2_sq(&mut self, x: &[f64], w: usize) -> f64 {
-        let n = self.g.n;
-        let locals: Vec<f64> = (0..n)
-            .map(|i| x[i * w..(i + 1) * w].iter().map(|v| v * v).sum())
-            .collect();
-        self.allreduce_sum(&locals, 1)[0]
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
     }
 }
 
@@ -207,6 +312,21 @@ mod tests {
     }
 
     #[test]
+    fn exchange_apply_charges_custom_message_count() {
+        let mut rng = Pcg64::new(12);
+        let g = generate::random_connected(9, 16, &mut rng);
+        let l = laplacian_csr(&g);
+        let mut comm = CommGraph::new(&g);
+        let x = rng.normal_vec(9);
+        let mut y = vec![0.0; 9];
+        comm.exchange_apply(&l, 5, &x, 1, &mut y);
+        assert_eq!(comm.stats().messages, 5);
+        assert_eq!(comm.stats().rounds, 1);
+        let direct = l.matvec(&x);
+        assert_eq!(y, direct);
+    }
+
+    #[test]
     fn allreduce_and_center() {
         let g = generate::complete(5);
         let mut comm = CommGraph::new(&g);
@@ -250,5 +370,14 @@ mod tests {
         let n2 = comm.norm2_sq(&x, 2);
         let direct: f64 = x.iter().map(|v| v * v).sum();
         assert!((n2 - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bulk_handle_owns_every_node() {
+        let g = generate::cycle(7);
+        let comm = CommGraph::new(&g);
+        assert_eq!(Exchange::n(&comm), 7);
+        assert_eq!(comm.local_n(), 7);
+        assert_eq!(comm.owned(), &[0, 1, 2, 3, 4, 5, 6]);
     }
 }

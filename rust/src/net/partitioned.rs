@@ -1,0 +1,491 @@
+//! Partitioned channel transport: the [`Exchange`](super::Exchange)
+//! implementation that runs node shards on worker OS threads.
+//!
+//! This is the deployment shape of the paper (100 graph nodes divided
+//! over 8 Matlab pool workers, boundary values on MatlabMPI): a
+//! [`crate::coordinator::Partition`] assigns every graph node to one of
+//! `k` workers; intra-worker edges are local memory, cross-worker edges
+//! ride mpsc channels. Three pieces:
+//!
+//! - [`ShardPlan`] — the static halo plan per worker: which owned
+//!   (boundary) nodes must be shipped to which peer each exchange round,
+//!   and which remote nodes will arrive from whom. Sender and receiver
+//!   derive the plan from the same graph, so payloads need no per-node
+//!   framing — only a round tag.
+//! - [`ShardExchange`] — the per-worker handle. `exchange_apply` ships
+//!   boundary rows (tagged with the round number and reorder-buffered on
+//!   receive, so a fast peer cannot smuggle round `t+1` payloads into
+//!   round `t`), assembles a mirror of the needed global columns, and
+//!   computes each owned row with [`crate::linalg::Csr::row_matvec_multi`]
+//!   — the *same* row kernel the bulk transport uses, which is what makes
+//!   the two transports bit-for-bit identical.
+//! - [`run_reducer`] — the tree all-reduce stand-in: contributions are
+//!   keyed by a sequence number (never popped by count, so a fast worker's
+//!   reduce `s+1` cannot blend into `s`), assembled into a dense global
+//!   stack and summed in **global node order** — the identical float
+//!   additions the bulk transport performs.
+//!
+//! Modeled [`CommStats`] are tallied identically on every worker (each
+//! worker observes the same system-wide rounds); real channel traffic is
+//! tracked separately in [`ShardExchange::cross_messages`], which is what
+//! the partitioned benches report as MPI traffic.
+
+use super::{CommStats, Exchange};
+use crate::coordinator::partition::Partition;
+use crate::graph::Graph;
+use crate::linalg::Csr;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::{Receiver, Sender};
+
+/// One boundary payload on the wire:
+/// `(sender worker, exchange round, values in the sender's plan order)`.
+pub type WireMsg = (usize, u64, Vec<f64>);
+
+/// One all-reduce contribution:
+/// `(worker, reduce sequence number, owned locals in shard order)`.
+pub type ReduceMsg = (usize, u64, Vec<f64>);
+
+/// Static communication plan for one worker's shard.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// This worker's id in `0..k`.
+    pub worker: usize,
+    /// Owned global node ids, ascending — the shard-local row order.
+    pub owned: Vec<usize>,
+    /// `local_of[global] = local row`, `usize::MAX` when not owned.
+    pub local_of: Vec<usize>,
+    /// Nodes whose values are available after a halo exchange
+    /// (owned ∪ halo).
+    pub covered: Vec<bool>,
+    /// Per peer (ascending): owned boundary nodes shipped to that peer
+    /// each round, ascending.
+    pub send: Vec<(usize, Vec<usize>)>,
+    /// Per peer (ascending): that peer's nodes received each round,
+    /// ascending — mirrors the peer's `send` entry for this worker.
+    pub recv: Vec<(usize, Vec<usize>)>,
+}
+
+/// Build the halo plans for every worker of a partition. The plan depends
+/// only on the graph topology: any operator whose support stays within
+/// the graph neighborhoods (walk matrices, adjacency, Laplacian) can ride
+/// the same plan.
+pub fn build_shard_plans(g: &Graph, part: &Partition) -> Vec<ShardPlan> {
+    let n = g.n;
+    assert_eq!(part.assignment.len(), n, "partition does not cover the graph");
+    let mut plans = Vec::with_capacity(part.k);
+    for w in 0..part.k {
+        let owned = part.nodes_of(w);
+        let mut local_of = vec![usize::MAX; n];
+        let mut covered = vec![false; n];
+        for (li, &u) in owned.iter().enumerate() {
+            local_of[u] = li;
+            covered[u] = true;
+        }
+        let mut send: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let mut recv: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &u in &owned {
+            for &v in g.neighbors(u) {
+                let pv = part.assignment[v];
+                if pv != w {
+                    send.entry(pv).or_default().push(u);
+                    recv.entry(pv).or_default().push(v);
+                    covered[v] = true;
+                }
+            }
+        }
+        let dedup_sorted = |m: BTreeMap<usize, Vec<usize>>| -> Vec<(usize, Vec<usize>)> {
+            m.into_iter()
+                .map(|(peer, mut nodes)| {
+                    nodes.sort_unstable();
+                    nodes.dedup();
+                    (peer, nodes)
+                })
+                .collect()
+        };
+        plans.push(ShardPlan {
+            worker: w,
+            owned,
+            local_of,
+            covered,
+            send: dedup_sorted(send),
+            recv: dedup_sorted(recv),
+        });
+    }
+    plans
+}
+
+/// Per-worker [`Exchange`] handle over mpsc channels.
+pub struct ShardExchange<'a> {
+    n: usize,
+    k: usize,
+    m_edges: usize,
+    /// Graph Laplacian shared by all workers (for `laplacian_apply`).
+    lap: &'a Csr,
+    plan: ShardPlan,
+    /// Senders toward each peer, aligned with `plan.send`.
+    peer_txs: Vec<Sender<WireMsg>>,
+    inbox: Receiver<WireMsg>,
+    /// Reorder buffer for early payloads, keyed `(sender, round)`.
+    pending: HashMap<(usize, u64), Vec<f64>>,
+    /// Mirror of the global stack holding fresh values for covered nodes.
+    mirror: Vec<f64>,
+    round: u64,
+    red_seq: u64,
+    to_reducer: Sender<ReduceMsg>,
+    from_reducer: Receiver<Vec<f64>>,
+    /// Operators whose support has been checked against the halo, keyed
+    /// `(indices ptr, nnz, rows)`. The operators of a run (chain walk
+    /// matrix, Laplacian, adjacency) are long-lived, so validating once
+    /// keeps the O(local nnz) scan off the per-round hot path.
+    validated: Vec<(usize, usize, usize)>,
+    stats: CommStats,
+    cross: u64,
+}
+
+impl<'a> ShardExchange<'a> {
+    /// Wire up a worker handle. `peer_txs` must be aligned with
+    /// `plan.send` (one sender per peer, same order).
+    pub fn new(
+        g: &Graph,
+        lap: &'a Csr,
+        k: usize,
+        plan: ShardPlan,
+        peer_txs: Vec<Sender<WireMsg>>,
+        inbox: Receiver<WireMsg>,
+        to_reducer: Sender<ReduceMsg>,
+        from_reducer: Receiver<Vec<f64>>,
+    ) -> ShardExchange<'a> {
+        assert_eq!(peer_txs.len(), plan.send.len());
+        assert_eq!(lap.rows, g.n);
+        ShardExchange {
+            n: g.n,
+            k,
+            m_edges: g.m(),
+            lap,
+            plan,
+            peer_txs,
+            inbox,
+            pending: HashMap::new(),
+            mirror: Vec::new(),
+            round: 0,
+            red_seq: 0,
+            to_reducer,
+            from_reducer,
+            validated: Vec::new(),
+            stats: CommStats::default(),
+            cross: 0,
+        }
+    }
+
+    /// Real cross-worker channel traffic so far: one count per boundary
+    /// node payload plus 2 per all-reduce (up + down through the leader).
+    /// This is the deployment's MPI traffic, distinct from the modeled
+    /// per-node [`CommStats`].
+    pub fn cross_messages(&self) -> u64 {
+        self.cross
+    }
+
+    /// This worker's shard plan.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Receive the `round`-tagged payload from `peer`, parking any other
+    /// (possibly future-round) payloads in the reorder buffer.
+    fn recv_round_from(&mut self, peer: usize, round: u64) -> Vec<f64> {
+        if let Some(d) = self.pending.remove(&(peer, round)) {
+            return d;
+        }
+        loop {
+            let (src, r, data) = self.inbox.recv().expect("peer worker died");
+            if src == peer && r == round {
+                return data;
+            }
+            let prev = self.pending.insert((src, r), data);
+            assert!(prev.is_none(), "duplicate payload from worker {src} round {r}");
+        }
+    }
+}
+
+impl Exchange for ShardExchange<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn owned(&self) -> &[usize] {
+        &self.plan.owned
+    }
+
+    fn exchange_apply(
+        &mut self,
+        a: &Csr,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let ln = self.plan.owned.len();
+        assert_eq!(a.rows, self.n, "operator shape mismatch");
+        assert_eq!(x.len(), ln * w, "payload shape mismatch");
+        assert_eq!(out.len(), ln * w);
+        self.round += 1;
+        let round = self.round;
+
+        // 1. Ship owned boundary rows to each peer, tagged with the round.
+        for ((peer, nodes), tx) in self.plan.send.iter().zip(&self.peer_txs) {
+            let mut buf = Vec::with_capacity(nodes.len() * w);
+            for &u in nodes {
+                let li = self.plan.local_of[u];
+                buf.extend_from_slice(&x[li * w..(li + 1) * w]);
+            }
+            tx.send((self.plan.worker, round, buf))
+                .unwrap_or_else(|_| panic!("peer worker {peer} died"));
+            self.cross += nodes.len() as u64;
+        }
+
+        // 2. Refresh the mirror: owned rows from `x`, halo rows from the
+        //    peers (reorder-buffered by round).
+        if self.mirror.len() != self.n * w {
+            self.mirror = vec![0.0; self.n * w];
+        }
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
+        }
+        let recv_plan = std::mem::take(&mut self.plan.recv);
+        for (peer, nodes) in &recv_plan {
+            let data = self.recv_round_from(*peer, round);
+            assert_eq!(data.len(), nodes.len() * w, "halo payload width drifted");
+            for (idx, &u) in nodes.iter().enumerate() {
+                self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
+            }
+        }
+        self.plan.recv = recv_plan;
+
+        // 3. The operator must not read outside the halo — a support that
+        //    escapes the graph neighborhoods (e.g. a squared-chain overlay)
+        //    needs a co-located transport. Checked once per operator, not
+        //    per round (the scan is comparable to the matvec itself).
+        let op_key = (a.indices.as_ptr() as usize, a.nnz(), a.rows);
+        if !self.validated.contains(&op_key) {
+            for &u in &self.plan.owned {
+                for kk in a.indptr[u]..a.indptr[u + 1] {
+                    assert!(
+                        self.plan.covered[a.indices[kk]],
+                        "operator support escapes the halo at row {u}: the partitioned \
+                         transport only ships graph-support operators"
+                    );
+                }
+            }
+            self.validated.push(op_key);
+        }
+
+        // 4. Owned rows via the shared CSR row kernel (bit-for-bit equal
+        //    to the bulk transport's block sweep).
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+        }
+        self.stats.record_exchange(directed_messages, w);
+    }
+
+    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+        let lap = self.lap;
+        let mut y = vec![0.0; x.len()];
+        self.exchange_apply(lap, 2 * self.m_edges as u64, x, w, &mut y);
+        y
+    }
+
+    fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+        assert_eq!(locals.len(), self.plan.owned.len() * w);
+        self.red_seq += 1;
+        self.to_reducer
+            .send((self.plan.worker, self.red_seq, locals.to_vec()))
+            .expect("reducer died");
+        let total = self.from_reducer.recv().expect("reducer died");
+        assert_eq!(total.len(), w, "all-reduce width drifted across workers");
+        if self.k > 1 {
+            self.cross += 2;
+        }
+        self.stats.record_allreduce(self.n, w);
+        total
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+}
+
+/// Leader-side all-reduce loop. Contributions are keyed by their sequence
+/// number — a fast worker already at reduce `s+1` cannot be blended into
+/// reduce `s` — and the dense global stack is summed in node order, so the
+/// totals match the bulk transport bit for bit. Runs until every worker
+/// sender is dropped.
+pub fn run_reducer(
+    n: usize,
+    owned_of: &[Vec<usize>],
+    rx: Receiver<ReduceMsg>,
+    txs: &[Sender<Vec<f64>>],
+) {
+    let k = owned_of.len();
+    assert_eq!(txs.len(), k);
+    let mut open: BTreeMap<u64, (usize, Vec<Option<Vec<f64>>>)> = BTreeMap::new();
+    while let Ok((wid, seq, vals)) = rx.recv() {
+        let slot = open.entry(seq).or_insert_with(|| (0, vec![None; k]));
+        assert!(slot.1[wid].is_none(), "duplicate all-reduce contribution from worker {wid}");
+        slot.1[wid] = Some(vals);
+        slot.0 += 1;
+        if slot.0 < k {
+            continue;
+        }
+        let (_, parts) = open.remove(&seq).unwrap();
+        let w = parts
+            .iter()
+            .zip(owned_of)
+            .find_map(|(part, owned)| {
+                (!owned.is_empty()).then(|| part.as_ref().unwrap().len() / owned.len())
+            })
+            .unwrap_or(0);
+        let mut dense = vec![0.0; n * w];
+        for (part, owned) in parts.iter().zip(owned_of) {
+            let vals = part.as_ref().unwrap();
+            for (li, &u) in owned.iter().enumerate() {
+                dense[u * w..(u + 1) * w].copy_from_slice(&vals[li * w..(li + 1) * w]);
+            }
+        }
+        // Global node order — identical float additions to the bulk sweep.
+        let mut total = vec![0.0; w];
+        for i in 0..n {
+            for j in 0..w {
+                total[j] += dense[i * w + j];
+            }
+        }
+        for tx in txs {
+            let _ = tx.send(total.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, laplacian_csr};
+    use crate::util::Pcg64;
+    use std::sync::mpsc::channel;
+    use std::sync::Mutex;
+
+    #[test]
+    fn plans_are_symmetric_and_cover_halos() {
+        let mut rng = Pcg64::new(41);
+        let g = generate::random_connected(14, 30, &mut rng);
+        let part = Partition::round_robin(14, 3);
+        let plans = build_shard_plans(&g, &part);
+        for p in &plans {
+            // Every owned node is covered; every neighbor of an owned node
+            // is covered.
+            for &u in &p.owned {
+                assert!(p.covered[u]);
+                for &v in g.neighbors(u) {
+                    assert!(p.covered[v], "worker {} misses halo node {v}", p.worker);
+                }
+            }
+            // send[w→q] must equal recv[q←w] on q's side.
+            for (peer, nodes) in &p.send {
+                let q = &plans[*peer];
+                let back = q
+                    .recv
+                    .iter()
+                    .find(|(from, _)| *from == p.worker)
+                    .map(|(_, ns)| ns.clone())
+                    .unwrap_or_default();
+                assert_eq!(&back, nodes, "asymmetric plan {} → {}", p.worker, peer);
+            }
+        }
+    }
+
+    /// Two workers exchanging over channels must reproduce the bulk
+    /// transport bit for bit — both the Laplacian round and the
+    /// all-reduce, including the modeled counters.
+    #[test]
+    fn shard_exchange_matches_bulk_bit_for_bit() {
+        let mut rng = Pcg64::new(42);
+        let g = generate::random_connected(11, 24, &mut rng);
+        let lap = laplacian_csr(&g);
+        let w = 3;
+        let x = rng.normal_vec(11 * w);
+
+        let mut comm = crate::net::CommGraph::new(&g);
+        let bulk_y = comm.laplacian_apply(&x, w);
+        let bulk_total = comm.allreduce_sum(&x, w);
+        let bulk_stats = *comm.stats();
+
+        for part in [Partition::contiguous(11, 2), Partition::round_robin(11, 3)] {
+            let k = part.k;
+            let plans = build_shard_plans(&g, &part);
+            let owned_of: Vec<Vec<usize>> = plans.iter().map(|p| p.owned.clone()).collect();
+
+            let mut wire_tx = Vec::new();
+            let mut wire_rx = Vec::new();
+            for _ in 0..k {
+                let (tx, rx) = channel::<WireMsg>();
+                wire_tx.push(tx);
+                wire_rx.push(Some(rx));
+            }
+            let (red_tx, red_rx) = channel::<ReduceMsg>();
+            let mut red_out_tx = Vec::new();
+            let mut red_out_rx = Vec::new();
+            for _ in 0..k {
+                let (tx, rx) = channel::<Vec<f64>>();
+                red_out_tx.push(tx);
+                red_out_rx.push(Some(rx));
+            }
+
+            let n = g.n;
+            let results = Mutex::new(vec![(Vec::new(), Vec::new(), CommStats::default()); k]);
+            std::thread::scope(|scope| {
+                {
+                    let owned_of = owned_of.clone();
+                    let txs = red_out_tx.clone();
+                    scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
+                }
+                for (wid, plan) in plans.into_iter().enumerate() {
+                    let peer_txs: Vec<_> =
+                        plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
+                    let inbox = wire_rx[wid].take().unwrap();
+                    let from_red = red_out_rx[wid].take().unwrap();
+                    let red = red_tx.clone();
+                    let xl: Vec<f64> = plan
+                        .owned
+                        .iter()
+                        .flat_map(|&u| x[u * w..(u + 1) * w].to_vec())
+                        .collect();
+                    let (g, lap, results) = (&g, &lap, &results);
+                    scope.spawn(move || {
+                        let mut ex =
+                            ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
+                        let y = ex.laplacian_apply(&xl, w);
+                        let total = ex.allreduce_sum(&xl, w);
+                        results.lock().unwrap()[wid] = (y, total, *ex.stats());
+                    });
+                }
+                drop(red_tx);
+                drop(red_out_tx);
+            });
+
+            let results = results.into_inner().unwrap();
+            for (wid, (y, total, stats)) in results.iter().enumerate() {
+                assert_eq!(total, &bulk_total, "worker {wid} all-reduce drifted");
+                assert_eq!(stats, &bulk_stats, "worker {wid} modeled stats drifted");
+                for (li, &u) in owned_of[wid].iter().enumerate() {
+                    assert_eq!(
+                        &y[li * w..(li + 1) * w],
+                        &bulk_y[u * w..(u + 1) * w],
+                        "worker {wid} row {u} drifted"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -14,22 +14,38 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// One exchange round moving `directed_messages` point-to-point
+    /// messages of `w` floats. Generalizes [`Self::record_edge_round`] to
+    /// operators whose support is not the plain edge set (e.g. the
+    /// preprocessed squared-chain overlays).
+    pub fn record_exchange(&mut self, directed_messages: u64, w: usize) {
+        self.messages += directed_messages;
+        self.floats += directed_messages * w as u64;
+        self.rounds += 1;
+    }
+
     /// One edge-exchange round over `m` undirected edges with `w`-float
     /// payloads: `2m` directed messages.
     pub fn record_edge_round(&mut self, m: usize, w: usize) {
-        self.messages += 2 * m as u64;
-        self.floats += 2 * m as u64 * w as u64;
-        self.rounds += 1;
+        self.record_exchange(2 * m as u64, w);
     }
 
     /// One tree all-reduce over `n` nodes with `w`-float payloads:
     /// `2(n−1)` messages, 2 rounds.
+    ///
+    /// Degenerate groups are free: with `n ≤ 1` a lone node (or an empty
+    /// group) already holds the global sum, so the operation is counted in
+    /// `allreduces` but moves zero messages and spends zero rounds. (The
+    /// naive `2(n−1)` would underflow at `n = 0`.)
     pub fn record_allreduce(&mut self, n: usize, w: usize) {
+        self.allreduces += 1;
+        if n <= 1 {
+            return;
+        }
         let msgs = 2 * (n as u64 - 1);
         self.messages += msgs;
         self.floats += msgs * w as u64;
         self.rounds += 2;
-        self.allreduces += 1;
     }
 
     /// Bytes on the wire assuming f64 payloads.
@@ -74,5 +90,41 @@ mod tests {
         let d = s.since(&snap);
         assert_eq!(d.messages, 6);
         assert_eq!(d.rounds, 1);
+    }
+
+    #[test]
+    fn exchange_with_custom_message_count() {
+        let mut s = CommStats::default();
+        s.record_exchange(7, 3);
+        assert_eq!(s.messages, 7);
+        assert_eq!(s.floats, 21);
+        assert_eq!(s.rounds, 1);
+    }
+
+    #[test]
+    fn allreduce_singleton_is_zero_message_noop() {
+        let mut s = CommStats::default();
+        s.record_allreduce(1, 9);
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.messages, 0);
+        assert_eq!(s.floats, 0);
+        assert_eq!(s.rounds, 0);
+    }
+
+    #[test]
+    fn allreduce_empty_group_does_not_underflow() {
+        let mut s = CommStats::default();
+        s.record_allreduce(0, 4);
+        // Before the guard, `2 * (n - 1)` wrapped to u64::MAX-ish counts.
+        assert_eq!(s.messages, 0);
+        assert_eq!(s.floats, 0);
+        assert_eq!(s.rounds, 0);
+        assert_eq!(s.allreduces, 1);
+        // The very next real all-reduce accounts normally.
+        s.record_allreduce(3, 2);
+        assert_eq!(s.messages, 4);
+        assert_eq!(s.floats, 8);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.allreduces, 2);
     }
 }

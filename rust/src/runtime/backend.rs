@@ -16,10 +16,70 @@ pub trait LocalBackend {
     /// Eq. 9).
     fn hess_apply_all(&self, problem: &ConsensusProblem, thetas: &[f64], z: &[f64], out: &mut [f64]);
 
+    /// Shard variant of [`Self::primal_recover_all`]: recover only the
+    /// listed global nodes; `v`/`out` are stacked `nodes.len() × p` in
+    /// list order. Used by the partitioned worker runtime. Default: the
+    /// per-node oracles (the same computation the batched native path
+    /// performs, so shard and whole-problem results are bit-identical).
+    fn primal_recover_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        v: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(v.len(), nodes.len() * p);
+        assert_eq!(out.len(), nodes.len() * p);
+        for (li, &u) in nodes.iter().enumerate() {
+            let y = problem.locals[u].primal_recover(&v[li * p..(li + 1) * p]);
+            out[li * p..(li + 1) * p].copy_from_slice(&y);
+        }
+    }
+
+    /// Shard variant of [`Self::hess_apply_all`], same conventions.
+    fn hess_apply_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        thetas: &[f64],
+        z: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(out.len(), nodes.len() * p);
+        for (li, &u) in nodes.iter().enumerate() {
+            let b = problem.locals[u]
+                .hess_vec(&thetas[li * p..(li + 1) * p], &z[li * p..(li + 1) * p]);
+            out[li * p..(li + 1) * p].copy_from_slice(&b);
+        }
+    }
+
+    /// Per-node dense Hessians for the listed nodes: `out` holds
+    /// `nodes.len()` row-major `p×p` blocks. Feeds the kernel-consistency
+    /// correction's p²-wide all-reduce in the sharded SDD-Newton step (the
+    /// all-reduce itself is accounted by the caller). Default: the local
+    /// oracles.
+    fn hess_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        thetas: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(thetas.len(), nodes.len() * p);
+        assert_eq!(out.len(), nodes.len() * p * p);
+        for (li, &u) in nodes.iter().enumerate() {
+            let h = problem.locals[u].hessian(&thetas[li * p..(li + 1) * p]);
+            out[li * p * p..(li + 1) * p * p].copy_from_slice(&h.data);
+        }
+    }
+
     /// Aggregated Hessian `Σ_i ∇²f_i(θ_i)` (p×p). Used by the kernel-
-    /// consistency correction of the SDD-Newton step (see
-    /// `algorithms::sdd_newton`); the corresponding all-reduce is accounted
-    /// by the caller. Default: sum the local oracles.
+    /// consistency correction of the incremental SDD-Newton step; the
+    /// corresponding all-reduce is accounted by the caller. Default: sum
+    /// the local oracles.
     fn hess_sum(&self, problem: &ConsensusProblem, thetas: &[f64]) -> crate::linalg::Matrix {
         let p = problem.p;
         let mut sum = crate::linalg::Matrix::zeros(p, p);
@@ -84,6 +144,67 @@ impl LocalBackend for NativeBackend {
         });
     }
 
+    fn primal_recover_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        v: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(v.len(), nodes.len() * p);
+        assert_eq!(out.len(), nodes.len() * p);
+        let threads = node_batch_threads(nodes.len(), p);
+        crate::par::par_chunks_mut(out, p, threads, |i0, block| {
+            for (k, orow) in block.chunks_mut(p).enumerate() {
+                let li = i0 + k;
+                let y = problem.locals[nodes[li]].primal_recover(&v[li * p..(li + 1) * p]);
+                orow.copy_from_slice(&y);
+            }
+        });
+    }
+
+    fn hess_apply_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        thetas: &[f64],
+        z: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(out.len(), nodes.len() * p);
+        let threads = node_batch_threads(nodes.len(), p);
+        crate::par::par_chunks_mut(out, p, threads, |i0, block| {
+            for (k, orow) in block.chunks_mut(p).enumerate() {
+                let li = i0 + k;
+                let b = problem.locals[nodes[li]]
+                    .hess_vec(&thetas[li * p..(li + 1) * p], &z[li * p..(li + 1) * p]);
+                orow.copy_from_slice(&b);
+            }
+        });
+    }
+
+    fn hess_nodes(
+        &self,
+        problem: &ConsensusProblem,
+        nodes: &[usize],
+        thetas: &[f64],
+        out: &mut [f64],
+    ) {
+        let p = problem.p;
+        assert_eq!(thetas.len(), nodes.len() * p);
+        assert_eq!(out.len(), nodes.len() * p * p);
+        let threads = node_batch_threads(nodes.len(), p);
+        crate::par::par_chunks_mut(out, p * p, threads, |i0, block| {
+            for (k, oblk) in block.chunks_mut(p * p).enumerate() {
+                let li = i0 + k;
+                let h = problem.locals[nodes[li]].hessian(&thetas[li * p..(li + 1) * p]);
+                oblk.copy_from_slice(&h.data);
+            }
+        });
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -113,5 +234,32 @@ mod tests {
             let b = prob.locals[i].hess_vec(&out[i * 6..(i + 1) * 6], &z[i * 6..(i + 1) * 6]);
             assert_eq!(&hz[i * 6..(i + 1) * 6], b.as_slice());
         }
+    }
+
+    #[test]
+    fn node_shards_match_whole_problem_batches() {
+        let mut rng = Pcg64::new(72);
+        let (n, p) = (6usize, 4usize);
+        let prob = datasets::synthetic_regression(n, p, 90, 0.1, 0.05, &mut rng);
+        let v = rng.normal_vec(n * p);
+        let mut full = vec![0.0; n * p];
+        NativeBackend.primal_recover_all(&prob, &v, &mut full);
+        let z = rng.normal_vec(n * p);
+        let mut hz_full = vec![0.0; n * p];
+        NativeBackend.hess_apply_all(&prob, &full, &z, &mut hz_full);
+
+        // A non-contiguous shard must reproduce exactly the rows the
+        // whole-problem batch produced for those nodes.
+        let nodes = [1usize, 3, 4];
+        let gather = |src: &[f64]| -> Vec<f64> {
+            nodes.iter().flat_map(|&u| src[u * p..(u + 1) * p].to_vec()).collect()
+        };
+        let (vs, ts, zs) = (gather(&v), gather(&full), gather(&z));
+        let mut shard = vec![0.0; nodes.len() * p];
+        NativeBackend.primal_recover_nodes(&prob, &nodes, &vs, &mut shard);
+        assert_eq!(shard, gather(&full));
+        let mut hz_shard = vec![0.0; nodes.len() * p];
+        NativeBackend.hess_apply_nodes(&prob, &nodes, &ts, &zs, &mut hz_shard);
+        assert_eq!(hz_shard, gather(&hz_full));
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::linalg::vector::{center, norm2, scale};
 use crate::linalg::Csr;
-use crate::net::CommStats;
+use crate::net::Exchange;
 use crate::util::Pcg64;
 
 /// Which standard splitting `M = D − A` to use.
@@ -174,11 +174,11 @@ impl Chain {
         Ok(Chain { n, depth, dvec, dinv, x, lambda2, singular, m_edges })
     }
 
-    /// One X-application (one exchange round of width `w`). `x` and `out`
-    /// are stacked `n × w` row-major.
-    pub fn apply_x(&self, v: &[f64], w: usize, out: &mut [f64], stats: &mut CommStats) {
-        self.x.matvec_multi_into(v, w, out);
-        stats.record_edge_round(self.m_edges, w);
+    /// One X-application (one exchange round of width `w`). `v` and `out`
+    /// are stacked shard-local (`local_n × w` row-major, all rows on the
+    /// bulk transport).
+    pub fn apply_x(&self, v: &[f64], w: usize, out: &mut [f64], exch: &mut dyn Exchange) {
+        exch.exchange_apply(&self.x, 2 * self.m_edges as u64, v, w, out);
     }
 
     /// Apply `X^{2^i}` by repeated application (2^i rounds).
@@ -189,52 +189,52 @@ impl Chain {
         w: usize,
         out: &mut [f64],
         scratch: &mut [f64],
-        stats: &mut CommStats,
+        exch: &mut dyn Exchange,
     ) {
         let reps = 1usize << level;
         debug_assert_eq!(v.len(), out.len());
         debug_assert_eq!(v.len(), scratch.len());
         // Ping-pong between out and scratch.
-        self.apply_x(v, w, out, stats);
+        self.apply_x(v, w, out, exch);
         for _ in 1..reps {
             scratch.copy_from_slice(out);
-            self.apply_x(scratch, w, out, stats);
+            self.apply_x(scratch, w, out, exch);
         }
     }
 
     /// Apply `M = D̃(I − X)` (one round). The per-row combine is
     /// independent across rows and runs on the par substrate.
-    pub fn apply_m(&self, v: &[f64], w: usize, out: &mut [f64], stats: &mut CommStats) {
-        self.apply_x(v, w, out, stats);
+    pub fn apply_m(&self, v: &[f64], w: usize, out: &mut [f64], exch: &mut dyn Exchange) {
+        self.apply_x(v, w, out, exch);
+        let owned = exch.owned();
         let threads = crate::par::plan_for(out.len());
         crate::par::par_chunks_mut(out, w, threads, |r0, block| {
             for (k, row) in block.chunks_mut(w).enumerate() {
-                let i = r0 + k;
-                let d = self.dvec[i];
+                let r = r0 + k;
+                let d = self.dvec[owned[r]];
                 for (j, o) in row.iter_mut().enumerate() {
-                    *o = d * (v[i * w + j] - *o);
+                    *o = d * (v[r * w + j] - *o);
                 }
             }
         });
     }
 
     /// Project onto the working subspace (mean-zero per column) when the
-    /// matrix is singular. Counts one all-reduce of width `w`.
-    pub fn project(&self, v: &mut [f64], w: usize, stats: &mut CommStats) {
+    /// matrix is singular. Costs one all-reduce of width `w`.
+    pub fn project(&self, v: &mut [f64], w: usize, exch: &mut dyn Exchange) {
         if !self.singular {
             return;
         }
-        for j in 0..w {
-            let mut s = 0.0;
-            for i in 0..self.n {
-                s += v[i * w + j];
+        let totals = exch.allreduce_sum(v, w);
+        let n = self.n as f64;
+        let threads = crate::par::plan_for(v.len());
+        crate::par::par_chunks_mut(v, w, threads, |_, block| {
+            for row in block.chunks_mut(w) {
+                for (j, val) in row.iter_mut().enumerate() {
+                    *val -= totals[j] / n;
+                }
             }
-            let mean = s / self.n as f64;
-            for i in 0..self.n {
-                v[i * w + j] -= mean;
-            }
-        }
-        stats.record_allreduce(self.n, w);
+        });
     }
 }
 
@@ -309,36 +309,39 @@ mod tests {
         let c = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
         let v = rng.normal_vec(15);
         let mut out = vec![0.0; 15];
-        let mut stats = CommStats::default();
-        c.apply_m(&v, 1, &mut out, &mut stats);
+        let mut comm = crate::net::CommGraph::new(&g);
+        c.apply_m(&v, 1, &mut out, &mut comm);
         let expect = l.matvec(&v);
         for (a, b) in out.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-10, "{a} vs {b}");
         }
-        assert_eq!(stats.rounds, 1);
+        assert_eq!(comm.stats().rounds, 1);
     }
 
     #[test]
     fn apply_x_pow_is_repeated_apply() {
-        let c = chain_for(12, 24, 4);
+        let mut rng0 = Pcg64::new(4);
+        let g = generate::random_connected(12, 24, &mut rng0);
+        let l = laplacian_csr(&g);
+        let c = Chain::build(&l, &ChainOptions::default(), &mut rng0).unwrap();
         let mut rng = Pcg64::new(5);
         let v = rng.normal_vec(12);
-        let mut stats = CommStats::default();
+        let mut comm = crate::net::CommGraph::new(&g);
         let mut out = vec![0.0; 12];
         let mut scratch = vec![0.0; 12];
-        c.apply_x_pow(2, &v, 1, &mut out, &mut scratch, &mut stats); // X^4
+        c.apply_x_pow(2, &v, 1, &mut out, &mut scratch, &mut comm); // X^4
         // Reference: apply X four times.
         let mut r = v.clone();
         let mut tmp = vec![0.0; 12];
-        let mut s2 = CommStats::default();
+        let mut c2 = crate::net::CommGraph::new(&g);
         for _ in 0..4 {
-            c.apply_x(&r, 1, &mut tmp, &mut s2);
+            c.apply_x(&r, 1, &mut tmp, &mut c2);
             r.copy_from_slice(&tmp);
         }
         for (a, b) in out.iter().zip(&r) {
             assert!((a - b).abs() < 1e-12);
         }
-        assert_eq!(stats.rounds, 4);
+        assert_eq!(comm.stats().rounds, 4);
     }
 
     #[test]

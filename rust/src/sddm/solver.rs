@@ -1,7 +1,12 @@
 //! The "crude" (Algorithm 1) and "exact" (Algorithm 2) SDD solvers.
+//!
+//! Both run against the [`Exchange`] trait: on the bulk-synchronous
+//! [`crate::net::CommGraph`] they behave as the single-process simulation,
+//! on [`crate::net::partitioned::ShardExchange`] the same code executes
+//! sharded across worker threads, bit-for-bit identically.
 
 use super::chain::Chain;
-use crate::net::CommStats;
+use crate::net::Exchange;
 
 /// Solver options.
 #[derive(Debug, Clone)]
@@ -23,7 +28,7 @@ impl Default for SolverOptions {
 /// Result of a solve.
 #[derive(Debug, Clone)]
 pub struct SolveOutcome {
-    /// Stacked solution (`n × w` row-major).
+    /// Stacked solution (shard-local `local_n × w` row-major).
     pub x: Vec<f64>,
     /// Richardson sweeps used.
     pub sweeps: usize,
@@ -48,46 +53,47 @@ impl SddmSolver {
 
     /// "Crude" solve (Algorithm 1): one forward/backward sweep of the
     /// chain, returning `x ≈ Z₀ b` with a constant-factor error.
-    /// `b` is stacked `n × w`. Communication is recorded in `stats`.
-    pub fn crude_solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> Vec<f64> {
+    /// `b` is stacked shard-local `local_n × w`. Communication is recorded
+    /// in the exchange's ledger.
+    pub fn crude_solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
         let c = &self.chain;
-        let n = c.n;
-        assert_eq!(b.len(), n * w);
+        let ln = exch.local_n();
+        assert_eq!(b.len(), ln * w);
         let d = c.depth;
-        let len = n * w;
+        let len = ln * w;
 
         let mut scratch_a = vec![0.0; len];
         let mut scratch_b = vec![0.0; len];
 
         // Forward: b_{i+1} = (I + A_i D̃^{-1}) b_i,  A_i D̃^{-1} v = D̃ X^{2^i} D̃^{-1} v.
-        // The per-level row sweeps are independent across the n rows (and
-        // the w RHS columns), so they run on the par substrate; each row
-        // is owned by exactly one thread → bit-for-bit serial-identical.
+        // The per-level row sweeps are independent across the owned rows
+        // (and the w RHS columns), so they run on the par substrate; each
+        // row is owned by exactly one thread → bit-for-bit serial-identical.
         let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
         let mut cur = b.to_vec();
-        c.project(&mut cur, w, stats);
+        c.project(&mut cur, w, exch);
         bs.push(cur.clone());
         let mut tmp = vec![0.0; len];
         for i in 0..d {
             // tmp = D̃^{-1} cur
-            diag_mul_into(&c.dinv, &cur, w, &mut tmp);
-            c.apply_x_pow(i, &tmp, w, &mut scratch_a, &mut scratch_b, stats);
+            diag_mul_into(&c.dinv, exch.owned(), &cur, w, &mut tmp);
+            c.apply_x_pow(i, &tmp, w, &mut scratch_a, &mut scratch_b, exch);
             // cur = cur + D̃ * scratch_a
-            diag_axpy(&c.dvec, &scratch_a, w, &mut cur);
-            c.project(&mut cur, w, stats);
+            diag_axpy(&c.dvec, exch.owned(), &scratch_a, w, &mut cur);
+            c.project(&mut cur, w, exch);
             bs.push(cur.clone());
         }
 
         // Last level: x_d = D̃^{-1} b_d.
         let mut x = vec![0.0; len];
-        diag_mul_into(&c.dinv, &bs[d], w, &mut x);
-        c.project(&mut x, w, stats);
+        diag_mul_into(&c.dinv, exch.owned(), &bs[d], w, &mut x);
+        c.project(&mut x, w, exch);
 
         // Backward: x_i = ½ [D̃^{-1} b_i + x_{i+1} + X^{2^i} x_{i+1}].
         for i in (0..d).rev() {
-            c.apply_x_pow(i, &x, w, &mut scratch_a, &mut scratch_b, stats);
-            backward_combine(&c.dinv, &bs[i], &scratch_a, w, &mut x);
-            c.project(&mut x, w, stats);
+            c.apply_x_pow(i, &x, w, &mut scratch_a, &mut scratch_b, exch);
+            backward_combine(&c.dinv, exch.owned(), &bs[i], &scratch_a, w, &mut x);
+            c.project(&mut x, w, exch);
         }
         x
     }
@@ -95,18 +101,19 @@ impl SddmSolver {
     /// "Exact" solve (Algorithm 2): Richardson iteration preconditioned by
     /// the crude solver, run until the relative residual falls below
     /// `opts.eps` (or the sweep budget is exhausted).
-    pub fn solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> SolveOutcome {
+    pub fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
         let c = &self.chain;
-        let n = c.n;
-        assert_eq!(b.len(), n * w);
-        let len = n * w;
+        let ln = exch.local_n();
+        assert_eq!(b.len(), ln * w);
+        let len = ln * w;
 
         let mut b0 = b.to_vec();
-        c.project(&mut b0, w, stats);
-        let bnorms = col_norms(&b0, n, w);
+        c.project(&mut b0, w, exch);
+        // Per-column RHS norms: one accounted all-reduce of width w.
+        let bnorms = col_norms(&b0, w, exch);
 
         // y₀ = crude(b).
-        let mut y = self.crude_solve(&b0, w, stats);
+        let mut y = self.crude_solve(&b0, w, exch);
         let mut residual = vec![0.0; len];
         let mut my = vec![0.0; len];
         let mut sweeps = 0;
@@ -114,12 +121,18 @@ impl SddmSolver {
 
         for k in 0..=self.opts.max_richardson {
             // r = b − M y.
-            c.apply_m(&y, w, &mut my, stats);
+            c.apply_m(&y, w, &mut my, exch);
             sub_into(&b0, &my, w, &mut residual);
-            c.project(&mut residual, w, stats);
-            rel = max_rel(&residual, &bnorms, n, w);
-            // Residual norm check is an accounted all-reduce.
-            stats.record_allreduce(n, 1);
+            c.project(&mut residual, w, exch);
+            // Residual norm check: an accounted all-reduce of the w
+            // per-column squared norms (width w — a multi-RHS solve moves
+            // w floats per message here, not 1).
+            let rn = col_norms(&residual, w, exch);
+            rel = rn
+                .iter()
+                .zip(&bnorms)
+                .map(|(r, b)| r / b)
+                .fold(0.0f64, f64::max);
             if rel <= self.opts.eps {
                 sweeps = k;
                 break;
@@ -129,7 +142,7 @@ impl SddmSolver {
                 break;
             }
             // y ← y + Z₀ r.
-            let dz = self.crude_solve(&residual, w, stats);
+            let dz = self.crude_solve(&residual, w, exch);
             for i in 0..len {
                 y[i] += dz[i];
             }
@@ -139,14 +152,14 @@ impl SddmSolver {
     }
 }
 
-/// dst[r,·] = diag[r] · src[r,·] over a stacked `n × w` buffer, row blocks
-/// split across the par substrate.
-fn diag_mul_into(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
+/// dst[r,·] = diag[owned[r]] · src[r,·] over a shard-local `local_n × w`
+/// buffer, row blocks split across the par substrate.
+fn diag_mul_into(diag: &[f64], owned: &[usize], src: &[f64], w: usize, dst: &mut [f64]) {
     let threads = crate::par::plan_for(dst.len());
     crate::par::par_chunks_mut(dst, w, threads, |r0, block| {
         for (k, row) in block.chunks_mut(w).enumerate() {
             let r = r0 + k;
-            let d = diag[r];
+            let d = diag[owned[r]];
             let s = &src[r * w..(r + 1) * w];
             for (o, v) in row.iter_mut().zip(s) {
                 *o = d * v;
@@ -155,13 +168,13 @@ fn diag_mul_into(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
     });
 }
 
-/// dst[r,·] += diag[r] · src[r,·].
-fn diag_axpy(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
+/// dst[r,·] += diag[owned[r]] · src[r,·].
+fn diag_axpy(diag: &[f64], owned: &[usize], src: &[f64], w: usize, dst: &mut [f64]) {
     let threads = crate::par::plan_for(dst.len());
     crate::par::par_chunks_mut(dst, w, threads, |r0, block| {
         for (k, row) in block.chunks_mut(w).enumerate() {
             let r = r0 + k;
-            let d = diag[r];
+            let d = diag[owned[r]];
             let s = &src[r * w..(r + 1) * w];
             for (o, v) in row.iter_mut().zip(s) {
                 *o += d * v;
@@ -170,13 +183,20 @@ fn diag_axpy(diag: &[f64], src: &[f64], w: usize, dst: &mut [f64]) {
     });
 }
 
-/// Backward-sweep combine: x[r,·] = ½ (dinv[r]·b[r,·] + x[r,·] + xpow[r,·]).
-fn backward_combine(dinv: &[f64], b: &[f64], xpow: &[f64], w: usize, x: &mut [f64]) {
+/// Backward-sweep combine: x[r,·] = ½ (dinv[owned[r]]·b[r,·] + x[r,·] + xpow[r,·]).
+fn backward_combine(
+    dinv: &[f64],
+    owned: &[usize],
+    b: &[f64],
+    xpow: &[f64],
+    w: usize,
+    x: &mut [f64],
+) {
     let threads = crate::par::plan_for(x.len());
     crate::par::par_chunks_mut(x, w, threads, |r0, block| {
         for (k, row) in block.chunks_mut(w).enumerate() {
             let r = r0 + k;
-            let d = dinv[r];
+            let d = dinv[owned[r]];
             let off = r * w;
             for (j, o) in row.iter_mut().enumerate() {
                 *o = 0.5 * (d * b[off + j] + *o + xpow[off + j]);
@@ -196,64 +216,62 @@ fn sub_into(a: &[f64], b: &[f64], w: usize, dst: &mut [f64]) {
     });
 }
 
-fn col_norms(v: &[f64], n: usize, w: usize) -> Vec<f64> {
-    let mut out = vec![0.0; w];
-    for i in 0..n {
-        for j in 0..w {
-            out[j] += v[i * w + j] * v[i * w + j];
-        }
+/// Global per-column 2-norms of a shard-local stack: one all-reduce of the
+/// per-node squared contributions (width `w`), summed in global node order
+/// on every transport.
+fn col_norms(v: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
+    let mut locals = vec![0.0; v.len()];
+    for (loc, val) in locals.iter_mut().zip(v) {
+        *loc = val * val;
     }
+    let mut out = exch.allreduce_sum(&locals, w);
     for o in out.iter_mut() {
         *o = o.sqrt().max(1e-300);
     }
     out
 }
 
-fn max_rel(res: &[f64], bnorms: &[f64], n: usize, w: usize) -> f64 {
-    let rn = col_norms(res, n, w);
-    rn.iter().zip(bnorms).map(|(r, b)| r / b).fold(0.0f64, f64::max)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{generate, laplacian::laplacian_csr};
+    use crate::graph::{generate, laplacian::laplacian_csr, Graph};
     use crate::linalg::cg::{cg_solve, CgOptions};
+    use crate::net::CommGraph;
     use crate::sddm::chain::{ChainOptions, Splitting};
     use crate::util::Pcg64;
 
-    fn setup(n: usize, m: usize, seed: u64) -> (crate::linalg::Csr, SddmSolver, Pcg64) {
+    fn setup(n: usize, m: usize, seed: u64) -> (Graph, crate::linalg::Csr, SddmSolver, Pcg64) {
         let mut rng = Pcg64::new(seed);
         let g = generate::random_connected(n, m, &mut rng);
         let l = laplacian_csr(&g);
         let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-8, max_richardson: 500 });
-        (l, solver, rng)
+        (g, l, solver, rng)
     }
 
     #[test]
     fn exact_solve_matches_cg() {
-        let (l, solver, mut rng) = setup(30, 70, 21);
+        let (g, l, solver, mut rng) = setup(30, 70, 21);
         // RHS in range(L).
         let z = rng.normal_vec(30);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged, "rel={}", out.rel_residual);
         let cg = cg_solve(&l, &b, &CgOptions { project_kernel: true, ..Default::default() });
         for (a, c) in out.x.iter().zip(&cg.x) {
             assert!((a - c).abs() < 1e-5, "{a} vs {c}");
         }
-        assert!(stats.messages > 0);
+        assert!(comm.stats().messages > 0);
     }
 
     #[test]
     fn crude_solve_is_constant_factor() {
-        let (l, solver, mut rng) = setup(25, 60, 22);
+        let (g, l, solver, mut rng) = setup(25, 60, 22);
         let z = rng.normal_vec(25);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
-        let x = solver.crude_solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let x = solver.crude_solve(&b, 1, &mut comm);
         // Residual should be noticeably reduced vs the zero guess.
         let mut lx = vec![0.0; 25];
         l.matvec_into(&x, &mut lx);
@@ -265,7 +283,7 @@ mod tests {
 
     #[test]
     fn multi_rhs_matches_single() {
-        let (l, solver, mut rng) = setup(20, 45, 23);
+        let (g, l, solver, mut rng) = setup(20, 45, 23);
         let w = 3;
         let mut b = vec![0.0; 20 * w];
         for j in 0..w {
@@ -275,13 +293,13 @@ mod tests {
                 b[i * w + j] = col[i];
             }
         }
-        let mut s_multi = CommStats::default();
-        let multi = solver.solve(&b, w, &mut s_multi);
+        let mut c_multi = CommGraph::new(&g);
+        let multi = solver.solve(&b, w, &mut c_multi);
         assert!(multi.converged);
         for j in 0..w {
             let col: Vec<f64> = (0..20).map(|i| b[i * w + j]).collect();
-            let mut s1 = CommStats::default();
-            let single = solver.solve(&col, 1, &mut s1);
+            let mut c1 = CommGraph::new(&g);
+            let single = solver.solve(&col, 1, &mut c1);
             for i in 0..20 {
                 assert!(
                     (multi.x[i * w + j] - single.x[i]).abs() < 1e-5,
@@ -293,23 +311,57 @@ mod tests {
         }
         // Batched solve should use fewer messages than w separate solves
         // would (same rounds, wider payloads).
-        let mut s_sep = CommStats::default();
+        let mut c_sep = CommGraph::new(&g);
         for j in 0..w {
             let col: Vec<f64> = (0..20).map(|i| b[i * w + j]).collect();
-            let _ = solver.solve(&col, 1, &mut s_sep);
+            let _ = solver.solve(&col, 1, &mut c_sep);
         }
-        assert!(s_multi.messages < s_sep.messages);
+        assert!(c_multi.stats().messages < c_sep.stats().messages);
+    }
+
+    /// Regression for the residual-check accounting: a width-w solve must
+    /// charge its norm all-reduces at width w. With identical replicated
+    /// columns the solve performs the same rounds as the single-RHS solve,
+    /// so the message count matches exactly and every float counter scales
+    /// by exactly w. (Before the fix the residual checks were recorded at
+    /// width 1, so floats_multi < w · floats_single.)
+    #[test]
+    fn multi_rhs_allreduce_floats_scale_with_width() {
+        let (g, l, solver, mut rng) = setup(24, 55, 29);
+        let z = rng.normal_vec(24);
+        let col = l.matvec(&z);
+        let w = 4;
+        let mut b = vec![0.0; 24 * w];
+        for i in 0..24 {
+            for j in 0..w {
+                b[i * w + j] = col[i];
+            }
+        }
+        let mut c1 = CommGraph::new(&g);
+        let single = solver.solve(&col, 1, &mut c1);
+        let mut cw = CommGraph::new(&g);
+        let multi = solver.solve(&b, w, &mut cw);
+        assert_eq!(single.sweeps, multi.sweeps, "identical columns must sweep identically");
+        let (s1, sw) = (c1.stats(), cw.stats());
+        assert_eq!(s1.messages, sw.messages, "same rounds, wider payloads");
+        assert_eq!(s1.rounds, sw.rounds);
+        assert_eq!(s1.allreduces, sw.allreduces);
+        assert_eq!(
+            sw.floats,
+            w as u64 * s1.floats,
+            "width-{w} solve must move exactly {w}× the floats (residual checks included)"
+        );
     }
 
     #[test]
     fn eps_controls_accuracy() {
-        let (l, solver, mut rng) = setup(30, 80, 24);
+        let (g, l, solver, mut rng) = setup(30, 80, 24);
         let z = rng.normal_vec(30);
         let b = l.matvec(&z);
         for eps in [0.3, 1e-2, 1e-6] {
             let s = SddmSolver::new(solver.chain.clone(), SolverOptions { eps, max_richardson: 500 });
-            let mut stats = CommStats::default();
-            let out = s.solve(&b, 1, &mut stats);
+            let mut comm = CommGraph::new(&g);
+            let out = s.solve(&b, 1, &mut comm);
             assert!(out.converged);
             assert!(out.rel_residual <= eps);
         }
@@ -317,15 +369,15 @@ mod tests {
 
     #[test]
     fn tighter_eps_costs_more_messages() {
-        let (l, solver, mut rng) = setup(30, 80, 25);
+        let (g, l, solver, mut rng) = setup(30, 80, 25);
         let z = rng.normal_vec(30);
         let b = l.matvec(&z);
         let mut msgs = Vec::new();
         for eps in [1e-1, 1e-6, 1e-10] {
             let s = SddmSolver::new(solver.chain.clone(), SolverOptions { eps, max_richardson: 500 });
-            let mut stats = CommStats::default();
-            let _ = s.solve(&b, 1, &mut stats);
-            msgs.push(stats.messages);
+            let mut comm = CommGraph::new(&g);
+            let _ = s.solve(&b, 1, &mut comm);
+            msgs.push(comm.stats().messages);
         }
         assert!(msgs[0] <= msgs[1] && msgs[1] <= msgs[2], "{msgs:?}");
         assert!(msgs[0] < msgs[2], "{msgs:?}");
@@ -342,8 +394,8 @@ mod tests {
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 500 });
         let z = rng.normal_vec(20);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged, "rel={}", out.rel_residual);
     }
 
@@ -357,8 +409,8 @@ mod tests {
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 2000 });
         let z = rng.normal_vec(16);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged, "rel={}", out.rel_residual);
     }
 }

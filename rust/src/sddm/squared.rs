@@ -17,7 +17,7 @@
 
 use super::chain::{Chain, ChainError, ChainOptions};
 use crate::linalg::Csr;
-use crate::net::CommStats;
+use crate::net::Exchange;
 use crate::util::Pcg64;
 
 /// A chain with explicitly squared level matrices.
@@ -53,72 +53,72 @@ impl SquaredChain {
     }
 
     /// Apply `X^{2^level}` in ONE extended-neighborhood round.
+    ///
+    /// Message model: each stored off-diagonal entry is one directed
+    /// message of `w` floats in the preprocessed overlay network. The
+    /// overlay support exceeds the graph edges for `level ≥ 1`, so this
+    /// mode requires a transport with co-located state (the bulk
+    /// [`crate::net::CommGraph`]); the partitioned transport rejects it.
     pub fn apply_level(
         &self,
         level: usize,
         v: &[f64],
         w: usize,
         out: &mut [f64],
-        stats: &mut CommStats,
+        exch: &mut dyn Exchange,
     ) {
         let x = &self.levels[level];
-        x.matvec_multi_into(v, w, out);
-        // Message model: each stored off-diagonal entry is one directed
-        // message of w floats in the preprocessed overlay network.
-        let n = self.base.n;
-        let offdiag = x.nnz().saturating_sub(n);
-        stats.messages += offdiag as u64;
-        stats.floats += (offdiag * w) as u64;
-        stats.rounds += 1;
+        let offdiag = x.nnz().saturating_sub(self.base.n) as u64;
+        exch.exchange_apply(x, offdiag, v, w, out);
     }
 
     /// "Crude" solve (Algorithm 1) with single-round level applications.
-    pub fn crude_solve(&self, b: &[f64], w: usize, stats: &mut CommStats) -> Vec<f64> {
+    pub fn crude_solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
         let c = &self.base;
-        let n = c.n;
-        assert_eq!(b.len(), n * w);
+        let ln = exch.local_n();
+        assert_eq!(b.len(), ln * w);
         let d = c.depth;
-        let len = n * w;
+        let len = ln * w;
         let mut scratch = vec![0.0; len];
 
         let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
         let mut cur = b.to_vec();
-        c.project(&mut cur, w, stats);
+        c.project(&mut cur, w, exch);
         bs.push(cur.clone());
         let mut tmp = vec![0.0; len];
         for i in 0..d {
-            for r in 0..n {
+            for (r, &u) in exch.owned().iter().enumerate() {
                 for j in 0..w {
-                    tmp[r * w + j] = c.dinv[r] * cur[r * w + j];
+                    tmp[r * w + j] = c.dinv[u] * cur[r * w + j];
                 }
             }
-            self.apply_level(i, &tmp, w, &mut scratch, stats);
-            for r in 0..n {
+            self.apply_level(i, &tmp, w, &mut scratch, exch);
+            for (r, &u) in exch.owned().iter().enumerate() {
                 for j in 0..w {
-                    cur[r * w + j] += c.dvec[r] * scratch[r * w + j];
+                    cur[r * w + j] += c.dvec[u] * scratch[r * w + j];
                 }
             }
-            c.project(&mut cur, w, stats);
+            c.project(&mut cur, w, exch);
             bs.push(cur.clone());
         }
 
         let mut x = vec![0.0; len];
-        for r in 0..n {
+        for (r, &u) in exch.owned().iter().enumerate() {
             for j in 0..w {
-                x[r * w + j] = c.dinv[r] * bs[d][r * w + j];
+                x[r * w + j] = c.dinv[u] * bs[d][r * w + j];
             }
         }
-        c.project(&mut x, w, stats);
+        c.project(&mut x, w, exch);
 
         for i in (0..d).rev() {
-            self.apply_level(i, &x, w, &mut scratch, stats);
-            for r in 0..n {
+            self.apply_level(i, &x, w, &mut scratch, exch);
+            for (r, &u) in exch.owned().iter().enumerate() {
                 for j in 0..w {
                     let idx = r * w + j;
-                    x[idx] = 0.5 * (c.dinv[r] * bs[i][idx] + x[idx] + scratch[idx]);
+                    x[idx] = 0.5 * (c.dinv[u] * bs[i][idx] + x[idx] + scratch[idx]);
                 }
             }
-            c.project(&mut x, w, stats);
+            c.project(&mut x, w, exch);
         }
         x
     }
@@ -130,33 +130,33 @@ impl SquaredChain {
         w: usize,
         eps: f64,
         max_sweeps: usize,
-        stats: &mut CommStats,
+        exch: &mut dyn Exchange,
     ) -> super::solver::SolveOutcome {
         let c = &self.base;
-        let n = c.n;
-        let len = n * w;
+        let len = exch.local_n() * w;
+        assert_eq!(b.len(), len);
         let mut b0 = b.to_vec();
-        c.project(&mut b0, w, stats);
-        let bnorm = crate::linalg::vector::norm2(&b0).max(1e-300);
+        c.project(&mut b0, w, exch);
+        let bnorm = exch.norm2_sq(&b0, w).sqrt().max(1e-300);
 
-        let mut y = self.crude_solve(&b0, w, stats);
+        let mut y = self.crude_solve(&b0, w, exch);
         let mut my = vec![0.0; len];
         let mut residual = vec![0.0; len];
         let mut rel = f64::INFINITY;
         let mut sweeps = 0;
         for k in 0..=max_sweeps {
-            c.apply_m(&y, w, &mut my, stats);
+            c.apply_m(&y, w, &mut my, exch);
             for i in 0..len {
                 residual[i] = b0[i] - my[i];
             }
-            c.project(&mut residual, w, stats);
-            rel = crate::linalg::vector::norm2(&residual) / bnorm;
-            stats.record_allreduce(n, 1);
+            c.project(&mut residual, w, exch);
+            // Residual norm check is an accounted all-reduce.
+            rel = exch.norm2_sq(&residual, w).sqrt() / bnorm;
             if rel <= eps || k == max_sweeps {
                 sweeps = k;
                 break;
             }
-            let dz = self.crude_solve(&residual, w, stats);
+            let dz = self.crude_solve(&residual, w, exch);
             for i in 0..len {
                 y[i] += dz[i];
             }
@@ -186,18 +186,18 @@ mod tests {
         let v = rng.normal_vec(18);
         for level in 0..=sq.base.depth.min(3) {
             let mut out_sq = vec![0.0; 18];
-            let mut s1 = CommStats::default();
-            sq.apply_level(level, &v, 1, &mut out_sq, &mut s1);
+            let mut c1 = crate::net::CommGraph::new(&g);
+            sq.apply_level(level, &v, 1, &mut out_sq, &mut c1);
             let mut out_im = vec![0.0; 18];
             let mut scratch = vec![0.0; 18];
-            let mut s2 = CommStats::default();
-            sq.base.apply_x_pow(level, &v, 1, &mut out_im, &mut scratch, &mut s2);
+            let mut c2 = crate::net::CommGraph::new(&g);
+            sq.base.apply_x_pow(level, &v, 1, &mut out_im, &mut scratch, &mut c2);
             for (a, b) in out_sq.iter().zip(&out_im) {
                 assert!((a - b).abs() < 1e-10, "level {level}");
             }
             // Squared mode: always exactly 1 round; implicit: 2^level rounds.
-            assert_eq!(s1.rounds, 1);
-            assert_eq!(s2.rounds, 1 << level);
+            assert_eq!(c1.stats().rounds, 1);
+            assert_eq!(c2.stats().rounds, 1 << level);
         }
     }
 
@@ -210,20 +210,25 @@ mod tests {
         let b = l.matvec(&z);
 
         let sq = SquaredChain::build(&l, &ChainOptions::default(), 0.0, &mut rng).unwrap();
-        let mut s1 = CommStats::default();
-        let out_sq = sq.solve(&b, 1, 1e-8, 300, &mut s1);
+        let mut c1 = crate::net::CommGraph::new(&g);
+        let out_sq = sq.solve(&b, 1, 1e-8, 300, &mut c1);
         assert!(out_sq.converged);
 
         let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-8, max_richardson: 300 });
-        let mut s2 = CommStats::default();
-        let out_im = solver.solve(&b, 1, &mut s2);
+        let mut c2 = crate::net::CommGraph::new(&g);
+        let out_im = solver.solve(&b, 1, &mut c2);
 
         for (a, c) in out_sq.x.iter().zip(&out_im.x) {
             assert!((a - c).abs() < 1e-5);
         }
         // Squared mode needs far fewer rounds (latency) at denser messages.
-        assert!(s1.rounds < s2.rounds, "rounds: squared {} vs implicit {}", s1.rounds, s2.rounds);
+        assert!(
+            c1.stats().rounds < c2.stats().rounds,
+            "rounds: squared {} vs implicit {}",
+            c1.stats().rounds,
+            c2.stats().rounds
+        );
     }
 
     #[test]
@@ -238,8 +243,8 @@ mod tests {
         // Pruned chain still solves (Richardson absorbs the perturbation).
         let z = rng.normal_vec(30);
         let b = l.matvec(&z);
-        let mut stats = CommStats::default();
-        let out = pruned.solve(&b, 1, 1e-6, 500, &mut stats);
+        let mut comm = crate::net::CommGraph::new(&g);
+        let out = pruned.solve(&b, 1, 1e-6, 500, &mut comm);
         assert!(out.converged, "rel={}", out.rel_residual);
     }
 }

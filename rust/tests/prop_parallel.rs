@@ -3,9 +3,14 @@
 //! sweep — row blocks are owned by exactly one thread and each output
 //! element is produced by the same scalar operations in the same order.
 
+use sddnewton::algorithms::sdd_newton::{SddNewton, StepSize};
+use sddnewton::algorithms::solvers::{sddm_for_graph, NeumannSolver};
+use sddnewton::algorithms::{run, RunOptions};
+use sddnewton::coordinator::{run_partitioned_newton, Partition};
 use sddnewton::graph::{generate, laplacian_csr};
 use sddnewton::linalg::Csr;
-use sddnewton::net::CommStats;
+use sddnewton::net::CommGraph;
+use sddnewton::runtime::NativeBackend;
 use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions};
 use sddnewton::util::Pcg64;
 
@@ -100,10 +105,10 @@ fn sddm_crude_solve_is_thread_count_invariant() {
     }
     let crude_with = |threads: usize| {
         sddnewton::par::set_threads(threads);
-        let mut stats = CommStats::default();
-        let x = solver.crude_solve(&b, w, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let x = solver.crude_solve(&b, w, &mut comm);
         sddnewton::par::set_threads(0);
-        (x, stats)
+        (x, *comm.stats())
     };
     let (x1, stats1) = crude_with(1);
     for threads in [2usize, 4] {
@@ -111,6 +116,82 @@ fn sddm_crude_solve_is_thread_count_invariant() {
         assert_eq!(x1, xt, "threads={threads}: solution drifted");
         assert_eq!(stats1, statst, "threads={threads}: message accounting drifted");
     }
+}
+
+/// The acceptance property of the partitioned runtime: `run_partitioned_newton`
+/// must produce **bit-for-bit** identical iterates to the bulk-synchronous
+/// `SddNewton` + `CommGraph` path across contiguous, round-robin and BFS
+/// partitionings — same primal stack, same dual stack, same per-iteration
+/// objectives, same modeled communication ledger.
+#[test]
+fn partitioned_newton_bit_for_bit_across_partitionings() {
+    let mut rng = Pcg64::new(9001);
+    let n = 14;
+    let g = generate::random_connected(n, 30, &mut rng);
+    let prob = sddnewton::problems::datasets::synthetic_regression(n, 4, 280, 0.2, 0.05, &mut rng);
+    let solver = sddm_for_graph(&g, 1e-6, &mut rng);
+    let backend = NativeBackend;
+    let iters = 5;
+    let step = StepSize::Fixed(1.0);
+
+    // Bulk-synchronous reference.
+    let mut alg = SddNewton::new(&prob, &backend, &solver, step);
+    let mut comm = CommGraph::new(&g);
+    let trace = run(
+        &mut alg,
+        &prob,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+
+    for part in [
+        Partition::contiguous(n, 3),
+        Partition::round_robin(n, 4),
+        Partition::bfs_blocks(&g, 2),
+    ] {
+        let out = run_partitioned_newton(&prob, &g, &part, &solver, step, iters);
+        assert_eq!(out.thetas, trace.final_thetas, "k={}: primal iterate drifted", part.k);
+        assert_eq!(out.lambda, alg.lambda(), "k={}: dual iterate drifted", part.k);
+        assert_eq!(out.comm, *comm.stats(), "k={}: modeled comm ledger drifted", part.k);
+        assert_eq!(out.records.len(), iters);
+        for (r, ref_r) in out.records.iter().zip(&trace.records[1..]) {
+            assert_eq!(r.iter, ref_r.iter);
+            assert_eq!(r.objective, ref_r.objective, "iter {} objective drifted", r.iter);
+            assert_eq!(
+                r.consensus_error, ref_r.consensus_error,
+                "iter {} consensus drifted",
+                r.iter
+            );
+            assert_eq!(r.comm, ref_r.comm, "iter {} ledger drifted", r.iter);
+        }
+    }
+}
+
+/// Same property with the ADD-style Neumann inner solver: the exchange
+/// refactor must keep every inner solver transport-agnostic.
+#[test]
+fn partitioned_add_newton_matches_bulk() {
+    let mut rng = Pcg64::new(9002);
+    let n = 12;
+    let g = generate::random_connected(n, 26, &mut rng);
+    let prob = sddnewton::problems::datasets::synthetic_regression(n, 3, 180, 0.2, 0.05, &mut rng);
+    let solver = NeumannSolver::from_graph(&g, 2);
+    let backend = NativeBackend;
+    let iters = 4;
+    let step = StepSize::Fixed(1.0);
+
+    let mut alg = SddNewton::new(&prob, &backend, &solver, step);
+    let mut comm = CommGraph::new(&g);
+    let trace = run(
+        &mut alg,
+        &prob,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+    let part = Partition::round_robin(n, 3);
+    let out = run_partitioned_newton(&prob, &g, &part, &solver, step, iters);
+    assert_eq!(out.thetas, trace.final_thetas);
+    assert_eq!(out.comm, *comm.stats());
 }
 
 #[test]

@@ -5,7 +5,7 @@
 use sddnewton::graph::{generate, laplacian_csr};
 use sddnewton::linalg::cg::{cg_solve, CgOptions};
 use sddnewton::linalg::Csr;
-use sddnewton::net::CommStats;
+use sddnewton::net::CommGraph;
 use sddnewton::sddm::{Chain, ChainOptions, SddmSolver, SolverOptions};
 use sddnewton::util::Pcg64;
 
@@ -33,8 +33,8 @@ fn prop_def1_error_tracks_eps() {
         for eps in [0.5, 1e-2, 1e-5] {
             let solver =
                 SddmSolver::new(chain.clone(), SolverOptions { eps, max_richardson: 500 });
-            let mut stats = CommStats::default();
-            let out = solver.solve(&b, 1, &mut stats);
+            let mut comm = CommGraph::new(&g);
+            let out = solver.solve(&b, 1, &mut comm);
             assert!(out.converged, "seed={seed} eps={eps}");
             let diff: Vec<f64> =
                 out.x.iter().zip(&exact.x).map(|(a, c)| a - c).collect();
@@ -64,12 +64,12 @@ fn prop_batched_widths_consistent() {
                 b[i * w + j] = col[i];
             }
         }
-        let mut stats = CommStats::default();
-        let multi = solver.solve(&b, w, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let multi = solver.solve(&b, w, &mut comm);
         for j in 0..w {
             let col: Vec<f64> = (0..n).map(|i| b[i * w + j]).collect();
-            let mut s = CommStats::default();
-            let single = solver.solve(&col, 1, &mut s);
+            let mut c1 = CommGraph::new(&g);
+            let single = solver.solve(&col, 1, &mut c1);
             for i in 0..n {
                 assert!(
                     (multi.x[i * w + j] - single.x[i]).abs() < 1e-5,
@@ -97,8 +97,8 @@ fn prop_topologies_all_converge() {
         let b = l.matvec(&z);
         let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-7, max_richardson: 3000 });
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged, "{name}: rel={}", out.rel_residual);
     }
 }
@@ -113,8 +113,8 @@ fn failure_injection_budget_too_small_reported() {
     let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
     // One Richardson sweep cannot reach 1e-12 on a cycle.
     let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-12, max_richardson: 1 });
-    let mut stats = CommStats::default();
-    let out = solver.solve(&b, 1, &mut stats);
+    let mut comm = CommGraph::new(&g);
+    let out = solver.solve(&b, 1, &mut comm);
     assert!(!out.converged, "must report non-convergence honestly");
     assert!(out.rel_residual > 1e-12);
 }
@@ -156,8 +156,8 @@ fn prop_nonsingular_sddm_systems() {
         let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-9, max_richardson: 500 });
         let x_true = rng.normal_vec(n);
         let b = m.matvec(&x_true);
-        let mut stats = CommStats::default();
-        let out = solver.solve(&b, 1, &mut stats);
+        let mut comm = CommGraph::new(&g);
+        let out = solver.solve(&b, 1, &mut comm);
         assert!(out.converged, "seed={seed}");
         for (a, c) in out.x.iter().zip(&x_true) {
             assert!((a - c).abs() < 1e-5, "seed={seed}: {a} vs {c}");
@@ -174,9 +174,9 @@ fn message_accounting_deterministic() {
     let b = l.matvec(&z);
     let chain = Chain::build(&l, &ChainOptions::default(), &mut rng).unwrap();
     let solver = SddmSolver::new(chain, SolverOptions { eps: 1e-6, max_richardson: 300 });
-    let mut s1 = CommStats::default();
-    let mut s2 = CommStats::default();
-    let _ = solver.solve(&b, 1, &mut s1);
-    let _ = solver.solve(&b, 1, &mut s2);
-    assert_eq!(s1, s2, "same solve must cost the same messages");
+    let mut c1 = CommGraph::new(&g);
+    let mut c2 = CommGraph::new(&g);
+    let _ = solver.solve(&b, 1, &mut c1);
+    let _ = solver.solve(&b, 1, &mut c2);
+    assert_eq!(c1.stats(), c2.stats(), "same solve must cost the same messages");
 }

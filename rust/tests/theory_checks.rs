@@ -7,7 +7,7 @@ use sddnewton::algorithms::{run, RunOptions};
 use sddnewton::graph::{generate, laplacian_csr};
 use sddnewton::linalg::cholesky::spd_inverse;
 use sddnewton::linalg::Matrix;
-use sddnewton::net::CommGraph;
+use sddnewton::net::{CommGraph, Exchange};
 use sddnewton::problems::{datasets, ConsensusProblem, LocalObjective};
 use sddnewton::runtime::{LocalBackend, NativeBackend};
 use sddnewton::util::Pcg64;
@@ -197,7 +197,8 @@ fn theorem1_strict_decrease_with_theory_step() {
     let mut prev = f64::INFINITY;
     for _ in 0..6 {
         sddnewton::algorithms::ConsensusAlgorithm::step(&mut alg, &prob, &mut comm);
-        let gn = alg.dual_grad_norm(&mut comm);
+        let thetas = sddnewton::algorithms::ConsensusAlgorithm::thetas(&alg).to_vec();
+        let gn = comm.dual_grad_norm(&thetas, p);
         assert!(gn <= prev * (1.0 + 1e-9), "gradient norm increased: {gn} > {prev}");
         prev = gn;
     }
