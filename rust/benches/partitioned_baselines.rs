@@ -1,0 +1,123 @@
+//! Partitioned baselines: serial (bulk-synchronous) vs sharded worker
+//! runtime for **all six algorithms** of the paper's comparison —
+//! wall-clock speedup, modeled message ledger, and the cross-worker
+//! channel traffic (the MPI cost a real deployment pays, by partitioning
+//! strategy).
+//!
+//! Every partitioned sample is asserted bit-for-bit identical to the
+//! serial path (iterates *and* modeled comm ledger), so the tables
+//! isolate pure runtime cost: channel latency + sharded compute vs one
+//! big sweep. This is the bench-smoke guard that keeps the
+//! cross-transport equality contract for the baselines from bit-rotting.
+//!
+//!     cargo bench --bench partitioned_baselines
+//!     cargo bench --bench partitioned_baselines -- --smoke    # CI smoke run
+//!     cargo bench --bench partitioned_baselines -- --threads 4
+
+use sddnewton::algorithms::solvers::LaplacianSolver;
+use sddnewton::algorithms::{run, RunOptions};
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::{run_partitioned_baseline, Partition};
+use sddnewton::graph::generate;
+use sddnewton::harness::experiments::{make_inner_solver, make_sharded_algorithm};
+use sddnewton::net::CommGraph;
+use sddnewton::problems::{datasets, logistic::Reg};
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::Pcg64;
+
+fn main() {
+    let opts = cli_opts();
+    let smoke = is_smoke();
+    result_row("parallelism/threads", sddnewton::par::threads());
+
+    // Logistic locals: the per-node oracles (primal recovery, ADMM's
+    // inner argmin, NN's block solves) are inner Newton loops, so the
+    // compute the shards divide actually dominates.
+    let (n, m_edges, p, m_total, iters) =
+        if smoke { (24, 60, 4, 480, 2) } else { (96, 240, 10, 7_680, 4) };
+    let mut rng = Pcg64::new(2718);
+    let g = generate::random_connected(n, m_edges, &mut rng);
+    let prob = datasets::mnist_like(n, p, m_total, 0, Reg::L2, 0.05, &mut rng);
+    let backend = NativeBackend;
+
+    section(&format!(
+        "Partitioned baselines: n={n} nodes, m={m_edges} edges, p={p}, {iters} iterations"
+    ));
+
+    let kinds: [(&str, AlgoKind); 6] = [
+        ("sdd_newton", AlgoKind::SddNewton { eps: 1e-4, alpha: 1.0 }),
+        ("add_newton", AlgoKind::AddNewton { terms: 2, alpha: 1.0 }),
+        ("admm", AlgoKind::Admm { beta: 1.0 }),
+        ("gradient", AlgoKind::Gradient { alpha: 0.01 }),
+        ("averaging", AlgoKind::Averaging { beta: 0.002 }),
+        ("network_newton_2", AlgoKind::NetworkNewton { k: 2, alpha: 0.1, epsilon: 1.0 }),
+    ];
+    let ks: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let all: Vec<usize> = (0..n).collect();
+
+    for (name, kind) in &kinds {
+        // The inner solver (dual-Newton kinds) is built once and shared
+        // by the serial reference and every sharded worker — the SDDM
+        // chain is randomized, so sharing is what makes the bit-equality
+        // assertion meaningful.
+        let solver = make_inner_solver(kind, &g, &mut rng);
+        let solver_ref: Option<&dyn LaplacianSolver> = solver.as_deref();
+
+        // Serial bulk-synchronous baseline.
+        let mut serial_thetas: Vec<f64> = Vec::new();
+        let mut serial_stats = *CommGraph::new(&g).stats();
+        let s_serial = bench(&format!("{name}/serial"), &opts, || {
+            let mut alg =
+                make_sharded_algorithm(kind, &prob, &g, &backend, solver_ref, all.clone());
+            let mut comm = CommGraph::new(&g);
+            let trace = run(
+                &mut alg,
+                &prob,
+                &mut comm,
+                &RunOptions { max_iters: iters, ..Default::default() },
+            );
+            serial_thetas = trace.final_thetas;
+            serial_stats = *comm.stats();
+        });
+        result_row(
+            &format!("{name}/serial"),
+            format!("{} modeled msgs | {:.5}s median", serial_stats.messages, s_serial.median),
+        );
+
+        // Sharded workers, by worker count × partitioning strategy.
+        for &k in ks {
+            for (pname, part) in [
+                ("contiguous", Partition::contiguous(n, k)),
+                ("round_robin", Partition::round_robin(n, k)),
+                ("bfs_blocks", Partition::bfs_blocks(&g, k)),
+            ] {
+                let mut last = None;
+                let s = bench(&format!("{name}/partitioned/{pname}_k{k}"), &opts, || {
+                    last = Some(run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+                        make_sharded_algorithm(kind, &prob, &g, &backend, solver_ref, owned)
+                    }));
+                });
+                let out = last.unwrap();
+                assert_eq!(
+                    out.thetas, serial_thetas,
+                    "{name}/{pname}/k{k}: partitioned run drifted from the serial path"
+                );
+                assert_eq!(
+                    out.comm, serial_stats,
+                    "{name}/{pname}/k{k}: modeled ledger drifted"
+                );
+                let speedup = s_serial.median.max(1e-12) / s.median.max(1e-12);
+                result_row(
+                    &format!("{name}/partitioned/{pname}_k{k}"),
+                    format!(
+                        "{speedup:.2}x vs serial | {} cut edges | {} cross-worker msgs | {:.5}s median",
+                        part.cut_edges(&g),
+                        out.cross_messages,
+                        s.median
+                    ),
+                );
+            }
+        }
+    }
+}

@@ -5,31 +5,70 @@
 //! `z_i(t+1) = ω_i(t) − β g_i(t)`
 //! `θ_i(t+1) = ω_i(t+1) + (1 − 2/(9n+1)) (ω_i(t+1) − z_i(t+1))`
 //!
-//! with `g_i(t) = ∇f_i(ω_i(t))`.
+//! with `g_i(t) = ∇f_i(ω_i(t))`. The diffusion term is one application of
+//! a degree-weighted Laplacian-style operator through
+//! [`Exchange::exchange_apply`] (one round, `2m` messages), so the step
+//! runs shard-local on either transport.
 
 use super::ConsensusAlgorithm;
-use crate::net::CommGraph;
+use crate::linalg::Csr;
+use crate::net::Exchange;
 use crate::problems::ConsensusProblem;
 
-/// Distributed-averaging state.
+/// Distributed-averaging state (one shard's view).
 pub struct DistAveraging {
     /// Gradient step β.
     pub beta: f64,
+    /// Stacked θ iterate, local_n × p.
     theta: Vec<f64>,
+    /// Stacked ω iterate, local_n × p.
     omega: Vec<f64>,
+    /// Global ids of the owned nodes, ascending.
+    owned: Vec<usize>,
+    /// Diffusion operator: offdiag `1/max(d_i,d_j)`, diagonal closing
+    /// each row to zero — `(D x)_i = Σ_j (x_j − x_i)/max(d_i,d_j)`.
+    diffusion: Csr,
+    m_edges: usize,
     p: usize,
     momentum: f64,
 }
 
 impl DistAveraging {
-    /// Initialize at θ(1) = ω(1) = z(1) = 0.
-    pub fn new(problem: &ConsensusProblem, beta: f64) -> DistAveraging {
+    /// Initialize at θ(1) = ω(1) = z(1) = 0, owning every node.
+    pub fn new(
+        problem: &ConsensusProblem,
+        g: &crate::graph::Graph,
+        beta: f64,
+    ) -> DistAveraging {
+        Self::new_sharded(problem, g, beta, (0..problem.n()).collect())
+    }
+
+    /// Shard-local instance owning the given global nodes (ascending).
+    pub fn new_sharded(
+        problem: &ConsensusProblem,
+        g: &crate::graph::Graph,
+        beta: f64,
+        owned: Vec<usize>,
+    ) -> DistAveraging {
         let n = problem.n();
         let p = problem.p;
+        let mut trips = Vec::new();
+        for i in 0..n {
+            let mut diag = 0.0;
+            for &j in g.neighbors(i) {
+                let wij = 1.0 / g.degree(i).max(g.degree(j)) as f64;
+                trips.push((i, j, wij));
+                diag -= wij;
+            }
+            trips.push((i, i, diag));
+        }
         DistAveraging {
             beta,
-            theta: vec![0.0; n * p],
-            omega: vec![0.0; n * p],
+            theta: vec![0.0; owned.len() * p],
+            omega: vec![0.0; owned.len() * p],
+            owned,
+            diffusion: Csr::from_triplets(n, n, &trips),
+            m_edges: g.m(),
             p,
             momentum: 1.0 - 2.0 / (9.0 * n as f64 + 1.0),
         }
@@ -41,38 +80,24 @@ impl ConsensusAlgorithm for DistAveraging {
         "Distributed Averaging".to_string()
     }
 
-    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
+    fn step(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
-        let n = problem.n();
-        let g = comm.graph();
-        let degree: Vec<f64> = (0..n).map(|i| g.degree(i) as f64).collect();
-        let gathered = comm.gather_neighbors(&self.theta, p);
-
-        let mut omega_next = vec![0.0; n * p];
-        let mut z_next = vec![0.0; n * p];
-        for i in 0..n {
+        let ln = self.owned.len();
+        // Diffusion term on θ (one neighbor-exchange round).
+        let mut diff = vec![0.0; ln * p];
+        exch.exchange_apply(&self.diffusion, 2 * self.m_edges as u64, &self.theta, p, &mut diff);
+        for (li, &u) in self.owned.iter().enumerate() {
             // Gradient at the current ω.
-            let grad = problem.locals[i].gradient(&self.omega[i * p..(i + 1) * p]);
-            // Diffusion term on θ.
-            let mut diff = vec![0.0; p];
-            for (j, payload) in &gathered[i] {
-                let denom = degree[i].max(degree[*j]);
-                for r in 0..p {
-                    diff[r] += (payload[r] - self.theta[i * p + r]) / denom;
-                }
-            }
+            let grad = problem.locals[u].gradient(&self.omega[li * p..(li + 1) * p]);
             for r in 0..p {
-                let idx = i * p + r;
-                omega_next[idx] = self.theta[idx] + 0.5 * diff[r] - self.beta * grad[r];
-                z_next[idx] = self.omega[idx] - self.beta * grad[r];
+                let idx = li * p + r;
+                let omega_next = self.theta[idx] + 0.5 * diff[idx] - self.beta * grad[r];
+                let z_next = self.omega[idx] - self.beta * grad[r];
+                // θ(t+1) = ω(t+1) + momentum (ω(t+1) − z(t+1)).
+                self.theta[idx] = omega_next + self.momentum * (omega_next - z_next);
+                self.omega[idx] = omega_next;
             }
         }
-        // θ(t+1) = ω(t+1) + momentum (ω(t+1) − z(t+1)).
-        for idx in 0..n * p {
-            self.theta[idx] =
-                omega_next[idx] + self.momentum * (omega_next[idx] - z_next[idx]);
-        }
-        self.omega = omega_next;
     }
 
     fn thetas(&self) -> &[f64] {
@@ -93,7 +118,7 @@ mod tests {
         let mut rng = Pcg64::new(131);
         let g = generate::random_connected(8, 16, &mut rng);
         let prob = datasets::synthetic_regression(8, 4, 160, 0.1, 0.05, &mut rng);
-        let mut alg = DistAveraging::new(&prob, 0.005);
+        let mut alg = DistAveraging::new(&prob, &g, 0.005);
         let mut comm = crate::net::CommGraph::new(&g);
         let trace = run(
             &mut alg,
@@ -115,8 +140,8 @@ mod tests {
         let mut rng = Pcg64::new(132);
         let prob5 = datasets::synthetic_regression(5, 3, 50, 0.1, 0.05, &mut rng);
         let prob50 = datasets::synthetic_regression(50, 3, 500, 0.1, 0.05, &mut rng);
-        let a5 = DistAveraging::new(&prob5, 0.01);
-        let a50 = DistAveraging::new(&prob50, 0.01);
+        let a5 = DistAveraging::new(&prob5, &generate::cycle(5), 0.01);
+        let a50 = DistAveraging::new(&prob50, &generate::cycle(50), 0.01);
         assert!(a50.momentum > a5.momentum);
         assert!(a5.momentum < 1.0 && a50.momentum < 1.0);
     }
@@ -126,9 +151,10 @@ mod tests {
         let mut rng = Pcg64::new(133);
         let g = generate::cycle(6);
         let prob = datasets::synthetic_regression(6, 3, 60, 0.1, 0.05, &mut rng);
-        let mut alg = DistAveraging::new(&prob, 0.01);
+        let mut alg = DistAveraging::new(&prob, &g, 0.01);
         let mut comm = crate::net::CommGraph::new(&g);
         alg.step(&prob, &mut comm);
         assert_eq!(comm.stats().rounds, 1);
+        assert_eq!(comm.stats().messages, 2 * g.m() as u64);
     }
 }

@@ -1,8 +1,14 @@
 //! Distributed (sub)gradient method (Nedić & Ozdaglar [1]):
 //! `θ_i ← Σ_j w_ij θ_j − α_k ∇f_i(θ_i)` with Metropolis weights.
+//!
+//! The mixing step is one application of the Metropolis weight matrix
+//! (diagonal + neighborhoods) through [`Exchange::exchange_apply`] — one
+//! neighbor-exchange round of `2m` messages — so the identical step runs
+//! shard-local on the partitioned transport.
 
-use super::{metropolis_weights, ConsensusAlgorithm};
-use crate::net::CommGraph;
+use super::{metropolis_csr, ConsensusAlgorithm};
+use crate::linalg::Csr;
+use crate::net::Exchange;
 use crate::problems::ConsensusProblem;
 
 /// Step-size schedule.
@@ -14,26 +20,44 @@ pub enum GradSchedule {
     Diminishing(f64),
 }
 
-/// Distributed gradient descent state.
+/// Distributed gradient descent state (one shard's view).
 pub struct DistGradient {
     pub schedule: GradSchedule,
+    /// Stacked iterate, local_n × p (row r holds θ(owned[r])).
     thetas: Vec<f64>,
-    weights: Vec<Vec<(usize, f64)>>,
+    /// Global ids of the owned nodes, ascending.
+    owned: Vec<usize>,
+    /// Global Metropolis mixing matrix W.
+    mixing: Csr,
+    m_edges: usize,
     k: usize,
     p: usize,
 }
 
 impl DistGradient {
-    /// Initialize at θ = 0 with Metropolis mixing weights.
+    /// Initialize at θ = 0 with Metropolis mixing weights, owning every
+    /// node.
     pub fn new(
         problem: &ConsensusProblem,
         g: &crate::graph::Graph,
         schedule: GradSchedule,
     ) -> DistGradient {
+        Self::new_sharded(problem, g, schedule, (0..problem.n()).collect())
+    }
+
+    /// Shard-local instance owning the given global nodes (ascending).
+    pub fn new_sharded(
+        problem: &ConsensusProblem,
+        g: &crate::graph::Graph,
+        schedule: GradSchedule,
+        owned: Vec<usize>,
+    ) -> DistGradient {
         DistGradient {
             schedule,
-            thetas: vec![0.0; problem.n() * problem.p],
-            weights: metropolis_weights(g),
+            thetas: vec![0.0; owned.len() * problem.p],
+            owned,
+            mixing: metropolis_csr(g),
+            m_edges: g.m(),
             k: 0,
             p: problem.p,
         }
@@ -52,35 +76,21 @@ impl ConsensusAlgorithm for DistGradient {
         "Distributed Gradients".to_string()
     }
 
-    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
+    fn step(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
-        let n = problem.n();
+        let ln = self.owned.len();
         let alpha = self.alpha();
-        let gathered = comm.gather_neighbors(&self.thetas, p);
-        let mut next = vec![0.0; n * p];
-        for i in 0..n {
-            // Mix: w_ii θ_i + Σ_j w_ij θ_j.
-            let mut mixed = vec![0.0; p];
-            for &(j, w) in &self.weights[i] {
-                if j == i {
-                    for r in 0..p {
-                        mixed[r] += w * self.thetas[i * p + r];
-                    }
-                }
-            }
-            for (j, payload) in &gathered[i] {
-                let w = self.weights[i].iter().find(|(jj, _)| jj == j).unwrap().1;
-                for r in 0..p {
-                    mixed[r] += w * payload[r];
-                }
-            }
-            // Gradient step at the *current* iterate.
-            let grad = problem.locals[i].gradient(&self.thetas[i * p..(i + 1) * p]);
+        // Mix: θ ← W θ (one neighbor-exchange round of 2m messages).
+        let mut mixed = vec![0.0; ln * p];
+        exch.exchange_apply(&self.mixing, 2 * self.m_edges as u64, &self.thetas, p, &mut mixed);
+        // Gradient step at the *current* iterate — purely local.
+        for (li, &u) in self.owned.iter().enumerate() {
+            let grad = problem.locals[u].gradient(&self.thetas[li * p..(li + 1) * p]);
             for r in 0..p {
-                next[i * p + r] = mixed[r] - alpha * grad[r];
+                mixed[li * p + r] -= alpha * grad[r];
             }
         }
-        self.thetas = next;
+        self.thetas = mixed;
         self.k += 1;
     }
 

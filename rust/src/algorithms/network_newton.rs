@@ -8,15 +8,19 @@
 //! `D_i = α ∇²f_i + 2(1 − z_ii) I` and `B_ij = z_ij I (i≠j)`,
 //! `B_ii = (1 − z_ii) I`, and the NN-K direction truncates the Neumann
 //! series `d^{(k+1)} = D⁻¹(B d^{(k)} − g)`, `d^{(0)} = −D⁻¹ g`.
-//! Each hop costs one exchange round. Note the fixed penalty biases the
-//! limit away from the exact consensus optimum — visible in Fig. 1 where
-//! NN-1/2 stall above the others.
+//!
+//! Both `I − Z` and `B` are graph-support CSR operators applied through
+//! [`Exchange::exchange_apply`] — one round for the gradient plus one per
+//! hop — so the step runs shard-local on either transport. Note the fixed
+//! penalty biases the limit away from the exact consensus optimum —
+//! visible in Fig. 1 where NN-1/2 stall above the others.
 
 use super::{metropolis_weights, ConsensusAlgorithm};
-use crate::net::CommGraph;
+use crate::linalg::Csr;
+use crate::net::Exchange;
 use crate::problems::ConsensusProblem;
 
-/// Network Newton state.
+/// Network Newton state (one shard's view).
 pub struct NetworkNewton {
     /// Taylor truncation K (1 or 2 in the paper's experiments).
     pub k_hops: usize,
@@ -24,13 +28,22 @@ pub struct NetworkNewton {
     pub alpha: f64,
     /// Step size ε.
     pub epsilon: f64,
+    /// Stacked iterate, local_n × p.
     thetas: Vec<f64>,
-    weights: Vec<Vec<(usize, f64)>>,
+    /// Global ids of the owned nodes, ascending.
+    owned: Vec<usize>,
+    /// Self-weights z_ii, indexed by global node.
+    self_weight: Vec<f64>,
+    /// Penalty-gradient operator `I − Z`.
+    grad_op: Csr,
+    /// Splitting operator `B` (diag `1 − z_ii`, offdiag `z_ij`).
+    hop_op: Csr,
+    m_edges: usize,
     p: usize,
 }
 
 impl NetworkNewton {
-    /// Initialize at θ = 0.
+    /// Initialize at θ = 0, owning every node.
     pub fn new(
         problem: &ConsensusProblem,
         g: &crate::graph::Graph,
@@ -38,18 +51,61 @@ impl NetworkNewton {
         alpha: f64,
         epsilon: f64,
     ) -> NetworkNewton {
+        Self::new_sharded(problem, g, k_hops, alpha, epsilon, (0..problem.n()).collect())
+    }
+
+    /// Shard-local instance owning the given global nodes (ascending).
+    pub fn new_sharded(
+        problem: &ConsensusProblem,
+        g: &crate::graph::Graph,
+        k_hops: usize,
+        alpha: f64,
+        epsilon: f64,
+        owned: Vec<usize>,
+    ) -> NetworkNewton {
+        let n = problem.n();
+        let weights = metropolis_weights(g);
+        let mut self_weight = vec![0.0; n];
+        let mut grad_trips = Vec::new();
+        let mut hop_trips = Vec::new();
+        for (i, row) in weights.iter().enumerate() {
+            for &(j, z) in row {
+                if j == i {
+                    self_weight[i] = z;
+                    grad_trips.push((i, i, 1.0 - z));
+                    hop_trips.push((i, i, 1.0 - z));
+                } else {
+                    grad_trips.push((i, j, -z));
+                    hop_trips.push((i, j, z));
+                }
+            }
+        }
         NetworkNewton {
             k_hops,
             alpha,
             epsilon,
-            thetas: vec![0.0; problem.n() * problem.p],
-            weights: metropolis_weights(g),
+            thetas: vec![0.0; owned.len() * problem.p],
+            owned,
+            self_weight,
+            grad_op: Csr::from_triplets(n, n, &grad_trips),
+            hop_op: Csr::from_triplets(n, n, &hop_trips),
+            m_edges: g.m(),
             p: problem.p,
         }
     }
 
-    fn self_weight(&self, i: usize) -> f64 {
-        self.weights[i].iter().find(|(j, _)| *j == i).unwrap().1
+    /// Block solve with `D_u = α ∇²f_u + 2(1 − z_uu) I`, expressed through
+    /// the structured `solve_shifted`: `(αH + cI)x = r ⇔ (H + (c/α)I)x = r/α`.
+    fn d_solve(
+        &self,
+        problem: &ConsensusProblem,
+        u: usize,
+        theta_row: &[f64],
+        rhs: &[f64],
+    ) -> Vec<f64> {
+        let c = 2.0 * (1.0 - self.self_weight[u]);
+        let scaled: Vec<f64> = rhs.iter().map(|v| v / self.alpha).collect();
+        problem.locals[u].solve_shifted(theta_row, &scaled, c / self.alpha)
     }
 }
 
@@ -58,74 +114,45 @@ impl ConsensusAlgorithm for NetworkNewton {
         format!("Network Newton-{}", self.k_hops)
     }
 
-    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
+    fn step(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
-        let n = problem.n();
+        let ln = self.owned.len();
 
-        // Penalty gradient (one exchange round on y).
-        let gathered = comm.gather_neighbors(&self.thetas, p);
-        let mut g = vec![0.0; n * p];
-        for i in 0..n {
-            let zii = self.self_weight(i);
-            let grad_f = problem.locals[i].gradient(&self.thetas[i * p..(i + 1) * p]);
+        // Penalty gradient g = (I − Z) y + α ∇f (one exchange round).
+        let mut g = vec![0.0; ln * p];
+        exch.exchange_apply(&self.grad_op, 2 * self.m_edges as u64, &self.thetas, p, &mut g);
+        for (li, &u) in self.owned.iter().enumerate() {
+            let grad_f = problem.locals[u].gradient(&self.thetas[li * p..(li + 1) * p]);
             for r in 0..p {
-                g[i * p + r] = (1.0 - zii) * self.thetas[i * p + r] + self.alpha * grad_f[r];
-            }
-            for (j, payload) in &gathered[i] {
-                let zij = self.weights[i].iter().find(|(jj, _)| jj == j).unwrap().1;
-                for r in 0..p {
-                    g[i * p + r] -= zij * payload[r];
-                }
+                g[li * p + r] += self.alpha * grad_f[r];
             }
         }
 
-        // Block solves with D_i = α ∇²f_i + 2(1 − z_ii) I, expressed through
-        // the structured `solve_shifted`: (αH + cI)x = r ⇔ (H + (c/α)I)x = r/α.
-        let d_solve = |i: usize, thetas: &[f64], rhs: &[f64]| -> Vec<f64> {
-            let zii = self.self_weight(i);
-            let c = 2.0 * (1.0 - zii);
-            let scaled: Vec<f64> = rhs.iter().map(|v| v / self.alpha).collect();
-            problem.locals[i].solve_shifted(
-                &thetas[i * p..(i + 1) * p],
-                &scaled,
-                c / self.alpha,
-            )
-        };
-
         // d⁰ = −D⁻¹ g; d^{k+1} = D⁻¹(B d^k − g). Each hop: 1 exchange round.
-        let mut d = vec![0.0; n * p];
-        for i in 0..n {
-            let sol = d_solve(i, &self.thetas, &g[i * p..(i + 1) * p]);
+        let mut d = vec![0.0; ln * p];
+        for (li, &u) in self.owned.iter().enumerate() {
+            let row = li * p..(li + 1) * p;
+            let sol = self.d_solve(problem, u, &self.thetas[row.clone()], &g[row]);
             for r in 0..p {
-                d[i * p + r] = -sol[r];
+                d[li * p + r] = -sol[r];
             }
         }
         for _ in 0..self.k_hops {
-            let gathered_d = comm.gather_neighbors(&d, p);
-            let mut next = vec![0.0; n * p];
-            for i in 0..n {
-                let zii = self.self_weight(i);
-                // (B d)_i = (1 − z_ii) d_i + Σ_j z_ij d_j.
-                let mut bd = vec![0.0; p];
+            let mut bd = vec![0.0; ln * p];
+            exch.exchange_apply(&self.hop_op, 2 * self.m_edges as u64, &d, p, &mut bd);
+            let mut next = vec![0.0; ln * p];
+            for (li, &u) in self.owned.iter().enumerate() {
+                let mut rhs = bd[li * p..(li + 1) * p].to_vec();
                 for r in 0..p {
-                    bd[r] = (1.0 - zii) * d[i * p + r];
+                    rhs[r] -= g[li * p + r];
                 }
-                for (j, payload) in &gathered_d[i] {
-                    let zij = self.weights[i].iter().find(|(jj, _)| jj == j).unwrap().1;
-                    for r in 0..p {
-                        bd[r] += zij * payload[r];
-                    }
-                }
-                for r in 0..p {
-                    bd[r] -= g[i * p + r];
-                }
-                let sol = d_solve(i, &self.thetas, &bd);
-                next[i * p..(i + 1) * p].copy_from_slice(&sol);
+                let sol = self.d_solve(problem, u, &self.thetas[li * p..(li + 1) * p], &rhs);
+                next[li * p..(li + 1) * p].copy_from_slice(&sol);
             }
             d = next;
         }
 
-        for idx in 0..n * p {
+        for idx in 0..ln * p {
             self.thetas[idx] += self.epsilon * d[idx];
         }
     }

@@ -15,16 +15,16 @@
 //! solver yields the paper's "Distributed Newton ADD" baseline; the SDDM
 //! solver yields SDD-Newton proper.
 //!
-//! The whole step runs against the [`Exchange`] trait
-//! ([`SddNewton::step_ex`]): on the bulk-synchronous
-//! [`CommGraph`] one instance owns every node; on the partitioned worker
-//! runtime (`coordinator::run_partitioned_newton`) each worker drives its
-//! own sharded instance over a channel transport — bit-for-bit
-//! identically.
+//! The whole step runs against the [`Exchange`] trait (the
+//! [`ConsensusAlgorithm::step`] contract every algorithm now shares): on
+//! the bulk-synchronous [`crate::net::CommGraph`] one instance owns every
+//! node; on the partitioned worker runtime
+//! (`coordinator::run_partitioned_newton`) each worker drives its own
+//! sharded instance over a channel transport — bit-for-bit identically.
 
 use super::solvers::LaplacianSolver;
 use super::ConsensusAlgorithm;
-use crate::net::{CommGraph, Exchange};
+use crate::net::Exchange;
 use crate::problems::ConsensusProblem;
 use crate::runtime::LocalBackend;
 
@@ -177,8 +177,9 @@ impl<'a> SddNewton<'a> {
         }
     }
 
-    /// One SDD-Newton outer iteration against any transport.
-    pub fn step_ex(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
+    /// One SDD-Newton outer iteration against any transport — the body
+    /// of [`ConsensusAlgorithm::step`].
+    fn step_impl(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
         let ln = self.owned.len();
         debug_assert_eq!(exch.local_n(), ln);
@@ -257,8 +258,8 @@ impl ConsensusAlgorithm for SddNewton<'_> {
         self.label.clone()
     }
 
-    fn step(&mut self, problem: &ConsensusProblem, comm: &mut CommGraph) {
-        self.step_ex(problem, comm);
+    fn step(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
+        self.step_impl(problem, exch);
     }
 
     fn thetas(&self) -> &[f64] {

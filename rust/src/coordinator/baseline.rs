@@ -1,0 +1,263 @@
+//! Generic partitioned runtime: run *any* [`ConsensusAlgorithm`] on `k`
+//! worker OS threads owning node shards — the deployment shape of the
+//! paper's 8-worker MatlabMPI pool, for the baselines as well as the
+//! contribution.
+//!
+//! Each worker wires up a
+//! [`crate::net::partitioned::ShardExchange`] and drives an unmodified
+//! shard-local algorithm instance against it; the leader aggregates
+//! per-iteration metrics strictly keyed by iteration tag
+//! ([`super::gather_by_iteration`]). Because every algorithm steps
+//! through the same [`Exchange`] primitives on both transports, the
+//! result — iterates, per-iteration objectives, and the modeled comm
+//! ledger — is bit-for-bit identical to the bulk-synchronous
+//! `run(alg, …, CommGraph, …)` path (asserted for every algorithm in
+//! `tests/prop_parallel.rs`).
+
+use super::partition::Partition;
+use crate::algorithms::ConsensusAlgorithm;
+use crate::graph::{laplacian_csr, Graph};
+use crate::net::partitioned::{build_shard_plans, run_reducer, ReduceMsg, ShardExchange, WireMsg};
+use crate::net::{CommStats, Exchange};
+use crate::problems::ConsensusProblem;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// Per-iteration metric row from a partitioned run, aggregated by the
+/// leader keyed on the iteration tag (a fast worker's iteration `t+1`
+/// snapshot is buffered, never blended into iteration `t`).
+#[derive(Debug, Clone)]
+pub struct PartitionedIter {
+    pub iter: usize,
+    /// Global objective Σ f_i(θ_i) at the stacked iterate.
+    pub objective: f64,
+    /// Consensus error at the stacked iterate.
+    pub consensus_error: f64,
+    /// Cumulative real cross-worker channel payloads (the MPI traffic of
+    /// the deployment), summed over workers.
+    pub cross_messages: u64,
+    /// Modeled per-node communication — identical on every worker, and
+    /// identical to what the bulk-synchronous path records.
+    pub comm: CommStats,
+}
+
+/// Outcome of a partitioned run.
+#[derive(Debug, Clone)]
+pub struct PartitionedRun {
+    pub records: Vec<PartitionedIter>,
+    /// Final stacked iterate (global `n × p`).
+    pub thetas: Vec<f64>,
+    /// Final modeled communication counters.
+    pub comm: CommStats,
+    /// Final cumulative cross-worker channel payloads.
+    pub cross_messages: u64,
+}
+
+/// Metric message: (iteration, worker, owned θ rows, cumulative cross
+/// messages, modeled stats snapshot).
+type MetricMsg = (usize, usize, Vec<f64>, u64, CommStats);
+
+/// Statically-typed core of the partitioned runtime. `make_alg(worker,
+/// owned)` builds each worker's shard-local instance (called on the
+/// worker's own thread); `finish(worker, owned, alg)` observes the final
+/// instance before it is dropped, letting callers extract extra state
+/// (e.g. SDD-Newton's dual iterate).
+pub fn run_partitioned_with<A, F, G>(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    make_alg: F,
+    finish: G,
+) -> PartitionedRun
+where
+    A: ConsensusAlgorithm,
+    F: Fn(usize, Vec<usize>) -> A + Sync,
+    G: Fn(usize, &[usize], &A) + Sync,
+{
+    let n = g.n;
+    let p = problem.p;
+    let k = part.k;
+    assert_eq!(problem.n(), n, "problem/graph size mismatch");
+    let lap = laplacian_csr(g);
+    let plans = build_shard_plans(g, part);
+    let owned_lists: Vec<Vec<usize>> = plans.iter().map(|pl| pl.owned.clone()).collect();
+
+    // Worker↔worker boundary channels.
+    let mut wire_tx: Vec<Sender<WireMsg>> = Vec::with_capacity(k);
+    let mut wire_rx: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<WireMsg>();
+        wire_tx.push(tx);
+        wire_rx.push(Some(rx));
+    }
+    // All-reduce channels through the reducer.
+    let (red_tx, red_rx) = channel::<ReduceMsg>();
+    let mut red_out_tx: Vec<Sender<Vec<f64>>> = Vec::with_capacity(k);
+    let mut red_out_rx: Vec<Option<Receiver<Vec<f64>>>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<Vec<f64>>();
+        red_out_tx.push(tx);
+        red_out_rx.push(Some(rx));
+    }
+    // Worker→leader metrics.
+    let (met_tx, met_rx) = channel::<MetricMsg>();
+
+    let final_thetas = Mutex::new(vec![0.0; n * p]);
+    let mut records = Vec::with_capacity(iters);
+
+    std::thread::scope(|scope| {
+        {
+            let owned_of = owned_lists.clone();
+            let txs = red_out_tx.clone();
+            scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
+        }
+        for (wid, plan) in plans.into_iter().enumerate() {
+            let peer_txs: Vec<Sender<WireMsg>> =
+                plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
+            let inbox = wire_rx[wid].take().unwrap();
+            let from_red = red_out_rx[wid].take().unwrap();
+            let red = red_tx.clone();
+            let met = met_tx.clone();
+            let lap = &lap;
+            let final_thetas = &final_thetas;
+            let make_alg = &make_alg;
+            let finish = &finish;
+            scope.spawn(move || {
+                let mut exch =
+                    ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
+                let mut alg = make_alg(wid, exch.owned().to_vec());
+                for it in 0..iters {
+                    alg.step(problem, &mut exch);
+                    met.send((it, wid, alg.thetas().to_vec(), exch.cross_messages(), *exch.stats()))
+                        .expect("leader died");
+                }
+                let owned = exch.owned().to_vec();
+                {
+                    let mut ft = final_thetas.lock().unwrap();
+                    for (li, &u) in owned.iter().enumerate() {
+                        ft[u * p..(u + 1) * p]
+                            .copy_from_slice(&alg.thetas()[li * p..(li + 1) * p]);
+                    }
+                }
+                finish(wid, &owned, &alg);
+            });
+        }
+        drop(red_tx);
+        drop(red_out_tx);
+        drop(met_tx);
+
+        // Leader: aggregate metrics strictly by iteration tag (see
+        // `gather_by_iteration`).
+        let mut stacked = vec![0.0; n * p];
+        super::gather_by_iteration(&met_rx, k, iters, |m: &MetricMsg| m.0, |it, got| {
+            let mut cross_total = 0u64;
+            let mut comm = CommStats::default();
+            for (_, wid, snapshot, cross, stats) in got {
+                for (li, &u) in owned_lists[wid].iter().enumerate() {
+                    stacked[u * p..(u + 1) * p]
+                        .copy_from_slice(&snapshot[li * p..(li + 1) * p]);
+                }
+                cross_total += cross;
+                // Every worker tallies the identical modeled ledger.
+                debug_assert!(comm == CommStats::default() || comm == stats);
+                comm = stats;
+            }
+            records.push(PartitionedIter {
+                iter: it + 1,
+                objective: problem.objective(&stacked),
+                consensus_error: problem.consensus_error(&stacked),
+                cross_messages: cross_total,
+                comm,
+            });
+        });
+    });
+
+    let comm = records.last().map(|r| r.comm).unwrap_or_default();
+    let cross_messages = records.last().map(|r| r.cross_messages).unwrap_or(0);
+    PartitionedRun {
+        records,
+        thetas: final_thetas.into_inner().unwrap(),
+        comm,
+        cross_messages,
+    }
+}
+
+fn no_finish<A>(_wid: usize, _owned: &[usize], _alg: &A) {}
+
+/// Run any consensus algorithm on `k` worker threads owning the
+/// partition's shards. `make_alg` receives each worker's owned global
+/// node ids (ascending) and returns the worker's shard-local instance;
+/// it is called once per worker, on the worker's thread.
+pub fn run_partitioned_baseline<'a>(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    make_alg: &(dyn Fn(Vec<usize>) -> Box<dyn ConsensusAlgorithm + 'a> + Sync),
+) -> PartitionedRun {
+    run_partitioned_with(problem, g, part, iters, |_wid, owned| make_alg(owned), no_finish)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::gradient::{DistGradient, GradSchedule};
+    use crate::algorithms::{run, RunOptions};
+    use crate::graph::generate;
+    use crate::net::CommGraph;
+    use crate::problems::datasets;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn baseline_harness_matches_bulk_for_gradient() {
+        let mut rng = Pcg64::new(801);
+        let g = generate::random_connected(10, 22, &mut rng);
+        let prob = datasets::synthetic_regression(10, 3, 150, 0.2, 0.05, &mut rng);
+        let iters = 5;
+
+        let mut reference = DistGradient::new(&prob, &g, GradSchedule::Constant(1e-3));
+        let mut comm = CommGraph::new(&g);
+        let trace = run(
+            &mut reference,
+            &prob,
+            &mut comm,
+            &RunOptions { max_iters: iters, ..Default::default() },
+        );
+
+        let part = Partition::round_robin(10, 3);
+        let out = run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+            Box::new(DistGradient::new_sharded(
+                &prob,
+                &g,
+                GradSchedule::Constant(1e-3),
+                owned,
+            )) as Box<dyn crate::algorithms::ConsensusAlgorithm>
+        });
+        assert_eq!(out.thetas, trace.final_thetas, "iterate drifted");
+        assert_eq!(out.comm, *comm.stats(), "ledger drifted");
+        assert_eq!(out.records.len(), iters);
+        for (r, ref_r) in out.records.iter().zip(&trace.records[1..]) {
+            assert_eq!(r.objective, ref_r.objective, "iter {} drifted", r.iter);
+        }
+        assert!(out.cross_messages > 0, "round-robin shards must talk");
+    }
+
+    #[test]
+    fn single_worker_has_zero_cross_traffic() {
+        let mut rng = Pcg64::new(802);
+        let g = generate::cycle(8);
+        let prob = datasets::synthetic_regression(8, 3, 80, 0.2, 0.05, &mut rng);
+        let part = Partition::contiguous(8, 1);
+        let out = run_partitioned_baseline(&prob, &g, &part, 3, &|owned| {
+            Box::new(DistGradient::new_sharded(
+                &prob,
+                &g,
+                GradSchedule::Constant(1e-3),
+                owned,
+            )) as Box<dyn crate::algorithms::ConsensusAlgorithm>
+        });
+        assert_eq!(out.cross_messages, 0);
+        assert!(out.records[2].objective.is_finite());
+    }
+}

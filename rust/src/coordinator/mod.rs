@@ -8,8 +8,10 @@
 pub mod scheduler;
 pub mod partition;
 pub mod worker;
+pub mod baseline;
 pub mod newton;
 
+pub use baseline::{run_partitioned_baseline, run_partitioned_with, PartitionedIter, PartitionedRun};
 pub use newton::{run_partitioned_newton, NewtonIter, PartitionedNewtonRun};
 pub use partition::Partition;
 pub use scheduler::{Campaign, JobOutcome};

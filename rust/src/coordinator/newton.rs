@@ -2,46 +2,29 @@
 //! recovery, dual gradient, two inner Laplacian solves, kernel
 //! correction, dual ascent) executed on `k` worker OS threads that own
 //! node shards — the deployment shape of the paper's 8-worker MatlabMPI
-//! pool. Mirrors [`super::worker::run_partitioned_gradient`], but where
-//! the gradient runtime hand-rolls its exchange, this one drives the
-//! *unmodified* [`SddNewton::step_ex`] over a
-//! [`crate::net::partitioned::ShardExchange`] per worker: every chain
-//! X-application and all-reduce of the inner SDDM solver rides the
-//! channel transport, and the result is bit-for-bit identical to the
-//! bulk-synchronous `SddNewton` + `CommGraph` path (asserted in
-//! `tests/prop_parallel.rs`).
+//! pool. A thin wrapper over the generic
+//! [`super::baseline::run_partitioned_with`] harness that additionally
+//! collects the final dual iterate: every chain X-application and
+//! all-reduce of the inner SDDM solver rides the channel transport, and
+//! the result is bit-for-bit identical to the bulk-synchronous
+//! `SddNewton` + `CommGraph` path (asserted in `tests/prop_parallel.rs`).
 
+use super::baseline::{run_partitioned_with, PartitionedIter, PartitionedRun};
 use super::partition::Partition;
 use crate::algorithms::sdd_newton::{SddNewton, StepSize};
 use crate::algorithms::solvers::LaplacianSolver;
-use crate::algorithms::ConsensusAlgorithm;
-use crate::graph::{laplacian_csr, Graph};
-use crate::net::partitioned::{build_shard_plans, run_reducer, ReduceMsg, ShardExchange, WireMsg};
-use crate::net::{CommStats, Exchange};
+use crate::graph::Graph;
+use crate::net::CommStats;
 use crate::problems::ConsensusProblem;
 use crate::runtime::NativeBackend;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
-/// Per-iteration metric row from a partitioned Newton run, aggregated by
-/// the leader keyed on the iteration tag (a fast worker's iteration `t+1`
-/// snapshot is buffered, never blended into iteration `t`).
-#[derive(Debug, Clone)]
-pub struct NewtonIter {
-    pub iter: usize,
-    /// Global objective Σ f_i(y_i) at the stacked primal iterate.
-    pub objective: f64,
-    /// Consensus error at the stacked primal iterate.
-    pub consensus_error: f64,
-    /// Cumulative real cross-worker channel payloads (the MPI traffic of
-    /// the deployment), summed over workers.
-    pub cross_messages: u64,
-    /// Modeled per-node communication — identical on every worker, and
-    /// identical to what the bulk-synchronous path records.
-    pub comm: CommStats,
-}
+/// Per-iteration metric row from a partitioned Newton run (the generic
+/// harness row).
+pub type NewtonIter = PartitionedIter;
 
-/// Outcome of a partitioned Newton run.
+/// Outcome of a partitioned Newton run: the generic [`PartitionedRun`]
+/// plus the final dual iterate.
 #[derive(Debug, Clone)]
 pub struct PartitionedNewtonRun {
     pub records: Vec<NewtonIter>,
@@ -55,17 +38,13 @@ pub struct PartitionedNewtonRun {
     pub cross_messages: u64,
 }
 
-/// Metric message: (iteration, worker, owned y rows, cumulative cross
-/// messages, modeled stats snapshot).
-type MetricMsg = (usize, usize, Vec<f64>, u64, CommStats);
-
 /// Run SDD-Newton on `k` worker threads owning the partition's shards.
 ///
 /// Each worker constructs a sharded [`SddNewton`] over a
-/// [`NativeBackend`] and steps it against its [`ShardExchange`]; the
-/// inner `solver` (SDDM chain, Neumann, or lockstep CG) is shared
-/// read-only across workers. The leader aggregates per-iteration metrics
-/// keyed by iteration.
+/// [`NativeBackend`] and steps it against its shard exchange; the inner
+/// `solver` (SDDM chain, Neumann, or lockstep CG) is shared read-only
+/// across workers. The leader aggregates per-iteration metrics keyed by
+/// iteration.
 pub fn run_partitioned_newton(
     problem: &ConsensusProblem,
     g: &Graph,
@@ -74,115 +53,28 @@ pub fn run_partitioned_newton(
     step: StepSize,
     iters: usize,
 ) -> PartitionedNewtonRun {
-    let n = g.n;
+    static BACKEND: NativeBackend = NativeBackend;
     let p = problem.p;
-    let k = part.k;
-    assert_eq!(problem.n(), n, "problem/graph size mismatch");
-    let lap = laplacian_csr(g);
-    let plans = build_shard_plans(g, part);
-    let owned_lists: Vec<Vec<usize>> = plans.iter().map(|pl| pl.owned.clone()).collect();
-
-    // Worker↔worker boundary channels.
-    let mut wire_tx: Vec<Sender<WireMsg>> = Vec::with_capacity(k);
-    let mut wire_rx: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (tx, rx) = channel::<WireMsg>();
-        wire_tx.push(tx);
-        wire_rx.push(Some(rx));
-    }
-    // All-reduce channels through the reducer.
-    let (red_tx, red_rx) = channel::<ReduceMsg>();
-    let mut red_out_tx: Vec<Sender<Vec<f64>>> = Vec::with_capacity(k);
-    let mut red_out_rx: Vec<Option<Receiver<Vec<f64>>>> = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (tx, rx) = channel::<Vec<f64>>();
-        red_out_tx.push(tx);
-        red_out_rx.push(Some(rx));
-    }
-    // Worker→leader metrics.
-    let (met_tx, met_rx) = channel::<MetricMsg>();
-
-    let final_thetas = Mutex::new(vec![0.0; n * p]);
-    let final_lambda = Mutex::new(vec![0.0; n * p]);
-    let mut records = Vec::with_capacity(iters);
-
-    std::thread::scope(|scope| {
-        {
-            let owned_of = owned_lists.clone();
-            let txs = red_out_tx.clone();
-            scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
-        }
-        for (wid, plan) in plans.into_iter().enumerate() {
-            let peer_txs: Vec<Sender<WireMsg>> =
-                plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
-            let inbox = wire_rx[wid].take().unwrap();
-            let from_red = red_out_rx[wid].take().unwrap();
-            let red = red_tx.clone();
-            let met = met_tx.clone();
-            let lap = &lap;
-            let (final_thetas, final_lambda) = (&final_thetas, &final_lambda);
-            scope.spawn(move || {
-                let mut exch =
-                    ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
-                let backend = NativeBackend;
-                let mut alg = SddNewton::new_sharded(
-                    problem,
-                    &backend,
-                    solver,
-                    step,
-                    exch.owned().to_vec(),
-                );
-                for it in 0..iters {
-                    alg.step_ex(problem, &mut exch);
-                    met.send((it, wid, alg.thetas().to_vec(), exch.cross_messages(), *exch.stats()))
-                        .expect("leader died");
-                }
-                let mut ft = final_thetas.lock().unwrap();
-                let mut fl = final_lambda.lock().unwrap();
-                for (li, &u) in alg.owned().iter().enumerate() {
-                    ft[u * p..(u + 1) * p].copy_from_slice(&alg.thetas()[li * p..(li + 1) * p]);
-                    fl[u * p..(u + 1) * p].copy_from_slice(&alg.lambda()[li * p..(li + 1) * p]);
-                }
-            });
-        }
-        drop(red_tx);
-        drop(red_out_tx);
-        drop(met_tx);
-
-        // Leader: aggregate metrics strictly by iteration tag (see
-        // `gather_by_iteration`).
-        let mut stacked = vec![0.0; n * p];
-        super::gather_by_iteration(&met_rx, k, iters, |m: &MetricMsg| m.0, |it, got| {
-            let mut cross_total = 0u64;
-            let mut comm = CommStats::default();
-            for (_, wid, snapshot, cross, stats) in got {
-                for (li, &u) in owned_lists[wid].iter().enumerate() {
-                    stacked[u * p..(u + 1) * p]
-                        .copy_from_slice(&snapshot[li * p..(li + 1) * p]);
-                }
-                cross_total += cross;
-                // Every worker tallies the identical modeled ledger.
-                debug_assert!(comm == CommStats::default() || comm == stats);
-                comm = stats;
+    let final_lambda = Mutex::new(vec![0.0; g.n * p]);
+    let run: PartitionedRun = run_partitioned_with(
+        problem,
+        g,
+        part,
+        iters,
+        |_wid, owned| SddNewton::new_sharded(problem, &BACKEND, solver, step, owned),
+        |_wid, owned, alg| {
+            let mut fl = final_lambda.lock().unwrap();
+            for (li, &u) in owned.iter().enumerate() {
+                fl[u * p..(u + 1) * p].copy_from_slice(&alg.lambda()[li * p..(li + 1) * p]);
             }
-            records.push(NewtonIter {
-                iter: it + 1,
-                objective: problem.objective(&stacked),
-                consensus_error: problem.consensus_error(&stacked),
-                cross_messages: cross_total,
-                comm,
-            });
-        });
-    });
-
-    let comm = records.last().map(|r| r.comm).unwrap_or_default();
-    let cross_messages = records.last().map(|r| r.cross_messages).unwrap_or(0);
+        },
+    );
     PartitionedNewtonRun {
-        records,
-        thetas: final_thetas.into_inner().unwrap(),
+        records: run.records,
+        thetas: run.thetas,
         lambda: final_lambda.into_inner().unwrap(),
-        comm,
-        cross_messages,
+        comm: run.comm,
+        cross_messages: run.cross_messages,
     }
 }
 

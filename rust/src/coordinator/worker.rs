@@ -5,9 +5,14 @@
 //! per-iteration metrics.
 //!
 //! The diffusion-style algorithms (distributed gradients here) map
-//! directly onto this runtime; the result is bit-for-bit identical to the
-//! bulk-synchronous `algorithms::gradient::DistGradient`, which the tests
-//! assert.
+//! directly onto this runtime; the result matches the bulk-synchronous
+//! `algorithms::gradient::DistGradient` to floating-point tolerance (the
+//! hand-rolled mixing sums neighbor terms in a different order than the
+//! CSR operator the Exchange-generic algorithm applies). The *bit-exact*
+//! sharded runtime for every algorithm is
+//! [`super::baseline::run_partitioned_baseline`]; this module remains as
+//! the minimal, dependency-free reference for the leader's
+//! iteration-keyed metric aggregation discipline.
 
 use super::partition::Partition;
 use crate::algorithms::metropolis_weights;

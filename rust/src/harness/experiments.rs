@@ -5,9 +5,10 @@ use crate::algorithms::averaging::DistAveraging;
 use crate::algorithms::gradient::{DistGradient, GradSchedule};
 use crate::algorithms::network_newton::NetworkNewton;
 use crate::algorithms::sdd_newton::{SddNewton, StepSize};
-use crate::algorithms::solvers::{sddm_for_graph, ExactCgSolver, NeumannSolver};
-use crate::algorithms::{run, RunOptions, Trace};
+use crate::algorithms::solvers::{sddm_for_graph, ExactCgSolver, LaplacianSolver, NeumannSolver};
+use crate::algorithms::{run, ConsensusAlgorithm, RunOptions, Trace};
 use crate::config::{AlgoKind, ExperimentConfig, ProblemKind};
+use crate::coordinator::{run_partitioned_baseline, Partition, PartitionedRun};
 use crate::graph::{generate, Graph};
 use crate::net::CommGraph;
 use crate::problems::logistic::Reg;
@@ -105,7 +106,7 @@ pub fn run_single(
             run(&mut a, problem, &mut comm, opts)
         }
         AlgoKind::Averaging { beta } => {
-            let mut a = DistAveraging::new(problem, beta);
+            let mut a = DistAveraging::new(problem, g, beta);
             run(&mut a, problem, &mut comm, opts)
         }
         AlgoKind::NetworkNewton { k, alpha, epsilon } => {
@@ -113,6 +114,99 @@ pub fn run_single(
             run(&mut a, problem, &mut comm, opts)
         }
     }
+}
+
+/// Build the inner Laplacian solver a dual-Newton kind needs (`None` for
+/// the first-order/ADMM baselines). Bulk and partitioned runs of one
+/// comparison must share a single instance — the SDDM chain construction
+/// is randomized, so rebuilding it would break bit-for-bit parity.
+pub fn make_inner_solver(
+    kind: &AlgoKind,
+    g: &Graph,
+    rng: &mut Pcg64,
+) -> Option<Box<dyn LaplacianSolver>> {
+    match *kind {
+        AlgoKind::SddNewton { eps, .. } => Some(Box::new(sddm_for_graph(g, eps, rng))),
+        AlgoKind::AddNewton { terms, .. } => Some(Box::new(NeumannSolver::from_graph(g, terms))),
+        AlgoKind::ExactNewton { .. } => Some(Box::new(ExactCgSolver::from_graph(g, 1e-12))),
+        _ => None,
+    }
+}
+
+/// Build a shard-local instance of `kind` owning the given global nodes —
+/// the factory consumed by [`run_partitioned_baseline`] (and, with
+/// `owned = 0..n`, the bulk-path construction). Dual-Newton kinds borrow
+/// the caller's shared inner `solver`.
+pub fn make_sharded_algorithm<'a>(
+    kind: &AlgoKind,
+    problem: &'a ConsensusProblem,
+    g: &Graph,
+    backend: &'a NativeBackend,
+    solver: Option<&'a dyn LaplacianSolver>,
+    owned: Vec<usize>,
+) -> Box<dyn ConsensusAlgorithm + 'a> {
+    match *kind {
+        AlgoKind::SddNewton { alpha, .. }
+        | AlgoKind::AddNewton { alpha, .. }
+        | AlgoKind::ExactNewton { alpha } => {
+            let solver = solver.expect("dual-Newton kinds need the shared inner solver");
+            Box::new(SddNewton::new_sharded(
+                problem,
+                backend,
+                solver,
+                StepSize::Fixed(alpha),
+                owned,
+            ))
+        }
+        AlgoKind::Admm { beta } => Box::new(Admm::new_sharded(problem, g, beta, owned)),
+        AlgoKind::Gradient { alpha } => Box::new(DistGradient::new_sharded(
+            problem,
+            g,
+            GradSchedule::Constant(alpha),
+            owned,
+        )),
+        AlgoKind::Averaging { beta } => {
+            Box::new(DistAveraging::new_sharded(problem, g, beta, owned))
+        }
+        AlgoKind::NetworkNewton { k, alpha, epsilon } => {
+            Box::new(NetworkNewton::new_sharded(problem, g, k, alpha, epsilon, owned))
+        }
+    }
+}
+
+/// Run `kind` on both transports — the bulk-synchronous [`CommGraph`]
+/// reference and the partitioned worker runtime over `part` — sharing the
+/// inner solver instance, so callers can assert the bit-for-bit parity
+/// contract (iterates, per-iteration objectives, modeled comm ledger).
+pub fn run_cross_transport(
+    kind: &AlgoKind,
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    rng: &mut Pcg64,
+) -> (Trace, PartitionedRun) {
+    let backend = NativeBackend;
+    let solver = make_inner_solver(kind, g, rng);
+    let solver_ref: Option<&dyn LaplacianSolver> = solver.as_deref();
+    // Bulk-synchronous reference.
+    let mut alg =
+        make_sharded_algorithm(kind, problem, g, &backend, solver_ref, (0..problem.n()).collect());
+    let mut comm = CommGraph::new(g);
+    let trace = run(
+        // `Box<dyn ConsensusAlgorithm>` implements the trait itself, so
+        // `&mut alg` unsizes from a concrete type (no object-lifetime
+        // shortening behind `&mut`, which invariance would reject).
+        &mut alg,
+        problem,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+    // Partitioned run over the same shared state.
+    let out = run_partitioned_baseline(problem, g, part, iters, &|owned| {
+        make_sharded_algorithm(kind, problem, g, &backend, solver_ref, owned)
+    });
+    (trace, out)
 }
 
 /// The paper's step-size protocol: "Step-sizes were determined separately

@@ -1,16 +1,18 @@
 //! `sddnewton` — CLI launcher for the distributed SDD-Newton system.
 //!
 //! Subcommands:
-//!   run      — run an experiment preset (or JSON config) and write traces
-//!   campaign — run several presets and write a report bundle
-//!   comm     — Fig. 2(c) communication-overhead sweep
-//!   solve    — demo the distributed SDDM solver on a random Laplacian
-//!   info     — platform + artifact inventory
+//!   run         — run an experiment preset (or JSON config) and write traces
+//!   campaign    — run several presets and write a report bundle
+//!   comm        — Fig. 2(c) communication-overhead sweep
+//!   partitioned — run every configured algorithm on the sharded worker
+//!                 runtime and check bit-for-bit parity with the bulk path
+//!   solve       — demo the distributed SDDM solver on a random Laplacian
+//!   info        — platform + artifact inventory
 //!
 //! (clap is unavailable offline; the parser is hand-rolled.)
 
 use sddnewton::config::{AlgoKind, ExperimentConfig, Json};
-use sddnewton::coordinator::Campaign;
+use sddnewton::coordinator::{Campaign, Partition};
 use sddnewton::harness::{self, report};
 use sddnewton::util::Pcg64;
 
@@ -20,6 +22,7 @@ fn main() {
         Some("run") => cmd_run(&args[1..]),
         Some("campaign") => cmd_campaign(&args[1..]),
         Some("comm") => cmd_comm(&args[1..]),
+        Some("partitioned") => cmd_partitioned(&args[1..]),
         Some("solve") => cmd_solve(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | Some("-h") | Some("--help") | None => {
@@ -46,6 +49,8 @@ fn print_usage() {
            sddnewton run --config <file.json> [--out trace.csv]\n\
            sddnewton campaign [--out results/] [preset...]\n\
            sddnewton comm [--experiment <preset>] [--targets 1e-1,1e-2,...] [--out comm.csv]\n\
+           sddnewton partitioned [--experiment <preset>] [--workers K] [--iters N]\n\
+                         [--partitioning contiguous|round_robin|bfs] [--algorithms a,b,c]\n\
            sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
            sddnewton info\n\
          \n\
@@ -234,6 +239,81 @@ fn cmd_comm(args: &[String]) -> i32 {
             return 1;
         }
         println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_partitioned(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match build_config(&f) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let workers: usize = f.kv.get("workers").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let iters = f
+        .kv
+        .get("iters")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| cfg.max_iters.min(10));
+    let scheme = f.kv.get("partitioning").map(String::as_str).unwrap_or("contiguous");
+    let mut rng = Pcg64::new(cfg.seed);
+    let g = harness::experiments::build_graph(&cfg, &mut rng);
+    let problem = harness::experiments::build_problem(&cfg, &mut rng);
+    let part = match scheme {
+        "contiguous" => Partition::contiguous(g.n, workers),
+        "round_robin" => Partition::round_robin(g.n, workers),
+        "bfs" | "bfs_blocks" => Partition::bfs_blocks(&g, workers),
+        other => {
+            eprintln!("unknown partitioning '{other}'");
+            return 2;
+        }
+    };
+    println!(
+        "'{}' on {} workers ({scheme}, {} cut edges), {iters} iterations — \
+         bulk vs sharded parity",
+        cfg.name,
+        workers,
+        part.cut_edges(&g)
+    );
+    println!(
+        "{:<28} {:>8} {:>14} {:>14} {:>12}",
+        "algorithm", "parity", "modeled msgs", "cross msgs", "objective"
+    );
+    let mut drifted = false;
+    for kind in &cfg.algorithms {
+        let (trace, out) =
+            harness::experiments::run_cross_transport(kind, &problem, &g, &part, iters, &mut rng);
+        let ledger_ok = trace
+            .records
+            .last()
+            .map(|r| r.comm == out.comm)
+            .unwrap_or(false);
+        // Bit-pattern equality: still exact, but NaN-safe should a
+        // deliberately untuned step diverge identically on both paths.
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        let ok = bits(&out.thetas) == bits(&trace.final_thetas) && ledger_ok;
+        drifted |= !ok;
+        println!(
+            "{:<28} {:>8} {:>14} {:>14} {:>12.5e}",
+            trace.algorithm,
+            if ok { "ok" } else { "DRIFT" },
+            out.comm.messages,
+            out.cross_messages,
+            out.records.last().map(|r| r.objective).unwrap_or(f64::NAN),
+        );
+    }
+    if drifted {
+        eprintln!("transport parity violated — sharded run drifted from the bulk path");
+        return 1;
     }
     0
 }

@@ -11,7 +11,10 @@
 //!   every node and each primitive is a metered in-memory sweep. Algorithm
 //!   code physically cannot read non-neighbor state except through the
 //!   trait, which keeps the implementations honestly distributed while
-//!   running fast on one core.
+//!   running fast on one core. (There is deliberately no per-neighbor
+//!   gather primitive: neighbor access is always a graph-support CSR
+//!   operator through [`Exchange::exchange_apply`], which is what lets
+//!   every algorithm run shard-local unchanged.)
 //! - [`partitioned::ShardExchange`] is the partitioned transport: graph
 //!   nodes are divided among worker OS threads (as the paper divides 100
 //!   nodes over 8 pool workers) and boundary payloads ride mpsc channels,
@@ -194,24 +197,6 @@ impl<'g> CommGraph<'g> {
         }
         self.stats.record_edge_round(self.g.m(), w);
     }
-
-    /// Per-neighbor gather: for each node, the list of `(neighbor, payload)`
-    /// pairs. Needed by ADMM/averaging updates that weight neighbors
-    /// individually. Cost: `2m` messages of `w` floats.
-    pub fn gather_neighbors(&mut self, x: &[f64], w: usize) -> Vec<Vec<(usize, Vec<f64>)>> {
-        let n = self.g.n;
-        assert_eq!(x.len(), n * w);
-        let mut out: Vec<Vec<(usize, Vec<f64>)>> = (0..n)
-            .map(|i| Vec::with_capacity(self.g.degree(i)))
-            .collect();
-        for i in 0..n {
-            for &j in self.g.neighbors(i) {
-                out[i].push((j, x[j * w..(j + 1) * w].to_vec()));
-            }
-        }
-        self.stats.record_edge_round(self.g.m(), w);
-        out
-    }
 }
 
 impl Exchange for CommGraph<'_> {
@@ -350,16 +335,6 @@ mod tests {
         assert_eq!(comm.stats().rounds, 2);
         comm.reset_stats();
         assert_eq!(comm.stats().messages, 0);
-    }
-
-    #[test]
-    fn gather_matches_topology() {
-        let g = generate::path(4);
-        let mut comm = CommGraph::new(&g);
-        let x = vec![10.0, 20.0, 30.0, 40.0];
-        let gathered = comm.gather_neighbors(&x, 1);
-        assert_eq!(gathered[0], vec![(1usize, vec![20.0])]);
-        assert_eq!(gathered[1], vec![(0, vec![10.0]), (2, vec![30.0])]);
     }
 
     #[test]

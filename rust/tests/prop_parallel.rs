@@ -3,11 +3,14 @@
 //! sweep — row blocks are owned by exactly one thread and each output
 //! element is produced by the same scalar operations in the same order.
 
+use sddnewton::algorithms::incremental::IncrementalSddNewton;
 use sddnewton::algorithms::sdd_newton::{SddNewton, StepSize};
 use sddnewton::algorithms::solvers::{sddm_for_graph, NeumannSolver};
-use sddnewton::algorithms::{run, RunOptions};
-use sddnewton::coordinator::{run_partitioned_newton, Partition};
-use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::algorithms::{run, ConsensusAlgorithm, RunOptions};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::{run_partitioned_baseline, run_partitioned_newton, Partition};
+use sddnewton::graph::{generate, laplacian_csr, Graph};
+use sddnewton::harness::experiments::run_cross_transport;
 use sddnewton::linalg::Csr;
 use sddnewton::net::CommGraph;
 use sddnewton::runtime::NativeBackend;
@@ -192,6 +195,105 @@ fn partitioned_add_newton_matches_bulk() {
     let out = run_partitioned_newton(&prob, &g, &part, &solver, step, iters);
     assert_eq!(out.thetas, trace.final_thetas);
     assert_eq!(out.comm, *comm.stats());
+}
+
+/// The three partitionings the parity suite sweeps for a worker count.
+fn partitionings(g: &Graph, k: usize) -> [Partition; 3] {
+    [
+        Partition::contiguous(g.n, k),
+        Partition::round_robin(g.n, k),
+        Partition::bfs_blocks(g, k),
+    ]
+}
+
+/// The acceptance property of this PR: **every** `ConsensusAlgorithm` —
+/// not just SDD-Newton — produces bit-for-bit identical traces (final
+/// iterate, per-iteration objectives and consensus errors, and the
+/// modeled `CommStats` ledger) on the bulk-synchronous `CommGraph` and
+/// the channel-based `ShardExchange`, across contiguous, round-robin and
+/// BFS partitionings and k ∈ {1, 2, 5} workers. Each comparison shares
+/// the inner solver instance (`run_cross_transport`), so the only moving
+/// part is the transport.
+#[test]
+fn every_algorithm_bit_for_bit_across_transports() {
+    let mut rng = Pcg64::new(9100);
+    let n = 11;
+    let g = generate::random_connected(n, 24, &mut rng);
+    let prob =
+        sddnewton::problems::datasets::synthetic_regression(n, 3, 165, 0.2, 0.05, &mut rng);
+    let iters = 3;
+    let kinds = [
+        AlgoKind::SddNewton { eps: 1e-5, alpha: 1.0 },
+        AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
+        AlgoKind::ExactNewton { alpha: 1.0 },
+        AlgoKind::Admm { beta: 1.0 },
+        AlgoKind::Gradient { alpha: 0.01 },
+        AlgoKind::Averaging { beta: 0.005 },
+        AlgoKind::NetworkNewton { k: 2, alpha: 0.1, epsilon: 1.0 },
+    ];
+    for kind in &kinds {
+        for k in [1usize, 2, 5] {
+            for part in partitionings(&g, k) {
+                let (trace, out) =
+                    run_cross_transport(kind, &prob, &g, &part, iters, &mut rng);
+                let tag = format!("{} k={k}", trace.algorithm);
+                assert_eq!(out.thetas, trace.final_thetas, "{tag}: iterate drifted");
+                assert_eq!(out.comm, *trace.records.last().map(|r| &r.comm).unwrap(),
+                    "{tag}: modeled comm ledger drifted");
+                assert_eq!(out.records.len(), iters, "{tag}: record count");
+                for (r, ref_r) in out.records.iter().zip(&trace.records[1..]) {
+                    assert_eq!(r.iter, ref_r.iter, "{tag}");
+                    assert_eq!(r.objective, ref_r.objective, "{tag}: iter {} objective", r.iter);
+                    assert_eq!(
+                        r.consensus_error, ref_r.consensus_error,
+                        "{tag}: iter {} consensus",
+                        r.iter
+                    );
+                    assert_eq!(r.comm, ref_r.comm, "{tag}: iter {} ledger", r.iter);
+                }
+            }
+        }
+    }
+}
+
+/// Incremental SDD-Newton has no `AlgoKind`; its parity is asserted
+/// directly: the partial-refresh window is keyed to *global* node ids, so
+/// a shard refreshes exactly its slice of the window and the mixed
+/// fresh/stale primal matches the bulk path bit for bit.
+#[test]
+fn incremental_newton_bit_for_bit_across_transports() {
+    let mut rng = Pcg64::new(9101);
+    let n = 10;
+    let g = generate::random_connected(n, 22, &mut rng);
+    let prob =
+        sddnewton::problems::datasets::synthetic_regression(n, 3, 150, 0.2, 0.05, &mut rng);
+    let solver = sddm_for_graph(&g, 1e-4, &mut rng);
+    let backend = NativeBackend;
+    let iters = 4;
+
+    let mut bulk = IncrementalSddNewton::new(&prob, &backend, &solver, 0.8, 0.4);
+    let mut comm = CommGraph::new(&g);
+    let trace = run(
+        &mut bulk,
+        &prob,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+
+    for k in [1usize, 2, 5] {
+        for part in partitionings(&g, k) {
+            let out = run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+                Box::new(IncrementalSddNewton::new_sharded(
+                    &prob, &backend, &solver, 0.8, 0.4, owned,
+                )) as Box<dyn ConsensusAlgorithm + '_>
+            });
+            assert_eq!(out.thetas, trace.final_thetas, "k={k}: primal drifted");
+            assert_eq!(out.comm, *comm.stats(), "k={k}: ledger drifted");
+            for (r, ref_r) in out.records.iter().zip(&trace.records[1..]) {
+                assert_eq!(r.objective, ref_r.objective, "k={k}: iter {} drifted", r.iter);
+            }
+        }
+    }
 }
 
 #[test]
