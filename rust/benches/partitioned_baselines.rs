@@ -2,25 +2,30 @@
 //! runtime for **all six algorithms** of the paper's comparison —
 //! wall-clock speedup, modeled message ledger, and the cross-worker
 //! channel traffic (the MPI cost a real deployment pays, by partitioning
-//! strategy).
+//! strategy), plus the bytes each algorithm actually puts on the wire.
 //!
 //! Every partitioned sample is asserted bit-for-bit identical to the
-//! serial path (iterates *and* modeled comm ledger), so the tables
-//! isolate pure runtime cost: channel latency + sharded compute vs one
-//! big sweep. This is the bench-smoke guard that keeps the
-//! cross-transport equality contract for the baselines from bit-rotting.
+//! serial path (iterates *and* modeled comm ledger), **and** its real
+//! cross-worker message count is asserted equal to the plan-driven wire
+//! model (`modeled_cross_messages`) — the bench-smoke guard that keeps
+//! both the cross-transport equality contract and the wire-truth
+//! contract from bit-rotting. A final section runs SDD-Newton with the
+//! preprocessed SquaredChain solver through its overlay halo plans.
 //!
 //!     cargo bench --bench partitioned_baselines
 //!     cargo bench --bench partitioned_baselines -- --smoke    # CI smoke run
 //!     cargo bench --bench partitioned_baselines -- --threads 4
 
-use sddnewton::algorithms::solvers::LaplacianSolver;
+use sddnewton::algorithms::sdd_newton::{SddNewton, StepSize};
+use sddnewton::algorithms::solvers::{squared_sddm_for_graph, LaplacianSolver};
 use sddnewton::algorithms::{run, RunOptions};
 use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
 use sddnewton::config::AlgoKind;
-use sddnewton::coordinator::{run_partitioned_baseline, Partition};
+use sddnewton::coordinator::{run_partitioned_baseline, run_partitioned_newton, Partition};
 use sddnewton::graph::generate;
-use sddnewton::harness::experiments::{make_inner_solver, make_sharded_algorithm};
+use sddnewton::harness::experiments::{
+    make_inner_solver, make_sharded_algorithm, modeled_cross_messages,
+};
 use sddnewton::net::CommGraph;
 use sddnewton::problems::{datasets, logistic::Reg};
 use sddnewton::runtime::NativeBackend;
@@ -107,17 +112,75 @@ fn main() {
                     out.comm, serial_stats,
                     "{name}/{pname}/k{k}: modeled ledger drifted"
                 );
+                // Bytes-on-wire assertion: real channel traffic must equal
+                // the plan-driven wire model composed from the modeled
+                // ledger — runs in smoke mode too (CI).
+                let wire_model = modeled_cross_messages(kind, &g, &part, iters, &serial_stats);
+                assert_eq!(
+                    out.cross_messages, wire_model,
+                    "{name}/{pname}/k{k}: real wire traffic drifted from the modeled ledger"
+                );
                 let speedup = s_serial.median.max(1e-12) / s.median.max(1e-12);
                 result_row(
                     &format!("{name}/partitioned/{pname}_k{k}"),
                     format!(
-                        "{speedup:.2}x vs serial | {} cut edges | {} cross-worker msgs | {:.5}s median",
+                        "{speedup:.2}x vs serial | {} cut edges | {} wire msgs (= model) | \
+                         {} wire bytes | {:.5}s median",
                         part.cut_edges(&g),
                         out.cross_messages,
+                        8 * out.cross_floats,
                         s.median
                     ),
                 );
             }
         }
+    }
+
+    // Overlay halo plans: SDD-Newton with the preprocessed SquaredChain
+    // solver — level supports exceed the graph edges, so every level round
+    // rides a registered overlay plan instead of being bulk-only.
+    section("Overlay halo plans: preprocessed SDD-Newton (SquaredChain levels sharded)");
+    let sq = squared_sddm_for_graph(&g, 1e-4, 0.0, &mut rng);
+    let iters_sq = iters.min(2);
+    let mut alg = SddNewton::new(&prob, &backend, &sq, StepSize::Fixed(1.0));
+    let mut comm = CommGraph::new(&g);
+    let trace = run(
+        &mut alg,
+        &prob,
+        &mut comm,
+        &RunOptions { max_iters: iters_sq, ..Default::default() },
+    );
+    result_row(
+        "sdd_newton_squared/serial",
+        format!("{} modeled msgs", comm.stats().messages),
+    );
+    for &k in ks {
+        let part = Partition::contiguous(n, k);
+        let mut last = None;
+        let s = bench(&format!("sdd_newton_squared/partitioned/contiguous_k{k}"), &opts, || {
+            last = Some(run_partitioned_newton(
+                &prob,
+                &g,
+                &part,
+                &sq,
+                StepSize::Fixed(1.0),
+                iters_sq,
+            ));
+        });
+        let out = last.unwrap();
+        assert_eq!(
+            out.thetas, trace.final_thetas,
+            "sdd_newton_squared/k{k}: overlay run drifted from the serial path"
+        );
+        assert_eq!(out.comm, *comm.stats(), "sdd_newton_squared/k{k}: modeled ledger drifted");
+        result_row(
+            &format!("sdd_newton_squared/partitioned/contiguous_k{k}"),
+            format!(
+                "{} wire msgs | {} wire bytes | {:.5}s median",
+                out.cross_messages,
+                8 * out.cross_floats,
+                s.median
+            ),
+        );
     }
 }

@@ -42,7 +42,11 @@
 //! only ships the values stage `s−1` just updated (their degree sum); the
 //! dual round ships the last stage's updates. The per-iteration total is
 //! `2m + Σ_u deg(u) = 4m` — identical to the classic two-round
-//! gather formulation.
+//! gather formulation. The wire matches the model: every round goes
+//! through [`Exchange::exchange_apply_fresh`] with the stage's fresh-row
+//! mask, so a plan-driven transport ships only that stage's active
+//! boundary rows instead of re-shipping the whole halo each stage (the
+//! over-shipping the `prop_wire` suite regression-tests).
 
 use super::ConsensusAlgorithm;
 use crate::graph::Graph;
@@ -117,6 +121,11 @@ pub struct Admm {
     stage_of: Vec<usize>,
     /// Number of sweep stages.
     stages: usize,
+    /// Fresh-row masks: `stage_masks[s][u]` ⇔ `stage_of[u] == s` — what a
+    /// plan-driven transport ships after stage `s` updates.
+    stage_masks: Vec<Vec<bool>>,
+    /// All-rows mask for the stage-0 full halo refresh.
+    full_mask: Vec<bool>,
     /// Directed messages charged per sweep stage.
     stage_msgs: Vec<u64>,
     /// Directed messages charged for the dual round.
@@ -147,6 +156,9 @@ impl Admm {
         let stage_of = sweep_stages(g);
         let stages = stage_of.iter().max().map(|&s| s + 1).unwrap_or(0);
         let (stage_msgs, dual_msgs) = stage_message_schedule(g, &stage_of);
+        let stage_masks: Vec<Vec<bool>> = (0..stages)
+            .map(|s| (0..g.n).map(|u| stage_of[u] == s).collect())
+            .collect();
         Admm {
             beta,
             inner_iters: 8,
@@ -155,6 +167,8 @@ impl Admm {
             owned,
             stage_of,
             stages,
+            stage_masks,
+            full_mask: vec![true; g.n],
             stage_msgs,
             dual_msgs,
             adjacency: crate::graph::laplacian::adjacency_csr(g),
@@ -188,7 +202,19 @@ impl ConsensusAlgorithm for Admm {
         let mut work = self.thetas.clone();
         for s in 0..self.stages {
             let mut nbr = vec![0.0; ln * p];
-            exch.exchange_apply(&self.adjacency, self.stage_msgs[s], &work, p, &mut nbr);
+            // Stage 0 refreshes the full halo (`work` = θ^k everywhere);
+            // stage s>0 only ships the rows stage s−1 just updated — on a
+            // plan-driven transport exactly the stage's active boundary
+            // crosses the wire, matching the modeled per-stage charge.
+            let fresh = if s == 0 { &self.full_mask } else { &self.stage_masks[s - 1] };
+            exch.exchange_apply_fresh(
+                &self.adjacency,
+                fresh,
+                self.stage_msgs[s],
+                &work,
+                p,
+                &mut nbr,
+            );
             for (li, &u) in self.owned.iter().enumerate() {
                 if self.stage_of[u] != s {
                     continue;
@@ -222,7 +248,8 @@ impl ConsensusAlgorithm for Admm {
         // Aggregated dual update μ ← μ − β (L θ^{k+1}): one more boundary
         // round shipping the final stage's fresh values.
         let mut lap = vec![0.0; ln * p];
-        exch.exchange_apply(&self.laplacian, self.dual_msgs, &work, p, &mut lap);
+        let last = &self.stage_masks[self.stages - 1];
+        exch.exchange_apply_fresh(&self.laplacian, last, self.dual_msgs, &work, p, &mut lap);
         for i in 0..ln * p {
             self.mu[i] -= beta * lap[i];
         }

@@ -13,7 +13,11 @@
 //!
 //! Plugging [`crate::algorithms::solvers::NeumannSolver`] in as the inner
 //! solver yields the paper's "Distributed Newton ADD" baseline; the SDDM
-//! solver yields SDD-Newton proper.
+//! solver yields SDD-Newton proper; the preprocessed
+//! [`crate::sddm::SquaredSddmSolver`] trades denser messages for far
+//! fewer rounds and — via the overlay halo plans its levels register —
+//! runs on the partitioned transport too, so no inner solver is
+//! bulk-only anymore.
 //!
 //! The whole step runs against the [`Exchange`] trait (the
 //! [`ConsensusAlgorithm::step`] contract every algorithm now shares): on
@@ -125,6 +129,7 @@ impl<'a> SddNewton<'a> {
         alg.label = match solver.name() {
             "neumann" => "Distributed ADD-Newton".to_string(),
             "exact-cg" => "Distributed Newton (exact)".to_string(),
+            "sddm-squared" => "Distributed SDD-Newton (preprocessed)".to_string(),
             _ => "Distributed SDD-Newton".to_string(),
         };
         let v0 = vec![0.0; ln * p];

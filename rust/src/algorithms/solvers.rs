@@ -10,7 +10,7 @@
 
 use crate::linalg::Csr;
 use crate::net::Exchange;
-use crate::sddm::{SddmSolver, SolveOutcome};
+use crate::sddm::{SddmSolver, SolveOutcome, SquaredSddmSolver};
 
 /// A distributed solver for Laplacian systems `L x_r = b_r`, batched over
 /// `w` right-hand sides (stacked shard-local `local_n × w` row-major).
@@ -27,6 +27,20 @@ impl LaplacianSolver for SddmSolver {
     }
     fn name(&self) -> &'static str {
         "sddm"
+    }
+}
+
+/// The preprocessed (explicit-squaring) SDDM solver: one
+/// extended-neighborhood round per level application. Its level supports
+/// exceed the graph edges, so on the partitioned transport it rides the
+/// *overlay halo plans* the levels register — the same solver code runs
+/// on either transport.
+impl LaplacianSolver for SquaredSddmSolver {
+    fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
+        self.chain.solve(b, w, self.opts.eps, self.opts.max_richardson, exch)
+    }
+    fn name(&self) -> &'static str {
+        "sddm-squared"
     }
 }
 
@@ -221,6 +235,26 @@ pub fn sddm_for_graph(
     let chain = crate::sddm::Chain::build(&l, &crate::sddm::ChainOptions::default(), rng)
         .expect("Laplacian is SDD by construction");
     SddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
+}
+
+/// Convenience: build the preprocessed (explicitly squared) SDDM solver
+/// for a graph at accuracy ε. `prune_tol` drops tiny entries after each
+/// squaring (0 = exact levels).
+pub fn squared_sddm_for_graph(
+    g: &crate::graph::Graph,
+    eps: f64,
+    prune_tol: f64,
+    rng: &mut crate::util::Pcg64,
+) -> SquaredSddmSolver {
+    let l = crate::graph::laplacian_csr(g);
+    let chain = crate::sddm::SquaredChain::build(
+        &l,
+        &crate::sddm::ChainOptions::default(),
+        prune_tol,
+        rng,
+    )
+    .expect("Laplacian is SDD by construction");
+    SquaredSddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
 }
 
 #[cfg(test)]

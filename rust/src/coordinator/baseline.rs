@@ -34,8 +34,14 @@ pub struct PartitionedIter {
     /// Consensus error at the stacked iterate.
     pub consensus_error: f64,
     /// Cumulative real cross-worker channel payloads (the MPI traffic of
-    /// the deployment), summed over workers.
+    /// the deployment), summed over workers. Plan-driven shipping makes
+    /// this equal the wire model (`net::partitioned::plan_cross_rows`
+    /// composed per algorithm by
+    /// `harness::experiments::modeled_cross_messages`).
     pub cross_messages: u64,
+    /// Cumulative real floats moved over the channels (×8 for bytes on
+    /// the wire), summed over workers.
+    pub cross_floats: u64,
     /// Modeled per-node communication — identical on every worker, and
     /// identical to what the bulk-synchronous path records.
     pub comm: CommStats,
@@ -51,11 +57,13 @@ pub struct PartitionedRun {
     pub comm: CommStats,
     /// Final cumulative cross-worker channel payloads.
     pub cross_messages: u64,
+    /// Final cumulative cross-worker floats (×8 for bytes on the wire).
+    pub cross_floats: u64,
 }
 
 /// Metric message: (iteration, worker, owned θ rows, cumulative cross
-/// messages, modeled stats snapshot).
-type MetricMsg = (usize, usize, Vec<f64>, u64, CommStats);
+/// messages, cumulative cross floats, modeled stats snapshot).
+type MetricMsg = (usize, usize, Vec<f64>, u64, u64, CommStats);
 
 /// Statically-typed core of the partitioned runtime. `make_alg(worker,
 /// owned)` builds each worker's shard-local instance (called on the
@@ -113,8 +121,9 @@ where
             scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
         }
         for (wid, plan) in plans.into_iter().enumerate() {
-            let peer_txs: Vec<Sender<WireMsg>> =
-                plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
+            // All-to-all senders (indexed by worker id): overlay exchange
+            // plans may reach workers beyond the graph-halo neighbors.
+            let peer_txs: Vec<Sender<WireMsg>> = wire_tx.clone();
             let inbox = wire_rx[wid].take().unwrap();
             let from_red = red_out_rx[wid].take().unwrap();
             let red = red_tx.clone();
@@ -129,8 +138,15 @@ where
                 let mut alg = make_alg(wid, exch.owned().to_vec());
                 for it in 0..iters {
                     alg.step(problem, &mut exch);
-                    met.send((it, wid, alg.thetas().to_vec(), exch.cross_messages(), *exch.stats()))
-                        .expect("leader died");
+                    met.send((
+                        it,
+                        wid,
+                        alg.thetas().to_vec(),
+                        exch.cross_messages(),
+                        exch.cross_floats(),
+                        *exch.stats(),
+                    ))
+                    .expect("leader died");
                 }
                 let owned = exch.owned().to_vec();
                 {
@@ -152,13 +168,15 @@ where
         let mut stacked = vec![0.0; n * p];
         super::gather_by_iteration(&met_rx, k, iters, |m: &MetricMsg| m.0, |it, got| {
             let mut cross_total = 0u64;
+            let mut cross_floats_total = 0u64;
             let mut comm = CommStats::default();
-            for (_, wid, snapshot, cross, stats) in got {
+            for (_, wid, snapshot, cross, cfloats, stats) in got {
                 for (li, &u) in owned_lists[wid].iter().enumerate() {
                     stacked[u * p..(u + 1) * p]
                         .copy_from_slice(&snapshot[li * p..(li + 1) * p]);
                 }
                 cross_total += cross;
+                cross_floats_total += cfloats;
                 // Every worker tallies the identical modeled ledger.
                 debug_assert!(comm == CommStats::default() || comm == stats);
                 comm = stats;
@@ -168,6 +186,7 @@ where
                 objective: problem.objective(&stacked),
                 consensus_error: problem.consensus_error(&stacked),
                 cross_messages: cross_total,
+                cross_floats: cross_floats_total,
                 comm,
             });
         });
@@ -175,11 +194,13 @@ where
 
     let comm = records.last().map(|r| r.comm).unwrap_or_default();
     let cross_messages = records.last().map(|r| r.cross_messages).unwrap_or(0);
+    let cross_floats = records.last().map(|r| r.cross_floats).unwrap_or(0);
     PartitionedRun {
         records,
         thetas: final_thetas.into_inner().unwrap(),
         comm,
         cross_messages,
+        cross_floats,
     }
 }
 

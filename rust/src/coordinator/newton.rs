@@ -36,6 +36,8 @@ pub struct PartitionedNewtonRun {
     pub comm: CommStats,
     /// Final cumulative cross-worker channel payloads.
     pub cross_messages: u64,
+    /// Final cumulative cross-worker floats (×8 for bytes on the wire).
+    pub cross_floats: u64,
 }
 
 /// Run SDD-Newton on `k` worker threads owning the partition's shards.
@@ -75,6 +77,7 @@ pub fn run_partitioned_newton(
         lambda: final_lambda.into_inner().unwrap(),
         comm: run.comm,
         cross_messages: run.cross_messages,
+        cross_floats: run.cross_floats,
     }
 }
 
@@ -117,6 +120,41 @@ mod tests {
             assert_eq!(r.objective, ref_r.objective, "iter {} metrics drifted", r.iter);
         }
         assert!(out.cross_messages > 0, "3 shards on a connected graph must talk");
+    }
+
+    /// The last bulk-only path is gone: the preprocessed SquaredChain
+    /// solver — whose level supports exceed the graph edges — rides the
+    /// partitioned transport through its registered overlay halo plans,
+    /// bit-for-bit identical to the bulk path.
+    #[test]
+    fn partitioned_newton_with_preprocessed_solver_matches_bulk() {
+        use crate::algorithms::solvers::squared_sddm_for_graph;
+        let mut rng = Pcg64::new(703);
+        let g = generate::random_connected(12, 26, &mut rng);
+        let prob = datasets::synthetic_regression(12, 3, 180, 0.2, 0.05, &mut rng);
+        let solver = squared_sddm_for_graph(&g, 1e-5, 0.0, &mut rng);
+        let backend = crate::runtime::NativeBackend;
+        let iters = 3;
+
+        let mut alg = SddNewton::new(&prob, &backend, &solver, StepSize::Fixed(1.0));
+        let mut comm = CommGraph::new(&g);
+        let trace = run(
+            &mut alg,
+            &prob,
+            &mut comm,
+            &RunOptions { max_iters: iters, ..Default::default() },
+        );
+        assert_eq!(trace.algorithm, "Distributed SDD-Newton (preprocessed)");
+
+        for part in [Partition::contiguous(12, 3), Partition::round_robin(12, 4)] {
+            let out =
+                run_partitioned_newton(&prob, &g, &part, &solver, StepSize::Fixed(1.0), iters);
+            assert_eq!(out.thetas, trace.final_thetas, "k={}: overlay iterate drifted", part.k);
+            assert_eq!(out.lambda, alg.lambda(), "k={}: overlay dual drifted", part.k);
+            assert_eq!(out.comm, *comm.stats(), "k={}: overlay ledger drifted", part.k);
+            assert!(out.cross_messages > 0, "sharded overlay runs must talk");
+            assert!(out.cross_floats >= out.cross_messages, "floats cover payload rows");
+        }
     }
 
     #[test]

@@ -174,6 +174,60 @@ pub fn make_sharded_algorithm<'a>(
     }
 }
 
+/// Wire model of a partitioned run: the cross-worker payload count a
+/// plan-driven `ShardExchange` ships for `iters` iterations of `kind`,
+/// composed from the bulk path's modeled [`CommStats`] ledger and the
+/// partition — the "modeled messages" side of the real-vs-modeled checks
+/// in `tests/prop_wire.rs`, the `partitioned_baselines` bench and the
+/// `sddnewton partitioned` CLI.
+///
+/// Two facts make the composition exact. Every exchange round of the
+/// non-ADMM algorithms applies an operator with *full edge support*
+/// (Metropolis/diffusion mixing, Laplacian, adjacency, the chain walk
+/// matrix), so each round ships exactly the graph-halo boundary —
+/// [`plan_cross_rows`](crate::net::partitioned::plan_cross_rows) of the
+/// Laplacian — and the round count is read off
+/// the ledger (`rounds − 2·allreduces`). ADMM's wavefront instead ships
+/// per-stage fresh rows, mirrored here stage by stage from the same
+/// coloring schedule the algorithm uses. Each all-reduce moves one up and
+/// one down payload per worker through the leader (`2k` when `k > 1`).
+pub fn modeled_cross_messages(
+    kind: &AlgoKind,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    bulk: &crate::net::CommStats,
+) -> u64 {
+    use crate::net::partitioned::plan_cross_rows;
+    if part.k <= 1 {
+        return 0;
+    }
+    let owner = &part.assignment;
+    let allreduce_wire = 2 * part.k as u64 * bulk.allreduces;
+    match kind {
+        AlgoKind::Admm { .. } => {
+            let stage_of = crate::algorithms::admm::sweep_stages(g);
+            let stages = stage_of.iter().max().map(|&s| s + 1).unwrap_or(0);
+            let adj = crate::graph::laplacian::adjacency_csr(g);
+            let lap = crate::graph::laplacian_csr(g);
+            let mask = |s: usize| -> Vec<bool> { stage_of.iter().map(|&t| t == s).collect() };
+            let mut per_iter = plan_cross_rows(&adj, owner, None);
+            for s in 1..stages {
+                per_iter += plan_cross_rows(&adj, owner, Some(mask(s - 1).as_slice()));
+            }
+            if stages > 0 {
+                per_iter += plan_cross_rows(&lap, owner, Some(mask(stages - 1).as_slice()));
+            }
+            iters as u64 * per_iter + allreduce_wire
+        }
+        _ => {
+            let exchange_rounds = bulk.rounds - 2 * bulk.allreduces;
+            let boundary = plan_cross_rows(&crate::graph::laplacian_csr(g), owner, None);
+            exchange_rounds * boundary + allreduce_wire
+        }
+    }
+}
+
 /// Run `kind` on both transports — the bulk-synchronous [`CommGraph`]
 /// reference and the partitioned worker runtime over `part` — sharing the
 /// inner solver instance, so callers can assert the bit-for-bit parity

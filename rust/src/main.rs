@@ -285,8 +285,8 @@ fn cmd_partitioned(args: &[String]) -> i32 {
         part.cut_edges(&g)
     );
     println!(
-        "{:<28} {:>8} {:>14} {:>14} {:>12}",
-        "algorithm", "parity", "modeled msgs", "cross msgs", "objective"
+        "{:<28} {:>8} {:>14} {:>11} {:>11} {:>12}",
+        "algorithm", "parity", "modeled msgs", "wire real", "wire model", "objective"
     );
     let mut drifted = false;
     for kind in &cfg.algorithms {
@@ -297,22 +297,37 @@ fn cmd_partitioned(args: &[String]) -> i32 {
             .last()
             .map(|r| r.comm == out.comm)
             .unwrap_or(false);
+        // Real channel traffic must equal the modeled ledger mapped
+        // through the partition (the plan-driven wire model).
+        let bulk_stats = trace.records.last().map(|r| r.comm).unwrap_or_default();
+        let wire_model = harness::experiments::modeled_cross_messages(
+            kind,
+            &g,
+            &part,
+            iters,
+            &bulk_stats,
+        );
+        let wire_ok = out.cross_messages == wire_model;
         // Bit-pattern equality: still exact, but NaN-safe should a
         // deliberately untuned step diverge identically on both paths.
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
-        let ok = bits(&out.thetas) == bits(&trace.final_thetas) && ledger_ok;
+        let ok = bits(&out.thetas) == bits(&trace.final_thetas) && ledger_ok && wire_ok;
         drifted |= !ok;
         println!(
-            "{:<28} {:>8} {:>14} {:>14} {:>12.5e}",
+            "{:<28} {:>8} {:>14} {:>11} {:>11} {:>12.5e}",
             trace.algorithm,
             if ok { "ok" } else { "DRIFT" },
             out.comm.messages,
             out.cross_messages,
+            wire_model,
             out.records.last().map(|r| r.objective).unwrap_or(f64::NAN),
         );
     }
     if drifted {
-        eprintln!("transport parity violated — sharded run drifted from the bulk path");
+        eprintln!(
+            "transport parity violated — sharded run drifted from the bulk path \
+             (iterates, ledger, or wire-vs-model)"
+        );
         return 1;
     }
     0

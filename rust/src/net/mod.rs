@@ -59,8 +59,10 @@ pub trait Exchange {
     /// Neighbor exchange: write the owned rows of `a · x̂` into `out`,
     /// where `x̂` is the global `n × w` stack assembled from every
     /// handle's local `x`. The operator `a` is a global `n × n` CSR whose
-    /// support must stay within the graph neighborhoods (plus diagonal);
-    /// the round is charged as `directed_messages` messages of `w` floats.
+    /// support must stay within the graph neighborhoods (plus diagonal)
+    /// unless an overlay plan was registered for it
+    /// ([`Self::register_plan`]); the round is charged as
+    /// `directed_messages` messages of `w` floats.
     fn exchange_apply(
         &mut self,
         a: &Csr,
@@ -69,6 +71,45 @@ pub trait Exchange {
         w: usize,
         out: &mut [f64],
     );
+
+    /// Neighbor exchange restricted to freshly-updated source rows: the
+    /// same contract as [`Self::exchange_apply`], plus the caller's
+    /// promise that every global row with `fresh[u] == false` still holds
+    /// the value it had the last time it crossed the wire (under *any*
+    /// operator — transports keep one mirror per node, not per operator).
+    /// A plan-driven transport ships only the fresh boundary rows
+    /// (wavefront schedules like ADMM's sweep stages use this to put
+    /// exactly the modeled messages on the wire); in-memory transports
+    /// always read fresh state, so the default forwards to the full
+    /// exchange. The modeled charge is `directed_messages` either way —
+    /// `fresh` changes what crosses the wire, never the ledger.
+    fn exchange_apply_fresh(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let _ = fresh;
+        self.exchange_apply(a, directed_messages, x, w, out);
+    }
+
+    /// Register a named exchange plan for operator `a`: a plan-driven
+    /// transport derives, from `a`'s actual CSR support, exactly which
+    /// owned rows each peer reads — enabling *overlay* operators whose
+    /// support exceeds the graph neighborhoods (e.g. preprocessed
+    /// squared-chain levels) to ride the partitioned transport.
+    /// Transports with co-located state need no plan; the default is a
+    /// no-op, so the same algorithm code runs everywhere. Registering the
+    /// same operator twice is idempotent.
+    ///
+    /// Contract: an operator passed to `register_plan`/`exchange_apply`
+    /// must stay alive and unmodified for the rest of the run — plan
+    /// caches key on the operator's buffer identity, the pattern every
+    /// algorithm here follows (operators are built once at construction).
+    fn register_plan(&mut self, _name: &str, _a: &Csr) {}
 
     /// Laplacian application `y = (I_w ⊗ L) x` over the transport's graph
     /// — one neighbor-exchange round of `2m` messages.

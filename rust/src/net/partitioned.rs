@@ -5,20 +5,30 @@
 //! over 8 Matlab pool workers, boundary values on MatlabMPI): a
 //! [`crate::coordinator::Partition`] assigns every graph node to one of
 //! `k` workers; intra-worker edges are local memory, cross-worker edges
-//! ride mpsc channels. Three pieces:
+//! ride mpsc channels. Four pieces:
 //!
-//! - [`ShardPlan`] — the static halo plan per worker: which owned
-//!   (boundary) nodes must be shipped to which peer each exchange round,
-//!   and which remote nodes will arrive from whom. Sender and receiver
-//!   derive the plan from the same graph, so payloads need no per-node
-//!   framing — only a round tag.
+//! - [`ShardPlan`] — the static graph-halo plan per worker: which owned
+//!   (boundary) nodes neighbor which peer, plus the node→worker owner
+//!   map every exchange plan is derived from.
+//! - [`ExchangePlan`] — a *per-operator* sparse exchange plan derived
+//!   from the operator's actual CSR support: per peer, exactly the owned
+//!   rows that peer's rows read. Graph-support operators get their plan
+//!   automatically on first use; operators whose support exceeds the
+//!   graph neighborhoods (squared-chain overlays, future preconditioners)
+//!   must be opted in through [`Exchange::register_plan`], which builds
+//!   an *overlay halo plan* from the same derivation. Sender and receiver
+//!   derive identical plans from the same global CSR + owner map, so
+//!   payloads need no per-node framing — only a round tag.
 //! - [`ShardExchange`] — the per-worker handle. `exchange_apply` ships
-//!   boundary rows (tagged with the round number and reorder-buffered on
-//!   receive, so a fast peer cannot smuggle round `t+1` payloads into
-//!   round `t`), assembles a mirror of the needed global columns, and
-//!   computes each owned row with [`crate::linalg::Csr::row_matvec_multi`]
-//!   — the *same* row kernel the bulk transport uses, which is what makes
-//!   the two transports bit-for-bit identical.
+//!   exactly the plan's boundary rows (tagged with the round number and
+//!   reorder-buffered on receive, so a fast peer cannot smuggle round
+//!   `t+1` payloads into round `t`);
+//!   [`Exchange::exchange_apply_fresh`] further restricts a round to the
+//!   freshly-updated source rows, which is how ADMM's sweep stages ship
+//!   only each stage's active boundary. The mirror of needed global
+//!   columns feeds [`crate::linalg::Csr::row_matvec_multi`] — the *same*
+//!   row kernel the bulk transport uses, which is what makes the two
+//!   transports bit-for-bit identical.
 //! - [`run_reducer`] — the tree all-reduce stand-in: contributions are
 //!   keyed by a sequence number (never popped by count, so a fast worker's
 //!   reduce `s+1` cannot blend into `s`), assembled into a dense global
@@ -27,14 +37,17 @@
 //!
 //! Modeled [`CommStats`] are tallied identically on every worker (each
 //! worker observes the same system-wide rounds); real channel traffic is
-//! tracked separately in [`ShardExchange::cross_messages`], which is what
-//! the partitioned benches report as MPI traffic.
+//! tracked separately in [`ShardExchange::cross_messages`] /
+//! [`ShardExchange::cross_floats`]. Because shipping is plan-driven, the
+//! real traffic is *predictable from the plans*: [`plan_cross_rows`] is
+//! the wire model the `prop_wire` suite, the `partitioned_baselines`
+//! bench and the `sddnewton partitioned` CLI check the channels against.
 
 use super::{CommStats, Exchange};
 use crate::coordinator::partition::Partition;
 use crate::graph::Graph;
 use crate::linalg::Csr;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
 
 /// One boundary payload on the wire:
@@ -54,21 +67,56 @@ pub struct ShardPlan {
     pub owned: Vec<usize>,
     /// `local_of[global] = local row`, `usize::MAX` when not owned.
     pub local_of: Vec<usize>,
-    /// Nodes whose values are available after a halo exchange
-    /// (owned ∪ halo).
+    /// `owner[global] = worker id` — the map every per-operator
+    /// [`ExchangePlan`] is derived from.
+    pub owner: Vec<usize>,
+    /// Nodes whose values are available after a *graph-halo* exchange
+    /// (owned ∪ halo). Unregistered operators must stay within this set.
     pub covered: Vec<bool>,
-    /// Per peer (ascending): owned boundary nodes shipped to that peer
-    /// each round, ascending.
+    /// Per peer (ascending): owned boundary nodes neighboring that peer,
+    /// ascending — the graph-halo send set (what an operator with full
+    /// edge support ships).
     pub send: Vec<(usize, Vec<usize>)>,
-    /// Per peer (ascending): that peer's nodes received each round,
+    /// Per peer (ascending): that peer's nodes neighboring this shard,
     /// ascending — mirrors the peer's `send` entry for this worker.
     pub recv: Vec<(usize, Vec<usize>)>,
 }
 
-/// Build the halo plans for every worker of a partition. The plan depends
-/// only on the graph topology: any operator whose support stays within
-/// the graph neighborhoods (walk matrices, adjacency, Laplacian) can ride
-/// the same plan.
+/// A sparse exchange plan derived from one operator's CSR support: for
+/// worker `me`, exactly which owned rows each peer's rows read (`send`)
+/// and which remote rows this worker's rows read (`recv`). Operators with
+/// support beyond the graph edges (squared-chain overlays) get *overlay
+/// halo plans* through the identical derivation — the support, not the
+/// graph, decides what crosses the wire.
+#[derive(Debug, Clone)]
+pub struct ExchangePlan {
+    /// Diagnostic name (e.g. `"graph-support"`, `"squared-chain level"`).
+    pub name: String,
+    /// Per peer (ascending): owned rows shipped to that peer each round,
+    /// ascending.
+    pub send: Vec<(usize, Vec<usize>)>,
+    /// Per peer (ascending): remote rows received from that peer each
+    /// round, ascending — mirrors the peer's `send` entry for this worker.
+    pub recv: Vec<(usize, Vec<usize>)>,
+    /// Nodes whose values are available after one round under this plan
+    /// (owned ∪ this operator's halo) — covers the operator's support by
+    /// construction.
+    pub covered: Vec<bool>,
+}
+
+fn dedup_sorted(m: BTreeMap<usize, Vec<usize>>) -> Vec<(usize, Vec<usize>)> {
+    m.into_iter()
+        .map(|(peer, mut nodes)| {
+            nodes.sort_unstable();
+            nodes.dedup();
+            (peer, nodes)
+        })
+        .collect()
+}
+
+/// Build the graph-halo plans for every worker of a partition. The halo
+/// depends only on the graph topology; per-operator [`ExchangePlan`]s are
+/// derived on demand from each operator's support.
 pub fn build_shard_plans(g: &Graph, part: &Partition) -> Vec<ShardPlan> {
     let n = g.n;
     assert_eq!(part.assignment.len(), n, "partition does not cover the graph");
@@ -93,25 +141,121 @@ pub fn build_shard_plans(g: &Graph, part: &Partition) -> Vec<ShardPlan> {
                 }
             }
         }
-        let dedup_sorted = |m: BTreeMap<usize, Vec<usize>>| -> Vec<(usize, Vec<usize>)> {
-            m.into_iter()
-                .map(|(peer, mut nodes)| {
-                    nodes.sort_unstable();
-                    nodes.dedup();
-                    (peer, nodes)
-                })
-                .collect()
-        };
         plans.push(ShardPlan {
             worker: w,
             owned,
             local_of,
+            owner: part.assignment.clone(),
             covered,
             send: dedup_sorted(send),
             recv: dedup_sorted(recv),
         });
     }
     plans
+}
+
+/// Derive worker `me`'s sparse [`ExchangePlan`] for operator `a` from its
+/// CSR support: row `v` of `a` reading column `u` with `owner[u] ≠
+/// owner[v]` puts `u` on the `owner[u] → owner[v]` wire. Every worker
+/// derives from the same global CSR and owner map, so the k plans are
+/// mutually consistent (`send[me→q]` on `me` equals `recv[q←me]` on `q`).
+pub fn derive_exchange_plan(name: &str, a: &Csr, owner: &[usize], me: usize) -> ExchangePlan {
+    assert_eq!(a.rows, owner.len(), "operator/partition size mismatch");
+    assert_eq!(a.cols, owner.len(), "operator must be square over the nodes");
+    let n = owner.len();
+    let mut covered: Vec<bool> = owner.iter().map(|&o| o == me).collect();
+    let mut send: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    let mut recv: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for v in 0..n {
+        let pv = owner[v];
+        for kk in a.indptr[v]..a.indptr[v + 1] {
+            let u = a.indices[kk];
+            let pu = owner[u];
+            if pu == pv {
+                continue;
+            }
+            if pv == me {
+                recv.entry(pu).or_default().push(u);
+                covered[u] = true;
+            } else if pu == me {
+                send.entry(pv).or_default().push(u);
+            }
+        }
+    }
+    ExchangePlan {
+        name: name.to_string(),
+        send: dedup_sorted(send),
+        recv: dedup_sorted(recv),
+        covered,
+    }
+}
+
+/// Wire model of one plan-driven exchange round: the system-wide number
+/// of cross-worker row payloads operator `a` puts on the channels, i.e.
+/// distinct `(row u, destination worker)` pairs with a reader of `u` on a
+/// worker other than `owner[u]`. `fresh` restricts the count to masked
+/// source rows — the [`Exchange::exchange_apply_fresh`] rounds of a
+/// wavefront schedule. This is what the wire-truth suite compares
+/// [`ShardExchange::cross_messages`] against.
+pub fn plan_cross_rows(a: &Csr, owner: &[usize], fresh: Option<&[bool]>) -> u64 {
+    assert_eq!(a.rows, owner.len(), "operator/partition size mismatch");
+    let mut pairs: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for v in 0..a.rows {
+        let pv = owner[v];
+        for kk in a.indptr[v]..a.indptr[v + 1] {
+            let u = a.indices[kk];
+            if owner[u] == pv {
+                continue;
+            }
+            if fresh.is_some_and(|m| !m[u]) {
+                continue;
+            }
+            pairs.insert((u, pv));
+        }
+    }
+    pairs.len() as u64
+}
+
+/// Cache key identifying an operator across rounds: the addresses of all
+/// three CSR buffers plus nnz and shape. The operators of a run (chain
+/// walk matrix, Laplacian, adjacency, overlay levels) are long-lived —
+/// the transport requires them to outlive the run, see
+/// [`Exchange::register_plan`] — so deriving each plan once keeps the
+/// O(nnz) scan off the per-round hot path; keying every buffer address
+/// makes an allocator-reuse collision (freed operator, new one at the
+/// same address with identical nnz/shape) require three simultaneous
+/// coincidences instead of one.
+type OpKey = (usize, usize, usize, usize, usize);
+
+fn op_key(a: &Csr) -> OpKey {
+    (
+        a.indices.as_ptr() as usize,
+        a.indptr.as_ptr() as usize,
+        a.values.as_ptr() as usize,
+        a.nnz(),
+        a.rows,
+    )
+}
+
+/// Receive the `round`-tagged payload from `peer`, parking any other
+/// (possibly future-round) payloads in the reorder buffer.
+fn recv_round(
+    pending: &mut HashMap<(usize, u64), Vec<f64>>,
+    inbox: &Receiver<WireMsg>,
+    peer: usize,
+    round: u64,
+) -> Vec<f64> {
+    if let Some(d) = pending.remove(&(peer, round)) {
+        return d;
+    }
+    loop {
+        let (src, r, data) = inbox.recv().expect("peer worker died");
+        if src == peer && r == round {
+            return data;
+        }
+        let prev = pending.insert((src, r), data);
+        assert!(prev.is_none(), "duplicate payload from worker {src} round {r}");
+    }
 }
 
 /// Per-worker [`Exchange`] handle over mpsc channels.
@@ -122,7 +266,9 @@ pub struct ShardExchange<'a> {
     /// Graph Laplacian shared by all workers (for `laplacian_apply`).
     lap: &'a Csr,
     plan: ShardPlan,
-    /// Senders toward each peer, aligned with `plan.send`.
+    /// Senders toward every worker, indexed by worker id (overlay plans
+    /// may reach workers that are not graph-halo neighbors; the self
+    /// entry is never used).
     peer_txs: Vec<Sender<WireMsg>>,
     inbox: Receiver<WireMsg>,
     /// Reorder buffer for early payloads, keyed `(sender, round)`.
@@ -133,18 +279,18 @@ pub struct ShardExchange<'a> {
     red_seq: u64,
     to_reducer: Sender<ReduceMsg>,
     from_reducer: Receiver<Vec<f64>>,
-    /// Operators whose support has been checked against the halo, keyed
-    /// `(indices ptr, nnz, rows)`. The operators of a run (chain walk
-    /// matrix, Laplacian, adjacency) are long-lived, so validating once
-    /// keeps the O(local nnz) scan off the per-round hot path.
-    validated: Vec<(usize, usize, usize)>,
+    /// Per-operator exchange plans, derived once from each operator's
+    /// support (lazily for graph-support operators, eagerly through
+    /// [`Exchange::register_plan`] for overlays).
+    op_plans: HashMap<OpKey, ExchangePlan>,
     stats: CommStats,
     cross: u64,
+    cross_floats: u64,
 }
 
 impl<'a> ShardExchange<'a> {
-    /// Wire up a worker handle. `peer_txs` must be aligned with
-    /// `plan.send` (one sender per peer, same order).
+    /// Wire up a worker handle. `peer_txs` holds one sender per worker,
+    /// indexed by worker id (including an unused entry for this worker).
     pub fn new(
         g: &Graph,
         lap: &'a Csr,
@@ -155,7 +301,7 @@ impl<'a> ShardExchange<'a> {
         to_reducer: Sender<ReduceMsg>,
         from_reducer: Receiver<Vec<f64>>,
     ) -> ShardExchange<'a> {
-        assert_eq!(peer_txs.len(), plan.send.len());
+        assert_eq!(peer_txs.len(), k, "need one sender per worker");
         assert_eq!(lap.rows, g.n);
         ShardExchange {
             n: g.n,
@@ -171,18 +317,26 @@ impl<'a> ShardExchange<'a> {
             red_seq: 0,
             to_reducer,
             from_reducer,
-            validated: Vec::new(),
+            op_plans: HashMap::new(),
             stats: CommStats::default(),
             cross: 0,
+            cross_floats: 0,
         }
     }
 
     /// Real cross-worker channel traffic so far: one count per boundary
-    /// node payload plus 2 per all-reduce (up + down through the leader).
+    /// row payload plus 2 per all-reduce (up + down through the leader).
     /// This is the deployment's MPI traffic, distinct from the modeled
-    /// per-node [`CommStats`].
+    /// per-node [`CommStats`] — and, with plan-driven shipping, exactly
+    /// predicted by [`plan_cross_rows`].
     pub fn cross_messages(&self) -> u64 {
         self.cross
+    }
+
+    /// Real floats moved over the channels so far (row payloads × width,
+    /// plus all-reduce up/down payloads). ×8 for bytes on the wire.
+    pub fn cross_floats(&self) -> u64 {
+        self.cross_floats
     }
 
     /// This worker's shard plan.
@@ -190,20 +344,137 @@ impl<'a> ShardExchange<'a> {
         &self.plan
     }
 
-    /// Receive the `round`-tagged payload from `peer`, parking any other
-    /// (possibly future-round) payloads in the reorder buffer.
-    fn recv_round_from(&mut self, peer: usize, round: u64) -> Vec<f64> {
-        if let Some(d) = self.pending.remove(&(peer, round)) {
-            return d;
+    /// The exchange plan the transport derived (or had registered) for an
+    /// operator, if any — lets tests and benches inspect what ships.
+    pub fn plan_for(&self, a: &Csr) -> Option<&ExchangePlan> {
+        self.op_plans.get(&op_key(a))
+    }
+
+    /// Ensure an exchange plan exists for `a`. Unregistered operators
+    /// must stay within the graph halo; wider support requires an
+    /// explicit [`Exchange::register_plan`] opt-in.
+    fn ensure_plan(&mut self, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
         }
-        loop {
-            let (src, r, data) = self.inbox.recv().expect("peer worker died");
-            if src == peer && r == round {
-                return data;
+        for &u in &self.plan.owned {
+            for kk in a.indptr[u]..a.indptr[u + 1] {
+                assert!(
+                    self.plan.covered[a.indices[kk]],
+                    "operator support escapes the halo at row {u}: the partitioned \
+                     transport only ships graph-support operators unless an overlay \
+                     plan is registered (Exchange::register_plan)"
+                );
             }
-            let prev = self.pending.insert((src, r), data);
-            assert!(prev.is_none(), "duplicate payload from worker {src} round {r}");
         }
+        let plan = derive_exchange_plan("graph-support", a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
+    }
+
+    /// One plan-driven exchange round; `fresh` (when given) restricts the
+    /// shipped rows to the freshly-updated source set — both endpoints
+    /// intersect the same plan with the same global mask, so the wire
+    /// stays framed by the round tag alone.
+    fn exchange_round(
+        &mut self,
+        a: &Csr,
+        fresh: Option<&[bool]>,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let ln = self.plan.owned.len();
+        assert_eq!(a.rows, self.n, "operator shape mismatch");
+        assert_eq!(x.len(), ln * w, "payload shape mismatch");
+        assert_eq!(out.len(), ln * w);
+        if let Some(m) = fresh {
+            assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        self.ensure_plan(a);
+        self.round += 1;
+        let round = self.round;
+        let mirror_reset = self.mirror.len() != self.n * w;
+        if mirror_reset {
+            self.mirror = vec![0.0; self.n * w];
+        }
+        let key = op_key(a);
+        let xplan = &self.op_plans[&key];
+        let live = |u: usize| fresh.is_none_or(|m| m[u]);
+
+        // A fresh round relies on the mirror retaining each non-fresh halo
+        // row's last-shipped value; right after a (re)allocation those
+        // slots are unseeded zeros, so every halo row this operator reads
+        // must be in the mask — silent drift would be far worse than this
+        // panic (issue one full exchange at the new width first).
+        if mirror_reset && fresh.is_some() {
+            for (_, rows) in &xplan.recv {
+                for &u in rows {
+                    assert!(
+                        live(u),
+                        "fresh exchange after a mirror reset would read unseeded halo \
+                         row {u}: issue a full exchange at this width first"
+                    );
+                }
+            }
+        }
+
+        // 1. Ship the plan's (fresh) owned rows to each peer, tagged with
+        //    the round.
+        for (peer, rows) in &xplan.send {
+            let mut buf = Vec::with_capacity(rows.len() * w);
+            let mut shipped = 0u64;
+            for &u in rows {
+                if !live(u) {
+                    continue;
+                }
+                let li = self.plan.local_of[u];
+                buf.extend_from_slice(&x[li * w..(li + 1) * w]);
+                shipped += 1;
+            }
+            if shipped == 0 {
+                continue;
+            }
+            self.peer_txs[*peer]
+                .send((self.plan.worker, round, buf))
+                .unwrap_or_else(|_| panic!("peer worker {peer} died"));
+            self.cross += shipped;
+            self.cross_floats += shipped * w as u64;
+        }
+
+        // 2. Refresh the mirror: owned rows from `x`, (fresh) halo rows
+        //    from the peers (reorder-buffered by round). The dominant
+        //    full-round case borrows the plan rows directly; only masked
+        //    rounds materialize the filtered list.
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
+        }
+        for (peer, rows) in &xplan.recv {
+            let filtered: Vec<usize>;
+            let expect: &[usize] = match fresh {
+                None => rows,
+                Some(_) => {
+                    filtered = rows.iter().copied().filter(|&u| live(u)).collect();
+                    &filtered
+                }
+            };
+            if expect.is_empty() {
+                continue;
+            }
+            let data = recv_round(&mut self.pending, &self.inbox, *peer, round);
+            assert_eq!(data.len(), expect.len() * w, "halo payload width drifted");
+            for (idx, &u) in expect.iter().enumerate() {
+                self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
+            }
+        }
+
+        // 3. Owned rows via the shared CSR row kernel (bit-for-bit equal
+        //    to the bulk transport's block sweep).
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+        }
+        self.stats.record_exchange(directed_messages, w);
     }
 }
 
@@ -224,67 +495,28 @@ impl Exchange for ShardExchange<'_> {
         w: usize,
         out: &mut [f64],
     ) {
-        let ln = self.plan.owned.len();
-        assert_eq!(a.rows, self.n, "operator shape mismatch");
-        assert_eq!(x.len(), ln * w, "payload shape mismatch");
-        assert_eq!(out.len(), ln * w);
-        self.round += 1;
-        let round = self.round;
+        self.exchange_round(a, None, directed_messages, x, w, out);
+    }
 
-        // 1. Ship owned boundary rows to each peer, tagged with the round.
-        for ((peer, nodes), tx) in self.plan.send.iter().zip(&self.peer_txs) {
-            let mut buf = Vec::with_capacity(nodes.len() * w);
-            for &u in nodes {
-                let li = self.plan.local_of[u];
-                buf.extend_from_slice(&x[li * w..(li + 1) * w]);
-            }
-            tx.send((self.plan.worker, round, buf))
-                .unwrap_or_else(|_| panic!("peer worker {peer} died"));
-            self.cross += nodes.len() as u64;
-        }
+    fn exchange_apply_fresh(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        self.exchange_round(a, Some(fresh), directed_messages, x, w, out);
+    }
 
-        // 2. Refresh the mirror: owned rows from `x`, halo rows from the
-        //    peers (reorder-buffered by round).
-        if self.mirror.len() != self.n * w {
-            self.mirror = vec![0.0; self.n * w];
+    fn register_plan(&mut self, name: &str, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
         }
-        for (li, &u) in self.plan.owned.iter().enumerate() {
-            self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
-        }
-        let recv_plan = std::mem::take(&mut self.plan.recv);
-        for (peer, nodes) in &recv_plan {
-            let data = self.recv_round_from(*peer, round);
-            assert_eq!(data.len(), nodes.len() * w, "halo payload width drifted");
-            for (idx, &u) in nodes.iter().enumerate() {
-                self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
-            }
-        }
-        self.plan.recv = recv_plan;
-
-        // 3. The operator must not read outside the halo — a support that
-        //    escapes the graph neighborhoods (e.g. a squared-chain overlay)
-        //    needs a co-located transport. Checked once per operator, not
-        //    per round (the scan is comparable to the matvec itself).
-        let op_key = (a.indices.as_ptr() as usize, a.nnz(), a.rows);
-        if !self.validated.contains(&op_key) {
-            for &u in &self.plan.owned {
-                for kk in a.indptr[u]..a.indptr[u + 1] {
-                    assert!(
-                        self.plan.covered[a.indices[kk]],
-                        "operator support escapes the halo at row {u}: the partitioned \
-                         transport only ships graph-support operators"
-                    );
-                }
-            }
-            self.validated.push(op_key);
-        }
-
-        // 4. Owned rows via the shared CSR row kernel (bit-for-bit equal
-        //    to the bulk transport's block sweep).
-        for (li, &u) in self.plan.owned.iter().enumerate() {
-            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
-        }
-        self.stats.record_exchange(directed_messages, w);
+        let plan = derive_exchange_plan(name, a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
     }
 
     fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
@@ -304,6 +536,7 @@ impl Exchange for ShardExchange<'_> {
         assert_eq!(total.len(), w, "all-reduce width drifted across workers");
         if self.k > 1 {
             self.cross += 2;
+            self.cross_floats += (locals.len() + w) as u64;
         }
         self.stats.record_allreduce(self.n, w);
         total
@@ -405,9 +638,70 @@ mod tests {
         }
     }
 
+    /// For a full-edge-support operator (the Laplacian) the derived
+    /// exchange plan must coincide with the static graph-halo plan — the
+    /// fallback and the derivation agree wherever both apply.
+    #[test]
+    fn laplacian_exchange_plan_matches_graph_halo() {
+        let mut rng = Pcg64::new(43);
+        let g = generate::random_connected(13, 28, &mut rng);
+        let lap = laplacian_csr(&g);
+        for part in [Partition::contiguous(13, 3), Partition::round_robin(13, 4)] {
+            let plans = build_shard_plans(&g, &part);
+            for p in &plans {
+                let xp = derive_exchange_plan("lap", &lap, &p.owner, p.worker);
+                assert_eq!(xp.send, p.send, "worker {} send drifted", p.worker);
+                assert_eq!(xp.recv, p.recv, "worker {} recv drifted", p.worker);
+            }
+            // The wire model counts exactly the halo boundary rows.
+            let b: u64 = plans
+                .iter()
+                .map(|p| p.send.iter().map(|(_, ns)| ns.len() as u64).sum::<u64>())
+                .sum();
+            assert_eq!(plan_cross_rows(&lap, &part.assignment, None), b);
+        }
+    }
+
+    /// Derived plans are mutually consistent across workers for *any*
+    /// square operator, including overlays whose support leaves the graph
+    /// neighborhoods.
+    #[test]
+    fn derived_plans_are_symmetric_for_overlays() {
+        let mut rng = Pcg64::new(44);
+        let g = generate::random_connected(12, 22, &mut rng);
+        let lap = laplacian_csr(&g);
+        // A 2-hop overlay: support of L² exceeds the edge set.
+        let two_hop = lap.matmul(&lap);
+        let part = Partition::contiguous(12, 4);
+        let plans: Vec<ExchangePlan> = (0..4)
+            .map(|w| derive_exchange_plan("two-hop", &two_hop, &part.assignment, w))
+            .collect();
+        for (w, p) in plans.iter().enumerate() {
+            for (peer, nodes) in &p.send {
+                let back = plans[*peer]
+                    .recv
+                    .iter()
+                    .find(|(from, _)| *from == w)
+                    .map(|(_, ns)| ns.clone())
+                    .unwrap_or_default();
+                assert_eq!(&back, nodes, "asymmetric overlay plan {w} → {peer}");
+            }
+            // The plan's halo covers the operator's support on owned rows.
+            for v in 0..12 {
+                if part.assignment[v] != w {
+                    continue;
+                }
+                for kk in two_hop.indptr[v]..two_hop.indptr[v + 1] {
+                    assert!(p.covered[two_hop.indices[kk]], "worker {w} misses support of row {v}");
+                }
+            }
+        }
+    }
+
     /// Two workers exchanging over channels must reproduce the bulk
     /// transport bit for bit — both the Laplacian round and the
-    /// all-reduce, including the modeled counters.
+    /// all-reduce, including the modeled counters — and the channel
+    /// traffic must equal the plan model.
     #[test]
     fn shard_exchange_matches_bulk_bit_for_bit() {
         let mut rng = Pcg64::new(42);
@@ -443,7 +737,8 @@ mod tests {
             }
 
             let n = g.n;
-            let results = Mutex::new(vec![(Vec::new(), Vec::new(), CommStats::default()); k]);
+            let wire_model = plan_cross_rows(&lap, &part.assignment, None) + 2 * k as u64;
+            let results = Mutex::new(vec![(Vec::new(), Vec::new(), CommStats::default(), 0u64); k]);
             std::thread::scope(|scope| {
                 {
                     let owned_of = owned_of.clone();
@@ -451,8 +746,7 @@ mod tests {
                     scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
                 }
                 for (wid, plan) in plans.into_iter().enumerate() {
-                    let peer_txs: Vec<_> =
-                        plan.send.iter().map(|(peer, _)| wire_tx[*peer].clone()).collect();
+                    let peer_txs: Vec<_> = wire_tx.clone();
                     let inbox = wire_rx[wid].take().unwrap();
                     let from_red = red_out_rx[wid].take().unwrap();
                     let red = red_tx.clone();
@@ -467,7 +761,8 @@ mod tests {
                             ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
                         let y = ex.laplacian_apply(&xl, w);
                         let total = ex.allreduce_sum(&xl, w);
-                        results.lock().unwrap()[wid] = (y, total, *ex.stats());
+                        results.lock().unwrap()[wid] =
+                            (y, total, *ex.stats(), ex.cross_messages());
                     });
                 }
                 drop(red_tx);
@@ -475,9 +770,11 @@ mod tests {
             });
 
             let results = results.into_inner().unwrap();
-            for (wid, (y, total, stats)) in results.iter().enumerate() {
+            let mut cross_total = 0u64;
+            for (wid, (y, total, stats, cross)) in results.iter().enumerate() {
                 assert_eq!(total, &bulk_total, "worker {wid} all-reduce drifted");
                 assert_eq!(stats, &bulk_stats, "worker {wid} modeled stats drifted");
+                cross_total += cross;
                 for (li, &u) in owned_of[wid].iter().enumerate() {
                     assert_eq!(
                         &y[li * w..(li + 1) * w],
@@ -486,6 +783,7 @@ mod tests {
                     );
                 }
             }
+            assert_eq!(cross_total, wire_model, "k={k}: channel traffic escaped the plan model");
         }
     }
 }

@@ -29,4 +29,4 @@ pub mod squared;
 
 pub use chain::{Chain, ChainOptions, Splitting};
 pub use solver::{SddmSolver, SolveOutcome, SolverOptions};
-pub use squared::SquaredChain;
+pub use squared::{SquaredChain, SquaredSddmSolver};

@@ -14,6 +14,14 @@
 //! - trade-off: far fewer *rounds* (latency) at the cost of denser
 //!   messages and a preprocessing phase — the `ablations` bench compares
 //!   both modes.
+//!
+//! The level supports exceed the graph edges for `level ≥ 1`, so each
+//! level is registered as an **overlay halo plan**
+//! ([`Exchange::register_plan`]): the partitioned transport derives, from
+//! the level's actual CSR support, exactly which rows cross each worker
+//! boundary, and the preprocessed solver runs shard-local like every
+//! other operator ([`SquaredSddmSolver`] plugs it into the Newton
+//! pipeline). On co-located transports the registration is a no-op.
 
 use super::chain::{Chain, ChainError, ChainOptions};
 use crate::linalg::Csr;
@@ -56,9 +64,9 @@ impl SquaredChain {
     ///
     /// Message model: each stored off-diagonal entry is one directed
     /// message of `w` floats in the preprocessed overlay network. The
-    /// overlay support exceeds the graph edges for `level ≥ 1`, so this
-    /// mode requires a transport with co-located state (the bulk
-    /// [`crate::net::CommGraph`]); the partitioned transport rejects it.
+    /// overlay support exceeds the graph edges for `level ≥ 1`; the
+    /// partitioned transport ships it through the level's registered
+    /// overlay plan — exactly the rows each peer's support reads.
     pub fn apply_level(
         &self,
         level: usize,
@@ -68,6 +76,7 @@ impl SquaredChain {
         exch: &mut dyn Exchange,
     ) {
         let x = &self.levels[level];
+        exch.register_plan("squared-chain level", x);
         let offdiag = x.nnz().saturating_sub(self.base.n) as u64;
         exch.exchange_apply(x, offdiag, v, w, out);
     }
@@ -168,6 +177,25 @@ impl SquaredChain {
     /// Total stored entries across levels (preprocessing memory).
     pub fn total_nnz(&self) -> usize {
         self.levels.iter().map(Csr::nnz).sum()
+    }
+}
+
+/// The preprocessed chain as a pluggable inner Laplacian solver (the
+/// `LaplacianSolver` impl lives with the other solvers in
+/// `algorithms::solvers`): SDD-Newton with this solver pays one
+/// extended-neighborhood round per level application instead of `2^i`
+/// edge rounds — and, through the overlay halo plans, runs on the
+/// partitioned worker runtime bit-for-bit identically to the bulk path.
+#[derive(Debug, Clone)]
+pub struct SquaredSddmSolver {
+    pub chain: SquaredChain,
+    pub opts: super::solver::SolverOptions,
+}
+
+impl SquaredSddmSolver {
+    /// Wrap a squared chain with solve options.
+    pub fn new(chain: SquaredChain, opts: super::solver::SolverOptions) -> SquaredSddmSolver {
+        SquaredSddmSolver { chain, opts }
     }
 }
 

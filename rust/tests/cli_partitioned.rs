@@ -1,0 +1,48 @@
+//! Integration test driving the real `sddnewton` binary: the
+//! `partitioned` subcommand's parity table must include the
+//! real-vs-modeled wire columns, report `ok` for every algorithm, and
+//! exit zero — the nonzero-on-drift contract the CI gate relies on.
+
+use std::process::Command;
+
+fn run_partitioned(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sddnewton"))
+        .arg("partitioned")
+        .args(args)
+        .output()
+        .expect("sddnewton binary should run")
+}
+
+#[test]
+fn partitioned_cli_reports_wire_parity_and_exits_zero() {
+    let out = run_partitioned(&[
+        "--experiment",
+        "smoke",
+        "--iters",
+        "2",
+        "--workers",
+        "3",
+        "--algorithms",
+        "grad,admm",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit nonzero\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("wire real"), "missing real wire column:\n{stdout}");
+    assert!(stdout.contains("wire model"), "missing modeled wire column:\n{stdout}");
+    assert!(!stdout.contains("DRIFT"), "parity table reported drift:\n{stdout}");
+    // Both requested algorithms made it into the table with an ok verdict.
+    for name in ["Distributed ADMM", "Distributed Gradients"] {
+        let row = stdout
+            .lines()
+            .find(|l| l.contains(name))
+            .unwrap_or_else(|| panic!("missing row for {name}:\n{stdout}"));
+        assert!(row.contains("ok"), "{name} not ok:\n{row}");
+    }
+}
+
+#[test]
+fn partitioned_cli_rejects_unknown_partitioning() {
+    let out = run_partitioned(&["--partitioning", "voronoi"]);
+    assert!(!out.status.success(), "unknown partitioning must exit nonzero");
+}
