@@ -1,0 +1,132 @@
+//! Million-node SDD-Newton on the partitioned worker runtime.
+//!
+//! The scale target the hot-loop de-allocation work exists for: a
+//! 10⁶-node / ~10⁷-edge expander, k = 16 workers, the full SDD-Newton
+//! pipeline (streaming graph generation → SDDM chain build → serial
+//! bulk-synchronous reference → partitioned run). Every phase is timed
+//! and persisted to `BENCH_million_scale_<date>.json` (see
+//! `docs/BENCHMARKS.md`), and the partitioned run is held to the same
+//! two contracts the small benches enforce: bit-for-bit equality with
+//! the serial path, and real wire traffic equal to the plan-driven
+//! model.
+//!
+//!     cargo bench --bench million_scale              # full scale (slow)
+//!     cargo bench --bench million_scale -- --smoke   # CI-sized run
+//!     cargo bench --bench million_scale -- --threads 4
+
+use sddnewton::algorithms::{run, RunOptions};
+use sddnewton::benchkit::{cli_opts, is_smoke, result_row, section, BenchReport};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::{run_partitioned_baseline, Partition};
+use sddnewton::graph::generate;
+use sddnewton::harness::experiments::{
+    make_inner_solver, make_sharded_algorithm, modeled_cross_messages,
+};
+use sddnewton::net::CommGraph;
+use sddnewton::problems::datasets;
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::{Pcg64, Timer};
+
+fn main() {
+    let _opts = cli_opts();
+    let smoke = is_smoke();
+    // Smoke shrinks every axis so CI proves the pipeline end to end in
+    // seconds; the full shape is the committed trajectory point.
+    let (n, cycles, k, p, iters) =
+        if smoke { (1_000, 3, 4, 2, 1) } else { (1_000_000, 11, 16, 4, 2) };
+    let eps = 1e-2;
+    let mut rng = Pcg64::new(4242);
+    let mut report = BenchReport::new("million_scale");
+    report.config_str("algorithm", "sdd_newton");
+    report.config_str("graph", "expander");
+    report.config_num("cycles", cycles as f64);
+    report.config_num("k_workers", k as f64);
+    report.config_num("p", p as f64);
+    report.config_num("iters", iters as f64);
+    report.config_num("eps", eps);
+
+    section(&format!(
+        "Million-scale SDD-Newton: n={n}, {cycles}-cycle expander, k={k} workers, \
+         p={p}, {iters} iterations, eps={eps}"
+    ));
+
+    let t = Timer::start();
+    let g = generate::expander(n, cycles, &mut rng);
+    report.phase("graph_generate", t.secs());
+    report.config_num("n", g.n as f64);
+    report.config_num("m", g.m() as f64);
+    result_row("graph", format!("n={} m={} max_degree={}", g.n, g.m(), g.max_degree()));
+
+    let t = Timer::start();
+    let prob = datasets::synthetic_regression(n, p, 2 * n, 0.1, 0.05, &mut rng);
+    report.phase("problem_generate", t.secs());
+
+    let kind = AlgoKind::SddNewton { eps, alpha: 1.0 };
+    let t = Timer::start();
+    let solver = make_inner_solver(&kind, &g, &mut rng);
+    report.phase("chain_build", t.secs());
+    let solver_ref = solver.as_deref();
+    let backend = NativeBackend;
+
+    // Serial bulk-synchronous reference — one instance owns every node.
+    // Its wall time is the speedup denominator; its iterates and modeled
+    // ledger are the correctness oracle for the partitioned run.
+    let t = Timer::start();
+    let mut alg =
+        make_sharded_algorithm(&kind, &prob, &g, &backend, solver_ref, (0..n).collect());
+    let mut comm = CommGraph::new(&g);
+    let trace = run(
+        &mut alg,
+        &prob,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+    let serial_secs = t.secs();
+    report.phase("serial_reference", serial_secs);
+    let serial_stats = *comm.stats();
+    result_row(
+        "serial",
+        format!("{} modeled msgs | {:.3}s", serial_stats.messages, serial_secs),
+    );
+
+    // Partitioned run across k workers.
+    let part = Partition::contiguous(n, k);
+    let t = Timer::start();
+    let out = run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+        make_sharded_algorithm(&kind, &prob, &g, &backend, solver_ref, owned)
+    });
+    let partitioned_secs = t.secs();
+    report.phase("partitioned_run", partitioned_secs);
+
+    // Contract 1: bit-for-bit equality with the serial path.
+    assert_eq!(
+        out.thetas, trace.final_thetas,
+        "partitioned run drifted from the serial path"
+    );
+    assert_eq!(out.comm, serial_stats, "modeled ledger drifted");
+    // Contract 2: real wire traffic equals the plan-driven model.
+    let wire_model = modeled_cross_messages(&kind, &g, &part, iters, &serial_stats);
+    assert_eq!(
+        out.cross_messages, wire_model,
+        "real wire traffic drifted from the modeled ledger"
+    );
+
+    let speedup = serial_secs.max(1e-12) / partitioned_secs.max(1e-12);
+    report.metric("wire_messages", out.cross_messages as f64);
+    report.metric("wire_bytes", (8 * out.cross_floats) as f64);
+    report.metric("cut_edges", part.cut_edges(&g) as f64);
+    report.metric("speedup_vs_serial", speedup);
+    report.metric("secs_per_iter_partitioned", partitioned_secs / iters as f64);
+    result_row(
+        "partitioned",
+        format!(
+            "{speedup:.2}x vs serial | {} wire msgs (= model) | {} wire bytes | {:.3}s",
+            out.cross_messages,
+            8 * out.cross_floats,
+            partitioned_secs
+        ),
+    );
+
+    let path = report.write().expect("bench report must be writable");
+    result_row("report", path.display());
+}

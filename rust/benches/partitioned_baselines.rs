@@ -19,7 +19,7 @@
 use sddnewton::algorithms::sdd_newton::{SddNewton, StepSize};
 use sddnewton::algorithms::solvers::{squared_sddm_for_graph, LaplacianSolver};
 use sddnewton::algorithms::{run, RunOptions};
-use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section};
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section, BenchReport};
 use sddnewton::config::AlgoKind;
 use sddnewton::coordinator::{run_partitioned_baseline, run_partitioned_newton, Partition};
 use sddnewton::graph::generate;
@@ -41,6 +41,11 @@ fn main() {
     // compute the shards divide actually dominates.
     let (n, m_edges, p, m_total, iters) =
         if smoke { (24, 60, 4, 480, 2) } else { (96, 240, 10, 7_680, 4) };
+    let mut report = BenchReport::new("partitioned_baselines");
+    report.config_num("n", n as f64);
+    report.config_num("m", m_edges as f64);
+    report.config_num("p", p as f64);
+    report.config_num("iters", iters as f64);
     let mut rng = Pcg64::new(2718);
     let g = generate::random_connected(n, m_edges, &mut rng);
     let prob = datasets::mnist_like(n, p, m_total, 0, Reg::L2, 0.05, &mut rng);
@@ -62,6 +67,7 @@ fn main() {
     let all: Vec<usize> = (0..n).collect();
 
     for (name, kind) in &kinds {
+        let kind_timer = sddnewton::util::Timer::start();
         // The inner solver (dual-Newton kinds) is built once and shared
         // by the serial reference and every sharded worker — the SDDM
         // chain is randomized, so sharing is what makes the bit-equality
@@ -121,6 +127,11 @@ fn main() {
                     "{name}/{pname}/k{k}: real wire traffic drifted from the modeled ledger"
                 );
                 let speedup = s_serial.median.max(1e-12) / s.median.max(1e-12);
+                report.metric(&format!("{name}/{pname}_k{k}/speedup_vs_serial"), speedup);
+                report.metric(
+                    &format!("{name}/{pname}_k{k}/wire_bytes"),
+                    (8 * out.cross_floats) as f64,
+                );
                 result_row(
                     &format!("{name}/partitioned/{pname}_k{k}"),
                     format!(
@@ -134,6 +145,7 @@ fn main() {
                 );
             }
         }
+        report.phase(name, kind_timer.secs());
     }
 
     // Overlay halo plans: SDD-Newton with the preprocessed SquaredChain
@@ -173,6 +185,10 @@ fn main() {
             "sdd_newton_squared/k{k}: overlay run drifted from the serial path"
         );
         assert_eq!(out.comm, *comm.stats(), "sdd_newton_squared/k{k}: modeled ledger drifted");
+        report.metric(
+            &format!("sdd_newton_squared/contiguous_k{k}/wire_bytes"),
+            (8 * out.cross_floats) as f64,
+        );
         result_row(
             &format!("sdd_newton_squared/partitioned/contiguous_k{k}"),
             format!(
@@ -183,4 +199,7 @@ fn main() {
             ),
         );
     }
+
+    let path = report.write().expect("bench report must be writable");
+    result_row("report", path.display());
 }

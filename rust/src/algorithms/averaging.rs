@@ -31,6 +31,8 @@ pub struct DistAveraging {
     m_edges: usize,
     p: usize,
     momentum: f64,
+    /// Reusable diffusion-output scratch (no per-step allocation).
+    diff: Vec<f64>,
 }
 
 impl DistAveraging {
@@ -66,6 +68,7 @@ impl DistAveraging {
             beta,
             theta: vec![0.0; owned.len() * p],
             omega: vec![0.0; owned.len() * p],
+            diff: vec![0.0; owned.len() * p],
             owned,
             diffusion: Csr::from_triplets(n, n, &trips),
             m_edges: g.m(),
@@ -83,8 +86,11 @@ impl ConsensusAlgorithm for DistAveraging {
     fn step(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
         let ln = self.owned.len();
-        // Diffusion term on θ (one neighbor-exchange round).
-        let mut diff = vec![0.0; ln * p];
+        // Diffusion term on θ (one neighbor-exchange round) into the
+        // reusable scratch buffer.
+        let mut diff = std::mem::take(&mut self.diff);
+        diff.clear();
+        diff.resize(ln * p, 0.0);
         exch.exchange_apply(&self.diffusion, 2 * self.m_edges as u64, &self.theta, p, &mut diff);
         for (li, &u) in self.owned.iter().enumerate() {
             // Gradient at the current ω.
@@ -98,6 +104,7 @@ impl ConsensusAlgorithm for DistAveraging {
                 self.omega[idx] = omega_next;
             }
         }
+        self.diff = diff;
     }
 
     fn thetas(&self) -> &[f64] {

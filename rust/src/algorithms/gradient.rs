@@ -32,6 +32,8 @@ pub struct DistGradient {
     m_edges: usize,
     k: usize,
     p: usize,
+    /// Spare buffer swapped with `thetas` each step (no per-step allocation).
+    spare: Vec<f64>,
 }
 
 impl DistGradient {
@@ -60,6 +62,7 @@ impl DistGradient {
             m_edges: g.m(),
             k: 0,
             p: problem.p,
+            spare: Vec::new(),
         }
     }
 
@@ -80,8 +83,12 @@ impl ConsensusAlgorithm for DistGradient {
         let p = self.p;
         let ln = self.owned.len();
         let alpha = self.alpha();
-        // Mix: θ ← W θ (one neighbor-exchange round of 2m messages).
-        let mut mixed = vec![0.0; ln * p];
+        // Mix: θ ← W θ (one neighbor-exchange round of 2m messages). The
+        // output lands in the spare buffer, which then swaps with θ — the
+        // steady state allocates nothing.
+        let mut mixed = std::mem::take(&mut self.spare);
+        mixed.clear();
+        mixed.resize(ln * p, 0.0);
         exch.exchange_apply(&self.mixing, 2 * self.m_edges as u64, &self.thetas, p, &mut mixed);
         // Gradient step at the *current* iterate — purely local.
         for (li, &u) in self.owned.iter().enumerate() {
@@ -90,7 +97,7 @@ impl ConsensusAlgorithm for DistGradient {
                 mixed[li * p + r] -= alpha * grad[r];
             }
         }
-        self.thetas = mixed;
+        self.spare = std::mem::replace(&mut self.thetas, mixed);
         self.k += 1;
     }
 

@@ -31,6 +31,7 @@ use super::ConsensusAlgorithm;
 use crate::net::Exchange;
 use crate::problems::ConsensusProblem;
 use crate::runtime::LocalBackend;
+use crate::util::BufferPool;
 
 /// Step-size policy.
 #[derive(Debug, Clone, Copy)]
@@ -86,6 +87,9 @@ pub struct SddNewton<'a> {
     y: Vec<f64>,
     p: usize,
     label: String,
+    /// Reusable scratch for the step hot loop — after warm-up an outer
+    /// iteration allocates nothing beyond transport-level bookkeeping.
+    pool: BufferPool,
 }
 
 impl<'a> SddNewton<'a> {
@@ -125,6 +129,7 @@ impl<'a> SddNewton<'a> {
             y: vec![0.0; ln * p],
             p,
             label: String::new(),
+            pool: BufferPool::new(),
         };
         alg.label = match solver.name() {
             "neumann" => "Distributed ADD-Newton".to_string(),
@@ -190,27 +195,33 @@ impl<'a> SddNewton<'a> {
         debug_assert_eq!(exch.local_n(), ln);
 
         // (1) primal recovery at current λ: v = (I_p ⊗ L) λ.
-        let v = exch.laplacian_apply(&self.lambda, p);
+        let mut v = self.pool.take(ln * p);
+        exch.laplacian_apply_into(&self.lambda, p, &mut v);
         let mut y = std::mem::take(&mut self.y);
         self.recover(problem, &v, &mut y);
         self.y = y;
+        self.pool.put(v);
 
         // (2) dual gradient g = M y.
-        let g = exch.laplacian_apply(&self.y, p);
+        let mut g = self.pool.take(ln * p);
+        exch.laplacian_apply_into(&self.y, p, &mut g);
 
         // (3) M z = g.
+        let solver = self.solver;
         let z = match self.first_solve {
-            FirstSolve::Solver => self.solver.solve(&g, p, exch).x,
+            FirstSolve::Solver => solver.solve_ws(&g, p, exch, &mut self.pool).x,
             FirstSolve::Centering => {
-                let mut z = self.y.clone();
+                let mut z = self.pool.take_copy(&self.y);
                 exch.center(&mut z, p);
                 z
             }
         };
+        self.pool.put(g);
 
         // (4) b_i = ∇²f_i(y_i) z_i — local.
-        let mut b = vec![0.0; ln * p];
+        let mut b = self.pool.take(ln * p);
         self.hess_apply(problem, &self.y, &z, &mut b);
+        self.pool.put(z);
 
         // (4b) Kernel-consistency correction. `M z = g` pins `z` only up to
         // a per-dimension constant `1 ⊗ c`; the second system `M d = ∇²f z`
@@ -219,42 +230,55 @@ impl<'a> SddNewton<'a> {
         // all-reduce — and shift `b ← b + ∇²f (1 ⊗ c)`.
         if self.kernel_correction {
             let wk = p * p + p;
-            let mut hblocks = vec![0.0; ln * p * p];
+            let mut hblocks = self.pool.take(ln * p * p);
             self.backend.hess_nodes(problem, &self.owned, &self.y, &mut hblocks);
-            let mut locals = vec![0.0; ln * wk];
+            let mut locals = self.pool.take(ln * wk);
             for li in 0..ln {
                 locals[li * wk..li * wk + p * p]
                     .copy_from_slice(&hblocks[li * p * p..(li + 1) * p * p]);
                 locals[li * wk + p * p..(li + 1) * wk]
                     .copy_from_slice(&b[li * p..(li + 1) * p]);
             }
+            self.pool.put(hblocks);
             let tot = exch.allreduce_sum(&locals, wk);
+            self.pool.put(locals);
             let hsum = crate::linalg::Matrix::from_rows(p, p, tot[..p * p].to_vec());
             let bsum = &tot[p * p..];
             if let Ok(c) = crate::linalg::cholesky::spd_solve(&hsum, bsum) {
-                let tiled: Vec<f64> = (0..ln).flat_map(|_| c.iter().map(|v| -v)).collect();
-                let mut bc = vec![0.0; ln * p];
+                let mut tiled = self.pool.take(ln * p);
+                for li in 0..ln {
+                    for (j, cj) in c.iter().enumerate() {
+                        tiled[li * p + j] = -cj;
+                    }
+                }
+                let mut bc = self.pool.take(ln * p);
                 self.hess_apply(problem, &self.y, &tiled, &mut bc);
+                self.pool.put(tiled);
                 for i in 0..ln * p {
                     b[i] += bc[i];
                 }
+                self.pool.put(bc);
             }
         }
 
         // (5) M d = b.
-        let d = self.solver.solve(&b, p, exch).x;
+        let d = solver.solve_ws(&b, p, exch, &mut self.pool).x;
+        self.pool.put(b);
 
         // (6) dual ascent λ ← λ + α d.
         let alpha = self.step.value();
         for i in 0..ln * p {
             self.lambda[i] += alpha * d[i];
         }
+        self.pool.put(d);
 
         // Refresh the primal iterate for metric collection.
-        let v2 = exch.laplacian_apply(&self.lambda, p);
+        let mut v2 = self.pool.take(ln * p);
+        exch.laplacian_apply_into(&self.lambda, p, &mut v2);
         let mut y = std::mem::take(&mut self.y);
         self.recover(problem, &v2, &mut y);
         self.y = y;
+        self.pool.put(v2);
     }
 }
 

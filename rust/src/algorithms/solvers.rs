@@ -11,12 +11,26 @@
 use crate::linalg::Csr;
 use crate::net::Exchange;
 use crate::sddm::{SddmSolver, SolveOutcome, SquaredSddmSolver};
+use crate::util::BufferPool;
 
 /// A distributed solver for Laplacian systems `L x_r = b_r`, batched over
 /// `w` right-hand sides (stacked shard-local `local_n × w` row-major).
 pub trait LaplacianSolver: Send + Sync {
     /// Solve, recording communication into the exchange's ledger.
     fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome;
+    /// Solve with caller-provided scratch buffers. Solvers whose inner
+    /// loops can reuse pooled scratch override this; the default ignores
+    /// the pool. Identical numerical results either way.
+    fn solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> SolveOutcome {
+        let _ = pool;
+        self.solve(b, w, exch)
+    }
     /// Display name for traces.
     fn name(&self) -> &'static str;
 }
@@ -24,6 +38,15 @@ pub trait LaplacianSolver: Send + Sync {
 impl LaplacianSolver for SddmSolver {
     fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
         SddmSolver::solve(self, b, w, exch)
+    }
+    fn solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> SolveOutcome {
+        SddmSolver::solve_ws(self, b, w, exch, pool)
     }
     fn name(&self) -> &'static str {
         "sddm"
@@ -38,6 +61,15 @@ impl LaplacianSolver for SddmSolver {
 impl LaplacianSolver for SquaredSddmSolver {
     fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
         self.chain.solve(b, w, self.opts.eps, self.opts.max_richardson, exch)
+    }
+    fn solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> SolveOutcome {
+        self.chain.solve_ws(b, w, self.opts.eps, self.opts.max_richardson, exch, pool)
     }
     fn name(&self) -> &'static str {
         "sddm-squared"

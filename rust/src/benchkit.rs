@@ -3,13 +3,29 @@
 //! Benches under `rust/benches/` use `harness = false` and drive this:
 //! warmup, timed repeats, and a median/p10/p90 report, plus helpers for
 //! printing figure-shaped tables.
+//!
+//! Besides the console tables, every bench emits a machine-readable
+//! [`BenchReport`] — a `BENCH_<bench>_<date>.json` file under
+//! `bench_results/` (override with the `SDDN_BENCH_DIR` env var) that
+//! records machine info, workload shape, per-phase wall times, and
+//! headline metrics. Committed per PR, these files form the repo's
+//! performance trajectory; `sddnewton bench-validate` and the schema
+//! tests below keep them well-formed. See `docs/BENCHMARKS.md` for the
+//! schema field by field.
 
+#![warn(missing_docs)]
+
+use crate::config::json::Json;
 use crate::util::{Summary, Timer};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 /// Benchmark configuration.
 #[derive(Debug, Clone)]
 pub struct BenchOpts {
+    /// Untimed runs before sampling starts (cache/JIT-ish warmup).
     pub warmup_iters: usize,
+    /// Timed samples contributing to the reported [`Summary`].
     pub sample_iters: usize,
 }
 
@@ -75,6 +91,232 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// The `BENCH_*.json` schema version this crate writes. Bump only with a
+/// matching update to `docs/BENCHMARKS.md` and the schema-stability test.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// A machine-readable record of one bench invocation, persisted as
+/// `BENCH_<bench>_<date>.json`.
+///
+/// Build one at the top of a bench (`BenchReport::new`), add workload
+/// shape via [`config_num`](BenchReport::config_num) /
+/// [`config_str`](BenchReport::config_str), wall times via
+/// [`phase`](BenchReport::phase), headline numbers via
+/// [`metric`](BenchReport::metric) / [`summary`](BenchReport::summary),
+/// then [`write`](BenchReport::write) before exiting.
+pub struct BenchReport {
+    bench: String,
+    smoke: bool,
+    config: BTreeMap<String, Json>,
+    phases: Vec<(String, f64)>,
+    metrics: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    /// Start a report for the named bench. Smoke mode is captured from
+    /// the process arguments (see [`is_smoke`]).
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            smoke: is_smoke(),
+            config: BTreeMap::new(),
+            phases: Vec::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// Record a numeric workload parameter (n, m, k, p, iters, eps, …).
+    pub fn config_num(&mut self, key: &str, value: f64) {
+        self.config.insert(key.to_string(), Json::Num(value));
+    }
+
+    /// Record a string workload parameter (graph kind, algorithm, …).
+    pub fn config_str(&mut self, key: &str, value: &str) {
+        self.config.insert(key.to_string(), Json::Str(value.to_string()));
+    }
+
+    /// Append a named phase with its wall time in seconds. Phases keep
+    /// insertion order in the emitted JSON.
+    pub fn phase(&mut self, name: &str, secs: f64) {
+        self.phases.push((name.to_string(), secs));
+    }
+
+    /// Record a scalar headline metric (bytes on wire, speedup, …).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.insert(key.to_string(), Json::Num(value));
+    }
+
+    /// Record a full timing [`Summary`] as a nested object
+    /// (`{n, mean, std, min, p10, median, p90, max}`).
+    pub fn summary(&mut self, key: &str, s: &Summary) {
+        let mut m = BTreeMap::new();
+        m.insert("n".to_string(), Json::Num(s.n as f64));
+        m.insert("mean".to_string(), Json::Num(s.mean));
+        m.insert("std".to_string(), Json::Num(s.std));
+        m.insert("min".to_string(), Json::Num(s.min));
+        m.insert("p10".to_string(), Json::Num(s.p10));
+        m.insert("median".to_string(), Json::Num(s.median));
+        m.insert("p90".to_string(), Json::Num(s.p90));
+        m.insert("max".to_string(), Json::Num(s.max));
+        self.metrics.insert(key.to_string(), Json::Obj(m));
+    }
+
+    /// Serialize to the schema-versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut machine = BTreeMap::new();
+        machine.insert("os".to_string(), Json::Str(std::env::consts::OS.to_string()));
+        machine.insert("arch".to_string(), Json::Str(std::env::consts::ARCH.to_string()));
+        let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        machine.insert("logical_cpus".to_string(), Json::Num(cpus as f64));
+        machine.insert("bench_threads".to_string(), Json::Num(crate::par::threads() as f64));
+        if let Some(model) = cpu_model() {
+            machine.insert("cpu_model".to_string(), Json::Str(model));
+        }
+
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|(name, secs)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("secs".to_string(), Json::Num(*secs));
+                Json::Obj(o)
+            })
+            .collect();
+
+        let mut doc = BTreeMap::new();
+        doc.insert(
+            "schema_version".to_string(),
+            Json::Num(BENCH_SCHEMA_VERSION as f64),
+        );
+        doc.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        doc.insert("date".to_string(), Json::Str(utc_date()));
+        doc.insert("smoke".to_string(), Json::Bool(self.smoke));
+        doc.insert("machine".to_string(), Json::Obj(machine));
+        doc.insert("config".to_string(), Json::Obj(self.config.clone()));
+        doc.insert("phases".to_string(), Json::Arr(phases));
+        doc.insert("metrics".to_string(), Json::Obj(self.metrics.clone()));
+        Json::Obj(doc)
+    }
+
+    /// Write `BENCH_<bench>_<date>.json` into `dir`, returning the path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}_{}.json", self.bench, utc_date()));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write into the default trajectory directory — `$SDDN_BENCH_DIR`
+    /// when set, else `bench_results/` at the workspace root — and print
+    /// the emitted path (greppable in bench logs).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = match std::env::var("SDDN_BENCH_DIR") {
+            Ok(d) if !d.is_empty() => PathBuf::from(d),
+            _ => Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("bench_results"),
+        };
+        let path = self.write_to(&dir)?;
+        println!("bench report written to {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Best-effort CPU model string from `/proc/cpuinfo` (absent on
+/// non-Linux hosts; the field is simply omitted).
+fn cpu_model() -> Option<String> {
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    let line = text.lines().find(|l| l.starts_with("model name"))?;
+    Some(line.split(':').nth(1)?.trim().to_string())
+}
+
+/// Today's UTC calendar date as `YYYY-MM-DD` (no time-zone database in a
+/// dependency-free crate; UTC is what CI records anyway).
+pub fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Proleptic-Gregorian date from days since 1970-01-01 (Hinnant's
+/// `civil_from_days` algorithm).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = (if z >= 0 { z } else { z - 146_096 }) / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Validate a parsed `BENCH_*.json` document against the schema this
+/// crate writes. Returns a human-readable reason on the first violation.
+/// Shared by `sddnewton bench-validate` and the schema tests.
+pub fn validate_report(doc: &Json) -> Result<(), String> {
+    let obj = doc.as_obj().ok_or("top level is not an object")?;
+    let version = obj
+        .get("schema_version")
+        .and_then(Json::as_usize)
+        .ok_or("missing numeric schema_version")?;
+    if version as u64 != BENCH_SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {version} != supported {BENCH_SCHEMA_VERSION}"
+        ));
+    }
+    let bench = obj.get("bench").and_then(Json::as_str).ok_or("missing string bench")?;
+    if bench.is_empty() {
+        return Err("empty bench name".to_string());
+    }
+    let date = obj.get("date").and_then(Json::as_str).ok_or("missing string date")?;
+    let bytes = date.as_bytes();
+    let date_ok = bytes.len() == 10
+        && bytes[4] == b'-'
+        && bytes[7] == b'-'
+        && bytes
+            .iter()
+            .enumerate()
+            .all(|(i, &c)| i == 4 || i == 7 || c.is_ascii_digit());
+    if !date_ok {
+        return Err(format!("date {date:?} is not YYYY-MM-DD"));
+    }
+    obj.get("smoke").and_then(Json::as_bool).ok_or("missing bool smoke")?;
+    let machine = obj.get("machine").and_then(Json::as_obj).ok_or("missing machine object")?;
+    for key in ["os", "arch"] {
+        machine
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("machine missing {key}"))?;
+    }
+    for key in ["logical_cpus", "bench_threads"] {
+        machine
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("machine missing {key}"))?;
+    }
+    obj.get("config").and_then(Json::as_obj).ok_or("missing config object")?;
+    let phases = obj.get("phases").and_then(Json::as_arr).ok_or("missing phases array")?;
+    for (i, ph) in phases.iter().enumerate() {
+        ph.get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("phase {i} missing name"))?;
+        let secs = ph
+            .get("secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("phase {i} missing secs"))?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!("phase {i} has bad secs {secs}"));
+        }
+    }
+    obj.get("metrics").and_then(Json::as_obj).ok_or("missing metrics object")?;
+    Ok(())
+}
+
 /// Print a key/value result row (greppable in bench output).
 pub fn result_row(key: &str, value: impl std::fmt::Display) {
     println!("result {key} = {value}");
@@ -97,5 +339,116 @@ mod tests {
         assert_eq!(count, 4);
         assert_eq!(s.n, 3);
         assert!(s.median >= 0.0);
+    }
+
+    fn sample_report() -> BenchReport {
+        let mut rep = BenchReport::new("unit_test");
+        rep.config_num("n", 1000.0);
+        rep.config_num("m", 3000.0);
+        rep.config_num("k", 4.0);
+        rep.config_str("graph", "expander");
+        rep.phase("build", 0.25);
+        rep.phase("solve", 1.5);
+        rep.metric("wire_bytes", 1234.0);
+        rep.metric("speedup_vs_serial", 1.7);
+        rep.summary("iter_secs", &Summary::of(&[0.5, 0.6, 0.7]));
+        rep
+    }
+
+    #[test]
+    fn report_roundtrips_through_json_and_validates() {
+        let doc = sample_report().to_json();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("emitted JSON must parse");
+        assert_eq!(parsed, doc, "Display/parse round-trip must be lossless");
+        validate_report(&parsed).expect("emitted report must validate");
+        // Spot-check content survived.
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(
+            parsed.get("config").unwrap().get("n").unwrap().as_usize(),
+            Some(1000)
+        );
+        let phases = parsed.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].get("name").unwrap().as_str(), Some("build"));
+        let iter = parsed.get("metrics").unwrap().get("iter_secs").unwrap();
+        assert_eq!(iter.get("median").unwrap().as_f64(), Some(0.6));
+    }
+
+    /// The schema is a public contract (docs/BENCHMARKS.md documents it
+    /// field by field, CI validates committed files against it). Pin the
+    /// exact top-level key set and version so accidental drift fails here
+    /// instead of in a later PR's trajectory diff.
+    #[test]
+    fn schema_is_stable() {
+        assert_eq!(BENCH_SCHEMA_VERSION, 1);
+        let doc = sample_report().to_json();
+        let obj = doc.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            [
+                "bench",
+                "config",
+                "date",
+                "machine",
+                "metrics",
+                "phases",
+                "schema_version",
+                "smoke"
+            ],
+            "BENCH_*.json top-level keys changed — bump BENCH_SCHEMA_VERSION \
+             and update docs/BENCHMARKS.md"
+        );
+        let machine = doc.get("machine").unwrap().as_obj().unwrap();
+        for key in ["os", "arch", "logical_cpus", "bench_threads"] {
+            assert!(machine.contains_key(key), "machine must carry {key}");
+        }
+        let date = doc.get("date").unwrap().as_str().unwrap();
+        assert_eq!(date.len(), 10);
+        assert_eq!(&date[4..5], "-");
+        assert_eq!(&date[7..8], "-");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_report(&Json::Num(3.0)).is_err(), "non-object");
+        let mut doc = sample_report().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema_version".to_string(), Json::Num(99.0));
+        }
+        assert!(validate_report(&doc).is_err(), "wrong version");
+        let mut doc = sample_report().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("phases");
+        }
+        assert!(validate_report(&doc).is_err(), "missing phases");
+        let mut doc = sample_report().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("date".to_string(), Json::Str("yesterday".to_string()));
+        }
+        assert!(validate_report(&doc).is_err(), "bad date");
+    }
+
+    #[test]
+    fn write_to_emits_a_parseable_file() {
+        let dir = std::env::temp_dir().join("sddn_benchkit_test");
+        let rep = sample_report();
+        let path = rep.write_to(&dir).expect("write must succeed");
+        let name = path.file_name().unwrap().to_str().unwrap();
+        assert!(name.starts_with("BENCH_unit_test_"), "got {name}");
+        assert!(name.ends_with(".json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).expect("file must hold valid JSON");
+        validate_report(&parsed).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn civil_date_conversion_is_correct() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year start
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29)); // leap day
+        assert_eq!(civil_from_days(20_666), (2026, 8, 1));
     }
 }

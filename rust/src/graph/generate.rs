@@ -75,6 +75,71 @@ pub fn star(n: usize) -> Graph {
     Graph::from_edges(n, (1..n).map(|i| (0, i)).collect())
 }
 
+/// Random regular-ish expander: the union of `cycles` independent random
+/// Hamiltonian cycles (each a shuffled permutation walked end-around).
+/// Streaming O(m): the edge list is emitted directly — no adjacency
+/// matrix, no non-edge sampling — so a 10⁶-node / 10⁷-edge instance
+/// builds in seconds. Connected by construction (any single cycle
+/// already spans all nodes); expected degree ≈ `2·cycles` with strong
+/// spectral expansion, the well-conditioned topology for scale runs.
+/// `m()` lands slightly under `cycles·n` because coinciding cycle edges
+/// dedup.
+pub fn expander(n: usize, cycles: usize, rng: &mut Pcg64) -> Graph {
+    assert!(n >= 3, "expander needs n >= 3");
+    assert!(cycles >= 1, "need at least one Hamiltonian cycle");
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(cycles * n);
+    let mut perm: Vec<usize> = (0..n).collect();
+    for _ in 0..cycles {
+        rng.shuffle(&mut perm);
+        for i in 0..n {
+            let u = perm[i];
+            let v = perm[(i + 1) % n];
+            edges.push((u.min(v), u.max(v)));
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Power-law (heavy-tailed degree) graph via Barabási–Albert
+/// preferential attachment: each new node attaches to `attach` distinct
+/// existing nodes sampled proportionally to degree (the classic
+/// repeated-endpoints trick — sampling a uniform entry of the running
+/// endpoint list *is* degree-proportional sampling). Streaming O(m)
+/// time and memory, connected by construction; `m() ≈ attach·n`.
+pub fn power_law(n: usize, attach: usize, rng: &mut Pcg64) -> Graph {
+    assert!(attach >= 1, "need at least one attachment edge per node");
+    assert!(n > attach, "need n > attach seed nodes");
+    let seed = attach + 1;
+    // Seed: a clique on the first `attach+1` nodes so every early target
+    // has nonzero degree.
+    let mut edges: Vec<(usize, usize)> =
+        Vec::with_capacity(seed * (seed - 1) / 2 + (n - seed) * attach);
+    let mut endpoints: Vec<usize> = Vec::with_capacity(2 * edges.capacity());
+    for i in 0..seed {
+        for j in (i + 1)..seed {
+            edges.push((i, j));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    let mut picked: Vec<usize> = Vec::with_capacity(attach);
+    for v in seed..n {
+        picked.clear();
+        while picked.len() < attach {
+            let t = endpoints[rng.next_below(endpoints.len() as u64) as usize];
+            if !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &t in &picked {
+            edges.push((t.min(v), t.max(v)));
+            endpoints.push(t);
+            endpoints.push(v);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
 /// 2-D grid graph with `r*c` nodes.
 pub fn grid(r: usize, c: usize) -> Graph {
     let id = |i: usize, j: usize| i * c + j;
@@ -131,5 +196,47 @@ mod tests {
     fn too_few_edges_panics() {
         let mut rng = Pcg64::new(1);
         let _ = random_connected(10, 5, &mut rng);
+    }
+
+    #[test]
+    fn expander_is_connected_with_expected_size() {
+        let mut rng = Pcg64::new(7);
+        for &(n, c) in &[(10usize, 1usize), (200, 3), (500, 5)] {
+            let g = expander(n, c, &mut rng);
+            assert_eq!(g.n, n);
+            assert!(g.is_connected(), "n={n} cycles={c}");
+            // Dedup can only shrink the c·n emitted edges, and a single
+            // spanning cycle survives any dedup.
+            assert!(g.m() <= c * n, "n={n} c={c} m={}", g.m());
+            assert!(g.m() >= n, "n={n} c={c} m={}", g.m());
+            // Degrees concentrate near 2c — no heavy tail.
+            assert!(g.max_degree() <= 2 * c, "cycle union caps degree at 2c");
+        }
+    }
+
+    #[test]
+    fn power_law_is_connected_with_heavy_tail() {
+        let mut rng = Pcg64::new(8);
+        let (n, attach) = (400usize, 3usize);
+        let g = power_law(n, attach, &mut rng);
+        assert_eq!(g.n, n);
+        assert!(g.is_connected());
+        let expected = (attach + 1) * attach / 2 + (n - attach - 1) * attach;
+        assert_eq!(g.m(), expected, "preferential attachment never emits duplicate edges");
+        // Heavy tail: the busiest hub dwarfs the minimum (≥ attach) degree.
+        assert!(
+            g.max_degree() >= 5 * attach,
+            "no hub emerged: max degree {}",
+            g.max_degree()
+        );
+    }
+
+    #[test]
+    fn streaming_generators_are_seed_deterministic() {
+        let (g1, g2) = (expander(50, 2, &mut Pcg64::new(11)), expander(50, 2, &mut Pcg64::new(11)));
+        assert_eq!(g1.edges, g2.edges);
+        let (p1, p2) =
+            (power_law(50, 2, &mut Pcg64::new(12)), power_law(50, 2, &mut Pcg64::new(12)));
+        assert_eq!(p1.edges, p2.edges);
     }
 }

@@ -4,6 +4,10 @@
 use super::cg::LinOp;
 use super::matrix::Matrix;
 
+/// RHS-column block width of [`Csr::row_matvec_multi`] — sized so the
+/// accumulator block (8 × f64 = one cache line) stays in registers.
+const RHS_BLOCK: usize = 8;
+
 /// Compressed sparse row matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -109,16 +113,29 @@ impl Csr {
     /// and the partitioned per-owned-row path (`net::partitioned`) so both
     /// execute the identical scalar operations in the identical order —
     /// the bit-for-bit contract between the two transports rests on this.
+    ///
+    /// Cache-blocked over RHS columns: each block of ≤ [`RHS_BLOCK`]
+    /// columns accumulates in a stack array across the whole row, so the
+    /// output stays register-resident instead of round-tripping through
+    /// `yrow` once per nonzero. Per output element the f64 additions
+    /// happen in exactly the same `kk` order as the naive double loop, so
+    /// results are bitwise identical.
     #[inline]
     pub fn row_matvec_multi(&self, r: usize, x: &[f64], w: usize, yrow: &mut [f64]) {
-        yrow.fill(0.0);
         let (s, e) = (self.indptr[r], self.indptr[r + 1]);
-        for kk in s..e {
-            let v = self.values[kk];
-            let xrow = &x[self.indices[kk] * w..self.indices[kk] * w + w];
-            for j in 0..w {
-                yrow[j] += v * xrow[j];
+        let mut j0 = 0;
+        while j0 < w {
+            let bw = (w - j0).min(RHS_BLOCK);
+            let mut acc = [0.0f64; RHS_BLOCK];
+            for kk in s..e {
+                let v = self.values[kk];
+                let xo = self.indices[kk] * w + j0;
+                for (j, a) in acc[..bw].iter_mut().enumerate() {
+                    *a += v * x[xo + j];
+                }
             }
+            yrow[j0..j0 + bw].copy_from_slice(&acc[..bw]);
+            j0 += bw;
         }
     }
 
@@ -324,6 +341,39 @@ mod tests {
             a.matvec_into_threads(&x, &mut par, t);
             assert_eq!(serial, par, "threads={t}");
         }
+    }
+
+    #[test]
+    fn multi_rhs_blocked_matches_per_column_across_block_boundaries() {
+        // Widths straddling the RHS_BLOCK boundary (…, 8, 9, …) and a
+        // multi-block width must all match the per-column reference
+        // bitwise — the cache-blocked kernel may not reorder additions.
+        let a = small();
+        for w in [1usize, 7, 8, 9, 16, 19] {
+            let x: Vec<f64> = (0..3 * w).map(|i| (i as f64) * 0.37 - 1.0).collect();
+            let mut y = vec![f64::NAN; 3 * w]; // NaN canary: every slot must be written
+            a.matvec_multi_into_threads(&x, w, &mut y, 1);
+            for c in 0..w {
+                let xc: Vec<f64> = (0..3).map(|r| x[r * w + c]).collect();
+                let yc = a.matvec(&xc);
+                for r in 0..3 {
+                    assert_eq!(y[r * w + c], yc[r], "w={w} col={c} row={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_overwrites_stale_output() {
+        // row_matvec_multi must fully overwrite yrow (no read of stale
+        // contents) — callers pass reused workspaces.
+        let a = small();
+        let x = vec![1.0; 6];
+        let mut y = vec![123.0; 6];
+        a.matvec_multi_into_threads(&x, 2, &mut y, 1);
+        let mut fresh = vec![0.0; 6];
+        a.matvec_multi_into_threads(&x, 2, &mut fresh, 1);
+        assert_eq!(y, fresh);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //!   partitioned — run every configured algorithm on the sharded worker
 //!                 runtime and check bit-for-bit parity with the bulk path
 //!   solve       — demo the distributed SDDM solver on a random Laplacian
+//!   bench-validate — check BENCH_*.json perf-trajectory files against
+//!                 the schema (CI gate; see docs/BENCHMARKS.md)
 //!   info        — platform + artifact inventory
 //!
 //! (clap is unavailable offline; the parser is hand-rolled.)
@@ -24,6 +26,7 @@ fn main() {
         Some("comm") => cmd_comm(&args[1..]),
         Some("partitioned") => cmd_partitioned(&args[1..]),
         Some("solve") => cmd_solve(&args[1..]),
+        Some("bench-validate") => cmd_bench_validate(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | Some("-h") | Some("--help") | None => {
             print_usage();
@@ -52,6 +55,7 @@ fn print_usage() {
            sddnewton partitioned [--experiment <preset>] [--workers K] [--iters N]\n\
                          [--partitioning contiguous|round_robin|bfs] [--algorithms a,b,c]\n\
            sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
+           sddnewton bench-validate [--dir bench_results] [--allow-empty]\n\
            sddnewton info\n\
          \n\
          PRESETS: {}",
@@ -373,6 +377,66 @@ fn cmd_solve(args: &[String]) -> i32 {
         stats.messages, stats.floats, stats.rounds, stats.allreduces
     );
     i32::from(!out.converged)
+}
+
+/// Validate every `BENCH_*.json` in the trajectory directory against the
+/// schema the benches write. Exits non-zero when the directory holds no
+/// reports (unless `--allow-empty`) or any report is malformed — the CI
+/// gate that keeps the committed perf trajectory machine-readable.
+fn cmd_bench_validate(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &["allow-empty"]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dir = f.kv.get("dir").cloned().unwrap_or_else(|| {
+        std::env::var("SDDN_BENCH_DIR").unwrap_or_else(|_| "bench_results".to_string())
+    });
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench-validate: cannot read {dir}: {e}");
+            return 1;
+        }
+    };
+    let mut names: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        if f.flags.contains("allow-empty") {
+            println!("bench-validate: no BENCH_*.json files in {dir} (allowed)");
+            return 0;
+        }
+        eprintln!("bench-validate: no BENCH_*.json files in {dir}");
+        return 1;
+    }
+    let mut bad = 0;
+    for path in &names {
+        let verdict = std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|text| {
+                Json::parse(text.trim()).map_err(|e| e.to_string())
+            })
+            .and_then(|doc| sddnewton::benchkit::validate_report(&doc));
+        match verdict {
+            Ok(()) => println!("ok      {}", path.display()),
+            Err(e) => {
+                eprintln!("INVALID {}: {e}", path.display());
+                bad += 1;
+            }
+        }
+    }
+    println!("bench-validate: {} file(s), {bad} invalid", names.len());
+    i32::from(bad > 0)
 }
 
 fn cmd_info() -> i32 {

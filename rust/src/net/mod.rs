@@ -25,6 +25,8 @@
 //!   used by the `end_to_end` example to demonstrate fully local node
 //!   programs.
 
+#![warn(missing_docs)]
+
 pub mod partitioned;
 pub mod stats;
 pub mod threaded;
@@ -112,8 +114,18 @@ pub trait Exchange {
     fn register_plan(&mut self, _name: &str, _a: &Csr) {}
 
     /// Laplacian application `y = (I_w ⊗ L) x` over the transport's graph
-    /// — one neighbor-exchange round of `2m` messages.
-    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64>;
+    /// into a caller-provided buffer — one neighbor-exchange round of
+    /// `2m` messages. This is the hot-path form: iteration loops keep a
+    /// reusable workspace instead of allocating a fresh `Vec` per round.
+    fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]);
+
+    /// Allocating convenience wrapper around
+    /// [`Self::laplacian_apply_into`].
+    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+        let mut y = vec![0.0; x.len()];
+        self.laplacian_apply_into(x, w, &mut y);
+        y
+    }
 
     /// Tree all-reduce (sum): per-column global sums of the `local_n × w`
     /// locals. Every handle returns the same `w` floats; the reduction is
@@ -262,15 +274,14 @@ impl Exchange for CommGraph<'_> {
         self.stats.record_exchange(directed_messages, w);
     }
 
-    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+    fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
         assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
+        assert_eq!(out.len(), x.len(), "output shape mismatch");
         if self.lap.is_none() {
             self.lap = Some(laplacian_csr(self.g));
         }
-        let mut y = vec![0.0; x.len()];
-        self.lap.as_ref().unwrap().matvec_multi_into(x, w, &mut y);
+        self.lap.as_ref().unwrap().matvec_multi_into(x, w, out);
         self.stats.record_edge_round(self.g.m(), w);
-        y
     }
 
     fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {

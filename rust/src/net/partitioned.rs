@@ -283,10 +283,19 @@ pub struct ShardExchange<'a> {
     /// support (lazily for graph-support operators, eagerly through
     /// [`Exchange::register_plan`] for overlays).
     op_plans: HashMap<OpKey, ExchangePlan>,
+    /// Arena of boundary-payload buffers: consumed inbound payloads are
+    /// parked here and reused for outbound sends, so steady-state rounds
+    /// allocate nothing. Capped at [`PAYLOAD_POOL_CAP`].
+    payload_pool: Vec<Vec<f64>>,
+    /// Persistent scratch for the fresh-masked receive row list.
+    fresh_scratch: Vec<usize>,
     stats: CommStats,
     cross: u64,
     cross_floats: u64,
 }
+
+/// Cap on parked payload buffers per worker (excess buffers are dropped).
+const PAYLOAD_POOL_CAP: usize = 64;
 
 impl<'a> ShardExchange<'a> {
     /// Wire up a worker handle. `peer_txs` holds one sender per worker,
@@ -318,9 +327,25 @@ impl<'a> ShardExchange<'a> {
             to_reducer,
             from_reducer,
             op_plans: HashMap::new(),
+            payload_pool: Vec::new(),
+            fresh_scratch: Vec::new(),
             stats: CommStats::default(),
             cross: 0,
             cross_floats: 0,
+        }
+    }
+
+    /// Take a cleared payload buffer from the arena (or allocate one).
+    fn take_payload(&mut self) -> Vec<f64> {
+        let mut buf = self.payload_pool.pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Park a consumed payload buffer for reuse.
+    fn park_payload(&mut self, buf: Vec<f64>) {
+        if self.payload_pool.len() < PAYLOAD_POOL_CAP && buf.capacity() > 0 {
+            self.payload_pool.push(buf);
         }
     }
 
@@ -421,9 +446,13 @@ impl<'a> ShardExchange<'a> {
         }
 
         // 1. Ship the plan's (fresh) owned rows to each peer, tagged with
-        //    the round.
+        //    the round. Outbound buffers come from the payload arena —
+        //    every consumed inbound payload is parked there in step 2, so
+        //    steady-state rounds recycle instead of allocating.
         for (peer, rows) in &xplan.send {
-            let mut buf = Vec::with_capacity(rows.len() * w);
+            let mut buf = self.payload_pool.pop().unwrap_or_default();
+            buf.clear();
+            buf.reserve(rows.len() * w);
             let mut shipped = 0u64;
             for &u in rows {
                 if !live(u) {
@@ -434,6 +463,9 @@ impl<'a> ShardExchange<'a> {
                 shipped += 1;
             }
             if shipped == 0 {
+                if self.payload_pool.len() < PAYLOAD_POOL_CAP {
+                    self.payload_pool.push(buf);
+                }
                 continue;
             }
             self.peer_txs[*peer]
@@ -446,17 +478,17 @@ impl<'a> ShardExchange<'a> {
         // 2. Refresh the mirror: owned rows from `x`, (fresh) halo rows
         //    from the peers (reorder-buffered by round). The dominant
         //    full-round case borrows the plan rows directly; only masked
-        //    rounds materialize the filtered list.
+        //    rounds fill the persistent filtered-row scratch.
         for (li, &u) in self.plan.owned.iter().enumerate() {
             self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
         }
         for (peer, rows) in &xplan.recv {
-            let filtered: Vec<usize>;
             let expect: &[usize] = match fresh {
                 None => rows,
                 Some(_) => {
-                    filtered = rows.iter().copied().filter(|&u| live(u)).collect();
-                    &filtered
+                    self.fresh_scratch.clear();
+                    self.fresh_scratch.extend(rows.iter().copied().filter(|&u| live(u)));
+                    &self.fresh_scratch
                 }
             };
             if expect.is_empty() {
@@ -466,6 +498,9 @@ impl<'a> ShardExchange<'a> {
             assert_eq!(data.len(), expect.len() * w, "halo payload width drifted");
             for (idx, &u) in expect.iter().enumerate() {
                 self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
+            }
+            if self.payload_pool.len() < PAYLOAD_POOL_CAP && data.capacity() > 0 {
+                self.payload_pool.push(data);
             }
         }
 
@@ -519,26 +554,29 @@ impl Exchange for ShardExchange<'_> {
         self.op_plans.insert(key, plan);
     }
 
-    fn laplacian_apply(&mut self, x: &[f64], w: usize) -> Vec<f64> {
+    fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
         let lap = self.lap;
-        let mut y = vec![0.0; x.len()];
-        self.exchange_apply(lap, 2 * self.m_edges as u64, x, w, &mut y);
-        y
+        self.exchange_apply(lap, 2 * self.m_edges as u64, x, w, out);
     }
 
     fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
         assert_eq!(locals.len(), self.plan.owned.len() * w);
         self.red_seq += 1;
-        self.to_reducer
-            .send((self.plan.worker, self.red_seq, locals.to_vec()))
-            .expect("reducer died");
-        let total = self.from_reducer.recv().expect("reducer died");
-        assert_eq!(total.len(), w, "all-reduce width drifted across workers");
+        let mut up = self.take_payload();
+        up.extend_from_slice(locals);
+        self.to_reducer.send((self.plan.worker, self.red_seq, up)).expect("reducer died");
+        let down = self.from_reducer.recv().expect("reducer died");
+        assert_eq!(down.len(), w, "all-reduce width drifted across workers");
         if self.k > 1 {
             self.cross += 2;
             self.cross_floats += (locals.len() + w) as u64;
         }
         self.stats.record_allreduce(self.n, w);
+        // The reducer answers in a recycled contribution buffer (large
+        // capacity); park it and hand the caller a right-sized copy so the
+        // arena keeps its buffers across up/down cycles.
+        let total = down.clone();
+        self.park_payload(down);
         total
     }
 
@@ -556,6 +594,13 @@ impl Exchange for ShardExchange<'_> {
 /// reduce `s` — and the dense global stack is summed in node order, so the
 /// totals match the bulk transport bit for bit. Runs until every worker
 /// sender is dropped.
+///
+/// Hot-loop hygiene: the dense assembly buffer persists across reduces
+/// (every slot is overwritten — the shards partition the node set), and
+/// each worker's answer rides back in that worker's own recycled
+/// contribution buffer, so the workers' payload arenas keep their
+/// buffers across up/down cycles and a steady-state reduce allocates
+/// nothing beyond the `w`-float total.
 pub fn run_reducer(
     n: usize,
     owned_of: &[Vec<usize>],
@@ -565,6 +610,7 @@ pub fn run_reducer(
     let k = owned_of.len();
     assert_eq!(txs.len(), k);
     let mut open: BTreeMap<u64, (usize, Vec<Option<Vec<f64>>>)> = BTreeMap::new();
+    let mut dense: Vec<f64> = Vec::new();
     while let Ok((wid, seq, vals)) = rx.recv() {
         let slot = open.entry(seq).or_insert_with(|| (0, vec![None; k]));
         assert!(slot.1[wid].is_none(), "duplicate all-reduce contribution from worker {wid}");
@@ -581,7 +627,9 @@ pub fn run_reducer(
                 (!owned.is_empty()).then(|| part.as_ref().unwrap().len() / owned.len())
             })
             .unwrap_or(0);
-        let mut dense = vec![0.0; n * w];
+        // Fully overwritten below (the shards partition 0..n), so a plain
+        // resize suffices — no per-reduce allocation or re-zeroing.
+        dense.resize(n * w, 0.0);
         for (part, owned) in parts.iter().zip(owned_of) {
             let vals = part.as_ref().unwrap();
             for (li, &u) in owned.iter().enumerate() {
@@ -595,8 +643,12 @@ pub fn run_reducer(
                 total[j] += dense[i * w + j];
             }
         }
-        for tx in txs {
-            let _ = tx.send(total.clone());
+        // Answer each worker in its own recycled contribution buffer.
+        for (tx, part) in txs.iter().zip(parts) {
+            let mut back = part.unwrap();
+            back.clear();
+            back.extend_from_slice(&total);
+            let _ = tx.send(back);
         }
     }
 }

@@ -110,6 +110,7 @@ impl NodeCtx {
 
 /// Outcome of a threaded run: per-node results in node order.
 pub struct RunOutput<T> {
+    /// Whatever each node program returned, indexed by node id.
     pub per_node: Vec<T>,
 }
 

@@ -7,6 +7,7 @@
 
 use super::chain::Chain;
 use crate::net::Exchange;
+use crate::util::BufferPool;
 
 /// Solver options.
 #[derive(Debug, Clone)]
@@ -56,24 +57,40 @@ impl SddmSolver {
     /// `b` is stacked shard-local `local_n × w`. Communication is recorded
     /// in the exchange's ledger.
     pub fn crude_solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
+        let mut pool = BufferPool::new();
+        self.crude_solve_ws(b, w, exch, &mut pool)
+    }
+
+    /// [`Self::crude_solve`] with an explicit workspace pool: every
+    /// scratch buffer (and the returned solution) is drawn from `pool`,
+    /// so a warmed pool makes repeated solves allocation-free. Callers
+    /// should `pool.put` the returned vector back once consumed.
+    /// Bit-for-bit identical to the allocating form.
+    pub fn crude_solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> Vec<f64> {
         let c = &self.chain;
         let ln = exch.local_n();
         assert_eq!(b.len(), ln * w);
         let d = c.depth;
         let len = ln * w;
 
-        let mut scratch_a = vec![0.0; len];
-        let mut scratch_b = vec![0.0; len];
+        let mut scratch_a = pool.take(len);
+        let mut scratch_b = pool.take(len);
 
         // Forward: b_{i+1} = (I + A_i D̃^{-1}) b_i,  A_i D̃^{-1} v = D̃ X^{2^i} D̃^{-1} v.
         // The per-level row sweeps are independent across the owned rows
         // (and the w RHS columns), so they run on the par substrate; each
         // row is owned by exactly one thread → bit-for-bit serial-identical.
         let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
-        let mut cur = b.to_vec();
+        let mut cur = pool.take_copy(b);
         c.project(&mut cur, w, exch);
-        bs.push(cur.clone());
-        let mut tmp = vec![0.0; len];
+        bs.push(pool.take_copy(&cur));
+        let mut tmp = pool.take(len);
         for i in 0..d {
             // tmp = D̃^{-1} cur
             diag_mul_into(&c.dinv, exch.owned(), &cur, w, &mut tmp);
@@ -81,11 +98,11 @@ impl SddmSolver {
             // cur = cur + D̃ * scratch_a
             diag_axpy(&c.dvec, exch.owned(), &scratch_a, w, &mut cur);
             c.project(&mut cur, w, exch);
-            bs.push(cur.clone());
+            bs.push(pool.take_copy(&cur));
         }
 
         // Last level: x_d = D̃^{-1} b_d.
-        let mut x = vec![0.0; len];
+        let mut x = pool.take(len);
         diag_mul_into(&c.dinv, exch.owned(), &bs[d], w, &mut x);
         c.project(&mut x, w, exch);
 
@@ -95,6 +112,13 @@ impl SddmSolver {
             backward_combine(&c.dinv, exch.owned(), &bs[i], &scratch_a, w, &mut x);
             c.project(&mut x, w, exch);
         }
+        pool.put(scratch_a);
+        pool.put(scratch_b);
+        pool.put(cur);
+        pool.put(tmp);
+        for buf in bs {
+            pool.put(buf);
+        }
         x
     }
 
@@ -102,20 +126,34 @@ impl SddmSolver {
     /// the crude solver, run until the relative residual falls below
     /// `opts.eps` (or the sweep budget is exhausted).
     pub fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
+        let mut pool = BufferPool::new();
+        self.solve_ws(b, w, exch, &mut pool)
+    }
+
+    /// [`Self::solve`] with an explicit workspace pool (see
+    /// [`Self::crude_solve_ws`]); the outcome's `x` is pool-drawn — put it
+    /// back after use to keep the steady state allocation-free.
+    pub fn solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> SolveOutcome {
         let c = &self.chain;
         let ln = exch.local_n();
         assert_eq!(b.len(), ln * w);
         let len = ln * w;
 
-        let mut b0 = b.to_vec();
+        let mut b0 = pool.take_copy(b);
         c.project(&mut b0, w, exch);
         // Per-column RHS norms: one accounted all-reduce of width w.
-        let bnorms = col_norms(&b0, w, exch);
+        let bnorms = col_norms(&b0, w, exch, pool);
 
         // y₀ = crude(b).
-        let mut y = self.crude_solve(&b0, w, exch);
-        let mut residual = vec![0.0; len];
-        let mut my = vec![0.0; len];
+        let mut y = self.crude_solve_ws(&b0, w, exch, pool);
+        let mut residual = pool.take(len);
+        let mut my = pool.take(len);
         let mut sweeps = 0;
         let mut rel = f64::INFINITY;
 
@@ -127,7 +165,7 @@ impl SddmSolver {
             // Residual norm check: an accounted all-reduce of the w
             // per-column squared norms (width w — a multi-RHS solve moves
             // w floats per message here, not 1).
-            let rn = col_norms(&residual, w, exch);
+            let rn = col_norms(&residual, w, exch, pool);
             rel = rn
                 .iter()
                 .zip(&bnorms)
@@ -142,12 +180,16 @@ impl SddmSolver {
                 break;
             }
             // y ← y + Z₀ r.
-            let dz = self.crude_solve(&residual, w, exch);
+            let dz = self.crude_solve_ws(&residual, w, exch, pool);
             for i in 0..len {
                 y[i] += dz[i];
             }
+            pool.put(dz);
             sweeps = k + 1;
         }
+        pool.put(b0);
+        pool.put(residual);
+        pool.put(my);
         SolveOutcome { x: y, sweeps, rel_residual: rel, converged: rel <= self.opts.eps }
     }
 }
@@ -218,13 +260,14 @@ fn sub_into(a: &[f64], b: &[f64], w: usize, dst: &mut [f64]) {
 
 /// Global per-column 2-norms of a shard-local stack: one all-reduce of the
 /// per-node squared contributions (width `w`), summed in global node order
-/// on every transport.
-fn col_norms(v: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
-    let mut locals = vec![0.0; v.len()];
+/// on every transport. The squared-contribution scratch is pool-drawn.
+fn col_norms(v: &[f64], w: usize, exch: &mut dyn Exchange, pool: &mut BufferPool) -> Vec<f64> {
+    let mut locals = pool.take(v.len());
     for (loc, val) in locals.iter_mut().zip(v) {
         *loc = val * val;
     }
     let mut out = exch.allreduce_sum(&locals, w);
+    pool.put(locals);
     for o in out.iter_mut() {
         *o = o.sqrt().max(1e-300);
     }

@@ -26,7 +26,7 @@
 use super::chain::{Chain, ChainError, ChainOptions};
 use crate::linalg::Csr;
 use crate::net::Exchange;
-use crate::util::Pcg64;
+use crate::util::{BufferPool, Pcg64};
 
 /// A chain with explicitly squared level matrices.
 #[derive(Debug, Clone)]
@@ -83,18 +83,32 @@ impl SquaredChain {
 
     /// "Crude" solve (Algorithm 1) with single-round level applications.
     pub fn crude_solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> Vec<f64> {
+        let mut pool = BufferPool::new();
+        self.crude_solve_ws(b, w, exch, &mut pool)
+    }
+
+    /// [`Self::crude_solve`] with an explicit workspace pool: scratch and
+    /// the returned solution are pool-drawn (put the result back after
+    /// use). Bit-for-bit identical to the allocating form.
+    pub fn crude_solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> Vec<f64> {
         let c = &self.base;
         let ln = exch.local_n();
         assert_eq!(b.len(), ln * w);
         let d = c.depth;
         let len = ln * w;
-        let mut scratch = vec![0.0; len];
+        let mut scratch = pool.take(len);
 
         let mut bs: Vec<Vec<f64>> = Vec::with_capacity(d + 1);
-        let mut cur = b.to_vec();
+        let mut cur = pool.take_copy(b);
         c.project(&mut cur, w, exch);
-        bs.push(cur.clone());
-        let mut tmp = vec![0.0; len];
+        bs.push(pool.take_copy(&cur));
+        let mut tmp = pool.take(len);
         for i in 0..d {
             for (r, &u) in exch.owned().iter().enumerate() {
                 for j in 0..w {
@@ -108,10 +122,10 @@ impl SquaredChain {
                 }
             }
             c.project(&mut cur, w, exch);
-            bs.push(cur.clone());
+            bs.push(pool.take_copy(&cur));
         }
 
-        let mut x = vec![0.0; len];
+        let mut x = pool.take(len);
         for (r, &u) in exch.owned().iter().enumerate() {
             for j in 0..w {
                 x[r * w + j] = c.dinv[u] * bs[d][r * w + j];
@@ -129,6 +143,12 @@ impl SquaredChain {
             }
             c.project(&mut x, w, exch);
         }
+        pool.put(scratch);
+        pool.put(cur);
+        pool.put(tmp);
+        for buf in bs {
+            pool.put(buf);
+        }
         x
     }
 
@@ -141,16 +161,31 @@ impl SquaredChain {
         max_sweeps: usize,
         exch: &mut dyn Exchange,
     ) -> super::solver::SolveOutcome {
+        let mut pool = BufferPool::new();
+        self.solve_ws(b, w, eps, max_sweeps, exch, &mut pool)
+    }
+
+    /// [`Self::solve`] with an explicit workspace pool (the outcome's `x`
+    /// is pool-drawn — put it back after use).
+    pub fn solve_ws(
+        &self,
+        b: &[f64],
+        w: usize,
+        eps: f64,
+        max_sweeps: usize,
+        exch: &mut dyn Exchange,
+        pool: &mut BufferPool,
+    ) -> super::solver::SolveOutcome {
         let c = &self.base;
         let len = exch.local_n() * w;
         assert_eq!(b.len(), len);
-        let mut b0 = b.to_vec();
+        let mut b0 = pool.take_copy(b);
         c.project(&mut b0, w, exch);
         let bnorm = exch.norm2_sq(&b0, w).sqrt().max(1e-300);
 
-        let mut y = self.crude_solve(&b0, w, exch);
-        let mut my = vec![0.0; len];
-        let mut residual = vec![0.0; len];
+        let mut y = self.crude_solve_ws(&b0, w, exch, pool);
+        let mut my = pool.take(len);
+        let mut residual = pool.take(len);
         let mut rel = f64::INFINITY;
         let mut sweeps = 0;
         for k in 0..=max_sweeps {
@@ -165,12 +200,16 @@ impl SquaredChain {
                 sweeps = k;
                 break;
             }
-            let dz = self.crude_solve(&residual, w, exch);
+            let dz = self.crude_solve_ws(&residual, w, exch, pool);
             for i in 0..len {
                 y[i] += dz[i];
             }
+            pool.put(dz);
             sweeps = k + 1;
         }
+        pool.put(b0);
+        pool.put(my);
+        pool.put(residual);
         super::solver::SolveOutcome { x: y, sweeps, rel_residual: rel, converged: rel <= eps }
     }
 

@@ -6,7 +6,9 @@ pub mod rng;
 pub mod timer;
 pub mod stats;
 pub mod logging;
+pub mod pool;
 
+pub use pool::BufferPool;
 pub use rng::Pcg64;
 pub use timer::Timer;
 pub use stats::Summary;

@@ -1,0 +1,111 @@
+//! A tiny free-list of `Vec<f64>` buffers for the iteration hot loops.
+//!
+//! The partitioned SDD-Newton inner loop used to allocate fresh `Vec`s
+//! every round (solver scratch, boundary payloads, all-reduce copies).
+//! At 10⁶ nodes that churn dominates; a [`BufferPool`] turns it into
+//! steady-state reuse. `take` hands out a zeroed buffer of the exact
+//! requested length — bit-identical semantics to `vec![0.0; len]` — and
+//! `put` returns it for the next round.
+
+/// A free-list of reusable `Vec<f64>` buffers.
+///
+/// Buffers handed out by [`take`](BufferPool::take) are always zeroed
+/// and exactly the requested length, so swapping `vec![0.0; len]` for
+/// `pool.take(len)` never changes numerical results. The list is
+/// length-capped so a one-off huge round can't pin memory forever.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Vec<Vec<f64>>,
+}
+
+/// Maximum number of parked buffers; excess `put`s are dropped.
+const MAX_PARKED: usize = 64;
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> BufferPool {
+        BufferPool { free: Vec::new() }
+    }
+
+    /// Get a zeroed buffer of exactly `len` elements, reusing a parked
+    /// allocation when one is available.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Get a buffer holding a copy of `src` (the pooled equivalent of
+    /// `src.to_vec()`), reusing a parked allocation when available.
+    pub fn take_copy(&mut self, src: &[f64]) -> Vec<f64> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Park a buffer for reuse. Contents need not be cleared; `take`
+    /// re-zeroes. Beyond the cap the buffer is simply dropped.
+    pub fn put(&mut self, v: Vec<f64>) {
+        if self.free.len() < MAX_PARKED && v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+
+    /// Number of currently parked buffers (diagnostics/tests).
+    pub fn parked(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut pool = BufferPool::new();
+        let mut a = pool.take(5);
+        assert_eq!(a, vec![0.0; 5]);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        pool.put(a);
+        let b = pool.take(3);
+        assert_eq!(b, vec![0.0; 3], "recycled buffer must be re-zeroed");
+        let c = pool.take(9);
+        assert_eq!(c, vec![0.0; 9], "growth past old capacity still zeroed");
+    }
+
+    #[test]
+    fn reuses_capacity() {
+        let mut pool = BufferPool::new();
+        let a = pool.take(100);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        let b = pool.take(50);
+        assert_eq!(b.as_ptr(), ptr, "shrinking take must reuse the parked allocation");
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn take_copy_matches_to_vec() {
+        let mut pool = BufferPool::new();
+        pool.put(vec![9.0; 16]);
+        let src = [1.0, 2.0, 3.0];
+        let v = pool.take_copy(&src);
+        assert_eq!(v, src.to_vec());
+    }
+
+    #[test]
+    fn cap_bounds_parked() {
+        let mut pool = BufferPool::new();
+        for _ in 0..(MAX_PARKED + 10) {
+            pool.put(vec![0.0; 4]);
+        }
+        assert_eq!(pool.parked(), MAX_PARKED);
+    }
+}

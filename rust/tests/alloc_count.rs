@@ -1,0 +1,129 @@
+//! Hot-loop allocation accounting — the tentpole guard for the
+//! de-allocation work (reusable solver workspaces, the `BufferPool`
+//! free-list, the `ShardExchange` payload arena).
+//!
+//! A counting `#[global_allocator]` wraps `System` and tallies every
+//! `alloc`/`realloc`. Two invariants are asserted:
+//!
+//! 1. A warmed `solve_ws` (caller-owned pool, second call) allocates
+//!    strictly less than the allocating `solve` wrapper (fresh pool every
+//!    call) on the identical system — the pool actually gets hits.
+//! 2. The partitioned SDD-Newton runtime reaches an allocation **steady
+//!    state**: the marginal allocations of iterations 5–6 do not exceed
+//!    those of iterations 3–4 (modulo a small slack for hash-map growth
+//!    and out-of-order channel arrivals) — nothing accumulates per round.
+//!
+//! Everything runs inside ONE `#[test]` so parallel test execution can't
+//! interleave foreign allocations into a measurement window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sddnewton::algorithms::solvers::{sddm_for_graph, LaplacianSolver};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::{run_partitioned_baseline, Partition};
+use sddnewton::graph::generate;
+use sddnewton::harness::experiments::{make_inner_solver, make_sharded_algorithm};
+use sddnewton::net::CommGraph;
+use sddnewton::problems::datasets;
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::{BufferPool, Pcg64};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Allocations performed while running `f`.
+fn count<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = allocs();
+    let r = f();
+    (allocs() - before, r)
+}
+
+#[test]
+fn hot_loops_reach_allocation_steady_state() {
+    // ---- 1. Pooled solver workspaces get hits. -------------------------
+    let mut rng = Pcg64::new(777);
+    let g = generate::random_connected(60, 150, &mut rng);
+    let l = sddnewton::graph::laplacian_csr(&g);
+    let solver = sddm_for_graph(&g, 1e-6, &mut rng);
+    let w = 4;
+    let z = rng.normal_vec(60 * w);
+    let mut b = vec![0.0; 60 * w];
+    l.matvec_multi_into(&z, w, &mut b);
+
+    // Allocating wrapper: fresh pool per call, every scratch buffer is a
+    // new allocation.
+    let mut comm = CommGraph::new(&g);
+    let (cold, out_cold) = count(|| LaplacianSolver::solve(&solver, &b, w, &mut comm));
+
+    // Caller-owned pool, warmed by one full solve.
+    let mut pool = BufferPool::new();
+    let mut comm = CommGraph::new(&g);
+    let warm_up = LaplacianSolver::solve_ws(&solver, &b, w, &mut comm, &mut pool);
+    pool.put(warm_up.x);
+    let mut comm = CommGraph::new(&g);
+    let (warm, out_warm) =
+        count(|| LaplacianSolver::solve_ws(&solver, &b, w, &mut comm, &mut pool));
+
+    // Identical math either way (the pool only recycles capacity).
+    assert_eq!(out_cold.x, out_warm.x, "pooled solve must be bit-identical");
+    assert!(
+        warm < cold,
+        "warmed solve_ws must allocate less than the allocating wrapper: \
+         warm={warm} cold={cold}"
+    );
+    pool.put(out_warm.x);
+
+    // ---- 2. Partitioned runtime allocation steady state. ---------------
+    let mut rng = Pcg64::new(778);
+    let n = 120;
+    let g = generate::random_connected(n, 300, &mut rng);
+    let prob = datasets::synthetic_regression(n, 3, 360, 0.1, 0.05, &mut rng);
+    let kind = AlgoKind::SddNewton { eps: 1e-3, alpha: 1.0 };
+    let inner = make_inner_solver(&kind, &g, &mut rng);
+    let inner_ref = inner.as_deref();
+    let backend = NativeBackend;
+    let part = Partition::contiguous(n, 2);
+
+    let mut run_iters = |iters: usize| {
+        let (a, out) = count(|| {
+            run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+                make_sharded_algorithm(&kind, &prob, &g, &backend, inner_ref, owned)
+            })
+        });
+        assert!(!out.thetas.is_empty());
+        a
+    };
+    let a2 = run_iters(2);
+    let a4 = run_iters(4);
+    let a6 = run_iters(6);
+    let w1 = a4.saturating_sub(a2); // marginal allocs of iterations 3–4
+    let w2 = a6.saturating_sub(a4); // marginal allocs of iterations 5–6
+    assert!(
+        w2 <= w1 + w1 / 4 + 256,
+        "partitioned hot loop must not accumulate allocations per \
+         iteration: iters 3-4 cost {w1} allocs, iters 5-6 cost {w2}"
+    );
+}
