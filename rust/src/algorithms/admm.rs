@@ -71,6 +71,7 @@ pub fn sweep_stages(g: &Graph) -> Vec<usize> {
                 used[stage[v]] = true;
             }
         }
+        // sddn-lint: allow(panic) reason=at most deg(u) stages are taken, so a free stage exists within 0..=deg(u) by pigeonhole
         stage[u] = used.iter().position(|&b| !b).unwrap();
     }
     stage
@@ -207,6 +208,7 @@ impl ConsensusAlgorithm for Admm {
             // plan-driven transport exactly the stage's active boundary
             // crosses the wire, matching the modeled per-stage charge.
             let fresh = if s == 0 { &self.full_mask } else { &self.stage_masks[s - 1] };
+            // sddn-lint: graph-support adjacency sparsity is exactly the comm graph
             exch.exchange_apply_fresh(
                 &self.adjacency,
                 fresh,
@@ -249,6 +251,7 @@ impl ConsensusAlgorithm for Admm {
         // round shipping the final stage's fresh values.
         let mut lap = vec![0.0; ln * p];
         let last = &self.stage_masks[self.stages - 1];
+        // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph plus diagonal
         exch.exchange_apply_fresh(&self.laplacian, last, self.dual_msgs, &work, p, &mut lap);
         for i in 0..ln * p {
             self.mu[i] -= beta * lap[i];

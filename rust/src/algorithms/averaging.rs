@@ -91,6 +91,7 @@ impl ConsensusAlgorithm for DistAveraging {
         let mut diff = std::mem::take(&mut self.diff);
         diff.clear();
         diff.resize(ln * p, 0.0);
+        // sddn-lint: graph-support diffusion operator sparsity is exactly the comm graph
         exch.exchange_apply(&self.diffusion, 2 * self.m_edges as u64, &self.theta, p, &mut diff);
         for (li, &u) in self.owned.iter().enumerate() {
             // Gradient at the current ω.

@@ -89,6 +89,7 @@ impl ConsensusAlgorithm for DistGradient {
         let mut mixed = std::mem::take(&mut self.spare);
         mixed.clear();
         mixed.resize(ln * p, 0.0);
+        // sddn-lint: graph-support Metropolis mixing sparsity is exactly the comm graph plus diagonal
         exch.exchange_apply(&self.mixing, 2 * self.m_edges as u64, &self.thetas, p, &mut mixed);
         // Gradient step at the *current* iterate — purely local.
         for (li, &u) in self.owned.iter().enumerate() {

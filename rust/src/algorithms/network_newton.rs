@@ -120,6 +120,7 @@ impl ConsensusAlgorithm for NetworkNewton {
 
         // Penalty gradient g = (I − Z) y + α ∇f (one exchange round).
         let mut g = vec![0.0; ln * p];
+        // sddn-lint: graph-support penalty-gradient operator sparsity is exactly the comm graph plus diagonal
         exch.exchange_apply(&self.grad_op, 2 * self.m_edges as u64, &self.thetas, p, &mut g);
         for (li, &u) in self.owned.iter().enumerate() {
             let grad_f = problem.locals[u].gradient(&self.thetas[li * p..(li + 1) * p]);
@@ -139,6 +140,7 @@ impl ConsensusAlgorithm for NetworkNewton {
         }
         for _ in 0..self.k_hops {
             let mut bd = vec![0.0; ln * p];
+            // sddn-lint: graph-support hop operator sparsity is exactly the comm graph plus diagonal
             exch.exchange_apply(&self.hop_op, 2 * self.m_edges as u64, &d, p, &mut bd);
             let mut next = vec![0.0; ln * p];
             for (li, &u) in self.owned.iter().enumerate() {

@@ -189,6 +189,7 @@ impl<'a> SddNewton<'a> {
 
     /// One SDD-Newton outer iteration against any transport — the body
     /// of [`ConsensusAlgorithm::step`].
+    // sddn-lint: hot-path
     fn step_impl(&mut self, problem: &ConsensusProblem, exch: &mut dyn Exchange) {
         let p = self.p;
         let ln = self.owned.len();

@@ -21,6 +21,7 @@ pub trait LaplacianSolver: Send + Sync {
     /// Solve with caller-provided scratch buffers. Solvers whose inner
     /// loops can reuse pooled scratch override this; the default ignores
     /// the pool. Identical numerical results either way.
+    // sddn-lint: hot-path
     fn solve_ws(
         &self,
         b: &[f64],
@@ -39,6 +40,7 @@ impl LaplacianSolver for SddmSolver {
     fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
         SddmSolver::solve(self, b, w, exch)
     }
+    // sddn-lint: hot-path
     fn solve_ws(
         &self,
         b: &[f64],
@@ -62,6 +64,7 @@ impl LaplacianSolver for SquaredSddmSolver {
     fn solve(&self, b: &[f64], w: usize, exch: &mut dyn Exchange) -> SolveOutcome {
         self.chain.solve(b, w, self.opts.eps, self.opts.max_richardson, exch)
     }
+    // sddn-lint: hot-path
     fn solve_ws(
         &self,
         b: &[f64],
@@ -119,6 +122,7 @@ impl LaplacianSolver for NeumannSolver {
         let mut x = term.clone();
         let mut tmp = vec![0.0; ln * w];
         for _ in 0..self.terms {
+            // sddn-lint: graph-support adjacency sparsity is exactly the comm graph
             exch.exchange_apply(&self.adjacency, 2 * self.m_edges as u64, &term, w, &mut tmp);
             for (r, &u) in owned.iter().enumerate() {
                 for j in 0..w {
@@ -194,6 +198,7 @@ impl LaplacianSolver for ExactCgSolver {
         let mut iters = 0usize;
 
         while iters < max_iter && active.iter().any(|&a| a) {
+            // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph plus diagonal
             exch.exchange_apply(&self.laplacian, 2 * self.m_edges as u64, &p, w, &mut ap);
             exch.center(&mut ap, w);
             let pap = col_dots(exch, &p, &ap, w);
@@ -265,6 +270,7 @@ pub fn sddm_for_graph(
 ) -> SddmSolver {
     let l = crate::graph::laplacian_csr(g);
     let chain = crate::sddm::Chain::build(&l, &crate::sddm::ChainOptions::default(), rng)
+        // sddn-lint: allow(panic) reason=a graph Laplacian is SDD by construction, so chain building cannot fail here
         .expect("Laplacian is SDD by construction");
     SddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
 }
@@ -285,6 +291,7 @@ pub fn squared_sddm_for_graph(
         prune_tol,
         rng,
     )
+    // sddn-lint: allow(panic) reason=a graph Laplacian is SDD by construction, so chain building cannot fail here
     .expect("Laplacian is SDD by construction");
     SquaredSddmSolver::new(chain, crate::sddm::SolverOptions { eps, max_richardson: 300 })
 }

@@ -33,7 +33,9 @@ impl Csr {
         for &(r, c, v) in &sorted {
             assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
             if last == Some((r, c)) {
-                *values.last_mut().unwrap() += v;
+                if let Some(tail) = values.last_mut() {
+                    *tail += v;
+                }
             } else {
                 indices.push(c);
                 values.push(v);

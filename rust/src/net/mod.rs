@@ -27,6 +27,7 @@
 
 #![warn(missing_docs)]
 
+pub mod model;
 pub mod partitioned;
 pub mod stats;
 pub mod threaded;
@@ -95,6 +96,7 @@ pub trait Exchange {
         out: &mut [f64],
     ) {
         let _ = fresh;
+        // sddn-lint: allow(overlay) reason=default forwards to exchange_apply, which enforces the operator contract itself
         self.exchange_apply(a, directed_messages, x, w, out);
     }
 
@@ -277,10 +279,9 @@ impl Exchange for CommGraph<'_> {
     fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
         assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
         assert_eq!(out.len(), x.len(), "output shape mismatch");
-        if self.lap.is_none() {
-            self.lap = Some(laplacian_csr(self.g));
-        }
-        self.lap.as_ref().unwrap().matvec_multi_into(x, w, out);
+        let g = self.g;
+        let lap = self.lap.get_or_insert_with(|| laplacian_csr(g));
+        lap.matvec_multi_into(x, w, out);
         self.stats.record_edge_round(self.g.m(), w);
     }
 

@@ -1,0 +1,667 @@
+//! Deterministic schedule explorer for the partitioned transport.
+//!
+//! The sharded runtime's ordering defenses — the round-tagged reorder
+//! buffer in [`ShardExchange`] and the sequence-keyed reducer in
+//! [`run_reducer`] — are exercised by the regular test suite only on the
+//! schedules the OS happens to produce. [`ModelExchange`] closes that gap:
+//! it runs the k worker step-functions once on real threads to *record*
+//! every channel's traffic, then *replays* each receiver single-threaded
+//! under adversarially permuted delivery orders and asserts the iterates
+//! (and every outbound byte) are bit-for-bit identical.
+//!
+//! # Why per-receiver permutation covers all global schedules
+//!
+//! Every receiver in the runtime — a worker's [`ShardExchange`] plus the
+//! algorithm step-function driving it, and the reducer loop — is a
+//! deterministic function of its *per-channel input streams*. A global
+//! thread schedule can influence a receiver only by changing how its
+//! per-sender FIFO streams interleave at its single inbox (mpsc preserves
+//! per-sender order; cross-sender order is the scheduler's choice). So if
+//! (a) every receiver produces bit-identical outputs and *outbound
+//! streams* under every merge of its recorded input streams, and (b) the
+//! outbound streams equal the recorded ones, then by induction no global
+//! schedule can produce a different result. The explorer verifies exactly
+//! (a) and (b): exhaustively when the merge count is small (all delivery
+//! permutations at k ≤ 3 over a bounded round window), by seeded
+//! uniformly-random merges above.
+//!
+//! The reducer needs no extra pairing argument: a worker sends reduce
+//! contribution `s+1` only after receiving answer `s`, so under any
+//! per-worker-FIFO merge slot `s` completes before `s+1` and the answers
+//! ride back to each worker in sequence order.
+
+use super::partitioned::{build_shard_plans, run_reducer, ReduceMsg, ShardExchange, WireMsg};
+use crate::coordinator::partition::Partition;
+use crate::graph::laplacian::laplacian_csr;
+use crate::graph::Graph;
+use crate::linalg::Csr;
+use crate::util::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+
+/// Both wire payloads and reduce contributions share this shape:
+/// `(source id, round/sequence tag, values)`.
+type Envelope = (usize, u64, Vec<f64>);
+
+/// Bounds for one exploration run.
+#[derive(Debug, Clone)]
+pub struct ExploreOptions {
+    /// Receivers whose merge count is at most this are explored
+    /// exhaustively (every delivery permutation of their input streams).
+    pub exhaustive_limit: u128,
+    /// Seeded uniformly-random merges per receiver above the limit.
+    pub random_schedules: usize,
+    /// Base seed for the random sweeps (each receiver gets its own
+    /// deterministic stream derived from this).
+    pub seed: u64,
+}
+
+impl Default for ExploreOptions {
+    fn default() -> Self {
+        ExploreOptions { exhaustive_limit: 20_000, random_schedules: 48, seed: 0x5DD_C0DE }
+    }
+}
+
+/// What one exploration verified.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    /// Worker count `k`.
+    pub workers: usize,
+    /// Total replays performed across all receivers (including the
+    /// canonical arrival-order replays).
+    pub schedules_checked: u64,
+    /// True when *every* receiver was explored exhaustively — the
+    /// bit-identity claim then holds for all delivery schedules, not just
+    /// the sampled ones.
+    pub exhaustive: bool,
+    /// Boundary payloads recorded on the worker wires.
+    pub wire_messages: usize,
+    /// All-reduce contributions recorded at the reducer.
+    pub reduce_messages: usize,
+}
+
+/// A divergence found by the explorer. Any variant is a real ordering bug
+/// (or a non-deterministic step-function, which the BSP contract forbids).
+#[derive(Debug, Clone)]
+pub enum ScheduleError {
+    /// A worker's returned iterate differed from the recorded run.
+    Iterate {
+        /// Worker whose output diverged.
+        worker: usize,
+        /// Which replay schedule exposed it.
+        schedule: String,
+    },
+    /// A worker's outbound boundary stream differed from the recorded run.
+    Wire {
+        /// Sending worker (the one being replayed).
+        sender: usize,
+        /// Destination worker of the diverging stream.
+        receiver: usize,
+        /// Which replay schedule exposed it.
+        schedule: String,
+    },
+    /// A worker's outbound reduce contributions differed.
+    Reduce {
+        /// Worker whose contributions diverged.
+        worker: usize,
+        /// Which replay schedule exposed it.
+        schedule: String,
+    },
+    /// The reducer's answer stream to a worker differed.
+    Answer {
+        /// Worker whose answer stream diverged.
+        worker: usize,
+        /// Which replay schedule exposed it.
+        schedule: String,
+    },
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Iterate { worker, schedule } => {
+                write!(f, "worker {worker} iterate diverged under {schedule}")
+            }
+            ScheduleError::Wire { sender, receiver, schedule } => {
+                write!(f, "wire stream {sender} → {receiver} diverged under {schedule}")
+            }
+            ScheduleError::Reduce { worker, schedule } => {
+                write!(f, "reduce contributions of worker {worker} diverged under {schedule}")
+            }
+            ScheduleError::Answer { worker, schedule } => {
+                write!(f, "reducer answers to worker {worker} diverged under {schedule}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
+/// Everything one recorded run put on the channels.
+struct Recording {
+    /// Per destination worker: boundary payloads in arrival order at that
+    /// worker's inbox.
+    wire: Vec<Vec<WireMsg>>,
+    /// Reduce contributions in arrival order at the reducer.
+    reduce: Vec<ReduceMsg>,
+    /// Per worker: the reducer's answers in FIFO order.
+    answers: Vec<Vec<Vec<f64>>>,
+    /// Per worker: the step-function's returned iterate.
+    outputs: Vec<Vec<f64>>,
+}
+
+/// Single-threaded, seeded schedule explorer over the real
+/// [`ShardExchange`] + [`run_reducer`] code paths (nothing is mocked: the
+/// replays construct genuine handles over preloaded mpsc channels).
+pub struct ModelExchange<'g> {
+    g: &'g Graph,
+    lap: Csr,
+    plans: Vec<super::partitioned::ShardPlan>,
+    owned_of: Vec<Vec<usize>>,
+    k: usize,
+}
+
+/// Bit-exact slice comparison (NaN-safe, signed-zero-strict).
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bit-exact envelope-stream comparison (source, tag, payload bits).
+fn streams_equal(got: &[Envelope], expect: &[&Envelope]) -> bool {
+    got.len() == expect.len()
+        && got
+            .iter()
+            .zip(expect)
+            .all(|(g, e)| g.0 == e.0 && g.1 == e.1 && bits_equal(&g.2, &e.2))
+}
+
+/// Group an arrival-ordered log by source id, preserving each source's
+/// FIFO order. Sources come out in ascending id order.
+fn group_by_source(log: &[Envelope]) -> Vec<Vec<Envelope>> {
+    let mut by_src: BTreeMap<usize, Vec<Envelope>> = BTreeMap::new();
+    for msg in log {
+        by_src.entry(msg.0).or_default().push(msg.clone());
+    }
+    by_src.into_values().collect()
+}
+
+/// Number of distinct merges of streams with these lengths — the
+/// multinomial `(Σl)! / Πl!`, saturating at `u128::MAX`.
+fn count_merges(lens: &[usize]) -> u128 {
+    let mut total: u128 = 0;
+    let mut count: u128 = 1;
+    for &l in lens {
+        for i in 1..=l as u128 {
+            total += 1;
+            count = count.saturating_mul(total) / i;
+        }
+    }
+    count
+}
+
+/// Visit every merge of streams with the given lengths. `picks` receives
+/// the stream index chosen at each step.
+fn for_each_merge(
+    remaining: &mut [usize],
+    picks: &mut Vec<usize>,
+    visit: &mut dyn FnMut(&[usize]) -> Result<(), ScheduleError>,
+) -> Result<(), ScheduleError> {
+    if remaining.iter().all(|&r| r == 0) {
+        return visit(picks);
+    }
+    for s in 0..remaining.len() {
+        if remaining[s] > 0 {
+            remaining[s] -= 1;
+            picks.push(s);
+            for_each_merge(remaining, picks, visit)?;
+            picks.pop();
+            remaining[s] += 1;
+        }
+    }
+    Ok(())
+}
+
+/// One exactly-uniform random merge: picking the next stream with
+/// probability proportional to its remaining length gives every merge
+/// probability `Πl! / (Σl)!`.
+fn random_merge(lens: &[usize], rng: &mut Pcg64) -> Vec<usize> {
+    let mut rem = lens.to_vec();
+    let mut total: usize = rem.iter().sum();
+    let mut picks = Vec::with_capacity(total);
+    while total > 0 {
+        let mut t = rng.next_below(total as u64) as usize;
+        for (s, r) in rem.iter_mut().enumerate() {
+            if t < *r {
+                picks.push(s);
+                *r -= 1;
+                total -= 1;
+                break;
+            }
+            t -= *r;
+        }
+    }
+    picks
+}
+
+/// Materialize the merge described by `picks` from the per-source streams.
+fn build_merged(streams: &[Vec<Envelope>], picks: &[usize]) -> Vec<Envelope> {
+    let mut idx = vec![0usize; streams.len()];
+    let mut merged = Vec::with_capacity(picks.len());
+    for &s in picks {
+        merged.push(streams[s][idx[s]].clone());
+        idx[s] += 1;
+    }
+    merged
+}
+
+impl<'g> ModelExchange<'g> {
+    /// Set up the explorer for a graph and partition (the same
+    /// [`build_shard_plans`] wiring the production runtime uses).
+    pub fn new(g: &'g Graph, part: &Partition) -> ModelExchange<'g> {
+        let plans = build_shard_plans(g, part);
+        let owned_of = plans.iter().map(|p| p.owned.clone()).collect();
+        ModelExchange { g, lap: laplacian_csr(g), plans, owned_of, k: part.k }
+    }
+
+    /// Worker count.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Record one concurrent run, then replay every receiver under
+    /// permuted delivery orders, asserting bit-identical iterates and
+    /// outbound streams throughout.
+    ///
+    /// The step-function must be deterministic given `(worker, handle)`
+    /// and must follow the BSP contract (same collective sequence on
+    /// every worker) — construct all algorithm state inside the closure.
+    pub fn explore<F>(
+        &self,
+        program: F,
+        opts: &ExploreOptions,
+    ) -> Result<ExploreReport, ScheduleError>
+    where
+        F: Fn(usize, &mut ShardExchange<'_>) -> Vec<f64> + Sync,
+    {
+        let rec = self.record(&program);
+        let mut checked = 0u64;
+        let mut exhaustive = true;
+
+        for i in 0..self.k {
+            // Canonical arrival-order replay first: validates the replay
+            // machinery and catches non-deterministic step-functions with
+            // the clearest possible signal.
+            self.replay_worker(i, &rec.wire[i], &rec, &program, "the recorded arrival order")?;
+            checked += 1;
+            let streams = group_by_source(&rec.wire[i]);
+            let (c, ex) = explore_receiver(&streams, opts, i as u64, &mut |merged, label| {
+                self.replay_worker(i, merged, &rec, &program, label)
+            })?;
+            checked += c;
+            exhaustive &= ex;
+        }
+
+        self.replay_reducer(&rec.reduce, &rec, "the recorded arrival order")?;
+        checked += 1;
+        let streams = group_by_source(&rec.reduce);
+        let (c, ex) = explore_receiver(&streams, opts, self.k as u64, &mut |merged, label| {
+            self.replay_reducer(merged, &rec, label)
+        })?;
+        checked += c;
+        exhaustive &= ex;
+
+        Ok(ExploreReport {
+            workers: self.k,
+            schedules_checked: checked,
+            exhaustive,
+            wire_messages: rec.wire.iter().map(Vec::len).sum(),
+            reduce_messages: rec.reduce.len(),
+        })
+    }
+
+    /// Run the program once on real threads with a logging tap spliced
+    /// into every channel. The taps forward messages unchanged (mpsc
+    /// preserves per-sender order through them), so the recorded run is a
+    /// genuine concurrent execution.
+    fn record<F>(&self, program: &F) -> Recording
+    where
+        F: Fn(usize, &mut ShardExchange<'_>) -> Vec<f64> + Sync,
+    {
+        let k = self.k;
+        let n = self.g.n;
+        let mut tap_tx = Vec::with_capacity(k);
+        let mut tap_rx = Vec::with_capacity(k);
+        let mut inbox_tx = Vec::with_capacity(k);
+        let mut inbox_rx = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (t, r) = channel::<WireMsg>();
+            tap_tx.push(t);
+            tap_rx.push(r);
+            let (t, r) = channel::<WireMsg>();
+            inbox_tx.push(t);
+            inbox_rx.push(r);
+        }
+        let (rtap_tx, rtap_rx) = channel::<ReduceMsg>();
+        let (red_tx, red_rx) = channel::<ReduceMsg>();
+        let mut anstap_tx = Vec::with_capacity(k);
+        let mut anstap_rx = Vec::with_capacity(k);
+        let mut ans_tx = Vec::with_capacity(k);
+        let mut ans_rx = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (t, r) = channel::<Vec<f64>>();
+            anstap_tx.push(t);
+            anstap_rx.push(r);
+            let (t, r) = channel::<Vec<f64>>();
+            ans_tx.push(t);
+            ans_rx.push(r);
+        }
+
+        std::thread::scope(|scope| {
+            let mut wire_handles = Vec::with_capacity(k);
+            for (rx, fwd) in tap_rx.into_iter().zip(inbox_tx) {
+                wire_handles.push(scope.spawn(move || {
+                    let mut log: Vec<WireMsg> = Vec::new();
+                    while let Ok(msg) = rx.recv() {
+                        log.push((msg.0, msg.1, msg.2.clone()));
+                        let _ = fwd.send(msg);
+                    }
+                    log
+                }));
+            }
+            let red_handle = scope.spawn(move || {
+                let mut log: Vec<ReduceMsg> = Vec::new();
+                while let Ok(msg) = rtap_rx.recv() {
+                    log.push((msg.0, msg.1, msg.2.clone()));
+                    let _ = red_tx.send(msg);
+                }
+                log
+            });
+            let mut ans_handles = Vec::with_capacity(k);
+            for (rx, fwd) in anstap_rx.into_iter().zip(ans_tx) {
+                ans_handles.push(scope.spawn(move || {
+                    let mut log: Vec<Vec<f64>> = Vec::new();
+                    while let Ok(ans) = rx.recv() {
+                        log.push(ans.clone());
+                        let _ = fwd.send(ans);
+                    }
+                    log
+                }));
+            }
+            // The reducer owns the answer-tap senders: when it returns
+            // (all reduce senders dropped), the answer taps drain out.
+            let owned_of = &self.owned_of;
+            scope.spawn(move || run_reducer(n, owned_of, red_rx, &anstap_tx));
+
+            let mut worker_handles = Vec::with_capacity(k);
+            for (i, (inbox, from_red)) in inbox_rx.into_iter().zip(ans_rx).enumerate() {
+                let peer_txs = tap_tx.clone();
+                let to_red = rtap_tx.clone();
+                let plan = self.plans[i].clone();
+                let (g, lap) = (self.g, &self.lap);
+                worker_handles.push(scope.spawn(move || {
+                    let mut ex =
+                        ShardExchange::new(g, lap, k, plan, peer_txs, inbox, to_red, from_red);
+                    program(i, &mut ex)
+                }));
+            }
+            drop(tap_tx);
+            drop(rtap_tx);
+
+            let outputs = worker_handles
+                .into_iter()
+                // sddn-lint: allow(panic) reason=a panicking step-function must surface to the caller, not hang the scope
+                .map(|h| h.join().expect("worker panicked while recording"))
+                .collect();
+            let wire = wire_handles
+                .into_iter()
+                // sddn-lint: allow(panic) reason=tap threads only log and forward; a panic there is a harness bug
+                .map(|h| h.join().expect("wire tap panicked"))
+                .collect();
+            // sddn-lint: allow(panic) reason=tap threads only log and forward; a panic there is a harness bug
+            let reduce = red_handle.join().expect("reduce tap panicked");
+            let answers = ans_handles
+                .into_iter()
+                // sddn-lint: allow(panic) reason=tap threads only log and forward; a panic there is a harness bug
+                .map(|h| h.join().expect("answer tap panicked"))
+                .collect();
+            Recording { wire, reduce, answers, outputs }
+        })
+    }
+
+    /// Replay worker `i` single-threaded with its inbox preloaded in
+    /// `merged` order, then compare the iterate and every outbound stream
+    /// against the recording bit for bit.
+    fn replay_worker<F>(
+        &self,
+        i: usize,
+        merged: &[WireMsg],
+        rec: &Recording,
+        program: &F,
+        label: &str,
+    ) -> Result<(), ScheduleError>
+    where
+        F: Fn(usize, &mut ShardExchange<'_>) -> Vec<f64> + Sync,
+    {
+        let (inbox_tx, inbox_rx) = channel::<WireMsg>();
+        for msg in merged {
+            let _ = inbox_tx.send(msg.clone());
+        }
+        drop(inbox_tx);
+        let (ans_tx, ans_rx) = channel::<Vec<f64>>();
+        for ans in &rec.answers[i] {
+            let _ = ans_tx.send(ans.clone());
+        }
+        drop(ans_tx);
+        let mut sink_tx = Vec::with_capacity(self.k);
+        let mut sink_rx = Vec::with_capacity(self.k);
+        for _ in 0..self.k {
+            let (t, r) = channel::<WireMsg>();
+            sink_tx.push(t);
+            sink_rx.push(r);
+        }
+        let (rsink_tx, rsink_rx) = channel::<ReduceMsg>();
+
+        let mut ex = ShardExchange::new(
+            self.g,
+            &self.lap,
+            self.k,
+            self.plans[i].clone(),
+            sink_tx,
+            inbox_rx,
+            rsink_tx,
+            ans_rx,
+        );
+        let out = program(i, &mut ex);
+        drop(ex);
+
+        if !bits_equal(&out, &rec.outputs[i]) {
+            return Err(ScheduleError::Iterate { worker: i, schedule: label.to_string() });
+        }
+        for (j, rx) in sink_rx.iter().enumerate() {
+            let sent: Vec<WireMsg> = rx.try_iter().collect();
+            let expect: Vec<&WireMsg> = rec.wire[j].iter().filter(|m| m.0 == i).collect();
+            if !streams_equal(&sent, &expect) {
+                return Err(ScheduleError::Wire {
+                    sender: i,
+                    receiver: j,
+                    schedule: label.to_string(),
+                });
+            }
+        }
+        let contrib: Vec<ReduceMsg> = rsink_rx.try_iter().collect();
+        let expect: Vec<&ReduceMsg> = rec.reduce.iter().filter(|m| m.0 == i).collect();
+        if !streams_equal(&contrib, &expect) {
+            return Err(ScheduleError::Reduce { worker: i, schedule: label.to_string() });
+        }
+        Ok(())
+    }
+
+    /// Replay the reducer with its contribution stream preloaded in
+    /// `merged` order and compare every answer stream bit for bit.
+    fn replay_reducer(
+        &self,
+        merged: &[ReduceMsg],
+        rec: &Recording,
+        label: &str,
+    ) -> Result<(), ScheduleError> {
+        let (tx, rx) = channel::<ReduceMsg>();
+        for msg in merged {
+            let _ = tx.send(msg.clone());
+        }
+        drop(tx);
+        let mut ans_tx = Vec::with_capacity(self.k);
+        let mut ans_rx = Vec::with_capacity(self.k);
+        for _ in 0..self.k {
+            let (t, r) = channel::<Vec<f64>>();
+            ans_tx.push(t);
+            ans_rx.push(r);
+        }
+        run_reducer(self.g.n, &self.owned_of, rx, &ans_tx);
+        drop(ans_tx);
+        for (i, rx) in ans_rx.iter().enumerate() {
+            let got: Vec<Vec<f64>> = rx.try_iter().collect();
+            let expect = &rec.answers[i];
+            let same = got.len() == expect.len()
+                && got.iter().zip(expect).all(|(a, b)| bits_equal(a, b));
+            if !same {
+                return Err(ScheduleError::Answer { worker: i, schedule: label.to_string() });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Explore one receiver's merge space: exhaustively when the multinomial
+/// merge count fits the limit, by seeded uniform sweeps otherwise.
+/// Returns (replays performed, explored exhaustively).
+fn explore_receiver(
+    streams: &[Vec<Envelope>],
+    opts: &ExploreOptions,
+    receiver_stream: u64,
+    replay: &mut dyn FnMut(&[Envelope], &str) -> Result<(), ScheduleError>,
+) -> Result<(u64, bool), ScheduleError> {
+    let lens: Vec<usize> = streams.iter().map(Vec::len).collect();
+    if lens.iter().all(|&l| l == 0) {
+        return Ok((0, true));
+    }
+    let total = count_merges(&lens);
+    let mut checked = 0u64;
+    if total <= opts.exhaustive_limit {
+        let mut remaining = lens.clone();
+        let mut picks = Vec::new();
+        for_each_merge(&mut remaining, &mut picks, &mut |picks| {
+            checked += 1;
+            let merged = build_merged(streams, picks);
+            replay(&merged, &format!("exhaustive schedule #{checked} of {total}"))
+        })?;
+        Ok((checked, true))
+    } else {
+        let mut rng = Pcg64::with_stream(opts.seed, receiver_stream);
+        for s in 0..opts.random_schedules {
+            let picks = random_merge(&lens, &mut rng);
+            let merged = build_merged(streams, &picks);
+            let label =
+                format!("seeded schedule #{s} (seed {}, stream {receiver_stream})", opts.seed);
+            replay(&merged, &label)?;
+            checked += 1;
+        }
+        Ok((checked, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::net::Exchange;
+
+    fn small_setup() -> (Graph, Partition) {
+        let mut rng = Pcg64::new(77);
+        let g = generate::random_connected(9, 16, &mut rng);
+        (g, Partition::contiguous(9, 3))
+    }
+
+    /// Three Laplacian rounds + an all-reduce per round: exercises both
+    /// the reorder buffer and the sequence-keyed reducer.
+    fn round_program(i: usize, ex: &mut ShardExchange<'_>) -> Vec<f64> {
+        let _ = i;
+        let w = 2;
+        let n = ex.n();
+        let x_global = Pcg64::new(5).normal_vec(n * w);
+        let owned = ex.owned().to_vec();
+        let mut x: Vec<f64> = owned
+            .iter()
+            .flat_map(|&u| x_global[u * w..(u + 1) * w].to_vec())
+            .collect();
+        let mut y = vec![0.0; x.len()];
+        for _ in 0..3 {
+            ex.laplacian_apply_into(&x, w, &mut y);
+            let total = ex.allreduce_sum(&y, w);
+            for (idx, v) in x.iter_mut().enumerate() {
+                *v = y[idx] + total[idx % w] / n as f64;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn explorer_verifies_round_program_exhaustively() {
+        let (g, part) = small_setup();
+        let model = ModelExchange::new(&g, &part);
+        let report = model.explore(round_program, &ExploreOptions::default()).unwrap();
+        assert!(report.exhaustive, "k=3 small run must be exhaustively explored");
+        assert!(report.schedules_checked > 4, "checked {}", report.schedules_checked);
+        assert!(report.wire_messages > 0);
+        assert_eq!(report.reduce_messages, 9, "3 workers × 3 reduces");
+    }
+
+    /// Tampering with a recorded payload must surface as a divergence —
+    /// the explorer is only trustworthy if it can actually fail.
+    #[test]
+    fn tampered_recording_is_caught() {
+        let (g, part) = small_setup();
+        let model = ModelExchange::new(&g, &part);
+        let mut rec = model.record(&round_program);
+        // Flip one bit of the first recorded boundary payload.
+        let (dst, val) = rec
+            .wire
+            .iter()
+            .enumerate()
+            .find_map(|(d, log)| (!log.is_empty()).then_some((d, 0)))
+            .unwrap();
+        rec.wire[dst][val].2[0] += 1.0;
+        let wire = rec.wire[dst].clone();
+        let err = model.replay_worker(dst, &wire, &rec, &round_program, "tampered");
+        assert!(err.is_err(), "tampered payload must not replay cleanly");
+    }
+
+    #[test]
+    fn merge_counting_matches_enumeration() {
+        assert_eq!(count_merges(&[3, 3]), 20);
+        assert_eq!(count_merges(&[2, 2, 2]), 90);
+        assert_eq!(count_merges(&[0, 4]), 1);
+        let mut seen = 0u64;
+        let mut remaining = vec![2, 2, 2];
+        let mut picks = Vec::new();
+        for_each_merge(&mut remaining, &mut picks, &mut |p| {
+            assert_eq!(p.len(), 6);
+            seen += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, 90);
+    }
+
+    #[test]
+    fn random_merges_are_valid_permutations() {
+        let lens = vec![3, 1, 4];
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            let picks = random_merge(&lens, &mut rng);
+            assert_eq!(picks.len(), 8);
+            for (s, &l) in lens.iter().enumerate() {
+                assert_eq!(picks.iter().filter(|&&p| p == s).count(), l);
+            }
+        }
+    }
+}

@@ -35,13 +35,16 @@ impl NodeCtx {
             .senders
             .iter()
             .find(|(id, _)| *id == to)
+            // sddn-lint: allow(panic) reason=sending to a non-neighbor is a node-program bug; the documented contract is to panic
             .unwrap_or_else(|| panic!("node {} is not adjacent to {}", self.id, to));
+        // sddn-lint: allow(panic) reason=peer disconnect mid-round is unrecoverable; dying loudly beats deadlocking the run
         s.1.send((self.id, payload)).expect("peer hung up");
     }
 
     /// Broadcast the same payload to all neighbors.
     pub fn send_all(&self, payload: &[f64]) {
         for (_, s) in &self.senders {
+            // sddn-lint: allow(panic) reason=peer disconnect mid-round is unrecoverable; dying loudly beats deadlocking the run
             s.send((self.id, payload.to_vec())).expect("peer hung up");
         }
     }
@@ -58,6 +61,7 @@ impl NodeCtx {
             }
         }
         loop {
+            // sddn-lint: allow(panic) reason=peer disconnect mid-round is unrecoverable; dying loudly beats deadlocking the run
             let (src, payload) = self.inbox.recv().expect("peer hung up");
             if src == from {
                 return payload;
@@ -87,6 +91,7 @@ impl NodeCtx {
                 }
             }
         }
+        // sddn-lint: allow(panic) reason=peer disconnect mid-round is unrecoverable; dying loudly beats deadlocking the run
         self.inbox.recv().expect("peer hung up")
     }
 
@@ -103,7 +108,9 @@ impl NodeCtx {
     /// All-reduce (sum) a local vector through the leader; every node gets
     /// the global sum back.
     pub fn allreduce_sum(&self, local: Vec<f64>) -> Vec<f64> {
+        // sddn-lint: allow(panic) reason=leader disconnect mid-reduce is unrecoverable; dying loudly beats deadlocking the run
         self.to_leader.send((self.id, local)).expect("leader hung up");
+        // sddn-lint: allow(panic) reason=leader disconnect mid-reduce is unrecoverable; dying loudly beats deadlocking the run
         self.from_leader.recv().expect("leader hung up")
     }
 }
@@ -126,12 +133,12 @@ where
     let n = g.n;
     // Edge channels.
     let mut senders_for: Vec<Vec<(usize, Sender<Msg>)>> = (0..n).map(|_| Vec::new()).collect();
-    let mut inbox_rx: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(n);
+    let mut inbox_rx: Vec<Receiver<Msg>> = Vec::with_capacity(n);
     let mut inbox_tx: Vec<Sender<Msg>> = Vec::with_capacity(n);
     for _ in 0..n {
         let (tx, rx) = channel::<Msg>();
         inbox_tx.push(tx);
-        inbox_rx.push(Some(rx));
+        inbox_rx.push(rx);
     }
     for i in 0..n {
         for &j in g.neighbors(i) {
@@ -141,23 +148,23 @@ where
     // Leader channels.
     let (to_leader_tx, to_leader_rx) = channel::<(usize, Vec<f64>)>();
     let mut from_leader_tx: Vec<Sender<Vec<f64>>> = Vec::with_capacity(n);
-    let mut from_leader_rx: Vec<Option<Receiver<Vec<f64>>>> = Vec::with_capacity(n);
+    let mut from_leader_rx: Vec<Receiver<Vec<f64>>> = Vec::with_capacity(n);
     for _ in 0..n {
         let (tx, rx) = channel::<Vec<f64>>();
         from_leader_tx.push(tx);
-        from_leader_rx.push(Some(rx));
+        from_leader_rx.push(rx);
     }
 
     let mut handles = Vec::with_capacity(n);
-    for i in 0..n {
+    for (i, (inbox, from_leader)) in inbox_rx.into_iter().zip(from_leader_rx).enumerate() {
         let ctx = NodeCtx {
             id: i,
             neighbors: g.neighbors(i).to_vec(),
             senders: std::mem::take(&mut senders_for[i]),
-            inbox: inbox_rx[i].take().unwrap(),
+            inbox,
             pending: std::cell::RefCell::new(std::collections::HashMap::new()),
             to_leader: to_leader_tx.clone(),
-            from_leader: from_leader_rx[i].take().unwrap(),
+            from_leader,
         };
         let prog = program.clone();
         handles.push(thread::spawn(move || prog(ctx)));
@@ -173,6 +180,7 @@ where
             Err(_) => break, // all nodes done
         }
         for _ in 1..n {
+            // sddn-lint: allow(panic) reason=a node dying mid-reduce is unrecoverable; dying loudly beats deadlocking the run
             contributions.push(to_leader_rx.recv().expect("node died mid-allreduce"));
         }
         let w = contributions[0].1.len();
@@ -188,6 +196,7 @@ where
         }
     }
 
+    // sddn-lint: allow(panic) reason=propagating a node panic to the caller is the only sane join policy
     let per_node = handles.into_iter().map(|h| h.join().expect("node panicked")).collect();
     RunOutput { per_node }
 }

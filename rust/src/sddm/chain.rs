@@ -20,6 +20,7 @@ pub enum Splitting {
 /// Chain construction options.
 #[derive(Debug, Clone)]
 pub struct ChainOptions {
+    /// Which splitting `M = D̃ − Ã` the walk matrix is built from.
     pub splitting: Splitting,
     /// Chain depth `d`; `None` = auto from the walk's subdominant
     /// eigenvalue so that `λ₂^{2^d} ≤ crude_decay`.
@@ -46,6 +47,7 @@ impl Default for ChainOptions {
 /// execution model of [12] — each X-application is one exchange round).
 #[derive(Debug, Clone)]
 pub struct Chain {
+    /// Problem size (nodes).
     pub n: usize,
     /// Depth `d` (levels `0..=d`).
     pub depth: usize,
@@ -178,6 +180,7 @@ impl Chain {
     /// are stacked shard-local (`local_n × w` row-major, all rows on the
     /// bulk transport).
     pub fn apply_x(&self, v: &[f64], w: usize, out: &mut [f64], exch: &mut dyn Exchange) {
+        // sddn-lint: graph-support walk matrix X sparsity is exactly the comm graph plus diagonal
         exch.exchange_apply(&self.x, 2 * self.m_edges as u64, v, w, out);
     }
 

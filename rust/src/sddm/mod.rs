@@ -23,6 +23,8 @@
 //! detects this and works on the mean-zero subspace (each projection is an
 //! accounted all-reduce).
 
+#![warn(missing_docs)]
+
 pub mod chain;
 pub mod solver;
 pub mod squared;

@@ -42,7 +42,9 @@ pub struct SolveOutcome {
 /// SDDM solver bundling a chain with solve options.
 #[derive(Debug, Clone)]
 pub struct SddmSolver {
+    /// The inverse approximated chain the sweeps run over.
     pub chain: Chain,
+    /// Accuracy / budget options.
     pub opts: SolverOptions,
 }
 
@@ -66,6 +68,7 @@ impl SddmSolver {
     /// so a warmed pool makes repeated solves allocation-free. Callers
     /// should `pool.put` the returned vector back once consumed.
     /// Bit-for-bit identical to the allocating form.
+    // sddn-lint: hot-path
     pub fn crude_solve_ws(
         &self,
         b: &[f64],
@@ -133,6 +136,7 @@ impl SddmSolver {
     /// [`Self::solve`] with an explicit workspace pool (see
     /// [`Self::crude_solve_ws`]); the outcome's `x` is pool-drawn — put it
     /// back after use to keep the steady state allocation-free.
+    // sddn-lint: hot-path
     pub fn solve_ws(
         &self,
         b: &[f64],

@@ -90,6 +90,7 @@ impl SquaredChain {
     /// [`Self::crude_solve`] with an explicit workspace pool: scratch and
     /// the returned solution are pool-drawn (put the result back after
     /// use). Bit-for-bit identical to the allocating form.
+    // sddn-lint: hot-path
     pub fn crude_solve_ws(
         &self,
         b: &[f64],
@@ -167,6 +168,7 @@ impl SquaredChain {
 
     /// [`Self::solve`] with an explicit workspace pool (the outcome's `x`
     /// is pool-drawn — put it back after use).
+    // sddn-lint: hot-path
     pub fn solve_ws(
         &self,
         b: &[f64],
@@ -227,7 +229,9 @@ impl SquaredChain {
 /// partitioned worker runtime bit-for-bit identically to the bulk path.
 #[derive(Debug, Clone)]
 pub struct SquaredSddmSolver {
+    /// The explicitly squared chain the sweeps run over.
     pub chain: SquaredChain,
+    /// Accuracy / budget options.
     pub opts: super::solver::SolverOptions,
 }
 

@@ -1,0 +1,150 @@
+//! Schedule-exploration suite: the partitioned runtime must produce
+//! bit-identical iterates under *every* boundary-payload delivery order,
+//! not just the ones the OS scheduler happens to serve.
+//!
+//! `net::model::ModelExchange` records one concurrent run over the real
+//! `ShardExchange` + reducer code paths, then replays each receiver
+//! single-threaded under permuted per-sender stream merges — exhaustively
+//! when the merge space is small (all delivery permutations at k = 3 over
+//! the round window here), by seeded uniform sweeps above. This suite
+//! pins the acceptance programs and a seed corpus so CI explores the same
+//! adversarial schedules on every run.
+
+use sddnewton::algorithms::gradient::{DistGradient, GradSchedule};
+use sddnewton::algorithms::ConsensusAlgorithm;
+use sddnewton::coordinator::Partition;
+use sddnewton::graph::{generate, laplacian_csr};
+use sddnewton::net::model::{ExploreOptions, ModelExchange};
+use sddnewton::net::partitioned::ShardExchange;
+use sddnewton::net::Exchange;
+use sddnewton::problems::datasets;
+use sddnewton::sddm::{ChainOptions, SquaredChain};
+use sddnewton::util::Pcg64;
+
+/// A BSP step-function exercising both ordering defenses: per round, one
+/// Laplacian halo exchange (reorder buffer) plus one all-reduce
+/// (sequence-keyed reducer), mixed back into the local state.
+fn lap_rounds_program(rounds: usize) -> impl Fn(usize, &mut ShardExchange<'_>) -> Vec<f64> + Sync {
+    move |_i, ex| {
+        let w = 2;
+        let n = ex.n();
+        let x_global = Pcg64::new(5).normal_vec(n * w);
+        let owned = ex.owned().to_vec();
+        let mut x: Vec<f64> = owned
+            .iter()
+            .flat_map(|&u| x_global[u * w..(u + 1) * w].to_vec())
+            .collect();
+        let mut y = vec![0.0; x.len()];
+        for _ in 0..rounds {
+            ex.laplacian_apply_into(&x, w, &mut y);
+            let total = ex.allreduce_sum(&y, w);
+            for (idx, v) in x.iter_mut().enumerate() {
+                *v = y[idx] + total[idx % w] / n as f64;
+            }
+        }
+        x
+    }
+}
+
+/// Acceptance property: at k = 3 over a 3-round window the explorer
+/// covers the *entire* schedule space — every merge of every receiver's
+/// input streams — and every schedule reproduces the recorded iterates
+/// bit for bit.
+#[test]
+fn k3_round_window_is_verified_exhaustively() {
+    let mut rng = Pcg64::new(4101);
+    let g = generate::random_connected(9, 16, &mut rng);
+    let part = Partition::contiguous(9, 3);
+    let model = ModelExchange::new(&g, &part);
+    let report = model
+        .explore(lap_rounds_program(3), &ExploreOptions::default())
+        .expect("a delivery schedule broke bit-identity");
+    assert!(report.exhaustive, "k=3 over 3 rounds must be exhaustively explored");
+    assert_eq!(report.workers, 3);
+    assert!(report.wire_messages > 0, "the program must actually cross shards");
+    assert_eq!(report.reduce_messages, 9, "3 workers × 3 all-reduces");
+    assert!(
+        report.schedules_checked > report.reduce_messages as u64,
+        "only {} schedules explored",
+        report.schedules_checked
+    );
+}
+
+/// A real algorithm on the explorer: three distributed-gradient steps
+/// must be schedule-oblivious end to end.
+#[test]
+fn gradient_steps_are_bit_identical_under_all_schedules() {
+    let mut rng = Pcg64::new(4102);
+    let n = 10;
+    let g = generate::random_connected(n, 20, &mut rng);
+    let prob = datasets::synthetic_regression(n, 3, 140, 0.2, 0.05, &mut rng);
+    let part = Partition::contiguous(n, 3);
+    let model = ModelExchange::new(&g, &part);
+    let report = model
+        .explore(
+            |_i, ex: &mut ShardExchange<'_>| {
+                let owned = ex.owned().to_vec();
+                let mut alg =
+                    DistGradient::new_sharded(&prob, &g, GradSchedule::Constant(0.05), owned);
+                for _ in 0..3 {
+                    alg.step(&prob, ex);
+                }
+                alg.thetas().to_vec()
+            },
+            &ExploreOptions::default(),
+        )
+        .expect("a delivery schedule changed the gradient iterate");
+    assert!(report.exhaustive, "3 gradient steps at k=3 fit the exhaustive budget");
+}
+
+/// The overlay path under exploration: `SquaredChain::crude_solve` ships
+/// squared-level payloads through registered overlay plans; its sweeps
+/// must be schedule-oblivious too. The merge space here is large, so this
+/// runs the seeded uniform sweep rather than full enumeration.
+#[test]
+fn squared_chain_crude_solve_survives_adversarial_schedules() {
+    let mut rng = Pcg64::new(4103);
+    let n = 8;
+    let g = generate::random_connected(n, 14, &mut rng);
+    let lap = laplacian_csr(&g);
+    let mut crng = Pcg64::new(31);
+    let sq = SquaredChain::build(&lap, &ChainOptions::default(), 0.0, &mut crng)
+        .expect("chain build on a connected Laplacian");
+    let b_global = Pcg64::new(12).normal_vec(n);
+    let part = Partition::contiguous(n, 3);
+    let model = ModelExchange::new(&g, &part);
+    let opts = ExploreOptions { exhaustive_limit: 2_000, random_schedules: 10, seed: 0xC0FFEE };
+    let report = model
+        .explore(
+            |_i, ex: &mut ShardExchange<'_>| {
+                let b: Vec<f64> = ex.owned().iter().map(|&u| b_global[u]).collect();
+                sq.crude_solve(&b, 1, ex)
+            },
+            &opts,
+        )
+        .expect("a delivery schedule changed the crude solve");
+    assert!(report.schedules_checked > 0);
+    assert!(report.wire_messages > 0);
+}
+
+/// Pinned seed corpus: the same adversarial schedules are re-explored on
+/// every CI run. Each seed drives its own graph, partition, and sweep
+/// stream; extend the list when a schedule bug is found so the regression
+/// stays pinned.
+#[test]
+fn pinned_seed_corpus_replays_clean() {
+    const CORPUS: [u64; 4] = [1, 7, 42, 20_260_808];
+    for &seed in &CORPUS {
+        let mut rng = Pcg64::new(seed);
+        let n = 13;
+        let g = generate::random_connected(n, 24, &mut rng);
+        let part = Partition::round_robin(n, 4);
+        let model = ModelExchange::new(&g, &part);
+        let opts = ExploreOptions { exhaustive_limit: 2_000, random_schedules: 16, seed };
+        let report = model
+            .explore(lap_rounds_program(2), &opts)
+            .unwrap_or_else(|e| panic!("corpus seed {seed}: {e}"));
+        assert!(report.schedules_checked > 0, "corpus seed {seed} explored nothing");
+        assert_eq!(report.workers, 4);
+    }
+}

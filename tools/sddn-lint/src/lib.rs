@@ -1,0 +1,794 @@
+//! Repo-specific invariant lints for the sddnewton workspace.
+//!
+//! This crate is a zero-dependency static-analysis pass in the same
+//! hand-rolled spirit as the main crate's `config::json` parser: a small
+//! line-oriented scanner (comments, strings, and char literals are
+//! stripped by an explicit state machine — no regexes, no syn) feeding
+//! four source lints that encode invariants the runtime test suites can
+//! only check on the schedules and inputs they happen to run:
+//!
+//! 1. **hot-path-alloc** — functions marked `// sddn-lint: hot-path`
+//!    (the `*_ws` workspace variants and `step_impl` bodies) must not
+//!    allocate per call: `Vec::new`, `vec!`, `.clone()` and `.collect`
+//!    are forbidden inside them. `*_ws`/`step_impl` functions that are
+//!    *not* marked are themselves violations (**missing-hot-path**), so
+//!    new workspace variants cannot silently opt out.
+//! 2. **forbidden-panic** — library modules (`net`, `sddm`, `linalg`,
+//!    `algorithms`) must not `unwrap()`/`expect(`/`panic!` outside
+//!    `#[cfg(test)]`; documented invariants are allowlisted with
+//!    `// sddn-lint: allow(panic) reason=...`.
+//! 3. **unregistered-overlay** — every `.exchange_apply(op, ...)` /
+//!    `.exchange_apply_fresh(op, ...)` call site must either be marked
+//!    `// sddn-lint: graph-support` (the operator's support provably
+//!    stays within the graph halo) or be lexically paired with a
+//!    `.register_plan(_, op)` on the same operator in the same file.
+//! 4. **undocumented-env** — every `SDDN_*` environment variable named
+//!    in a string literal must appear in the repo README.
+//!
+//! # Annotation grammar
+//!
+//! A directive is a line comment containing `sddn-lint:` followed by one
+//! of:
+//!
+//! - `hot-path` — marks the next opened brace scope (place it directly
+//!   above the `fn`) as a hot loop.
+//! - `allow(alloc) reason=<text>` / `allow(panic) reason=<text>` /
+//!   `allow(overlay) reason=<text>` — suppress the corresponding lint on
+//!   the directive's own line and the line directly below it. The reason
+//!   is mandatory and must be non-empty.
+//! - `graph-support` — asserts the operator of an exchange call on this
+//!   or the next line has graph support (an optional trailing note is
+//!   allowed).
+//!
+//! Coverage is deliberately tight (one line), so an allowlist entry
+//! cannot drift away from the code it excuses.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The lint kinds this pass enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lint {
+    /// Allocation token inside a `hot-path` scope.
+    HotPathAlloc,
+    /// A `*_ws`/`step_impl` function without a `hot-path` marker.
+    MissingHotPath,
+    /// `unwrap()`/`expect(`/`panic!` in a library module outside tests.
+    ForbiddenPanic,
+    /// `exchange_apply` on an operator with no `register_plan` pairing
+    /// and no `graph-support` annotation.
+    UnregisteredOverlay,
+    /// `SDDN_*` env var referenced in code but absent from the README.
+    UndocumentedEnv,
+    /// A `sddn-lint:` comment that does not parse (e.g. `allow` without
+    /// a reason).
+    MalformedDirective,
+}
+
+impl Lint {
+    /// Stable kebab-case key used in reports.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Lint::HotPathAlloc => "hot-path-alloc",
+            Lint::MissingHotPath => "missing-hot-path",
+            Lint::ForbiddenPanic => "forbidden-panic",
+            Lint::UnregisteredOverlay => "unregistered-overlay",
+            Lint::UndocumentedEnv => "undocumented-env",
+            Lint::MalformedDirective => "malformed-directive",
+        }
+    }
+}
+
+/// One lint violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path label of the offending file (repo-relative in tree mode).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which lint fired.
+    pub lint: Lint,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint.key(), self.msg)
+    }
+}
+
+/// Allocation tokens forbidden inside `hot-path` scopes.
+const HOT_TOKENS: &[&str] = &["Vec::new", "vec!", ".clone()", ".collect"];
+
+/// Panic-family tokens forbidden in library modules outside tests.
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Library module directories (under `rust/src`) the panic lint covers.
+const PANIC_SCOPE_DIRS: &[&str] = &["net", "sddm", "linalg", "algorithms"];
+
+/// What one `sddn-lint:` comment grants.
+#[derive(Debug, Clone, Copy, Default)]
+struct Directive {
+    hot_path: bool,
+    allow_alloc: bool,
+    allow_panic: bool,
+    allow_overlay: bool,
+}
+
+/// Parse the text after `sddn-lint:`. Returns the grants, or an error
+/// message for a directive that does not follow the grammar.
+fn parse_directive(text: &str) -> Result<Directive, String> {
+    let mut d = Directive::default();
+    let text = text.trim();
+    let head = text.split_whitespace().next().unwrap_or("");
+    match head {
+        "hot-path" => d.hot_path = true,
+        "graph-support" => d.allow_overlay = true,
+        "allow(alloc)" | "allow(panic)" | "allow(overlay)" => {
+            let rest = text[head.len()..].trim();
+            let reason = rest.strip_prefix("reason=").map(str::trim).unwrap_or("");
+            if reason.is_empty() {
+                return Err(format!("`{head}` requires a non-empty `reason=<text>`"));
+            }
+            match head {
+                "allow(alloc)" => d.allow_alloc = true,
+                "allow(panic)" => d.allow_panic = true,
+                _ => d.allow_overlay = true,
+            }
+        }
+        _ => return Err(format!("unknown directive `{text}`")),
+    }
+    Ok(d)
+}
+
+/// One source line after lexical classification.
+struct LineScan {
+    /// The line with comments and literal contents blanked out (string
+    /// quotes are kept, so `.expect("` still contains `.expect(`).
+    code: String,
+    /// Contents of string literals on this line (for the env-var lint).
+    strings: String,
+    /// Raw text after `sddn-lint:` when the line carries a directive.
+    directive: Option<String>,
+}
+
+/// Cross-line lexer state.
+enum Mode {
+    Code,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn last_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Split a source file into [`LineScan`]s, tracking multi-line comments
+/// and strings across line boundaries.
+fn classify_lines(src: &str) -> Vec<LineScan> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in src.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut strings = String::new();
+        let mut directive = None;
+        let mut i = 0usize;
+        while i < chars.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        mode = Mode::Block(depth + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Code;
+                    } else {
+                        strings.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(h) => {
+                    let closes = chars[i] == '"'
+                        && (0..h as usize).all(|d| chars.get(i + 1 + d) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        i += 1 + h as usize;
+                        mode = Mode::Code;
+                    } else {
+                        strings.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        let comment: String = chars[i..].iter().collect();
+                        if let Some(p) = comment.find("sddn-lint:") {
+                            directive =
+                                Some(comment[p + "sddn-lint:".len()..].trim().to_string());
+                        }
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        code.push(' ');
+                        i += 2;
+                        mode = Mode::Block(1);
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Str;
+                    } else if (c == 'r' || c == 'b') && !last_is_ident(&code) {
+                        // Possible raw/byte string: r", r#", br", b".
+                        let mut j = i;
+                        if chars[j] == 'b' {
+                            j += 1;
+                        }
+                        let has_r = chars.get(j) == Some(&'r');
+                        if has_r {
+                            j += 1;
+                        }
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        let opens = chars.get(j) == Some(&'"') && (has_r || hashes == 0);
+                        if opens && (has_r || c == 'b') {
+                            code.push('"');
+                            i = j + 1;
+                            mode = if has_r { Mode::RawStr(hashes) } else { Mode::Str };
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // Char literal vs lifetime.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            let mut j = i + 3;
+                            if chars.get(i + 2) == Some(&'u') && chars.get(i + 3) == Some(&'{') {
+                                j = i + 4;
+                                while j < chars.len() && chars[j] != '}' {
+                                    j += 1;
+                                }
+                                j += 1;
+                            }
+                            if chars.get(j) == Some(&'\'') {
+                                j += 1;
+                            }
+                            code.push(' ');
+                            i = j;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            code.push(' ');
+                            i += 3;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        strings.push(' ');
+        out.push(LineScan { code, strings, directive });
+    }
+    out
+}
+
+/// Per-line scope flags from the brace walk.
+struct ScopeMap {
+    /// Line is (at least partly) inside a `#[cfg(test)]` scope.
+    test: Vec<bool>,
+    /// Line is (at least partly) inside a `hot-path` scope.
+    hot: Vec<bool>,
+}
+
+fn is_hot_fn_name(name: &str) -> bool {
+    name.ends_with("_ws") || name == "step_impl"
+}
+
+/// Walk brace scopes: track `#[cfg(test)]` and `hot-path` regions and
+/// flag `*_ws`/`step_impl` bodies that open without a hot-path marker.
+fn walk_scopes(
+    label: &str,
+    lines: &[LineScan],
+    directives: &[Directive],
+    violations: &mut Vec<Violation>,
+) -> ScopeMap {
+    #[derive(Clone, Copy)]
+    struct Flags {
+        test: bool,
+        hot: bool,
+    }
+    let mut stack: Vec<Flags> = Vec::new();
+    let mut cur = Flags { test: false, hot: false };
+    let mut pending_test = false;
+    let mut pending_hot = false;
+    let mut pending_fn: Option<(String, usize)> = None;
+    let mut paren_depth: i64 = 0;
+    let mut test_any = vec![false; lines.len()];
+    let mut hot_any = vec![false; lines.len()];
+
+    for (idx, line) in lines.iter().enumerate() {
+        if directives[idx].hot_path {
+            pending_hot = true;
+        }
+        if line.code.contains("cfg(test)") {
+            pending_test = true;
+        }
+        test_any[idx] = cur.test;
+        hot_any[idx] = cur.hot;
+        let chars: Vec<char> = line.code.chars().collect();
+        let mut i = 0usize;
+        let mut prev_ident = false;
+        while i < chars.len() {
+            let c = chars[i];
+            if (c.is_alphabetic() || c == '_') && !prev_ident {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                if word == "fn" {
+                    let mut j = i;
+                    while j < chars.len() && chars[j].is_whitespace() {
+                        j += 1;
+                    }
+                    let ns = j;
+                    while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                        j += 1;
+                    }
+                    let name: String = chars[ns..j].iter().collect();
+                    if is_hot_fn_name(&name) && !cur.test && !pending_test {
+                        pending_fn = Some((name, idx));
+                    }
+                }
+                prev_ident = true;
+                continue;
+            }
+            prev_ident = c.is_alphanumeric() || c == '_';
+            match c {
+                '(' => paren_depth += 1,
+                ')' => paren_depth -= 1,
+                ';' if paren_depth == 0 => pending_fn = None,
+                '{' => {
+                    let next = Flags {
+                        test: cur.test || pending_test,
+                        hot: cur.hot || pending_hot,
+                    };
+                    if let Some((name, fline)) = pending_fn.take() {
+                        if !next.hot && !next.test {
+                            violations.push(Violation {
+                                file: label.to_string(),
+                                line: fline + 1,
+                                lint: Lint::MissingHotPath,
+                                msg: format!(
+                                    "`fn {name}` is a hot-loop body (`*_ws`/`step_impl`) but \
+                                     is not marked `// sddn-lint: hot-path`"
+                                ),
+                            });
+                        }
+                    }
+                    pending_test = false;
+                    pending_hot = false;
+                    stack.push(cur);
+                    cur = next;
+                    test_any[idx] |= cur.test;
+                    hot_any[idx] |= cur.hot;
+                }
+                '}' => {
+                    if let Some(prev) = stack.pop() {
+                        cur = prev;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        test_any[idx] |= cur.test;
+        hot_any[idx] |= cur.hot;
+    }
+    ScopeMap { test: test_any, hot: hot_any }
+}
+
+/// Find every occurrence of `needle` in `hay`.
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + needle.len();
+    }
+    out
+}
+
+/// Normalize a call-site operand for pairing comparison: drop leading
+/// `&`/`mut` and all whitespace, so `&self.x` written across lines still
+/// matches the `x` handed to `register_plan`.
+fn normalize_operand(arg: &str) -> String {
+    let s = arg.trim();
+    let s = s.strip_prefix('&').unwrap_or(s).trim_start();
+    let s = s.strip_prefix("mut ").unwrap_or(s);
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Extract the argument starting at `start` (just past the opening paren
+/// or a comma), up to the next top-level comma or the closing paren.
+fn extract_arg(full: &str, start: usize) -> (String, usize) {
+    let mut depth = 1i64;
+    let mut arg = String::new();
+    let mut end = full.len();
+    for (off, ch) in full[start..].char_indices() {
+        match ch {
+            '(' | '[' | '{' => {
+                depth += 1;
+                arg.push(ch);
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = start + off;
+                    break;
+                }
+                arg.push(ch);
+            }
+            ',' if depth == 1 => {
+                end = start + off;
+                break;
+            }
+            _ => arg.push(ch),
+        }
+    }
+    (arg, end)
+}
+
+/// Scan result for one file.
+pub struct FileReport {
+    /// Violations found in this file (env-var refs not yet resolved).
+    pub violations: Vec<Violation>,
+    /// `SDDN_*` variables referenced in string literals: `(name, line)`.
+    pub env_refs: Vec<(String, usize)>,
+}
+
+/// Run the scoped lints over one source file. `panic_scope` controls
+/// whether the forbidden-panic lint applies (library modules only in
+/// tree mode; always on for single-file fixture runs).
+pub fn scan_file(label: &str, src: &str, panic_scope: bool) -> FileReport {
+    let lines = classify_lines(src);
+    let mut violations = Vec::new();
+    let mut directives = Vec::with_capacity(lines.len());
+    for (idx, line) in lines.iter().enumerate() {
+        match &line.directive {
+            None => directives.push(Directive::default()),
+            Some(text) => match parse_directive(text) {
+                Ok(d) => directives.push(d),
+                Err(msg) => {
+                    directives.push(Directive::default());
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line: idx + 1,
+                        lint: Lint::MalformedDirective,
+                        msg,
+                    });
+                }
+            },
+        }
+    }
+    let scope = walk_scopes(label, &lines, &directives, &mut violations);
+    let covered = |idx: usize, pick: fn(&Directive) -> bool| -> bool {
+        pick(&directives[idx]) || (idx > 0 && pick(&directives[idx - 1]))
+    };
+
+    // Lint 1: allocation tokens inside hot-path scopes.
+    for (idx, line) in lines.iter().enumerate() {
+        if !scope.hot[idx] || scope.test[idx] {
+            continue;
+        }
+        for tok in HOT_TOKENS {
+            for _ in find_all(&line.code, tok) {
+                if covered(idx, |d| d.allow_alloc) {
+                    continue;
+                }
+                violations.push(Violation {
+                    file: label.to_string(),
+                    line: idx + 1,
+                    lint: Lint::HotPathAlloc,
+                    msg: format!(
+                        "`{tok}` inside a hot-path fn (annotate \
+                         `// sddn-lint: allow(alloc) reason=...` if intentional)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Lint 2: panic-family tokens in library modules outside tests.
+    if panic_scope {
+        for (idx, line) in lines.iter().enumerate() {
+            if scope.test[idx] {
+                continue;
+            }
+            for tok in PANIC_TOKENS {
+                for _ in find_all(&line.code, tok) {
+                    if covered(idx, |d| d.allow_panic) {
+                        continue;
+                    }
+                    violations.push(Violation {
+                        file: label.to_string(),
+                        line: idx + 1,
+                        lint: Lint::ForbiddenPanic,
+                        msg: format!(
+                            "`{tok}` in a library module (return the hand-rolled error \
+                             type, or annotate `// sddn-lint: allow(panic) reason=...` \
+                             for a documented invariant)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Lint 3: exchange_apply operators must have graph support or a
+    // lexical register_plan pairing in the same file.
+    let mut full = String::new();
+    let mut line_start = Vec::with_capacity(lines.len());
+    for line in &lines {
+        line_start.push(full.len());
+        full.push_str(&line.code);
+        full.push('\n');
+    }
+    let line_of = |pos: usize| -> usize {
+        match line_start.binary_search(&pos) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    };
+    let mut registered: Vec<String> = Vec::new();
+    for pos in find_all(&full, ".register_plan(") {
+        if scope.test[line_of(pos)] {
+            continue;
+        }
+        let args_at = pos + ".register_plan(".len();
+        let (_, first_end) = extract_arg(&full, args_at);
+        if full[first_end..].starts_with(',') {
+            let (second, _) = extract_arg(&full, first_end + 1);
+            registered.push(normalize_operand(&second));
+        }
+    }
+    for pos in find_all(&full, ".exchange_apply") {
+        let after = &full[pos + ".exchange_apply".len()..];
+        let args_at = if after.starts_with('(') {
+            pos + ".exchange_apply(".len()
+        } else if after.starts_with("_fresh(") {
+            pos + ".exchange_apply_fresh(".len()
+        } else {
+            continue;
+        };
+        let idx = line_of(pos);
+        if scope.test[idx] || covered(idx, |d| d.allow_overlay) {
+            continue;
+        }
+        let (first, _) = extract_arg(&full, args_at);
+        let operand = normalize_operand(&first);
+        if registered.contains(&operand) {
+            continue;
+        }
+        violations.push(Violation {
+            file: label.to_string(),
+            line: idx + 1,
+            lint: Lint::UnregisteredOverlay,
+            msg: format!(
+                "exchange on operator `{operand}` has no `register_plan` pairing in this \
+                 file; annotate `// sddn-lint: graph-support` if its support stays within \
+                 the graph halo"
+            ),
+        });
+    }
+
+    // Lint 4 (collection only): SDDN_* env vars in string literals.
+    let mut env_refs = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        for pos in find_all(&line.strings, "SDDN_") {
+            let var: String = line.strings[pos..]
+                .chars()
+                .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            env_refs.push((var, idx + 1));
+        }
+    }
+    FileReport { violations, env_refs }
+}
+
+/// Lint one source string end to end, resolving env-var references
+/// against an optional README text (absent README = nothing documented).
+pub fn lint_source(
+    label: &str,
+    src: &str,
+    panic_scope: bool,
+    readme: Option<&str>,
+) -> Vec<Violation> {
+    let report = scan_file(label, src, panic_scope);
+    let mut violations = report.violations;
+    let mut seen: Vec<String> = Vec::new();
+    for (var, line) in report.env_refs {
+        if seen.contains(&var) {
+            continue;
+        }
+        seen.push(var.clone());
+        if readme.is_some_and(|r| r.contains(&var)) {
+            continue;
+        }
+        violations.push(Violation {
+            file: label.to_string(),
+            line,
+            lint: Lint::UndocumentedEnv,
+            msg: format!("env var `{var}` is referenced in code but not documented in README.md"),
+        });
+    }
+    violations
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Result of a whole-tree lint run.
+pub struct TreeReport {
+    /// All violations, in path order.
+    pub violations: Vec<Violation>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Lint every `.rs` file under `src_root`, resolving env references
+/// against `readme`. The forbidden-panic lint applies to files whose
+/// first path component under `src_root` is a library module directory.
+pub fn lint_tree(src_root: &Path, readme: &str) -> Result<TreeReport, String> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path.strip_prefix(src_root).unwrap_or(path);
+        let label = rel.to_string_lossy().replace('\\', "/");
+        let panic_scope = rel
+            .components()
+            .next()
+            .map(|c| PANIC_SCOPE_DIRS.contains(&c.as_os_str().to_string_lossy().as_ref()))
+            .unwrap_or(false);
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        violations.extend(lint_source(&label, &src, panic_scope, Some(readme)));
+    }
+    Ok(TreeReport { violations, files: files.len() })
+}
+
+/// Lint the repository rooted at `root`: walks `rust/src` and resolves
+/// env references against the top-level `README.md`.
+pub fn lint_repo(root: &Path) -> Result<TreeReport, String> {
+    let src_root = root.join("rust").join("src");
+    let readme_path = root.join("README.md");
+    let readme = fs::read_to_string(&readme_path)
+        .map_err(|e| format!("cannot read {}: {e}", readme_path.display()))?;
+    lint_tree(&src_root, &readme)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(vs: &[Violation]) -> Vec<Lint> {
+        vs.iter().map(|v| v.lint).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let mut src = String::new();
+        src.push_str("fn f() {\n");
+        src.push_str("    let s = \"panic!(no) .unwrap()\";\n");
+        src.push_str("    // .unwrap() in a comment\n");
+        src.push_str("    /* .expect( in a block comment */\n");
+        src.push_str("    let c = '\"';\n");
+        src.push_str("    let r = r#\".unwrap()\"#;\n");
+        src.push_str("}\n");
+        let vs = lint_source("t.rs", &src, true, None);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn panic_fires_outside_tests_only() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn g(x: Option<u32>) -> u32 {\n        \
+                   x.unwrap()\n    }\n}\n";
+        let vs = lint_source("t.rs", src, true, None);
+        assert_eq!(kinds(&vs), vec![Lint::ForbiddenPanic]);
+        assert_eq!(vs[0].line, 2);
+    }
+
+    #[test]
+    fn allow_panic_requires_reason() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // sddn-lint: allow(panic)\n    \
+                   x.unwrap()\n}\n";
+        let vs = lint_source("t.rs", src, true, None);
+        assert!(kinds(&vs).contains(&Lint::MalformedDirective), "{vs:?}");
+        assert!(kinds(&vs).contains(&Lint::ForbiddenPanic), "{vs:?}");
+        let ok = "fn f(x: Option<u32>) -> u32 {\n    // sddn-lint: allow(panic) reason=infallible\n    \
+                  x.unwrap()\n}\n";
+        assert!(lint_source("t.rs", ok, true, None).is_empty());
+    }
+
+    #[test]
+    fn hot_path_allocs_fire_and_unmarked_ws_fn_fires() {
+        let src = "// sddn-lint: hot-path\nfn solve_ws(n: usize) -> Vec<f64> {\n    \
+                   let v = vec![0.0; n];\n    v\n}\n";
+        let vs = lint_source("t.rs", src, false, None);
+        assert_eq!(kinds(&vs), vec![Lint::HotPathAlloc]);
+        let unmarked = "fn step_impl(n: usize) -> usize {\n    n\n}\n";
+        let vs = lint_source("t.rs", unmarked, false, None);
+        assert_eq!(kinds(&vs), vec![Lint::MissingHotPath]);
+    }
+
+    #[test]
+    fn trait_decl_without_body_needs_no_marker() {
+        let src = "trait S {\n    fn solve_ws(&self, n: usize) -> usize;\n}\n";
+        assert!(lint_source("t.rs", src, false, None).is_empty());
+    }
+
+    #[test]
+    fn overlay_pairing_and_annotation() {
+        let fires = "fn f(e: &mut dyn E, op: &Csr) {\n    e.exchange_apply(op, 1, x, 1, y);\n}\n";
+        let vs = lint_source("t.rs", fires, false, None);
+        assert_eq!(kinds(&vs), vec![Lint::UnregisteredOverlay]);
+        let paired = "fn f(e: &mut dyn E, op: &Csr) {\n    e.register_plan(\"lvl\", op);\n    \
+                      e.exchange_apply(op, 1, x, 1, y);\n}\n";
+        assert!(lint_source("t.rs", paired, false, None).is_empty());
+        let noted = "fn f(e: &mut dyn E, op: &Csr) {\n    // sddn-lint: graph-support\n    \
+                     e.exchange_apply(op, 1, x, 1, y);\n}\n";
+        assert!(lint_source("t.rs", noted, false, None).is_empty());
+    }
+
+    #[test]
+    fn multiline_operand_matches_register_pairing() {
+        let src = "fn f(e: &mut dyn E, s: &S) {\n    e.register_plan(\"lvl\", &s.op);\n    \
+                   e.exchange_apply(\n        &s.op,\n        1,\n        x,\n        1,\n        \
+                   y,\n    );\n}\n";
+        assert!(lint_source("t.rs", src, false, None).is_empty(), "multiline pairing");
+    }
+
+    #[test]
+    fn env_vars_resolve_against_readme() {
+        let src = "fn f() -> Option<String> {\n    std::env::var(\"SDDN_KNOB\").ok()\n}\n";
+        let vs = lint_source("t.rs", src, false, None);
+        assert_eq!(kinds(&vs), vec![Lint::UndocumentedEnv]);
+        let vs = lint_source("t.rs", src, false, Some("docs: `SDDN_KNOB` sets the knob"));
+        assert!(vs.is_empty());
+    }
+}

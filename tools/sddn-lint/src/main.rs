@@ -1,0 +1,106 @@
+//! Command-line front end for the sddn-lint invariant pass.
+//!
+//! Modes:
+//! - no arguments: lint the enclosing repository (`rust/src` against the
+//!   top-level `README.md`) — this is what CI runs;
+//! - `--root DIR`: same, rooted at `DIR`;
+//! - `--file F [--readme R]`: lint a single file (fixture mode). The
+//!   forbidden-panic lint is always active in this mode, and env-var
+//!   references resolve against `R` (nothing documented when omitted).
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use sddn_lint::{lint_repo, lint_source, Violation};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: sddn-lint [--root DIR | --file F [--readme R]]");
+    ExitCode::from(2)
+}
+
+fn report(violations: &[Violation], scanned: Option<usize>) -> ExitCode {
+    for v in violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        match scanned {
+            Some(n) => println!("sddn-lint: {n} files clean"),
+            None => println!("sddn-lint: clean"),
+        }
+        ExitCode::SUCCESS
+    } else {
+        println!("sddn-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn run_repo(root: &Path) -> ExitCode {
+    match lint_repo(root) {
+        Ok(tree) => report(&tree.violations, Some(tree.files)),
+        Err(e) => {
+            eprintln!("sddn-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_file(file: &Path, readme: Option<&Path>) -> ExitCode {
+    let src = match std::fs::read_to_string(file) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("sddn-lint: cannot read {}: {e}", file.display());
+            return ExitCode::from(2);
+        }
+    };
+    let readme = match readme {
+        None => None,
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("sddn-lint: cannot read {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+    };
+    let label = file.to_string_lossy().replace('\\', "/");
+    let violations = lint_source(&label, &src, true, readme.as_deref());
+    report(&violations, None)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut file: Option<PathBuf> = None;
+    let mut readme: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" | "--file" | "--readme" if i + 1 < args.len() => {
+                let value = PathBuf::from(&args[i + 1]);
+                match args[i].as_str() {
+                    "--root" => root = Some(value),
+                    "--file" => file = Some(value),
+                    _ => readme = Some(value),
+                }
+                i += 2;
+            }
+            _ => return usage(),
+        }
+    }
+    match (root, file) {
+        (Some(_), Some(_)) => usage(),
+        (None, Some(f)) => run_file(&f, readme.as_deref()),
+        (Some(r), None) => run_repo(&r),
+        (None, None) => {
+            // The binary lives at <repo>/tools/sddn-lint; walk up to the
+            // workspace root.
+            let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+            match manifest.parent().and_then(Path::parent) {
+                Some(repo) => run_repo(repo),
+                None => usage(),
+            }
+        }
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture: an SDDN_* env var that the README documents is clean.
+
+fn threads() -> Option<usize> {
+    std::env::var("SDDN_FIXTURE_THREADS").ok()?.parse().ok()
+}

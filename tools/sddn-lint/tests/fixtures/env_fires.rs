@@ -1,0 +1,6 @@
+// Fixture: an SDDN_* env var referenced in code but absent from the
+// README must fire.
+
+fn knob() -> Option<usize> {
+    std::env::var("SDDN_SECRET_KNOB").ok()?.parse().ok()
+}

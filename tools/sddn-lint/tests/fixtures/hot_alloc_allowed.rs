@@ -1,0 +1,17 @@
+// Fixture: allow(alloc) with a reason suppresses the hot-path lint, and
+// helper functions outside the hot scope may allocate freely.
+
+// sddn-lint: hot-path
+fn solve_ws(n: usize, pool: &mut BufferPool) -> Vec<f64> {
+    // sddn-lint: allow(alloc) reason=one-time lazy growth, reused across calls
+    let v = vec![0.0; n];
+    let w = pool.take(n);
+    pool.put(w);
+    v
+}
+
+fn setup(n: usize) -> Vec<f64> {
+    let mut v = Vec::new();
+    v.resize(n, 0.0);
+    v.clone()
+}

@@ -1,0 +1,13 @@
+// Fixture: allocation tokens inside a hot-path scope must fire.
+
+// sddn-lint: hot-path
+fn solve_ws(n: usize, src: &[f64]) -> Vec<f64> {
+    let mut v = vec![0.0; n]; // fires: vec!
+    let w = Vec::new(); // fires: Vec::new
+    let c = src.to_vec().clone(); // fires: .clone()
+    let s: Vec<f64> = src.iter().copied().collect(); // fires: .collect
+    v.extend_from_slice(&c);
+    v.extend_from_slice(&s);
+    let _ = w;
+    v
+}

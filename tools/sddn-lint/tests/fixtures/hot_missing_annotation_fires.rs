@@ -1,0 +1,10 @@
+// Fixture: a `*_ws` body without the hot-path marker must fire, even if
+// it does not allocate; trait declarations without bodies are exempt.
+
+trait Solver {
+    fn solve_ws(&self, n: usize) -> usize;
+}
+
+fn crude_solve_ws(n: usize) -> usize {
+    n + 1
+}

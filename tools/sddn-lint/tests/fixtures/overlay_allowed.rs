@@ -1,0 +1,13 @@
+// Fixture: both accepted forms — a lexical register_plan pairing on the
+// same operator, and a graph-support annotation for operators whose
+// support provably stays within the halo.
+
+fn apply_registered(exch: &mut dyn Exchange, level: &Level, x: &[f64], out: &mut [f64]) {
+    exch.register_plan("chain level", &level.overlay);
+    exch.exchange_apply(&level.overlay, level.offdiag, x, 1, out);
+}
+
+fn apply_graph_support(exch: &mut dyn Exchange, lap: &Csr, x: &[f64], out: &mut [f64]) {
+    // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph
+    exch.exchange_apply(lap, 0, x, 1, out);
+}

@@ -1,0 +1,7 @@
+// Fixture: an exchange on an operator with no register_plan pairing and
+// no graph-support annotation must fire.
+
+fn apply(exch: &mut dyn Exchange, overlay: &Csr, x: &[f64], out: &mut [f64]) {
+    exch.exchange_apply(overlay, 0, x, 1, out); // fires: unregistered overlay
+    exch.exchange_apply_fresh(&overlay, 0, x, 1, out, true); // fires too
+}

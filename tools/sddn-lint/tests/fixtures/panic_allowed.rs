@@ -1,0 +1,23 @@
+// Fixture: reason-carrying allowlists and #[cfg(test)] scopes suppress
+// the forbidden-panic lint.
+
+fn pick(values: &[f64], at: Option<usize>) -> f64 {
+    // sddn-lint: allow(panic) reason=caller guarantees at is Some by construction
+    let i = at.unwrap();
+    values[i]
+}
+
+fn fallible(values: &[f64]) -> Result<f64, String> {
+    values.first().copied().ok_or_else(|| "empty".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(pick(&[1.0], Some(0)), 1.0);
+        fallible(&[2.0]).unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture: panic-family tokens in library code outside tests must fire.
+
+fn pick(values: &[f64], at: Option<usize>) -> f64 {
+    let i = at.unwrap(); // fires: .unwrap()
+    if i >= values.len() {
+        panic!("index {i} out of range"); // fires: panic!(
+    }
+    values.get(i).copied().expect("checked above") // fires: .expect(
+}

@@ -1,0 +1,129 @@
+//! Fixture tests for the sddn-lint pass: each lint exercised in both a
+//! firing and an allowlisted variant, the CLI exit-code contract, and a
+//! `repo_is_clean` gate that runs the full lint over the enclosing
+//! repository (so `cargo test` fails whenever `cargo run -p sddn-lint`
+//! would).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use sddn_lint::{lint_repo, lint_source, Lint, Violation};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name)
+}
+
+fn lint_fixture(name: &str, readme: Option<&str>) -> Vec<Violation> {
+    let src = std::fs::read_to_string(fixture(name)).unwrap();
+    let readme = readme.map(|r| std::fs::read_to_string(fixture(r)).unwrap());
+    lint_source(name, &src, true, readme.as_deref())
+}
+
+fn kinds(vs: &[Violation]) -> Vec<Lint> {
+    vs.iter().map(|v| v.lint).collect()
+}
+
+/// Run the CLI in `--file` fixture mode and return its exit code.
+fn run_cli(name: &str, readme: Option<&str>) -> i32 {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sddn-lint"));
+    cmd.arg("--file").arg(fixture(name));
+    if let Some(r) = readme {
+        cmd.arg("--readme").arg(fixture(r));
+    }
+    cmd.status().unwrap().code().unwrap()
+}
+
+#[test]
+fn hot_alloc_fires() {
+    let vs = lint_fixture("hot_alloc_fires.rs", None);
+    assert_eq!(vs.len(), 4, "{vs:?}");
+    assert!(kinds(&vs).iter().all(|k| *k == Lint::HotPathAlloc), "{vs:?}");
+    assert_eq!(run_cli("hot_alloc_fires.rs", None), 1);
+}
+
+#[test]
+fn hot_alloc_allowed() {
+    let vs = lint_fixture("hot_alloc_allowed.rs", None);
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(run_cli("hot_alloc_allowed.rs", None), 0);
+}
+
+#[test]
+fn hot_missing_annotation_fires() {
+    let vs = lint_fixture("hot_missing_annotation_fires.rs", None);
+    assert_eq!(kinds(&vs), vec![Lint::MissingHotPath], "{vs:?}");
+    assert_eq!(run_cli("hot_missing_annotation_fires.rs", None), 1);
+}
+
+#[test]
+fn panic_fires() {
+    let vs = lint_fixture("panic_fires.rs", None);
+    assert_eq!(vs.len(), 3, "{vs:?}");
+    assert!(kinds(&vs).iter().all(|k| *k == Lint::ForbiddenPanic), "{vs:?}");
+    assert_eq!(run_cli("panic_fires.rs", None), 1);
+}
+
+#[test]
+fn panic_allowed() {
+    let vs = lint_fixture("panic_allowed.rs", None);
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(run_cli("panic_allowed.rs", None), 0);
+}
+
+#[test]
+fn overlay_fires() {
+    let vs = lint_fixture("overlay_fires.rs", None);
+    assert_eq!(vs.len(), 2, "{vs:?}");
+    assert!(kinds(&vs).iter().all(|k| *k == Lint::UnregisteredOverlay), "{vs:?}");
+    assert_eq!(run_cli("overlay_fires.rs", None), 1);
+}
+
+#[test]
+fn overlay_allowed() {
+    let vs = lint_fixture("overlay_allowed.rs", None);
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(run_cli("overlay_allowed.rs", None), 0);
+}
+
+#[test]
+fn env_fires_without_readme_entry() {
+    let vs = lint_fixture("env_fires.rs", None);
+    assert_eq!(kinds(&vs), vec![Lint::UndocumentedEnv], "{vs:?}");
+    assert_eq!(run_cli("env_fires.rs", None), 1);
+    // Documenting the var in the readme is also a valid fix.
+    let vs = lint_fixture("env_fires.rs", Some("README_env.md"));
+    assert_eq!(kinds(&vs), vec![Lint::UndocumentedEnv], "not this readme");
+}
+
+#[test]
+fn env_documented_is_clean() {
+    let vs = lint_fixture("env_documented.rs", Some("README_env.md"));
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(run_cli("env_documented.rs", Some("README_env.md")), 0);
+    // Without the README the same reference fires.
+    assert_eq!(run_cli("env_documented.rs", None), 1);
+}
+
+#[test]
+fn cli_rejects_bad_usage() {
+    let code = Command::new(env!("CARGO_BIN_EXE_sddn-lint"))
+        .arg("--no-such-flag")
+        .status()
+        .unwrap()
+        .code()
+        .unwrap();
+    assert_eq!(code, 2);
+}
+
+#[test]
+fn repo_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let tree = lint_repo(&root).unwrap();
+    assert!(tree.files > 20, "expected to scan the full rust/src tree, saw {}", tree.files);
+    let rendered: Vec<String> = tree.violations.iter().map(|v| v.to_string()).collect();
+    assert!(
+        tree.violations.is_empty(),
+        "repo lint violations:\n{}",
+        rendered.join("\n")
+    );
+}
