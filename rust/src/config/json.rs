@@ -205,6 +205,16 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits of a `\uXXXX` escape.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
+            code = code * 16 + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+        }
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -222,13 +232,27 @@ impl<'a> Parser<'a> {
                     Some(b'r') => out.push('\r'),
                     Some(b't') => out.push('\t'),
                     Some(b'u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                            code = code * 16
-                                + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
-                        }
-                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        let hi = self.hex4()?;
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            // UTF-16 high surrogate: must be immediately
+                            // followed by an escaped low surrogate.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired high surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            return Err(self.err("unpaired low surrogate"));
+                        } else {
+                            hi
+                        };
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| self.err("invalid \\u code point"))?,
+                        );
                     }
                     _ => return Err(self.err("bad escape")),
                 },
@@ -369,5 +393,41 @@ mod tests {
     fn utf8_passthrough() {
         let j = Json::parse("\"αβγ\"").unwrap();
         assert_eq!(j.as_str(), Some("αβγ"));
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_combine() {
+        // U+1F600 GRINNING FACE as a UTF-16 surrogate pair.
+        let j = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(j.as_str(), Some("😀"));
+        // Pair embedded in surrounding text.
+        let j = Json::parse(r#""a\uD83D\uDE00b""#).unwrap();
+        assert_eq!(j.as_str(), Some("a😀b"));
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_rejected() {
+        // Lone high surrogate (end of string, non-escape, or wrong escape).
+        assert!(Json::parse(r#""\uD83D""#).is_err());
+        assert!(Json::parse(r#""\uD83Dx""#).is_err());
+        assert!(Json::parse(r#""\uD83D\n""#).is_err());
+        // High surrogate followed by a non-surrogate escape.
+        assert!(Json::parse(r#""\uD83DA""#).is_err());
+        // Lone low surrogate.
+        assert!(Json::parse(r#""\uDE00""#).is_err());
+    }
+
+    #[test]
+    fn astral_roundtrip_through_emitter() {
+        // Raw astral chars in a parsed document must survive
+        // Display → reparse bit-identically (guards BENCH_*.json).
+        let j = Json::parse("{\"label\":\"scale 😀 𝄞 run\"}").unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+        assert_eq!(j2.get("label").unwrap().as_str(), Some("scale 😀 𝄞 run"));
+        // Escaped form parses to the same value as the raw form.
+        let esc = Json::parse(r#""\uD834\uDD1E""#).unwrap();
+        let raw = Json::parse("\"𝄞\"").unwrap();
+        assert_eq!(esc, raw);
     }
 }

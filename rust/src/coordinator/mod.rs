@@ -10,8 +10,10 @@ pub mod partition;
 pub mod worker;
 pub mod baseline;
 pub mod newton;
+pub mod tcp;
 
 pub use baseline::{run_partitioned_baseline, run_partitioned_with, PartitionedIter, PartitionedRun};
+pub use tcp::{run_leader, run_tcp_worker, TcpLeader, TcpPartitionedRun};
 pub use newton::{run_partitioned_newton, NewtonIter, PartitionedNewtonRun};
 pub use partition::Partition;
 pub use scheduler::{Campaign, JobOutcome};

@@ -1,0 +1,449 @@
+//! Leader side of the TCP process transport: rendezvous, the all-reduce
+//! service, and iteration-keyed metric aggregation over sockets.
+//!
+//! Mirrors [`super::baseline`]'s leader exactly — same iteration-keyed
+//! gather discipline, same per-iteration aggregation (stack owned rows,
+//! sum real cross counters, assert the modeled ledger is identical on
+//! every worker) — but the workers are OS *processes* reached through
+//! [`crate::net::tcp`] frames instead of scoped threads on channels. The
+//! all-reduce service re-uses the in-process
+//! [`run_reducer`](crate::net::partitioned::run_reducer) verbatim
+//! (summation in global node order), which is what keeps TCP runs
+//! bit-for-bit identical to both in-process transports.
+//!
+//! Robustness: every leader-side read has a timeout, so a worker process
+//! that dies mid-run surfaces as a typed [`TcpError`] naming the rank and
+//! the missing message — never a hang.
+
+use super::PartitionedIter;
+use crate::algorithms::ConsensusAlgorithm;
+use crate::coordinator::Partition;
+use crate::graph::{laplacian_csr, Graph};
+use crate::net::partitioned::{build_shard_plans, run_reducer, ReduceMsg};
+use crate::net::tcp::frame::{
+    bytes_to_f64s, put_f64s, read_frame, split_u64s, write_frame, FrameKind, TcpError,
+};
+use crate::net::tcp::{TcpExchange, WorkerNetConfig};
+use crate::net::CommStats;
+use crate::problems::ConsensusProblem;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Outcome of a TCP partitioned run: the in-process
+/// [`PartitionedRun`](super::PartitionedRun) ledger plus the observed
+/// socket byte counters.
+#[derive(Debug, Clone)]
+pub struct TcpPartitionedRun {
+    /// Per-iteration metric rows (identical semantics to the in-process
+    /// partitioned runtime).
+    pub records: Vec<PartitionedIter>,
+    /// Final stacked iterate (global `n × p`).
+    pub thetas: Vec<f64>,
+    /// Final modeled communication counters.
+    pub comm: CommStats,
+    /// Final cumulative real cross-worker socket payloads.
+    pub cross_messages: u64,
+    /// Final cumulative real floats moved over the sockets.
+    pub cross_floats: u64,
+    /// Observed data-plane payload bytes — the wire-truth invariant is
+    /// `payload_bytes == cross_floats × 8`.
+    pub payload_bytes: u64,
+    /// Observed fixed framing overhead (16 bytes per data frame),
+    /// accounted separately from payloads.
+    pub header_bytes: u64,
+}
+
+/// The leader's rendezvous listener, bound before workers launch so their
+/// connect-with-retry loops have something to dial.
+pub struct TcpLeader {
+    listener: TcpListener,
+    k: usize,
+}
+
+/// What the per-worker reader threads forward to the metric gather loop.
+enum LeaderMsg {
+    /// One worker's iteration snapshot: counters + owned θ rows.
+    Metric { iter: usize, rank: usize, counters: Vec<u64>, thetas: Vec<f64> },
+    /// A worker connection failed mid-run.
+    WorkerFailed { rank: usize, err: TcpError },
+}
+
+impl TcpLeader {
+    /// Bind the rendezvous listener for a `k`-worker pool. Use port 0 for
+    /// an ephemeral loopback port (tests, single-machine runs) and read
+    /// the actual address back with [`addr`](Self::addr).
+    pub fn bind(addr: &str, k: usize) -> Result<TcpLeader, TcpError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|err| TcpError::Io { ctx: format!("bind leader listener {addr}"), err })?;
+        Ok(TcpLeader { listener, k })
+    }
+
+    /// The bound rendezvous address (what workers must `--connect` to).
+    pub fn addr(&self) -> Result<SocketAddr, TcpError> {
+        self.listener
+            .local_addr()
+            .map_err(|err| TcpError::Io { ctx: "leader local_addr".to_string(), err })
+    }
+}
+
+/// Accept one rendezvous connection before `deadline`.
+fn accept_one(listener: &TcpListener, deadline: Instant) -> Result<TcpStream, TcpError> {
+    let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+    listener.set_nonblocking(true).map_err(|e| io("leader set_nonblocking", e))?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                listener.set_nonblocking(false).map_err(|e| io("leader set_blocking", e))?;
+                s.set_nonblocking(false).map_err(|e| io("worker socket set_blocking", e))?;
+                return Ok(s);
+            }
+            Err(err) if err.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(TcpError::Timeout {
+                        who: "leader".to_string(),
+                        waiting_for: "worker rendezvous connections".to_string(),
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(err) => return Err(io("leader accept", err)),
+        }
+    }
+}
+
+/// Pump one worker's leader connection: route `ReduceUp` frames to the
+/// reducer and `Metric` frames to the gather loop. Exits silently on a
+/// clean close (the worker finished and dropped its exchange); anything
+/// else is reported as a failure.
+fn spawn_worker_reader(
+    mut reader: BufReader<TcpStream>,
+    rank: usize,
+    red_tx: Sender<ReduceMsg>,
+    met_tx: Sender<LeaderMsg>,
+) {
+    std::thread::spawn(move || {
+        let ctx = format!("worker {rank}");
+        loop {
+            let frame = match read_frame(&mut reader, &ctx) {
+                Ok(f) => f,
+                Err(TcpError::PeerClosed { .. }) => return,
+                Err(err) => {
+                    let _ = met_tx.send(LeaderMsg::WorkerFailed { rank, err });
+                    return;
+                }
+            };
+            let fail = |err: TcpError, met_tx: &Sender<LeaderMsg>| {
+                let _ = met_tx.send(LeaderMsg::WorkerFailed { rank, err });
+            };
+            match frame.kind {
+                FrameKind::ReduceUp => match bytes_to_f64s(&frame.body, &ctx) {
+                    Ok(vals) => {
+                        if red_tx.send((rank, frame.tag, vals)).is_err() {
+                            return; // reducer gone; run is over
+                        }
+                    }
+                    Err(err) => {
+                        fail(err, &met_tx);
+                        return;
+                    }
+                },
+                FrameKind::Metric => {
+                    let decoded = split_u64s(&frame.body, 8, &ctx)
+                        .and_then(|(counters, tail)| {
+                            bytes_to_f64s(tail, &ctx).map(|thetas| (counters, thetas))
+                        });
+                    match decoded {
+                        Ok((counters, thetas)) => {
+                            let msg = LeaderMsg::Metric {
+                                iter: frame.tag as usize,
+                                rank,
+                                counters,
+                                thetas,
+                            };
+                            if met_tx.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                        Err(err) => {
+                            fail(err, &met_tx);
+                            return;
+                        }
+                    }
+                }
+                other => {
+                    fail(
+                        TcpError::Protocol {
+                            msg: format!("unexpected {other:?} frame on the leader connection"),
+                        },
+                        &met_tx,
+                    );
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// Iteration-keyed metric gather over the socket inbox: the socket analogue
+/// of [`super::gather_by_iteration`], with a timeout so a dead worker
+/// surfaces as a typed error naming the missing iteration instead of a
+/// hang.
+fn gather_by_iteration_timeout(
+    rx: &Receiver<LeaderMsg>,
+    k: usize,
+    iters: usize,
+    timeout: Duration,
+    mut per_iteration: impl FnMut(usize, Vec<LeaderMsg>) -> Result<(), TcpError>,
+) -> Result<(), TcpError> {
+    let mut early: Vec<Vec<LeaderMsg>> = (0..iters).map(|_| Vec::new()).collect();
+    for it in 0..iters {
+        let mut got: Vec<LeaderMsg> = std::mem::take(&mut early[it]);
+        while got.len() < k {
+            match rx.recv_timeout(timeout) {
+                Ok(LeaderMsg::Metric { iter, rank, counters, thetas }) => {
+                    if iter >= iters {
+                        return Err(TcpError::Protocol {
+                            msg: format!(
+                                "worker {rank} reported metrics for iteration {iter}, \
+                                 run has {iters}"
+                            ),
+                        });
+                    }
+                    let msg = LeaderMsg::Metric { iter, rank, counters, thetas };
+                    if iter == it {
+                        got.push(msg);
+                    } else {
+                        early[iter].push(msg);
+                    }
+                }
+                Ok(LeaderMsg::WorkerFailed { rank, err }) => {
+                    return Err(TcpError::Protocol {
+                        msg: format!("worker {rank} died mid-run: {err}"),
+                    });
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TcpError::Timeout {
+                        who: "leader".to_string(),
+                        waiting_for: format!("iteration {it} metrics ({}/{k} workers)", got.len()),
+                    });
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TcpError::PeerClosed {
+                        who: "every worker metric connection".to_string(),
+                    });
+                }
+            }
+        }
+        per_iteration(it, got)?;
+    }
+    Ok(())
+}
+
+/// Run the leader for a `k`-worker TCP pool: rendezvous, peer-table
+/// broadcast, the all-reduce service, and iteration-keyed metric
+/// aggregation. Returns once all `iters` iterations are accounted for.
+///
+/// `owned_of` must be the per-rank owned node lists of the same partition
+/// the workers build (ascending, rank order) — it drives both the reduce
+/// order and the θ stacking, exactly as in the in-process runtime.
+pub fn run_leader(
+    leader: TcpLeader,
+    problem: &ConsensusProblem,
+    owned_of: Vec<Vec<usize>>,
+    iters: usize,
+    timeout: Duration,
+) -> Result<TcpPartitionedRun, TcpError> {
+    let k = leader.k;
+    if owned_of.len() != k {
+        return Err(TcpError::Protocol {
+            msg: format!("owned lists cover {} ranks, pool has {k}", owned_of.len()),
+        });
+    }
+    let n = problem.n();
+    let p = problem.p;
+    let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+
+    // 1. Rendezvous: accept k connections, read each worker's Hello
+    //    (rank + advertised mesh listener address).
+    let deadline = Instant::now() + timeout;
+    let mut conns: Vec<Option<(TcpStream, BufReader<TcpStream>)>> = (0..k).map(|_| None).collect();
+    let mut mesh_addrs: Vec<String> = vec![String::new(); k];
+    for _ in 0..k {
+        let s = accept_one(&leader.listener, deadline)?;
+        s.set_nodelay(true).map_err(|e| io("worker set_nodelay", e))?;
+        s.set_read_timeout(Some(timeout)).map_err(|e| io("worker set timeout", e))?;
+        let mut reader = BufReader::new(s.try_clone().map_err(|e| io("worker try_clone", e))?);
+        let hello = read_frame(&mut reader, "worker rendezvous")?;
+        if hello.kind != FrameKind::Hello {
+            return Err(TcpError::Protocol {
+                msg: format!("expected a rendezvous Hello, got a {:?} frame", hello.kind),
+            });
+        }
+        let rank = hello.src as usize;
+        if rank >= k {
+            return Err(TcpError::Protocol { msg: format!("Hello from out-of-range rank {rank}") });
+        }
+        if conns[rank].is_some() {
+            return Err(TcpError::Protocol { msg: format!("duplicate Hello from rank {rank}") });
+        }
+        mesh_addrs[rank] = String::from_utf8(hello.body)
+            .map_err(|_| TcpError::BadFrame { msg: "mesh address is not UTF-8".to_string() })?;
+        conns[rank] = Some((s, reader));
+    }
+
+    // 2. Broadcast the peer table; every mesh listener is already bound
+    //    (each worker binds before saying Hello).
+    let table = mesh_addrs.join("\n");
+    for slot in conns.iter_mut() {
+        let (s, _) = slot.as_mut().ok_or_else(|| TcpError::Protocol {
+            msg: "rendezvous bookkeeping lost a worker".to_string(),
+        })?;
+        write_frame(s, FrameKind::PeerTable, 0, 0, table.as_bytes(), "worker")?;
+    }
+
+    // 3. Services: per-worker reader threads route ReduceUp → the shared
+    //    in-process reducer and Metric → the gather loop; per-worker
+    //    writer threads ship reduce totals back down, sequence-tagged in
+    //    completion order (a worker only issues reduce s+1 after
+    //    receiving total s, so completion order is the sequence order).
+    let (red_tx, red_rx) = channel::<ReduceMsg>();
+    let (met_tx, met_rx) = channel::<LeaderMsg>();
+    let mut down_txs: Vec<Sender<Vec<f64>>> = Vec::with_capacity(k);
+    let mut records: Vec<PartitionedIter> = Vec::with_capacity(iters);
+    let mut thetas = vec![0.0; n * p];
+    let mut payload_total = 0u64;
+    let mut header_total = 0u64;
+
+    let result: Result<(), TcpError> = std::thread::scope(|scope| {
+        for (rank, slot) in conns.into_iter().enumerate() {
+            let (stream, reader) = slot.ok_or_else(|| TcpError::Protocol {
+                msg: "rendezvous bookkeeping lost a worker".to_string(),
+            })?;
+            spawn_worker_reader(reader, rank, red_tx.clone(), met_tx.clone());
+            let (tx, rx) = channel::<Vec<f64>>();
+            down_txs.push(tx);
+            scope.spawn(move || {
+                let mut stream = stream;
+                let mut seq = 0u64;
+                for total in rx.iter() {
+                    seq += 1;
+                    let mut body = Vec::with_capacity(total.len() * 8);
+                    put_f64s(&mut body, &total);
+                    let sent =
+                        write_frame(&mut stream, FrameKind::ReduceDown, 0, seq, &body, "worker");
+                    if sent.is_err() {
+                        return; // the reader thread reports the failure
+                    }
+                }
+            });
+        }
+        drop(red_tx);
+        drop(met_tx);
+        {
+            let owned_of = owned_of.clone();
+            let txs = down_txs;
+            scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
+        }
+
+        // 4. Metric aggregation, identical to the in-process leader.
+        gather_by_iteration_timeout(&met_rx, k, iters, timeout, |it, got| {
+            let mut cross_total = 0u64;
+            let mut cross_floats_total = 0u64;
+            let mut payload = 0u64;
+            let mut header = 0u64;
+            let mut comm: Option<CommStats> = None;
+            for msg in got {
+                let LeaderMsg::Metric { rank, counters, thetas: snapshot, .. } = msg else {
+                    continue; // unreachable: the gather loop only parks metrics
+                };
+                let owned = &owned_of[rank];
+                if snapshot.len() != owned.len() * p {
+                    return Err(TcpError::Protocol {
+                        msg: format!(
+                            "worker {rank} metric snapshot has {} floats, expected {}",
+                            snapshot.len(),
+                            owned.len() * p
+                        ),
+                    });
+                }
+                for (li, &u) in owned.iter().enumerate() {
+                    thetas[u * p..(u + 1) * p].copy_from_slice(&snapshot[li * p..(li + 1) * p]);
+                }
+                cross_total += counters[0];
+                cross_floats_total += counters[1];
+                payload += counters[2];
+                header += counters[3];
+                let stats = CommStats {
+                    messages: counters[4],
+                    floats: counters[5],
+                    rounds: counters[6],
+                    allreduces: counters[7],
+                };
+                // Every worker tallies the identical modeled ledger.
+                if comm.is_some_and(|c| c != stats) {
+                    return Err(TcpError::Protocol {
+                        msg: format!("worker {rank} modeled ledger drifted from the pool"),
+                    });
+                }
+                comm = Some(stats);
+            }
+            payload_total = payload;
+            header_total = header;
+            records.push(PartitionedIter {
+                iter: it + 1,
+                objective: problem.objective(&thetas),
+                consensus_error: problem.consensus_error(&thetas),
+                cross_messages: cross_total,
+                cross_floats: cross_floats_total,
+                comm: comm.unwrap_or_default(),
+            });
+            Ok(())
+        })
+    });
+    result?;
+
+    let comm = records.last().map(|r| r.comm).unwrap_or_default();
+    let cross_messages = records.last().map(|r| r.cross_messages).unwrap_or(0);
+    let cross_floats = records.last().map(|r| r.cross_floats).unwrap_or(0);
+    Ok(TcpPartitionedRun {
+        records,
+        thetas,
+        comm,
+        cross_messages,
+        cross_floats,
+        payload_bytes: payload_total,
+        header_bytes: header_total,
+    })
+}
+
+/// Worker-process driver: build the shard plan for `net.rank`, join the
+/// pool over TCP, and drive the shard-local algorithm for `iters`
+/// iterations, reporting each iteration's metrics to the leader. The
+/// graph/partition/problem must be rebuilt identically on every rank
+/// (deterministic seeds — see `harness::deploy`).
+pub fn run_tcp_worker<'a>(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    net: &WorkerNetConfig,
+    make_alg: &(dyn Fn(Vec<usize>) -> Box<dyn ConsensusAlgorithm + 'a> + Sync),
+) -> Result<(), TcpError> {
+    if part.k != net.k {
+        return Err(TcpError::Protocol {
+            msg: format!("partition has {} shards, pool has {}", part.k, net.k),
+        });
+    }
+    let lap = laplacian_csr(g);
+    let mut plans = build_shard_plans(g, part);
+    let plan = plans.swap_remove(net.rank);
+    let mut exch = TcpExchange::connect(net, g.n, g.m(), lap, plan)?;
+    let mut alg = make_alg(exch.owned().to_vec());
+    for it in 0..iters {
+        alg.step(problem, &mut exch);
+        exch.send_metrics(it as u64, alg.thetas())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! Multi-process deployment harness for the TCP transport.
+//!
+//! A TCP run spans several OS processes that share no memory, so every
+//! rank must rebuild the *identical* experiment — graph, problem,
+//! partition, and (for the dual-Newton kinds) the randomized inner SDDM
+//! solver — from seeds alone. [`TcpJobSpec`] is that seed bundle: it
+//! round-trips through `sddnewton worker` CLI flags
+//! ([`TcpJobSpec::to_worker_args`]) and builds deterministically on every
+//! side ([`TcpJobSpec::build`]), which is what makes the TCP pool
+//! bit-for-bit comparable to the in-process transports.
+//!
+//! [`run_tcp_cross_transport`] is the three-way parity harness behind the
+//! `--transport tcp` CLI and `tests/tcp_wire.rs`: it runs the bulk
+//! [`CommGraph`](crate::net::CommGraph) reference and the in-process
+//! [`ShardExchange`](crate::net::partitioned::ShardExchange) reference,
+//! then the same algorithm over a real TCP pool (worker OS processes, or
+//! in-process threads speaking real loopback sockets for tests), and
+//! checks iterates, objectives, the modeled ledger, and the wire truth —
+//! extended to observed socket bytes.
+
+use super::experiments::{
+    build_graph, build_problem, make_inner_solver, make_sharded_algorithm,
+    modeled_cross_messages,
+};
+use crate::algorithms::{run, RunOptions, Trace};
+use crate::config::{AlgoKind, ExperimentConfig, Json};
+use crate::coordinator::tcp::{run_leader, run_tcp_worker, TcpLeader, TcpPartitionedRun};
+use crate::coordinator::{run_partitioned_baseline, Partition, PartitionedRun};
+use crate::graph::Graph;
+use crate::net::tcp::frame::{self, HEADER_BYTES};
+use crate::net::tcp::WorkerNetConfig;
+use crate::net::CommGraph;
+use crate::problems::ConsensusProblem;
+use crate::runtime::NativeBackend;
+use crate::util::Pcg64;
+use std::path::Path;
+
+/// Everything a worker process needs to rebuild its rank's share of a TCP
+/// run deterministically. Round-trips through `sddnewton worker` flags.
+#[derive(Debug, Clone)]
+pub struct TcpJobSpec {
+    /// Experiment preset name (ignored when `config_path` is set).
+    pub experiment: String,
+    /// JSON config file overriding the preset.
+    pub config_path: Option<String>,
+    /// Comma-separated algorithm-id override (as `--algorithms`).
+    pub algorithms: Option<String>,
+    /// Seed override for the experiment config.
+    pub seed: Option<u64>,
+    /// Which entry of the config's algorithm roster this run drives.
+    pub algo_index: usize,
+    /// Iterations to run.
+    pub iters: usize,
+    /// Pool size `k`.
+    pub workers: usize,
+    /// Partitioning scheme: `contiguous`, `round_robin`, or `bfs`.
+    pub partitioning: String,
+    /// Seed for the inner-solver construction. Every side of a parity
+    /// comparison (bulk reference, shard reference, each worker process)
+    /// builds its solver from a fresh `Pcg64::new(solver_seed)`, so the
+    /// randomized SDDM chain is bit-identical everywhere.
+    pub solver_seed: u64,
+}
+
+/// A spec resolved into the concrete experiment objects (identical on
+/// every rank by construction).
+pub struct TcpJob {
+    /// The resolved experiment config.
+    pub cfg: ExperimentConfig,
+    /// The processor graph.
+    pub g: Graph,
+    /// The consensus problem instance.
+    pub problem: ConsensusProblem,
+    /// The algorithm this run drives.
+    pub kind: AlgoKind,
+    /// The node partition over `workers` shards.
+    pub part: Partition,
+}
+
+impl TcpJobSpec {
+    /// Resolve the spec: load/override the config, then rebuild graph,
+    /// problem, and partition from the config seed. The graph is drawn
+    /// before the problem from one rng stream — the same order as every
+    /// other driver — so all artifacts are bit-identical across processes.
+    pub fn build(&self) -> Result<TcpJob, String> {
+        let mut cfg = if let Some(path) = &self.config_path {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+            ExperimentConfig::from_json(&doc)?
+        } else {
+            ExperimentConfig::preset(&self.experiment)
+                .ok_or(format!("unknown preset '{}'", self.experiment))?
+        };
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(list) = &self.algorithms {
+            cfg.algorithms = list
+                .split(',')
+                .map(|id| AlgoKind::from_id(id.trim()).ok_or(format!("unknown algorithm '{id}'")))
+                .collect::<Result<_, _>>()?;
+        }
+        let kind = cfg
+            .algorithms
+            .get(self.algo_index)
+            .cloned()
+            .ok_or_else(|| {
+                format!(
+                    "algorithm index {} out of range (roster has {})",
+                    self.algo_index,
+                    cfg.algorithms.len()
+                )
+            })?;
+        let mut rng = Pcg64::new(cfg.seed);
+        let g = build_graph(&cfg, &mut rng);
+        let problem = build_problem(&cfg, &mut rng);
+        let part = match self.partitioning.as_str() {
+            "contiguous" => Partition::contiguous(g.n, self.workers),
+            "round_robin" => Partition::round_robin(g.n, self.workers),
+            "bfs" | "bfs_blocks" => Partition::bfs_blocks(&g, self.workers),
+            other => return Err(format!("unknown partitioning '{other}'")),
+        };
+        Ok(TcpJob { cfg, g, problem, kind, part })
+    }
+
+    /// The `sddnewton worker` flags a worker process needs to rebuild this
+    /// spec (everything but `--rank`/`--connect`, which are per-process).
+    pub fn to_worker_args(&self) -> Vec<String> {
+        let mut a: Vec<String> = Vec::new();
+        if let Some(path) = &self.config_path {
+            a.extend(["--config".to_string(), path.clone()]);
+        } else {
+            a.extend(["--experiment".to_string(), self.experiment.clone()]);
+        }
+        if let Some(list) = &self.algorithms {
+            a.extend(["--algorithms".to_string(), list.clone()]);
+        }
+        if let Some(s) = self.seed {
+            a.extend(["--seed".to_string(), s.to_string()]);
+        }
+        a.extend(["--algo-index".to_string(), self.algo_index.to_string()]);
+        a.extend(["--iters".to_string(), self.iters.to_string()]);
+        a.extend(["--workers".to_string(), self.workers.to_string()]);
+        a.extend(["--partitioning".to_string(), self.partitioning.clone()]);
+        a.extend(["--solver-seed".to_string(), self.solver_seed.to_string()]);
+        a
+    }
+}
+
+/// Worker-process entry point: rebuild the job from the spec and drive
+/// this rank's shard against the TCP pool at `net`.
+pub fn tcp_worker_main(spec: &TcpJobSpec, net: &WorkerNetConfig) -> Result<(), String> {
+    let job = spec.build()?;
+    let backend = NativeBackend;
+    let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+    let solver_ref = solver.as_deref();
+    run_tcp_worker(&job.problem, &job.g, &job.part, spec.iters, net, &|owned| {
+        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+    })
+    .map_err(|e| e.to_string())
+}
+
+/// Three-way parity verdict of one algorithm run on the TCP pool against
+/// both in-process references. The headline invariant is
+/// [`ok`](Self::ok): iterates and per-iteration objectives bit-identical
+/// to bulk *and* shard, modeled ledger identical, real socket payload
+/// count equal to the plan-driven wire model, and observed payload bytes
+/// exactly `cross_floats × 8` with header overhead a whole number of
+/// 16-byte frame headers.
+#[derive(Debug)]
+pub struct TcpParity {
+    /// Algorithm display name (from the bulk trace).
+    pub algorithm: String,
+    /// The TCP pool's run.
+    pub tcp: TcpPartitionedRun,
+    /// Bulk-synchronous reference trace.
+    pub bulk: Trace,
+    /// In-process sharded reference run.
+    pub shard: PartitionedRun,
+    /// Plan-driven wire model of the cross-worker payload count.
+    pub modeled_cross: u64,
+    /// TCP final iterate bit-identical to the bulk reference.
+    pub thetas_match_bulk: bool,
+    /// TCP final iterate bit-identical to the in-process shard reference.
+    pub thetas_match_shard: bool,
+    /// Per-iteration objectives bit-identical to both references.
+    pub objectives_match: bool,
+    /// Modeled comm ledger identical to both references.
+    pub ledger_ok: bool,
+    /// Real socket payloads == wire model == in-process channel payloads
+    /// (and the same for floats).
+    pub wire_ok: bool,
+    /// `payload_bytes == cross_floats × 8` and `header_bytes` a whole
+    /// number of frame headers.
+    pub bytes_ok: bool,
+}
+
+impl TcpParity {
+    /// All parity and wire-truth checks passed.
+    pub fn ok(&self) -> bool {
+        self.thetas_match_bulk
+            && self.thetas_match_shard
+            && self.objectives_match
+            && self.ledger_ok
+            && self.wire_ok
+            && self.bytes_ok
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `spec` three ways — bulk reference, in-process shard reference,
+/// and a real TCP pool — and report the parity verdict.
+///
+/// With `bin = Some(path)` the workers are separate OS *processes*
+/// (`path worker --rank R --connect ADDR …`); with `bin = None` they are
+/// in-process threads speaking real loopback TCP sockets (the CI-friendly
+/// single-machine mode — same frames, same rendezvous, no fork/exec).
+/// `listen` is the leader bind address (use `127.0.0.1:0` for an
+/// ephemeral loopback port).
+pub fn run_tcp_cross_transport(
+    spec: &TcpJobSpec,
+    listen: &str,
+    bin: Option<&Path>,
+) -> Result<TcpParity, String> {
+    let job = spec.build()?;
+    let k = spec.workers;
+    let iters = spec.iters;
+
+    // References, both built on a solver from the same deterministic seed
+    // the worker processes use.
+    let backend = NativeBackend;
+    let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+    let solver_ref = solver.as_deref();
+    let mut alg = make_sharded_algorithm(
+        &job.kind,
+        &job.problem,
+        &job.g,
+        &backend,
+        solver_ref,
+        (0..job.problem.n()).collect(),
+    );
+    let mut comm = CommGraph::new(&job.g);
+    let bulk = run(
+        &mut alg,
+        &job.problem,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+    let shard = run_partitioned_baseline(&job.problem, &job.g, &job.part, iters, &|owned| {
+        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+    });
+
+    // The TCP pool: leader here, workers as processes or socket threads.
+    let leader = TcpLeader::bind(listen, k).map_err(|e| e.to_string())?;
+    let addr = leader.addr().map_err(|e| e.to_string())?.to_string();
+    let timeout = frame::default_timeout();
+    let owned_of: Vec<Vec<usize>> = (0..k).map(|w| job.part.nodes_of(w)).collect();
+
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let mut threads: Vec<std::thread::JoinHandle<Result<(), String>>> = Vec::new();
+    match bin {
+        Some(path) => {
+            for rank in 0..k {
+                let child = std::process::Command::new(path)
+                    .arg("worker")
+                    .args(spec.to_worker_args())
+                    .args(["--rank".to_string(), rank.to_string()])
+                    .args(["--connect".to_string(), addr.clone()])
+                    .spawn()
+                    .map_err(|e| format!("spawn worker {rank}: {e}"))?;
+                children.push(child);
+            }
+        }
+        None => {
+            for rank in 0..k {
+                let spec = spec.clone();
+                let net = WorkerNetConfig::from_env(rank, k, &addr);
+                threads.push(std::thread::spawn(move || tcp_worker_main(&spec, &net)));
+            }
+        }
+    }
+
+    let led = run_leader(leader, &job.problem, owned_of, iters, timeout);
+    // Reap the pool before judging the leader outcome, so a leader error
+    // never leaks worker processes.
+    let mut worker_err: Option<String> = None;
+    for (rank, child) in children.iter_mut().enumerate() {
+        if led.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                worker_err.get_or_insert(format!("worker {rank} exited with {status}"));
+            }
+            Err(e) => {
+                worker_err.get_or_insert(format!("worker {rank} wait failed: {e}"));
+            }
+        }
+    }
+    for (rank, handle) in threads.into_iter().enumerate() {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                worker_err.get_or_insert(format!("worker {rank} failed: {e}"));
+            }
+            Err(_) => {
+                worker_err.get_or_insert(format!("worker {rank} panicked"));
+            }
+        }
+    }
+    let tcp = match led {
+        Ok(out) => out,
+        Err(e) => {
+            let extra = worker_err.map(|w| format!(" ({w})")).unwrap_or_default();
+            return Err(format!("leader failed: {e}{extra}"));
+        }
+    };
+    if let Some(w) = worker_err {
+        return Err(w);
+    }
+
+    // Parity verdict.
+    let bulk_stats = bulk.records.last().map(|r| r.comm).unwrap_or_default();
+    let modeled_cross = modeled_cross_messages(&job.kind, &job.g, &job.part, iters, &bulk_stats);
+    let thetas_match_bulk = bits(&tcp.thetas) == bits(&bulk.final_thetas);
+    let thetas_match_shard = bits(&tcp.thetas) == bits(&shard.thetas);
+    // trace.records[0] is the starting point; partitioned records begin at
+    // iteration 1.
+    let objectives_match = tcp.records.len() == iters
+        && shard.records.len() == iters
+        && bulk.records.len() == iters + 1
+        && tcp.records.iter().zip(&bulk.records[1..]).all(|(a, b)| {
+            a.objective.to_bits() == b.objective.to_bits()
+        })
+        && tcp.records.iter().zip(&shard.records).all(|(a, b)| {
+            a.objective.to_bits() == b.objective.to_bits()
+        });
+    let ledger_ok = tcp.comm == bulk_stats && tcp.comm == shard.comm;
+    let wire_ok = tcp.cross_messages == modeled_cross
+        && tcp.cross_messages == shard.cross_messages
+        && tcp.cross_floats == shard.cross_floats;
+    let bytes_ok =
+        tcp.payload_bytes == tcp.cross_floats * 8 && tcp.header_bytes % HEADER_BYTES == 0;
+
+    Ok(TcpParity {
+        algorithm: bulk.algorithm.clone(),
+        tcp,
+        bulk,
+        shard,
+        modeled_cross,
+        thetas_match_bulk,
+        thetas_match_shard,
+        objectives_match,
+        ledger_ok,
+        wire_ok,
+        bytes_ok,
+    })
+}

@@ -1,7 +1,9 @@
 //! Experiment harness: builds problems/graphs from configs, runs the
 //! algorithm roster, and produces the traces behind every figure.
 
+pub mod deploy;
 pub mod experiments;
 pub mod report;
 
+pub use deploy::{run_tcp_cross_transport, tcp_worker_main, TcpJobSpec, TcpParity};
 pub use experiments::{build_graph, build_problem, run_experiment, run_single, ExperimentResult};

@@ -121,7 +121,10 @@ pub fn ascii_plot(traces: &[Trace], f_star: f64, width: usize, height: usize) ->
     let marks = [b'*', b'+', b'o', b'x', b'#', b'@', b'%', b'&'];
     for (si, (_, g)) in series.iter().enumerate() {
         for (i, &v) in g.iter().enumerate() {
-            let x = i * (width - 1) / max_iter.max(1);
+            // Map indices 0..max_iter-1 onto columns 0..width-1 inclusive,
+            // so the final iterate reaches the right edge; a single-point
+            // series lands on column 0.
+            let x = i * (width - 1) / max_iter.saturating_sub(1).max(1);
             let y = ((ymax - v) / span * (height - 1) as f64).round() as usize;
             let y = y.min(height - 1);
             grid[y][x] = marks[si % marks.len()];
@@ -142,8 +145,67 @@ pub fn ascii_plot(traces: &[Trace], f_star: f64, width: usize, height: usize) ->
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::IterRecord;
     use crate::config::ExperimentConfig;
     use crate::harness::run_experiment;
+    use crate::net::CommStats;
+
+    fn trace_of(name: &str, objectives: &[f64]) -> Trace {
+        Trace {
+            algorithm: name.to_string(),
+            records: objectives
+                .iter()
+                .enumerate()
+                .map(|(i, &objective)| IterRecord {
+                    iter: i,
+                    objective,
+                    consensus_error: 0.0,
+                    comm: CommStats::default(),
+                    elapsed: 0.0,
+                })
+                .collect(),
+            final_thetas: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ascii_plot_reaches_right_edge() {
+        // A strictly-decreasing series must place its final iterate in
+        // the LAST column, not one-or-more columns short.
+        let traces = [trace_of("dec", &[10.0, 8.0, 6.0, 4.0, 2.0])];
+        let plot = ascii_plot(&traces, 0.0, 20, 5);
+        let rows: Vec<&str> = plot.lines().skip(1).take(5).collect();
+        let right_edge_hit = rows
+            .iter()
+            .any(|row| row.as_bytes().get(19).is_some_and(|&b| b == b'*'));
+        assert!(right_edge_hit, "final iterate missing from last column:\n{plot}");
+    }
+
+    #[test]
+    fn ascii_plot_single_point_series() {
+        // One record: the point lands in column 0 and nothing panics.
+        let traces = [trace_of("single", &[3.0])];
+        let plot = ascii_plot(&traces, 1.0, 12, 4);
+        let rows: Vec<&str> = plot.lines().skip(1).take(4).collect();
+        let col0_hit = rows.iter().any(|row| row.as_bytes()[0] == b'*');
+        assert!(col0_hit, "single-point series missing from column 0:\n{plot}");
+    }
+
+    #[test]
+    fn ascii_plot_constant_series_spans_width() {
+        // A constant series draws a horizontal line from the first to the
+        // LAST column.
+        let traces = [trace_of("const", &[5.0; 8])];
+        let plot = ascii_plot(&traces, 1.0, 16, 3);
+        let rows: Vec<&str> = plot.lines().skip(1).take(3).collect();
+        let line_row = rows
+            .iter()
+            .find(|row| row.contains('*'))
+            .expect("constant series row");
+        let b = line_row.as_bytes();
+        assert_eq!(b[0], b'*', "missing left edge:\n{plot}");
+        assert_eq!(b[15], b'*', "missing right edge:\n{plot}");
+    }
 
     #[test]
     fn csv_and_summary_roundtrip() {

@@ -6,6 +6,10 @@
 //!   comm        — Fig. 2(c) communication-overhead sweep
 //!   partitioned — run every configured algorithm on the sharded worker
 //!                 runtime and check bit-for-bit parity with the bulk path
+//!                 (`--transport tcp` deploys the workers as OS processes
+//!                 over loopback TCP and extends the check to socket bytes)
+//!   worker      — one TCP worker rank (spawned by `partitioned
+//!                 --transport tcp`, or by hand for multi-host runs)
 //!   solve       — demo the distributed SDDM solver on a random Laplacian
 //!   bench-validate — check BENCH_*.json perf-trajectory files against
 //!                 the schema (CI gate; see docs/BENCHMARKS.md)
@@ -15,7 +19,7 @@
 
 use sddnewton::config::{AlgoKind, ExperimentConfig, Json};
 use sddnewton::coordinator::{Campaign, Partition};
-use sddnewton::harness::{self, report};
+use sddnewton::harness::{self, report, TcpJobSpec};
 use sddnewton::util::Pcg64;
 
 fn main() {
@@ -25,6 +29,7 @@ fn main() {
         Some("campaign") => cmd_campaign(&args[1..]),
         Some("comm") => cmd_comm(&args[1..]),
         Some("partitioned") => cmd_partitioned(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("solve") => cmd_solve(&args[1..]),
         Some("bench-validate") => cmd_bench_validate(&args[1..]),
         Some("info") => cmd_info(),
@@ -54,6 +59,10 @@ fn print_usage() {
            sddnewton comm [--experiment <preset>] [--targets 1e-1,1e-2,...] [--out comm.csv]\n\
            sddnewton partitioned [--experiment <preset>] [--workers K] [--iters N]\n\
                          [--partitioning contiguous|round_robin|bfs] [--algorithms a,b,c]\n\
+                         [--transport channels|tcp] [--listen HOST:PORT]\n\
+           sddnewton worker --rank R --connect HOST:PORT --workers K [--experiment <preset>]\n\
+                         [--config file.json] [--algorithms a,b,c] [--seed S] [--algo-index I]\n\
+                         [--iters N] [--partitioning P] [--solver-seed S]\n\
            sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
            sddnewton bench-validate [--dir bench_results] [--allow-empty]\n\
            sddnewton info\n\
@@ -281,13 +290,22 @@ fn cmd_partitioned(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let transport = f.kv.get("transport").map(String::as_str).unwrap_or("channels");
     println!(
-        "'{}' on {} workers ({scheme}, {} cut edges), {iters} iterations — \
+        "'{}' on {} workers ({scheme}, {} cut edges, {transport}), {iters} iterations — \
          bulk vs sharded parity",
         cfg.name,
         workers,
         part.cut_edges(&g)
     );
+    match transport {
+        "channels" => {}
+        "tcp" => return cmd_partitioned_tcp(&f, &cfg, workers, iters, scheme),
+        other => {
+            eprintln!("unknown transport '{other}' (expected channels|tcp)");
+            return 2;
+        }
+    }
     println!(
         "{:<28} {:>8} {:>14} {:>11} {:>11} {:>12}",
         "algorithm", "parity", "modeled msgs", "wire real", "wire model", "objective"
@@ -335,6 +353,130 @@ fn cmd_partitioned(args: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+/// Build the per-algorithm [`TcpJobSpec`] a `partitioned --transport tcp`
+/// run (and its worker processes) must agree on.
+fn tcp_spec(
+    f: &Flags,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    iters: usize,
+    scheme: &str,
+    idx: usize,
+) -> TcpJobSpec {
+    TcpJobSpec {
+        experiment: f.kv.get("experiment").cloned().unwrap_or_else(|| "smoke".to_string()),
+        config_path: f.kv.get("config").cloned(),
+        algorithms: f.kv.get("algorithms").cloned(),
+        seed: f.kv.get("seed").and_then(|s| s.parse().ok()),
+        algo_index: idx,
+        iters,
+        workers,
+        partitioning: scheme.to_string(),
+        // Deterministic per-algorithm solver seed: every side of the
+        // parity comparison (references here, each worker process)
+        // rebuilds the randomized inner solver from this exact seed.
+        solver_seed: cfg.seed.wrapping_add(0x51D0 + idx as u64),
+    }
+}
+
+/// `partitioned --transport tcp`: run every configured algorithm on a
+/// pool of worker OS processes over loopback TCP and check three-way
+/// parity (bulk, in-process shards, TCP pool) plus socket-byte wire truth.
+fn cmd_partitioned_tcp(
+    f: &Flags,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    iters: usize,
+    scheme: &str,
+) -> i32 {
+    let listen = f.kv.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let bin = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate own binary for worker spawning: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{:<28} {:>8} {:>11} {:>11} {:>13} {:>10} {:>12}",
+        "algorithm", "parity", "wire real", "wire model", "payload B", "header B", "objective"
+    );
+    let mut drifted = false;
+    for idx in 0..cfg.algorithms.len() {
+        let spec = tcp_spec(f, cfg, workers, iters, scheme, idx);
+        let parity = match harness::run_tcp_cross_transport(&spec, &listen, Some(&bin)) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("tcp run failed for algorithm {idx}: {e}");
+                return 1;
+            }
+        };
+        let ok = parity.ok();
+        drifted |= !ok;
+        println!(
+            "{:<28} {:>8} {:>11} {:>11} {:>13} {:>10} {:>12.5e}",
+            parity.algorithm,
+            if ok { "ok" } else { "DRIFT" },
+            parity.tcp.cross_messages,
+            parity.modeled_cross,
+            parity.tcp.payload_bytes,
+            parity.tcp.header_bytes,
+            parity.tcp.records.last().map(|r| r.objective).unwrap_or(f64::NAN),
+        );
+    }
+    if drifted {
+        eprintln!(
+            "tcp transport parity violated — the process pool drifted from the \
+             in-process paths (iterates, ledger, wire model, or socket bytes)"
+        );
+        return 1;
+    }
+    0
+}
+
+/// One TCP worker rank: rebuild the job from the spec flags and serve the
+/// shard until the run completes (spawned by `partitioned --transport
+/// tcp`, or started by hand on each machine of a multi-host pool).
+fn cmd_worker(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let (Some(rank), Some(connect)) = (
+        f.kv.get("rank").and_then(|v| v.parse::<usize>().ok()),
+        f.kv.get("connect").cloned(),
+    ) else {
+        eprintln!("worker needs --rank R and --connect HOST:PORT");
+        return 2;
+    };
+    let spec = TcpJobSpec {
+        experiment: f.kv.get("experiment").cloned().unwrap_or_else(|| "smoke".to_string()),
+        config_path: f.kv.get("config").cloned(),
+        algorithms: f.kv.get("algorithms").cloned(),
+        seed: f.kv.get("seed").and_then(|s| s.parse().ok()),
+        algo_index: f.kv.get("algo-index").and_then(|v| v.parse().ok()).unwrap_or(0),
+        iters: f.kv.get("iters").and_then(|v| v.parse().ok()).unwrap_or(10),
+        workers: f.kv.get("workers").and_then(|v| v.parse().ok()).unwrap_or(4),
+        partitioning: f
+            .kv
+            .get("partitioning")
+            .cloned()
+            .unwrap_or_else(|| "contiguous".to_string()),
+        solver_seed: f.kv.get("solver-seed").and_then(|v| v.parse().ok()).unwrap_or(0),
+    };
+    let net = sddnewton::net::tcp::WorkerNetConfig::from_env(rank, spec.workers, &connect);
+    match harness::tcp_worker_main(&spec, &net) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker {rank} failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_solve(args: &[String]) -> i32 {

@@ -24,12 +24,21 @@
 //! - [`threaded`] runs one thread per *node* (rather than per worker),
 //!   used by the `end_to_end` example to demonstrate fully local node
 //!   programs.
+//! - [`tcp::TcpExchange`] is the multi-host transport: each worker is a
+//!   separate OS *process* and boundary payloads ride length-prefixed
+//!   binary frames over TCP sockets (rendezvoused through a rank-0
+//!   leader, see [`crate::coordinator::tcp`]). Same plans, same row
+//!   kernel, same reduce order — bit-for-bit identical to both in-process
+//!   transports, with the wire-truth ledger extended to observed socket
+//!   bytes (`payload_bytes == cross_floats × 8`, headers accounted
+//!   separately).
 
 #![warn(missing_docs)]
 
 pub mod model;
 pub mod partitioned;
 pub mod stats;
+pub mod tcp;
 pub mod threaded;
 
 use crate::graph::laplacian::laplacian_csr;

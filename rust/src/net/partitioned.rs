@@ -225,9 +225,9 @@ pub fn plan_cross_rows(a: &Csr, owner: &[usize], fresh: Option<&[bool]>) -> u64 
 /// makes an allocator-reuse collision (freed operator, new one at the
 /// same address with identical nnz/shape) require three simultaneous
 /// coincidences instead of one.
-type OpKey = (usize, usize, usize, usize, usize);
+pub(crate) type OpKey = (usize, usize, usize, usize, usize);
 
-fn op_key(a: &Csr) -> OpKey {
+pub(crate) fn op_key(a: &Csr) -> OpKey {
     (
         a.indices.as_ptr() as usize,
         a.indptr.as_ptr() as usize,

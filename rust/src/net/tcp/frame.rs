@@ -1,0 +1,445 @@
+//! Length-prefixed binary framing for the TCP transport.
+//!
+//! One frame is a fixed 16-byte header followed by `len` body bytes:
+//!
+//! ```text
+//! [len: u32 LE][kind: u8][reserved: u8 = 0][src: u16 LE][tag: u64 LE]
+//! ```
+//!
+//! There is no serde: payload bodies are raw `f64` bit patterns in
+//! little-endian order (the sender's plan order — the same self-framing
+//! contract the in-process `ShardExchange` payloads use, see
+//! [`super::super::partitioned`]), control bodies are `u64` counters or
+//! UTF-8 address strings. `tag` carries the exchange round / reduce
+//! sequence / iteration number, `src` the sender's rank.
+//!
+//! Everything here is pure `Read`/`Write` plumbing so the codec is
+//! testable against in-memory cursors; socket-specific robustness
+//! (connect retry, read timeouts) lives in [`super`].
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Fixed per-frame header overhead in bytes. Wire-truth accounting keeps
+/// header bytes separate from payload bytes: payload bytes equal
+/// `cross_floats × 8` exactly, headers add `HEADER_BYTES` per data frame.
+pub const HEADER_BYTES: u64 = 16;
+
+/// Upper bound on a frame body (256 MiB). A length prefix beyond this is
+/// rejected *before* allocating, so a corrupt or hostile peer cannot ask
+/// the receiver to reserve gigabytes.
+pub const MAX_BODY_BYTES: u32 = 1 << 28;
+
+/// Frame discriminant (byte 4 of the header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → leader (or worker → worker) handshake; body is the
+    /// sender's advertised listener address (UTF-8) or empty.
+    Hello,
+    /// Leader → worker rendezvous answer: `\n`-joined listener addresses
+    /// in rank order.
+    PeerTable,
+    /// Worker → worker boundary payload for exchange round `tag`.
+    Payload,
+    /// Worker → leader all-reduce contribution for sequence `tag`.
+    ReduceUp,
+    /// Leader → worker all-reduce total for sequence `tag`.
+    ReduceDown,
+    /// Worker → leader per-iteration metrics snapshot for iteration `tag`.
+    Metric,
+}
+
+impl FrameKind {
+    /// Wire byte for this kind.
+    pub fn to_byte(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::PeerTable => 2,
+            FrameKind::Payload => 3,
+            FrameKind::ReduceUp => 4,
+            FrameKind::ReduceDown => 5,
+            FrameKind::Metric => 6,
+        }
+    }
+
+    /// Parse a wire byte; unknown bytes are a framing error.
+    pub fn from_byte(b: u8) -> Result<FrameKind, TcpError> {
+        match b {
+            1 => Ok(FrameKind::Hello),
+            2 => Ok(FrameKind::PeerTable),
+            3 => Ok(FrameKind::Payload),
+            4 => Ok(FrameKind::ReduceUp),
+            5 => Ok(FrameKind::ReduceDown),
+            6 => Ok(FrameKind::Metric),
+            other => Err(TcpError::BadFrame { msg: format!("unknown frame kind byte {other}") }),
+        }
+    }
+}
+
+/// A decoded frame.
+#[derive(Debug)]
+pub struct Frame {
+    /// What the body means.
+    pub kind: FrameKind,
+    /// Sender rank.
+    pub src: u16,
+    /// Round / sequence / iteration tag.
+    pub tag: u64,
+    /// Raw body bytes.
+    pub body: Vec<u8>,
+}
+
+/// Typed errors of the TCP transport — the socket layer never panics;
+/// failures surface as one of these so callers can report *which* peer
+/// died or timed out instead of hanging.
+#[derive(Debug)]
+pub enum TcpError {
+    /// An OS-level socket failure, with the operation it interrupted.
+    Io {
+        /// What the transport was doing (e.g. `"connect 127.0.0.1:4000"`).
+        ctx: String,
+        /// The underlying error.
+        err: std::io::Error,
+    },
+    /// The peer closed the connection cleanly between frames.
+    PeerClosed {
+        /// Which connection closed.
+        who: String,
+    },
+    /// A read waited longer than the configured timeout.
+    Timeout {
+        /// Which connection timed out.
+        who: String,
+        /// What the transport was waiting for.
+        waiting_for: String,
+    },
+    /// A length prefix exceeded [`MAX_BODY_BYTES`].
+    OversizedFrame {
+        /// The advertised body length.
+        len: u64,
+        /// The enforced maximum.
+        max: u32,
+    },
+    /// A malformed frame (truncated mid-frame, bad kind byte, payload
+    /// length not a multiple of 8, …).
+    BadFrame {
+        /// Diagnostic.
+        msg: String,
+    },
+    /// A well-formed frame that violates the rendezvous or BSP protocol
+    /// (wrong kind, duplicate rank, sequence drift, …).
+    Protocol {
+        /// Diagnostic.
+        msg: String,
+    },
+}
+
+impl fmt::Display for TcpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TcpError::Io { ctx, err } => write!(f, "io error during {ctx}: {err}"),
+            TcpError::PeerClosed { who } => {
+                write!(f, "peer worker died: {who} closed the connection")
+            }
+            TcpError::Timeout { who, waiting_for } => {
+                write!(f, "timed out waiting for {waiting_for} from {who}")
+            }
+            TcpError::OversizedFrame { len, max } => {
+                write!(
+                    f,
+                    "oversized frame: advertised body of {len} bytes exceeds the {max}-byte cap"
+                )
+            }
+            TcpError::BadFrame { msg } => write!(f, "bad frame: {msg}"),
+            TcpError::Protocol { msg } => write!(f, "protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TcpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TcpError::Io { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
+
+fn map_read_err(err: std::io::Error, ctx: &str) -> TcpError {
+    match err.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            TcpError::Timeout { who: ctx.to_string(), waiting_for: "a frame".to_string() }
+        }
+        std::io::ErrorKind::UnexpectedEof => TcpError::BadFrame {
+            msg: format!("{ctx}: connection cut mid-frame (truncated header or body)"),
+        },
+        _ => TcpError::Io { ctx: format!("read from {ctx}"), err },
+    }
+}
+
+/// Write one frame. Rejects bodies beyond [`MAX_BODY_BYTES`] before
+/// touching the socket.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    src: u16,
+    tag: u64,
+    body: &[u8],
+    ctx: &str,
+) -> Result<(), TcpError> {
+    if body.len() > MAX_BODY_BYTES as usize {
+        return Err(TcpError::OversizedFrame { len: body.len() as u64, max: MAX_BODY_BYTES });
+    }
+    let mut head = [0u8; HEADER_BYTES as usize];
+    head[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    head[4] = kind.to_byte();
+    head[5] = 0;
+    head[6..8].copy_from_slice(&src.to_le_bytes());
+    head[8..16].copy_from_slice(&tag.to_le_bytes());
+    let io = |err| TcpError::Io { ctx: format!("write to {ctx}"), err };
+    w.write_all(&head).map_err(io)?;
+    w.write_all(body).map_err(io)?;
+    w.flush().map_err(io)?;
+    Ok(())
+}
+
+/// Read one frame. A clean EOF *between* frames maps to
+/// [`TcpError::PeerClosed`]; an EOF *inside* a frame is a
+/// [`TcpError::BadFrame`]; a read timeout maps to [`TcpError::Timeout`];
+/// an advertised body beyond [`MAX_BODY_BYTES`] is rejected before any
+/// allocation.
+pub fn read_frame(r: &mut impl Read, ctx: &str) -> Result<Frame, TcpError> {
+    let mut head = [0u8; HEADER_BYTES as usize];
+    // First byte via plain read: Ok(0) is the peer closing cleanly
+    // between frames, which read_exact would misreport as truncation.
+    let got = r.read(&mut head[..1]).map_err(|err| map_read_err(err, ctx))?;
+    if got == 0 {
+        return Err(TcpError::PeerClosed { who: ctx.to_string() });
+    }
+    r.read_exact(&mut head[1..]).map_err(|err| map_read_err(err, ctx))?;
+    let mut b4 = [0u8; 4];
+    b4.copy_from_slice(&head[0..4]);
+    let len = u32::from_le_bytes(b4);
+    let kind = FrameKind::from_byte(head[4])?;
+    let mut b2 = [0u8; 2];
+    b2.copy_from_slice(&head[6..8]);
+    let src = u16::from_le_bytes(b2);
+    let mut b8 = [0u8; 8];
+    b8.copy_from_slice(&head[8..16]);
+    let tag = u64::from_le_bytes(b8);
+    if len > MAX_BODY_BYTES {
+        return Err(TcpError::OversizedFrame { len: len as u64, max: MAX_BODY_BYTES });
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(|err| map_read_err(err, ctx))?;
+    Ok(Frame { kind, src, tag, body })
+}
+
+/// Append `vals` to `body` as little-endian IEEE-754 bit patterns — the
+/// bit-exact encoding that keeps TCP iterates identical to the in-process
+/// transports.
+pub fn put_f64s(body: &mut Vec<u8>, vals: &[f64]) {
+    for v in vals {
+        body.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode a body of little-endian `f64` bit patterns.
+pub fn bytes_to_f64s(body: &[u8], ctx: &str) -> Result<Vec<f64>, TcpError> {
+    if body.len() % 8 != 0 {
+        return Err(TcpError::BadFrame {
+            msg: format!("{ctx}: payload length {} is not a multiple of 8", body.len()),
+        });
+    }
+    let mut out = Vec::with_capacity(body.len() / 8);
+    let mut b8 = [0u8; 8];
+    for c in body.chunks_exact(8) {
+        b8.copy_from_slice(c);
+        out.push(f64::from_bits(u64::from_le_bytes(b8)));
+    }
+    Ok(out)
+}
+
+/// Append `vals` to `body` as little-endian `u64`s (metric counters).
+pub fn put_u64s(body: &mut Vec<u8>, vals: &[u64]) {
+    for v in vals {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode a body prefix of `count` little-endian `u64`s; returns the
+/// values and the remaining body tail.
+pub fn split_u64s<'b>(
+    body: &'b [u8],
+    count: usize,
+    ctx: &str,
+) -> Result<(Vec<u64>, &'b [u8]), TcpError> {
+    if body.len() < count * 8 {
+        return Err(TcpError::BadFrame {
+            msg: format!(
+                "{ctx}: body of {} bytes is too short for {count} u64 counters",
+                body.len()
+            ),
+        });
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut b8 = [0u8; 8];
+    for c in body[..count * 8].chunks_exact(8) {
+        b8.copy_from_slice(c);
+        out.push(u64::from_le_bytes(b8));
+    }
+    Ok((out, &body[count * 8..]))
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Read timeout / rendezvous deadline: `SDDN_TCP_TIMEOUT_MS` (default
+/// 30 000 ms).
+pub fn default_timeout() -> Duration {
+    Duration::from_millis(env_u64("SDDN_TCP_TIMEOUT_MS", 30_000))
+}
+
+/// Connect retry attempts before giving up: `SDDN_TCP_RETRIES` (default
+/// 40) — workers dial the leader and each other with linear backoff while
+/// the processes race through startup.
+pub fn default_retries() -> u32 {
+    env_u64("SDDN_TCP_RETRIES", 40) as u32
+}
+
+/// Base backoff between connect retries: `SDDN_TCP_RETRY_MS` (default
+/// 50 ms); attempt `i` sleeps `i × base`.
+pub fn default_retry_backoff() -> Duration {
+    Duration::from_millis(env_u64("SDDN_TCP_RETRY_MS", 50))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(kind: FrameKind, src: u16, tag: u64, body: &[u8]) -> Frame {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, kind, src, tag, body, "test").unwrap();
+        assert_eq!(wire.len() as u64, HEADER_BYTES + body.len() as u64);
+        let mut cur = Cursor::new(wire);
+        let f = read_frame(&mut cur, "test").unwrap();
+        assert_eq!(cur.position() as usize, cur.get_ref().len(), "trailing bytes");
+        f
+    }
+
+    #[test]
+    fn frames_roundtrip_all_kinds() {
+        for (i, kind) in [
+            FrameKind::Hello,
+            FrameKind::PeerTable,
+            FrameKind::Payload,
+            FrameKind::ReduceUp,
+            FrameKind::ReduceDown,
+            FrameKind::Metric,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let body: Vec<u8> = (0..=i as u8).collect();
+            let f = roundtrip(kind, i as u16, 0xDEAD_BEEF + i as u64, &body);
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.src, i as u16);
+            assert_eq!(f.tag, 0xDEAD_BEEF + i as u64);
+            assert_eq!(f.body, body);
+        }
+    }
+
+    #[test]
+    fn f64_payloads_are_bit_exact() {
+        let vals = [0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::MIN_POSITIVE, -3.25e300];
+        let mut body = Vec::new();
+        put_f64s(&mut body, &vals);
+        assert_eq!(body.len(), vals.len() * 8);
+        let back = bytes_to_f64s(&body, "test").unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&back), bits(&vals));
+    }
+
+    #[test]
+    fn u64_counters_roundtrip() {
+        let vals = [0u64, 1, u64::MAX, 42];
+        let mut body = Vec::new();
+        put_u64s(&mut body, &vals);
+        put_f64s(&mut body, &[2.5]);
+        let (back, tail) = split_u64s(&body, 4, "test").unwrap();
+        assert_eq!(back, vals);
+        assert_eq!(bytes_to_f64s(tail, "test").unwrap(), vec![2.5]);
+        assert!(split_u64s(&body, 6, "test").is_err());
+    }
+
+    #[test]
+    fn clean_eof_is_peer_closed() {
+        let mut cur = Cursor::new(Vec::<u8>::new());
+        match read_frame(&mut cur, "peer 3") {
+            Err(TcpError::PeerClosed { who }) => assert_eq!(who, "peer 3"),
+            other => panic!("expected PeerClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_header_is_bad_frame() {
+        // 5 of 16 header bytes, then EOF: a torn frame, not a clean close.
+        let mut cur = Cursor::new(vec![1u8, 0, 0, 0, 3]);
+        match read_frame(&mut cur, "peer") {
+            Err(TcpError::BadFrame { .. }) => {}
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_bad_frame() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Payload, 0, 7, &[9u8; 24], "test").unwrap();
+        wire.truncate(wire.len() - 10);
+        let mut cur = Cursor::new(wire);
+        match read_frame(&mut cur, "peer") {
+            Err(TcpError::BadFrame { .. }) => {}
+            other => panic!("expected BadFrame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocating() {
+        // Hand-craft a header advertising a 1 GiB body.
+        let mut head = [0u8; HEADER_BYTES as usize];
+        head[0..4].copy_from_slice(&(1u32 << 30).to_le_bytes());
+        head[4] = FrameKind::Payload.to_byte();
+        let mut cur = Cursor::new(head.to_vec());
+        match read_frame(&mut cur, "peer") {
+            Err(TcpError::OversizedFrame { len, max }) => {
+                assert_eq!(len, 1u64 << 30);
+                assert_eq!(max, MAX_BODY_BYTES);
+            }
+            other => panic!("expected OversizedFrame, got {other:?}"),
+        }
+        // The writer enforces the same cap.
+        let big = vec![0u8; MAX_BODY_BYTES as usize + 1];
+        let mut sink = Vec::new();
+        assert!(matches!(
+            write_frame(&mut sink, FrameKind::Payload, 0, 0, &big, "test"),
+            Err(TcpError::OversizedFrame { .. })
+        ));
+        assert!(sink.is_empty(), "nothing may hit the wire after a cap rejection");
+    }
+
+    #[test]
+    fn unknown_kind_byte_is_bad_frame() {
+        let mut head = [0u8; HEADER_BYTES as usize];
+        head[4] = 99;
+        let mut cur = Cursor::new(head.to_vec());
+        assert!(matches!(read_frame(&mut cur, "peer"), Err(TcpError::BadFrame { .. })));
+    }
+
+    #[test]
+    fn non_multiple_of_8_payload_is_bad_frame() {
+        assert!(matches!(bytes_to_f64s(&[0u8; 12], "test"), Err(TcpError::BadFrame { .. })));
+    }
+}

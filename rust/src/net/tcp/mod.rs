@@ -1,0 +1,772 @@
+//! TCP process transport: the third [`Exchange`](super::Exchange)
+//! implementation, running the `k` workers as separate OS *processes*
+//! over sockets — the paper's actual deployment shape (a MatlabMPI pool
+//! of machine-separated workers), where the in-process transports only
+//! simulate it.
+//!
+//! The wire protocol is deliberately identical in shape to the
+//! [`ShardExchange`](super::partitioned::ShardExchange) channel payloads:
+//! plan-driven shipping means sender and receiver derive the same
+//! [`ExchangePlan`] from the same global CSR + owner map, so a boundary
+//! payload needs no per-row framing — just the round tag and the raw
+//! `f64` bit patterns in plan order ([`frame`]). All-reduces ride the
+//! leader connection (`ReduceUp`/`ReduceDown`, sequence-tagged), and the
+//! leader re-uses the in-process
+//! [`run_reducer`](super::partitioned::run_reducer) verbatim, so reduce
+//! totals are summed in the identical global node order — the TCP path is
+//! bit-for-bit identical to both in-process transports.
+//!
+//! Robustness the threaded transport never needed lives here: connect
+//! retry with linear backoff (workers race through process startup),
+//! read timeouts on every rendezvous step and on the reorder-buffered
+//! payload inbox, and typed [`TcpError`]s — a dead peer surfaces as
+//! `peer worker died`, never a hang.
+//!
+//! Wire truth extends to real bytes: [`TcpExchange::payload_bytes`] is
+//! exactly `cross_floats × 8` (asserted in `tests/tcp_wire.rs`), and
+//! header overhead is accounted separately as
+//! [`HEADER_BYTES`](frame::HEADER_BYTES) per data frame
+//! ([`TcpExchange::header_bytes`]). Control-plane frames (rendezvous,
+//! metrics) are not charged — they are the leader's bookkeeping, not the
+//! algorithm's communication.
+//!
+//! Rank bootstrap (leader side in [`crate::coordinator::tcp`]):
+//!
+//! 1. every worker dials the leader (with retry), binds its own
+//!    ephemeral listener, and sends `Hello(rank, listener addr)`;
+//! 2. the leader answers every worker with the `PeerTable` (all listener
+//!    addresses in rank order) once all `k` Hellos arrived;
+//! 3. worker `r` dials every `q < r` (sending `Hello(r)` on the data
+//!    connection) and accepts one connection from every `q > r` — a full
+//!    mesh with one socket per unordered pair, each read end pumped by a
+//!    reader thread into the round-tagged reorder buffer.
+
+pub mod frame;
+
+use self::frame::{
+    bytes_to_f64s, put_f64s, put_u64s, read_frame, write_frame, Frame, FrameKind, TcpError,
+    HEADER_BYTES,
+};
+use super::partitioned::{derive_exchange_plan, op_key, ExchangePlan, OpKey, ShardPlan};
+use super::{CommStats, Exchange};
+use crate::linalg::Csr;
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How a worker process finds and talks to the rest of the pool.
+#[derive(Debug, Clone)]
+pub struct WorkerNetConfig {
+    /// This worker's rank in `0..k`.
+    pub rank: usize,
+    /// Pool size.
+    pub k: usize,
+    /// The leader's rendezvous address (`host:port`).
+    pub leader_addr: String,
+    /// Read timeout / rendezvous deadline.
+    pub timeout: Duration,
+    /// Connect retry attempts.
+    pub retries: u32,
+    /// Base backoff between connect retries (attempt `i` sleeps `i ×` this).
+    pub backoff: Duration,
+}
+
+impl WorkerNetConfig {
+    /// Config from the `SDDN_TCP_*` environment knobs (falling back to
+    /// the built-in defaults).
+    pub fn from_env(rank: usize, k: usize, leader_addr: &str) -> WorkerNetConfig {
+        WorkerNetConfig {
+            rank,
+            k,
+            leader_addr: leader_addr.to_string(),
+            timeout: frame::default_timeout(),
+            retries: frame::default_retries(),
+            backoff: frame::default_retry_backoff(),
+        }
+    }
+}
+
+/// What a peer reader thread forwards into the exchange inbox.
+enum InboxMsg {
+    /// A round-tagged boundary payload, already decoded to floats.
+    Payload { src: usize, round: u64, vals: Vec<f64> },
+    /// The peer closed its connection cleanly (it finished its run).
+    Closed { src: usize },
+    /// The peer connection failed.
+    Failed { src: usize, err: TcpError },
+}
+
+/// Dial `addr` with linear-backoff retry — worker processes race through
+/// startup, so the first attempts may find nobody listening yet.
+fn connect_with_retry(addr: &str, retries: u32, backoff: Duration) -> Result<TcpStream, TcpError> {
+    let mut attempt = 0u32;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(err) => {
+                attempt += 1;
+                if attempt > retries {
+                    return Err(TcpError::Io {
+                        ctx: format!("connect {addr} (gave up after {attempt} attempts)"),
+                        err,
+                    });
+                }
+                std::thread::sleep(backoff * attempt);
+            }
+        }
+    }
+}
+
+/// Accept one connection, polling a nonblocking listener so a missing
+/// peer surfaces as [`TcpError::Timeout`] instead of a hang.
+fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> Result<TcpStream, TcpError> {
+    let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+    listener.set_nonblocking(true).map_err(|e| io("listener set_nonblocking", e))?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                listener.set_nonblocking(false).map_err(|e| io("listener set_blocking", e))?;
+                s.set_nonblocking(false).map_err(|e| io("accepted socket set_blocking", e))?;
+                return Ok(s);
+            }
+            Err(err) if err.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(TcpError::Timeout {
+                        who: "mesh listener".to_string(),
+                        waiting_for: "a peer data connection".to_string(),
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(err) => return Err(io("accept", err)),
+        }
+    }
+}
+
+/// Pump one peer connection's read end into the shared inbox. The thread
+/// exits when the peer closes, the connection fails, or the exchange is
+/// dropped (its inbox receiver disappears).
+fn spawn_peer_reader(mut reader: BufReader<TcpStream>, src: usize, tx: Sender<InboxMsg>) {
+    std::thread::spawn(move || {
+        let ctx = format!("rank {src}");
+        loop {
+            match read_frame(&mut reader, &ctx) {
+                Ok(f) => {
+                    if f.kind != FrameKind::Payload || f.src as usize != src {
+                        let _ = tx.send(InboxMsg::Failed {
+                            src,
+                            err: TcpError::Protocol {
+                                msg: format!(
+                                    "unexpected {:?} frame from rank {} on the rank-{src} \
+                                     data connection",
+                                    f.kind, f.src
+                                ),
+                            },
+                        });
+                        return;
+                    }
+                    match bytes_to_f64s(&f.body, &ctx) {
+                        Ok(vals) => {
+                            if tx.send(InboxMsg::Payload { src, round: f.tag, vals }).is_err() {
+                                return; // exchange dropped; shutting down
+                            }
+                        }
+                        Err(err) => {
+                            let _ = tx.send(InboxMsg::Failed { src, err });
+                            return;
+                        }
+                    }
+                }
+                Err(TcpError::PeerClosed { .. }) => {
+                    let _ = tx.send(InboxMsg::Closed { src });
+                    return;
+                }
+                Err(err) => {
+                    let _ = tx.send(InboxMsg::Failed { src, err });
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// Receive the `round`-tagged payload from `peer`, parking other
+/// (possibly future-round) payloads in the reorder buffer. A peer that
+/// closed after finishing its run is benign unless it is the one we are
+/// waiting on; a timeout or failure surfaces as a typed error instead of
+/// a hang.
+fn recv_round(
+    pending: &mut HashMap<(usize, u64), Vec<f64>>,
+    inbox: &Receiver<InboxMsg>,
+    peer: usize,
+    round: u64,
+    timeout: Duration,
+) -> Result<Vec<f64>, TcpError> {
+    if let Some(d) = pending.remove(&(peer, round)) {
+        return Ok(d);
+    }
+    loop {
+        match inbox.recv_timeout(timeout) {
+            Ok(InboxMsg::Payload { src, round: r, vals }) => {
+                if src == peer && r == round {
+                    return Ok(vals);
+                }
+                if pending.insert((src, r), vals).is_some() {
+                    return Err(TcpError::Protocol {
+                        msg: format!("duplicate payload from rank {src} round {r}"),
+                    });
+                }
+            }
+            // A peer finishing early is fine — its payloads were enqueued
+            // (in order) before the close notification. Only the peer we
+            // still need data from closing is fatal.
+            Ok(InboxMsg::Closed { src }) if src != peer => continue,
+            Ok(InboxMsg::Closed { src }) => {
+                return Err(TcpError::PeerClosed { who: format!("rank {src}") });
+            }
+            Ok(InboxMsg::Failed { src, err }) => {
+                return Err(TcpError::Protocol {
+                    msg: format!("data connection to rank {src} failed: {err}"),
+                });
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                return Err(TcpError::Timeout {
+                    who: format!("rank {peer}"),
+                    waiting_for: format!("the round-{round} boundary payload"),
+                });
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(TcpError::PeerClosed {
+                    who: "every peer data connection".to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Per-process [`Exchange`] handle over TCP sockets.
+///
+/// Semantically a [`ShardExchange`](super::partitioned::ShardExchange)
+/// whose channels are sockets: plan-driven shipping, round-tagged reorder
+/// buffering, sequence-keyed all-reduce through the leader. Owns its
+/// shard plan and Laplacian (worker processes rebuild both
+/// deterministically from the experiment config).
+pub struct TcpExchange {
+    n: usize,
+    k: usize,
+    m_edges: usize,
+    rank: usize,
+    lap: Arc<Csr>,
+    plan: ShardPlan,
+    /// Write halves of the peer mesh, indexed by rank (`None` for self).
+    peers: Vec<Option<TcpStream>>,
+    /// Reader threads pump every peer read end into this inbox.
+    inbox: Receiver<InboxMsg>,
+    /// Write half of the leader connection (all-reduce up, metrics).
+    leader: TcpStream,
+    /// Read half of the leader connection (peer table, all-reduce down).
+    leader_reader: BufReader<TcpStream>,
+    /// Reorder buffer for early payloads, keyed `(sender, round)`.
+    pending: HashMap<(usize, u64), Vec<f64>>,
+    /// Mirror of the global stack holding fresh values for covered nodes.
+    mirror: Vec<f64>,
+    round: u64,
+    red_seq: u64,
+    /// Per-operator exchange plans (same derivation as `ShardExchange`).
+    op_plans: HashMap<OpKey, ExchangePlan>,
+    /// Reused frame-body encode buffer.
+    body_scratch: Vec<u8>,
+    /// Persistent scratch for the fresh-masked receive row list.
+    fresh_scratch: Vec<usize>,
+    stats: CommStats,
+    cross: u64,
+    cross_floats: u64,
+    payload_bytes: u64,
+    header_bytes: u64,
+    timeout: Duration,
+}
+
+impl TcpExchange {
+    /// Join the pool: rendezvous through the leader, then build the full
+    /// worker mesh (see the module docs for the bootstrap sequence).
+    /// `plan` must be this rank's entry of
+    /// [`build_shard_plans`](super::partitioned::build_shard_plans) and
+    /// `lap` the graph Laplacian — both rebuilt deterministically by the
+    /// worker process.
+    pub fn connect(
+        net: &WorkerNetConfig,
+        n: usize,
+        m_edges: usize,
+        lap: Csr,
+        plan: ShardPlan,
+    ) -> Result<TcpExchange, TcpError> {
+        let (rank, k) = (net.rank, net.k);
+        if k == 0 || rank >= k || k > u16::MAX as usize {
+            return Err(TcpError::Protocol { msg: format!("bad rank/pool: rank {rank} of {k}") });
+        }
+        if plan.worker != rank {
+            return Err(TcpError::Protocol {
+                msg: format!("shard plan is for worker {}, not rank {rank}", plan.worker),
+            });
+        }
+        let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+
+        // 1. Leader rendezvous: dial (with retry), bind our own listener
+        //    on the same interface, advertise it.
+        let mut leader =
+            connect_with_retry(&net.leader_addr, net.retries, net.backoff)?;
+        leader.set_nodelay(true).map_err(|e| io("leader set_nodelay", e))?;
+        leader.set_read_timeout(Some(net.timeout)).map_err(|e| io("leader set timeout", e))?;
+        let local_ip = leader.local_addr().map_err(|e| io("leader local_addr", e))?.ip();
+        let listener = TcpListener::bind((local_ip, 0)).map_err(|e| io("bind mesh listener", e))?;
+        let my_addr = listener.local_addr().map_err(|e| io("listener local_addr", e))?;
+        write_frame(
+            &mut leader,
+            FrameKind::Hello,
+            rank as u16,
+            0,
+            my_addr.to_string().as_bytes(),
+            "leader",
+        )?;
+
+        // 2. Peer table: every listener is bound before the leader
+        //    broadcasts, so the mesh below cannot dial into the void.
+        let mut leader_reader =
+            BufReader::new(leader.try_clone().map_err(|e| io("leader try_clone", e))?);
+        let table = read_frame(&mut leader_reader, "leader")?;
+        if table.kind != FrameKind::PeerTable {
+            return Err(TcpError::Protocol {
+                msg: format!("expected the peer table, got a {:?} frame", table.kind),
+            });
+        }
+        let text = String::from_utf8(table.body)
+            .map_err(|_| TcpError::BadFrame { msg: "peer table is not UTF-8".to_string() })?;
+        let addrs: Vec<&str> = text.lines().collect();
+        if addrs.len() != k {
+            return Err(TcpError::Protocol {
+                msg: format!("peer table lists {} workers, expected {k}", addrs.len()),
+            });
+        }
+
+        // 3. Full mesh: dial every lower rank, accept every higher rank.
+        let (tx, inbox) = channel::<InboxMsg>();
+        let mut peers: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+        for (q, addr) in addrs.iter().enumerate().take(rank) {
+            let mut s = connect_with_retry(addr, net.retries, net.backoff)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            write_frame(&mut s, FrameKind::Hello, rank as u16, 0, &[], &format!("rank {q}"))?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            spawn_peer_reader(BufReader::new(read_half), q, tx.clone());
+            peers[q] = Some(s);
+        }
+        let deadline = Instant::now() + net.timeout;
+        for _ in 0..(k - 1 - rank) {
+            let s = accept_with_deadline(&listener, deadline)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            s.set_read_timeout(Some(net.timeout)).map_err(|e| io("peer set timeout", e))?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            let mut reader = BufReader::new(read_half);
+            let hello = read_frame(&mut reader, "peer handshake")?;
+            if hello.kind != FrameKind::Hello {
+                return Err(TcpError::Protocol {
+                    msg: format!("expected a mesh Hello, got a {:?} frame", hello.kind),
+                });
+            }
+            let src = hello.src as usize;
+            if src <= rank || src >= k {
+                return Err(TcpError::Protocol {
+                    msg: format!("mesh Hello from out-of-range rank {src}"),
+                });
+            }
+            if peers[src].is_some() {
+                return Err(TcpError::Protocol {
+                    msg: format!("duplicate mesh connection from rank {src}"),
+                });
+            }
+            // Handshake done: payload reads block indefinitely in the
+            // reader thread (hang protection is the inbox recv timeout).
+            s.set_read_timeout(None).map_err(|e| io("peer clear timeout", e))?;
+            // Keep the handshake BufReader — it may already hold buffered
+            // payload bytes that arrived behind the Hello.
+            spawn_peer_reader(reader, src, tx.clone());
+            peers[src] = Some(s);
+        }
+        drop(tx); // readers hold their clones; a drained inbox means "all peers gone"
+
+        if lap.rows != n {
+            return Err(TcpError::Protocol {
+                msg: format!("Laplacian is {}×{}, graph has {n} nodes", lap.rows, lap.cols),
+            });
+        }
+        Ok(TcpExchange {
+            n,
+            k,
+            m_edges,
+            rank,
+            lap: Arc::new(lap),
+            plan,
+            peers,
+            inbox,
+            leader,
+            leader_reader,
+            pending: HashMap::new(),
+            mirror: Vec::new(),
+            round: 0,
+            red_seq: 0,
+            op_plans: HashMap::new(),
+            body_scratch: Vec::new(),
+            fresh_scratch: Vec::new(),
+            stats: CommStats::default(),
+            cross: 0,
+            cross_floats: 0,
+            payload_bytes: 0,
+            header_bytes: 0,
+            timeout: net.timeout,
+        })
+    }
+
+    /// This worker's rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// This worker's shard plan.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Real cross-worker socket payloads so far (one per shipped boundary
+    /// row, plus 2 per all-reduce through the leader) — same ledger as
+    /// [`ShardExchange::cross_messages`](super::partitioned::ShardExchange::cross_messages).
+    pub fn cross_messages(&self) -> u64 {
+        self.cross
+    }
+
+    /// Real floats moved over the sockets so far.
+    pub fn cross_floats(&self) -> u64 {
+        self.cross_floats
+    }
+
+    /// Real *payload* bytes written to data-plane sockets — exactly
+    /// [`cross_floats`](Self::cross_floats)` × 8` (the wire-truth
+    /// invariant, extended to observed bytes).
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_bytes
+    }
+
+    /// Fixed framing overhead written to data-plane sockets:
+    /// [`HEADER_BYTES`](frame::HEADER_BYTES) per payload / all-reduce
+    /// frame, accounted separately from payload bytes.
+    pub fn header_bytes(&self) -> u64 {
+        self.header_bytes
+    }
+
+    /// Report this iteration's metrics to the leader (counters + the
+    /// shard's owned θ rows), tagged with the iteration number.
+    pub fn send_metrics(&mut self, iter: u64, thetas: &[f64]) -> Result<(), TcpError> {
+        self.body_scratch.clear();
+        put_u64s(
+            &mut self.body_scratch,
+            &[
+                self.cross,
+                self.cross_floats,
+                self.payload_bytes,
+                self.header_bytes,
+                self.stats.messages,
+                self.stats.floats,
+                self.stats.rounds,
+                self.stats.allreduces,
+            ],
+        );
+        put_f64s(&mut self.body_scratch, thetas);
+        write_frame(
+            &mut self.leader,
+            FrameKind::Metric,
+            self.rank as u16,
+            iter,
+            &self.body_scratch,
+            "leader",
+        )
+    }
+
+    /// Ensure an exchange plan exists for `a` (graph-halo rule, identical
+    /// to the in-process transport).
+    fn ensure_plan(&mut self, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
+        }
+        for &u in &self.plan.owned {
+            for kk in a.indptr[u]..a.indptr[u + 1] {
+                assert!(
+                    self.plan.covered[a.indices[kk]],
+                    "operator support escapes the halo at row {u}: the partitioned \
+                     transport only ships graph-support operators unless an overlay \
+                     plan is registered (Exchange::register_plan)"
+                );
+            }
+        }
+        let plan = derive_exchange_plan("graph-support", a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
+    }
+
+    /// One plan-driven exchange round over the sockets. Identical
+    /// structure to `ShardExchange::exchange_round`, with frame encoding
+    /// in place of channel sends and byte-level wire accounting.
+    fn exchange_round(
+        &mut self,
+        a: &Csr,
+        fresh: Option<&[bool]>,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) -> Result<(), TcpError> {
+        let ln = self.plan.owned.len();
+        assert_eq!(a.rows, self.n, "operator shape mismatch");
+        assert_eq!(x.len(), ln * w, "payload shape mismatch");
+        assert_eq!(out.len(), ln * w);
+        if let Some(m) = fresh {
+            assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        self.ensure_plan(a);
+        self.round += 1;
+        let round = self.round;
+        let mirror_reset = self.mirror.len() != self.n * w;
+        if mirror_reset {
+            self.mirror = vec![0.0; self.n * w];
+        }
+        let key = op_key(a);
+        let xplan = &self.op_plans[&key];
+        let live = |u: usize| fresh.is_none_or(|m| m[u]);
+
+        // Same guard as the in-process transport: a fresh round right
+        // after a mirror (re)allocation would read unseeded halo rows.
+        if mirror_reset && fresh.is_some() {
+            for (_, rows) in &xplan.recv {
+                for &u in rows {
+                    assert!(
+                        live(u),
+                        "fresh exchange after a mirror reset would read unseeded halo \
+                         row {u}: issue a full exchange at this width first"
+                    );
+                }
+            }
+        }
+
+        // 1. Ship the plan's (fresh) owned rows to each peer as one
+        //    round-tagged Payload frame of raw f64 bit patterns.
+        for (peer, rows) in &xplan.send {
+            self.body_scratch.clear();
+            let mut shipped = 0u64;
+            for &u in rows {
+                if !live(u) {
+                    continue;
+                }
+                let li = self.plan.local_of[u];
+                put_f64s(&mut self.body_scratch, &x[li * w..(li + 1) * w]);
+                shipped += 1;
+            }
+            if shipped == 0 {
+                continue;
+            }
+            let stream = match self.peers[*peer].as_mut() {
+                Some(s) => s,
+                None => {
+                    return Err(TcpError::Protocol {
+                        msg: format!("no data connection to rank {peer}"),
+                    })
+                }
+            };
+            write_frame(
+                stream,
+                FrameKind::Payload,
+                self.rank as u16,
+                round,
+                &self.body_scratch,
+                &format!("rank {peer}"),
+            )?;
+            self.cross += shipped;
+            self.cross_floats += shipped * w as u64;
+            self.payload_bytes += self.body_scratch.len() as u64;
+            self.header_bytes += HEADER_BYTES;
+        }
+
+        // 2. Refresh the mirror: owned rows from `x`, (fresh) halo rows
+        //    from the peers, reorder-buffered by round tag.
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
+        }
+        for (peer, rows) in &xplan.recv {
+            let expect: &[usize] = match fresh {
+                None => rows,
+                Some(_) => {
+                    self.fresh_scratch.clear();
+                    self.fresh_scratch.extend(rows.iter().copied().filter(|&u| live(u)));
+                    &self.fresh_scratch
+                }
+            };
+            if expect.is_empty() {
+                continue;
+            }
+            let data = recv_round(&mut self.pending, &self.inbox, *peer, round, self.timeout)?;
+            if data.len() != expect.len() * w {
+                return Err(TcpError::Protocol {
+                    msg: format!(
+                        "halo payload width drifted: rank {peer} round {round} sent {} floats, \
+                         expected {}",
+                        data.len(),
+                        expect.len() * w
+                    ),
+                });
+            }
+            for (idx, &u) in expect.iter().enumerate() {
+                self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
+            }
+        }
+
+        // 3. Owned rows via the shared CSR row kernel — bit-for-bit equal
+        //    to both in-process transports.
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+        }
+        self.stats.record_exchange(directed_messages, w);
+        Ok(())
+    }
+
+    /// Sequence-tagged all-reduce through the leader connection.
+    fn allreduce_impl(&mut self, locals: &[f64], w: usize) -> Result<Vec<f64>, TcpError> {
+        assert_eq!(locals.len(), self.plan.owned.len() * w);
+        self.red_seq += 1;
+        self.body_scratch.clear();
+        put_f64s(&mut self.body_scratch, locals);
+        write_frame(
+            &mut self.leader,
+            FrameKind::ReduceUp,
+            self.rank as u16,
+            self.red_seq,
+            &self.body_scratch,
+            "leader",
+        )?;
+        let down: Frame = read_frame(&mut self.leader_reader, "leader")?;
+        if down.kind != FrameKind::ReduceDown {
+            return Err(TcpError::Protocol {
+                msg: format!("expected an all-reduce total, got a {:?} frame", down.kind),
+            });
+        }
+        if down.tag != self.red_seq {
+            return Err(TcpError::Protocol {
+                msg: format!(
+                    "all-reduce sequence drifted: got total {} while at sequence {}",
+                    down.tag, self.red_seq
+                ),
+            });
+        }
+        let total = bytes_to_f64s(&down.body, "leader reduce-down")?;
+        if total.len() != w {
+            return Err(TcpError::Protocol {
+                msg: format!("all-reduce width drifted: got {} floats, expected {w}", total.len()),
+            });
+        }
+        if self.k > 1 {
+            self.cross += 2;
+            self.cross_floats += (locals.len() + w) as u64;
+            self.payload_bytes += ((locals.len() + w) * 8) as u64;
+            self.header_bytes += 2 * HEADER_BYTES;
+        }
+        self.stats.record_allreduce(self.n, w);
+        Ok(total)
+    }
+
+    /// Surface a socket failure as a loud panic: inside the [`Exchange`]
+    /// contract a mid-round transport loss is unrecoverable, and the
+    /// in-process transports die the same way (a deadlocked pool would be
+    /// strictly worse). The typed error keeps the *which peer, what
+    /// operation* diagnosis in the message.
+    fn die(&self, err: TcpError) -> ! {
+        // sddn-lint: allow(panic) reason=socket failure mid-round is unrecoverable under the Exchange contract; dying loudly with the peer diagnosis beats deadlocking the pool
+        panic!("tcp transport rank {}: {err}", self.rank)
+    }
+}
+
+impl Exchange for TcpExchange {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn owned(&self) -> &[usize] {
+        &self.plan.owned
+    }
+
+    fn exchange_apply(
+        &mut self,
+        a: &Csr,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) = self.exchange_round(a, None, directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn exchange_apply_fresh(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) = self.exchange_round(a, Some(fresh), directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn register_plan(&mut self, name: &str, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
+        }
+        let plan = derive_exchange_plan(name, a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
+    }
+
+    fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
+        let lap = Arc::clone(&self.lap);
+        let dm = 2 * self.m_edges as u64;
+        // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph plus diagonal
+        self.exchange_apply(&lap, dm, x, w, out);
+    }
+
+    fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+        match self.allreduce_impl(locals, w) {
+            Ok(total) => total,
+            Err(e) => self.die(e),
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+}
+
+impl Drop for TcpExchange {
+    /// Shut down every socket so blocked reader threads (ours and the
+    /// peers') observe the close instead of waiting out their timeouts.
+    fn drop(&mut self) {
+        for s in self.peers.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let _ = self.leader.shutdown(Shutdown::Both);
+    }
+}

@@ -19,7 +19,7 @@ impl Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let n = samples.len();
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         Summary {
@@ -74,6 +74,19 @@ mod tests {
         assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
         assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
         assert!((percentile(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_tolerates_nan() {
+        // One NaN timing sample must not abort a bench run: total_cmp
+        // sorts positive NaN after +inf, so order stats stay deterministic.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert!(s.mean.is_nan());
+        assert!(s.std.is_nan());
+        assert_eq!(s.median, 2.0);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Socket wire-truth suite for the TCP process transport.
+//!
+//! Three layers of the contract:
+//!
+//! 1. **Bit parity**: an algorithm driven over real loopback TCP sockets
+//!    must produce bit-for-bit the iterates, per-iteration objectives,
+//!    and modeled comm ledger of both in-process transports (bulk
+//!    `CommGraph` and channel `ShardExchange`).
+//! 2. **Wire truth on real bytes**: the observed socket payload byte
+//!    count must equal `cross_floats × 8` exactly — the plan-driven model
+//!    (`plan_cross_rows`-composed `modeled_cross_messages`) priced in
+//!    messages now verifiably prices bytes on a real wire — with frame
+//!    header overhead accounted separately as a whole number of 16-byte
+//!    headers.
+//! 3. **Robustness**: a missing worker surfaces as a typed timeout error,
+//!    never a hang; and the full process-deployment path (fork/exec of
+//!    `sddnewton worker` ranks) works end to end through the CLI.
+//!
+//! The frame-codec unit suite lives with the codec in
+//! `net::tcp::frame`; these tests exercise real sockets.
+
+use sddnewton::coordinator::tcp::{run_leader, TcpLeader};
+use sddnewton::harness::deploy::{run_tcp_cross_transport, TcpJobSpec};
+use sddnewton::net::tcp::frame::TcpError;
+use sddnewton::util::Pcg64;
+use std::time::{Duration, Instant};
+
+/// Spec for one algorithm of the smoke preset on a loopback pool.
+fn smoke_spec(algo: &str, workers: usize, iters: usize) -> TcpJobSpec {
+    TcpJobSpec {
+        experiment: "smoke".to_string(),
+        config_path: None,
+        algorithms: Some(algo.to_string()),
+        seed: None,
+        algo_index: 0,
+        iters,
+        workers,
+        partitioning: "contiguous".to_string(),
+        solver_seed: 0x51D0,
+    }
+}
+
+/// Run one spec in thread mode (in-process workers speaking real loopback
+/// TCP sockets) and assert the full parity + byte wire-truth contract.
+fn assert_tcp_parity(spec: TcpJobSpec) {
+    let parity = run_tcp_cross_transport(&spec, "127.0.0.1:0", None)
+        .unwrap_or_else(|e| panic!("tcp run failed for {spec:?}: {e}"));
+    assert!(
+        parity.thetas_match_bulk,
+        "{}: TCP iterate drifted from the bulk reference",
+        parity.algorithm
+    );
+    assert!(
+        parity.thetas_match_shard,
+        "{}: TCP iterate drifted from the in-process shard reference",
+        parity.algorithm
+    );
+    assert!(
+        parity.objectives_match,
+        "{}: per-iteration objectives drifted across transports",
+        parity.algorithm
+    );
+    assert!(parity.ledger_ok, "{}: modeled comm ledger drifted", parity.algorithm);
+    // Real socket payloads == plan-driven wire model == channel payloads.
+    assert_eq!(
+        parity.tcp.cross_messages, parity.modeled_cross,
+        "{}: socket payload count drifted from the wire model",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.tcp.cross_messages, parity.shard.cross_messages,
+        "{}: socket payload count drifted from the channel transport",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.tcp.cross_floats, parity.shard.cross_floats,
+        "{}: socket float count drifted from the channel transport",
+        parity.algorithm
+    );
+    // The byte-level wire truth: payloads are raw f64s — 8 bytes per
+    // float, nothing else — and framing overhead is whole 16-byte headers
+    // accounted separately.
+    assert_eq!(
+        parity.tcp.payload_bytes,
+        parity.tcp.cross_floats * 8,
+        "{}: observed socket payload bytes are not cross_floats × 8",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.tcp.header_bytes % 16,
+        0,
+        "{}: header overhead is not a whole number of frame headers",
+        parity.algorithm
+    );
+    if spec.workers > 1 {
+        assert!(
+            parity.tcp.cross_messages > 0,
+            "{}: a multi-worker pool must ship boundary traffic",
+            parity.algorithm
+        );
+        assert!(
+            parity.tcp.header_bytes > 0,
+            "{}: shipped frames must account header overhead",
+            parity.algorithm
+        );
+    }
+    assert!(parity.ok(), "{}: parity verdict not ok", parity.algorithm);
+}
+
+#[test]
+fn sdd_newton_tcp_matches_both_transports_k2() {
+    assert_tcp_parity(smoke_spec("sdd", 2, 3));
+}
+
+#[test]
+fn sdd_newton_tcp_matches_both_transports_k4() {
+    assert_tcp_parity(smoke_spec("sdd", 4, 3));
+}
+
+#[test]
+fn admm_tcp_matches_both_transports_k2() {
+    assert_tcp_parity(smoke_spec("admm", 2, 3));
+}
+
+#[test]
+fn admm_tcp_matches_both_transports_k4() {
+    assert_tcp_parity(smoke_spec("admm", 4, 3));
+}
+
+#[test]
+fn gradient_tcp_matches_both_transports_round_robin() {
+    // Round-robin maximizes the cut — every neighbor is remote.
+    let mut spec = smoke_spec("grad", 4, 3);
+    spec.partitioning = "round_robin".to_string();
+    assert_tcp_parity(spec);
+}
+
+/// A worker that never shows up must surface as a typed rendezvous
+/// timeout on the leader — quickly, and never as a hang.
+#[test]
+fn leader_times_out_on_missing_worker() {
+    let mut rng = Pcg64::new(77);
+    let prob = sddnewton::problems::datasets::synthetic_regression(4, 2, 40, 0.2, 0.05, &mut rng);
+    let leader = TcpLeader::bind("127.0.0.1:0", 2).expect("bind leader");
+    let owned_of = vec![vec![0usize, 1], vec![2usize, 3]];
+    let started = Instant::now();
+    let err = run_leader(leader, &prob, owned_of, 1, Duration::from_millis(300))
+        .expect_err("a leader with no workers must error, not hang");
+    assert!(
+        matches!(err, TcpError::Timeout { .. }),
+        "expected a rendezvous timeout, got: {err}"
+    );
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "timeout took {:?} — deadline not enforced",
+        started.elapsed()
+    );
+}
+
+/// Full process deployment through the CLI: the leader forks `worker`
+/// ranks of its own binary over loopback TCP, and the parity table must
+/// report ok (exit zero, byte columns present, no DRIFT).
+#[test]
+fn partitioned_cli_tcp_transport_end_to_end() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_sddnewton"))
+        .args([
+            "partitioned",
+            "--transport",
+            "tcp",
+            "--experiment",
+            "smoke",
+            "--iters",
+            "2",
+            "--workers",
+            "4",
+            "--algorithms",
+            "sdd,admm",
+        ])
+        .output()
+        .expect("sddnewton binary should run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit nonzero\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("payload B"), "missing payload byte column:\n{stdout}");
+    assert!(stdout.contains("header B"), "missing header byte column:\n{stdout}");
+    assert!(!stdout.contains("DRIFT"), "tcp parity table reported drift:\n{stdout}");
+    for name in ["SDD-Newton", "Distributed ADMM"] {
+        let row = stdout
+            .lines()
+            .find(|l| l.contains(name))
+            .unwrap_or_else(|| panic!("missing row for {name}:\n{stdout}"));
+        assert!(row.contains("ok"), "{name} not ok:\n{row}");
+    }
+}

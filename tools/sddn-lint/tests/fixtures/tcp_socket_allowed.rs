@@ -1,0 +1,24 @@
+// Fixture: the TCP transport idiom — typed errors on the socket path, a
+// reason-carrying allowlist on the one unrecoverable death, and
+// README-documented SDDN_TCP_* tuning knobs.
+
+fn timeout_ms() -> u64 {
+    std::env::var("SDDN_TCP_TIMEOUT_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(30_000)
+}
+
+fn retries() -> u32 {
+    std::env::var("SDDN_TCP_RETRIES").ok().and_then(|v| v.parse().ok()).unwrap_or(40)
+}
+
+fn backoff_ms() -> u64 {
+    std::env::var("SDDN_TCP_RETRY_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(50)
+}
+
+fn read_exact_or_err(buf: &[u8], want: usize) -> Result<&[u8], String> {
+    buf.get(..want).ok_or_else(|| format!("short read: {} of {want} bytes", buf.len()))
+}
+
+fn die(rank: usize, err: String) -> ! {
+    // sddn-lint: allow(panic) reason=socket failure mid-round is unrecoverable under the Exchange contract
+    panic!("tcp transport rank {rank}: {err}")
+}

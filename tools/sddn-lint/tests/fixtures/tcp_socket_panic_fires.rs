@@ -1,0 +1,19 @@
+// Fixture: socket-transport code must return the typed error, not panic —
+// the forbidden-panic lint covers `net/tcp` like any other net module.
+
+use std::io::Read;
+use std::net::TcpStream;
+
+fn dial(addr: &str) -> TcpStream {
+    TcpStream::connect(addr).unwrap() // fires: .unwrap()
+}
+
+fn read_header(stream: &mut TcpStream) -> [u8; 16] {
+    let mut head = [0u8; 16];
+    stream.read_exact(&mut head).expect("peer sent a full header"); // fires: .expect(
+    head
+}
+
+fn reject(kind: u8) -> ! {
+    panic!("unexpected frame kind {kind}") // fires: panic!(
+}

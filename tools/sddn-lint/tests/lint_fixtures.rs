@@ -105,6 +105,32 @@ fn env_documented_is_clean() {
 }
 
 #[test]
+fn tcp_socket_panic_fires() {
+    let vs = lint_fixture("tcp_socket_panic_fires.rs", None);
+    assert_eq!(vs.len(), 3, "{vs:?}");
+    assert!(kinds(&vs).iter().all(|k| *k == Lint::ForbiddenPanic), "{vs:?}");
+    assert_eq!(run_cli("tcp_socket_panic_fires.rs", None), 1);
+}
+
+#[test]
+fn tcp_socket_allowed_is_clean_with_documented_env() {
+    let vs = lint_fixture("tcp_socket_allowed.rs", Some("README_tcp_env.md"));
+    assert!(vs.is_empty(), "{vs:?}");
+    assert_eq!(run_cli("tcp_socket_allowed.rs", Some("README_tcp_env.md")), 0);
+}
+
+#[test]
+fn tcp_env_knobs_require_readme_rows() {
+    // The same fixture without the README rows: every SDDN_TCP_* knob
+    // fires exactly once — the contract that keeps the real transport's
+    // tuning variables documented.
+    let vs = lint_fixture("tcp_socket_allowed.rs", None);
+    assert_eq!(vs.len(), 3, "{vs:?}");
+    assert!(kinds(&vs).iter().all(|k| *k == Lint::UndocumentedEnv), "{vs:?}");
+    assert_eq!(run_cli("tcp_socket_allowed.rs", None), 1);
+}
+
+#[test]
 fn cli_rejects_bad_usage() {
     let code = Command::new(env!("CARGO_BIN_EXE_sddn-lint"))
         .arg("--no-such-flag")
