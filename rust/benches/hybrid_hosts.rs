@@ -1,0 +1,125 @@
+//! Two-host-shaped hybrid transport benchmark over loopback sockets.
+//!
+//! Places a 4-rank pool across simulated hosts via MPI-style hostfiles
+//! and drives SDD-Newton and ADMM through the hybrid transport —
+//! in-process channels within a host, framed TCP across hosts — the
+//! deployment shape a real cluster pays for. Three placements of the
+//! same pool bracket the cost spectrum: all ranks co-located (zero
+//! socket bytes), the canonical 2+2 two-host split, and one rank per
+//! host (every boundary edge rides a socket).
+//!
+//! Every sample is asserted bit-for-bit identical to the bulk and
+//! in-process shard references, and the split ledger is re-checked:
+//! `intra + inter` sums to the placement-agnostic totals and socket
+//! payload bytes cover exactly the inter-host leg
+//! (`payload_bytes == inter_floats × 8`).
+//!
+//!     cargo bench --bench hybrid_hosts
+//!     cargo bench --bench hybrid_hosts -- --smoke    # CI smoke run
+
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section, BenchReport};
+use sddnewton::harness::deploy::{run_hybrid_cross_transport, TcpJobSpec};
+use sddnewton::net::hybrid::parse_hostfile;
+
+/// Spec for one algorithm of the smoke preset on a loopback hybrid pool
+/// (thread mode — no hostfile path needed, the placement is passed
+/// directly).
+fn smoke_spec(algo: &str, workers: usize, iters: usize) -> TcpJobSpec {
+    TcpJobSpec {
+        experiment: "smoke".to_string(),
+        config_path: None,
+        algorithms: Some(algo.to_string()),
+        seed: None,
+        algo_index: 0,
+        iters,
+        workers,
+        partitioning: "contiguous".to_string(),
+        solver_seed: 0x51D0,
+        hostfile: None,
+    }
+}
+
+fn main() {
+    let opts = cli_opts();
+    let smoke = is_smoke();
+    let workers = 4;
+    let iters = if smoke { 2 } else { 4 };
+    let mut report = BenchReport::new("hybrid_hosts");
+    report.config_num("workers", workers as f64);
+    report.config_num("iters", iters as f64);
+    result_row("parallelism/threads", sddnewton::par::threads());
+
+    // Same 4-rank pool, three placements: the socket leg shrinks from
+    // "every boundary edge" to zero as ranks co-locate.
+    let placements: [(&str, &str); 3] = [
+        ("single_host", "alpha slots=4\n"),
+        ("two_hosts_2p2", "alpha slots=2\nbeta slots=2\n"),
+        ("fully_split", "alpha slots=1\nbeta slots=1\ngamma slots=1\ndelta slots=1\n"),
+    ];
+
+    section(&format!(
+        "Hybrid transport by placement: {workers} ranks, {iters} iterations, loopback sockets"
+    ));
+
+    for (algo, label) in [("sdd", "sdd_newton"), ("admm", "admm")] {
+        let algo_timer = sddnewton::util::Timer::start();
+        for (pname, hostfile) in &placements {
+            let placement = parse_hostfile(hostfile).expect("bench hostfile must parse");
+            let spec = smoke_spec(algo, workers, iters);
+            let mut last = None;
+            let s = bench(&format!("{label}/hybrid/{pname}"), &opts, || {
+                last = Some(
+                    run_hybrid_cross_transport(&spec, &placement, "127.0.0.1:0", None)
+                        .expect("hybrid loopback run must succeed"),
+                );
+            });
+            let parity = last.unwrap();
+            assert!(
+                parity.ok(),
+                "{label}/{pname}: hybrid run drifted from the reference transports"
+            );
+            let run = &parity.hybrid;
+            assert_eq!(
+                run.intra_cross + run.inter_cross,
+                run.cross_messages,
+                "{label}/{pname}: placement split does not sum to the payload total"
+            );
+            assert_eq!(
+                run.intra_floats + run.inter_floats,
+                run.cross_floats,
+                "{label}/{pname}: placement split does not sum to the float total"
+            );
+            assert_eq!(
+                run.payload_bytes,
+                run.inter_floats * 8,
+                "{label}/{pname}: socket bytes must cover exactly the inter-host leg"
+            );
+            assert_eq!(
+                run.header_bytes % 16,
+                0,
+                "{label}/{pname}: header overhead is not a whole number of frame headers"
+            );
+            report.metric(&format!("{label}/{pname}/intra_msgs"), run.intra_cross as f64);
+            report.metric(&format!("{label}/{pname}/inter_msgs"), run.inter_cross as f64);
+            report.metric(
+                &format!("{label}/{pname}/socket_payload_bytes"),
+                run.payload_bytes as f64,
+            );
+            report.metric(
+                &format!("{label}/{pname}/socket_header_bytes"),
+                run.header_bytes as f64,
+            );
+            result_row(
+                &format!("{label}/hybrid/{pname}"),
+                format!(
+                    "{} intra + {} inter msgs | {} socket payload B | {:.5}s median",
+                    run.intra_cross, run.inter_cross, run.payload_bytes, s.median
+                ),
+            );
+        }
+        report.phase(label, algo_timer.secs());
+    }
+
+    let path = report.write().expect("bench report must be writable");
+    result_row("report", path.display());
+}

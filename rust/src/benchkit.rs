@@ -200,9 +200,27 @@ impl BenchReport {
     }
 
     /// Write `BENCH_<bench>_<date>.json` into `dir`, returning the path.
+    ///
+    /// A trajectory is append-only: if today's file already exists (a
+    /// second run of the same bench on the same UTC date), the report is
+    /// deduplicated to `BENCH_<bench>_<date>.1.json`, `.2.json`, … —
+    /// never silently overwriting the earlier point. The suffixed names
+    /// still match the `BENCH_*.json` shape `bench-validate` scans.
     pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
         std::fs::create_dir_all(dir)?;
-        let path = dir.join(format!("BENCH_{}_{}.json", self.bench, utc_date()));
+        let stem = format!("BENCH_{}_{}", self.bench, utc_date());
+        let mut path = dir.join(format!("{stem}.json"));
+        let mut suffix = 0u32;
+        while path.exists() {
+            suffix += 1;
+            if suffix > 10_000 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::AlreadyExists,
+                    format!("more than 10000 same-day reports for {stem}"),
+                ));
+            }
+            path = dir.join(format!("{stem}.{suffix}.json"));
+        }
         std::fs::write(&path, format!("{}\n", self.to_json()))?;
         Ok(path)
     }
@@ -445,10 +463,71 @@ mod tests {
     }
 
     #[test]
+    fn same_day_rerun_is_deduplicated_not_overwritten() {
+        // Before the fix, a second run of the same bench on the same UTC
+        // date reused the exact same path and silently clobbered the
+        // earlier trajectory point.
+        let dir = std::env::temp_dir().join(format!("sddn_benchkit_dedupe_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut first = sample_report();
+        first.metric("which_run", 1.0);
+        let mut second = sample_report();
+        second.metric("which_run", 2.0);
+        let p1 = first.write_to(&dir).expect("first write");
+        let p2 = second.write_to(&dir).expect("second write");
+        let p3 = second.write_to(&dir).expect("third write");
+        assert_ne!(p1, p2, "second same-day run must not reuse the first path");
+        assert_ne!(p2, p3);
+        let n2 = p2.file_name().unwrap().to_str().unwrap();
+        assert!(n2.starts_with("BENCH_unit_test_") && n2.ends_with(".1.json"), "got {n2}");
+        // The first point survives, unmodified.
+        let text1 = std::fs::read_to_string(&p1).unwrap();
+        assert!(text1.contains("\"which_run\":1"), "first report clobbered: {text1}");
+        for p in [&p1, &p2, &p3] {
+            let parsed = Json::parse(std::fs::read_to_string(p).unwrap().trim()).unwrap();
+            validate_report(&parsed).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn civil_date_conversion_is_correct() {
         assert_eq!(civil_from_days(0), (1970, 1, 1));
         assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year start
         assert_eq!(civil_from_days(19_782), (2024, 2, 29)); // leap day
         assert_eq!(civil_from_days(20_666), (2026, 8, 1));
+    }
+
+    #[test]
+    fn civil_date_handles_epoch_leap_and_century_boundaries() {
+        // Epoch day zero and its neighbors.
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(1), (1970, 1, 2));
+        assert_eq!(civil_from_days(364), (1970, 12, 31));
+        // 2000 is a leap year (divisible by 400): Feb 29 exists.
+        assert_eq!(civil_from_days(10_957), (2000, 1, 1));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29));
+        assert_eq!(civil_from_days(11_017), (2000, 3, 1));
+        // 2100 is NOT a leap year (divisible by 100, not by 400):
+        // Feb 28 is followed directly by Mar 1.
+        assert_eq!(civil_from_days(47_482), (2100, 1, 1));
+        assert_eq!(civil_from_days(47_540), (2100, 2, 28));
+        assert_eq!(civil_from_days(47_541), (2100, 3, 1));
+    }
+
+    #[test]
+    fn utc_date_is_iso_shaped() {
+        let d = utc_date();
+        assert_eq!(d.len(), 10, "{d}");
+        let bytes = d.as_bytes();
+        assert_eq!(bytes[4], b'-');
+        assert_eq!(bytes[7], b'-');
+        assert!(d.chars().enumerate().all(|(i, c)| if i == 4 || i == 7 {
+            c == '-'
+        } else {
+            c.is_ascii_digit()
+        }));
+        // The current date is on or after the day this test was written.
+        assert!(d.as_str() >= "2026-08-08", "clock before authoring date: {d}");
     }
 }

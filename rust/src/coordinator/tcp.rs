@@ -19,16 +19,18 @@ use super::PartitionedIter;
 use crate::algorithms::ConsensusAlgorithm;
 use crate::coordinator::Partition;
 use crate::graph::{laplacian_csr, Graph};
+use crate::net::hybrid::{local_links, HybridExchange, Placement};
 use crate::net::partitioned::{build_shard_plans, run_reducer, ReduceMsg};
 use crate::net::tcp::frame::{
     bytes_to_f64s, put_f64s, read_frame, split_u64s, write_frame, FrameKind, TcpError,
 };
-use crate::net::tcp::{TcpExchange, WorkerNetConfig};
+use crate::net::tcp::{TcpExchange, WorkerNetConfig, METRIC_COUNTERS};
 use crate::net::CommStats;
 use crate::problems::ConsensusProblem;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Outcome of a TCP partitioned run: the in-process
@@ -47,6 +49,16 @@ pub struct TcpPartitionedRun {
     pub cross_messages: u64,
     /// Final cumulative real floats moved over the sockets.
     pub cross_floats: u64,
+    /// Cross-worker payloads between co-located ranks (rode in-process
+    /// channels on the hybrid transport; always 0 on pure TCP).
+    pub intra_cross: u64,
+    /// Floats moved between co-located ranks.
+    pub intra_floats: u64,
+    /// Cross-worker payloads between ranks on different hosts (the only
+    /// ones that pay socket bytes on the hybrid transport).
+    pub inter_cross: u64,
+    /// Floats moved between ranks on different hosts.
+    pub inter_floats: u64,
     /// Observed data-plane payload bytes — the wire-truth invariant is
     /// `payload_bytes == cross_floats × 8`.
     pub payload_bytes: u64,
@@ -74,7 +86,17 @@ impl TcpLeader {
     /// Bind the rendezvous listener for a `k`-worker pool. Use port 0 for
     /// an ephemeral loopback port (tests, single-machine runs) and read
     /// the actual address back with [`addr`](Self::addr).
+    ///
+    /// `k` must fit the frame header's `u16` rank field — a pool beyond
+    /// 65 535 ranks would silently alias ranks on the wire, so it is
+    /// rejected here with a typed error (the worker side enforces the
+    /// same bound in `TcpExchange::connect`).
     pub fn bind(addr: &str, k: usize) -> Result<TcpLeader, TcpError> {
+        if k == 0 || k > u16::MAX as usize {
+            return Err(TcpError::Protocol {
+                msg: format!("pool size {k} outside the u16 rank space 1..=65535"),
+            });
+        }
         let listener = TcpListener::bind(addr)
             .map_err(|err| TcpError::Io { ctx: format!("bind leader listener {addr}"), err })?;
         Ok(TcpLeader { listener, k })
@@ -150,7 +172,7 @@ fn spawn_worker_reader(
                     }
                 },
                 FrameKind::Metric => {
-                    let decoded = split_u64s(&frame.body, 8, &ctx)
+                    let decoded = split_u64s(&frame.body, METRIC_COUNTERS, &ctx)
                         .and_then(|(counters, tail)| {
                             bytes_to_f64s(tail, &ctx).map(|thetas| (counters, thetas))
                         });
@@ -255,10 +277,34 @@ pub fn run_leader(
     iters: usize,
     timeout: Duration,
 ) -> Result<TcpPartitionedRun, TcpError> {
+    run_leader_with_hosts(leader, problem, owned_of, iters, timeout, None)
+}
+
+/// [`run_leader`] with an optional per-rank host placement: when `hosts`
+/// is given (hybrid deployments), the peer-table broadcast carries an
+/// `ADDR\tHOST` column per line so every worker can cross-check its
+/// hostfile against the placement the leader actually rendezvoused, and
+/// route intra-host boundary traffic off the sockets.
+pub fn run_leader_with_hosts(
+    leader: TcpLeader,
+    problem: &ConsensusProblem,
+    owned_of: Vec<Vec<usize>>,
+    iters: usize,
+    timeout: Duration,
+    hosts: Option<&[String]>,
+) -> Result<TcpPartitionedRun, TcpError> {
     let k = leader.k;
     if owned_of.len() != k {
         return Err(TcpError::Protocol {
             msg: format!("owned lists cover {} ranks, pool has {k}", owned_of.len()),
+        });
+    }
+    if hosts.is_some_and(|h| h.len() != k) {
+        return Err(TcpError::Protocol {
+            msg: format!(
+                "host placement covers {} ranks, pool has {k}",
+                hosts.map(|h| h.len()).unwrap_or(0)
+            ),
         });
     }
     let n = problem.n();
@@ -294,8 +340,17 @@ pub fn run_leader(
     }
 
     // 2. Broadcast the peer table; every mesh listener is already bound
-    //    (each worker binds before saying Hello).
-    let table = mesh_addrs.join("\n");
+    //    (each worker binds before saying Hello). With a placement, each
+    //    line is `ADDR\tHOST` (plain TCP workers strip the host column).
+    let table = match hosts {
+        Some(h) => mesh_addrs
+            .iter()
+            .zip(h)
+            .map(|(a, host)| format!("{a}\t{host}"))
+            .collect::<Vec<String>>()
+            .join("\n"),
+        None => mesh_addrs.join("\n"),
+    };
     for slot in conns.iter_mut() {
         let (s, _) = slot.as_mut().ok_or_else(|| TcpError::Protocol {
             msg: "rendezvous bookkeeping lost a worker".to_string(),
@@ -315,6 +370,10 @@ pub fn run_leader(
     let mut thetas = vec![0.0; n * p];
     let mut payload_total = 0u64;
     let mut header_total = 0u64;
+    let mut intra_cross_total = 0u64;
+    let mut intra_floats_total = 0u64;
+    let mut inter_cross_total = 0u64;
+    let mut inter_floats_total = 0u64;
 
     let result: Result<(), TcpError> = std::thread::scope(|scope| {
         for (rank, slot) in conns.into_iter().enumerate() {
@@ -351,6 +410,10 @@ pub fn run_leader(
         gather_by_iteration_timeout(&met_rx, k, iters, timeout, |it, got| {
             let mut cross_total = 0u64;
             let mut cross_floats_total = 0u64;
+            let mut intra_cross = 0u64;
+            let mut intra_floats = 0u64;
+            let mut inter_cross = 0u64;
+            let mut inter_floats = 0u64;
             let mut payload = 0u64;
             let mut header = 0u64;
             let mut comm: Option<CommStats> = None;
@@ -373,13 +436,17 @@ pub fn run_leader(
                 }
                 cross_total += counters[0];
                 cross_floats_total += counters[1];
-                payload += counters[2];
-                header += counters[3];
+                intra_cross += counters[2];
+                intra_floats += counters[3];
+                inter_cross += counters[4];
+                inter_floats += counters[5];
+                payload += counters[6];
+                header += counters[7];
                 let stats = CommStats {
-                    messages: counters[4],
-                    floats: counters[5],
-                    rounds: counters[6],
-                    allreduces: counters[7],
+                    messages: counters[8],
+                    floats: counters[9],
+                    rounds: counters[10],
+                    allreduces: counters[11],
                 };
                 // Every worker tallies the identical modeled ledger.
                 if comm.is_some_and(|c| c != stats) {
@@ -391,6 +458,10 @@ pub fn run_leader(
             }
             payload_total = payload;
             header_total = header;
+            intra_cross_total = intra_cross;
+            intra_floats_total = intra_floats;
+            inter_cross_total = inter_cross;
+            inter_floats_total = inter_floats;
             records.push(PartitionedIter {
                 iter: it + 1,
                 objective: problem.objective(&thetas),
@@ -413,6 +484,10 @@ pub fn run_leader(
         comm,
         cross_messages,
         cross_floats,
+        intra_cross: intra_cross_total,
+        intra_floats: intra_floats_total,
+        inter_cross: inter_cross_total,
+        inter_floats: inter_floats_total,
         payload_bytes: payload_total,
         header_bytes: header_total,
     })
@@ -446,4 +521,88 @@ pub fn run_tcp_worker<'a>(
         exch.send_metrics(it as u64, alg.thetas())?;
     }
     Ok(())
+}
+
+/// Per-host configuration for [`run_hybrid_host`]: which hostfile placement
+/// this process participates in, which named host it is, and where the
+/// leader rendezvous listens.
+pub struct HybridHostConfig<'h> {
+    /// Rank→host placement parsed from the hostfile. Every participating
+    /// process (and the leader) must be started from the same hostfile.
+    pub placement: &'h Placement,
+    /// The hostfile name this process runs as; its ranks are launched here.
+    pub host: &'h str,
+    /// Leader rendezvous address (`host:port`), as for the plain TCP pool.
+    pub leader_addr: &'h str,
+    /// Number of algorithm iterations to drive on every local rank.
+    pub iters: usize,
+}
+
+/// Host-process driver for the hybrid transport: launch one worker thread
+/// per rank the hostfile places on `cfg.host`, wiring co-located ranks
+/// through in-process channels and cross-host edges over TCP (see
+/// [`crate::net::hybrid`]). The Laplacian and shard plans are built once
+/// and shared across the local ranks; the graph/partition/problem must be
+/// rebuilt identically on every host (deterministic seeds — see
+/// `harness::deploy`). The first worker error wins; remaining local ranks
+/// are joined (their receives time out) before it is returned.
+pub fn run_hybrid_host<'a>(
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    cfg: &HybridHostConfig<'_>,
+    make_alg: &(dyn Fn(Vec<usize>) -> Box<dyn ConsensusAlgorithm + 'a> + Sync),
+) -> Result<(), TcpError> {
+    let k = cfg.placement.k();
+    if part.k != k {
+        return Err(TcpError::Protocol {
+            msg: format!("partition has {} shards, hostfile places {}", part.k, k),
+        });
+    }
+    if cfg.placement.ranks_on(cfg.host).is_empty() {
+        return Err(TcpError::Protocol {
+            msg: format!("hostfile places no ranks on host {:?}", cfg.host),
+        });
+    }
+    let lap = Arc::new(laplacian_csr(g));
+    let plans = build_shard_plans(g, part);
+    let links = local_links(cfg.placement, cfg.host);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for link in links {
+            let rank = link.rank();
+            let plan = plans[rank].clone();
+            let lap = Arc::clone(&lap);
+            let net = WorkerNetConfig::from_env(rank, k, cfg.leader_addr);
+            handles.push(scope.spawn(move || -> Result<(), TcpError> {
+                let mut exch =
+                    HybridExchange::connect(&net, cfg.placement, link, g.n, g.m(), lap, plan)?;
+                let mut alg = make_alg(exch.owned().to_vec());
+                for it in 0..cfg.iters {
+                    alg.step(problem, &mut exch);
+                    exch.send_metrics(it as u64, alg.thetas())?;
+                }
+                Ok(())
+            }));
+        }
+        let mut first_err = None;
+        for handle in handles {
+            match handle.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(TcpError::Protocol {
+                            msg: "a hybrid worker thread panicked".to_string(),
+                        });
+                    }
+                }
+            }
+        }
+        first_err.map_or(Ok(()), Err)
+    })
 }

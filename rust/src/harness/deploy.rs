@@ -17,6 +17,14 @@
 //! in-process threads speaking real loopback sockets for tests), and
 //! checks iterates, objectives, the modeled ledger, and the wire truth —
 //! extended to observed socket bytes.
+//!
+//! [`run_hybrid_cross_transport`] is the same harness for the host-aware
+//! hybrid transport (`--transport hybrid`): one
+//! [`HybridExchange`](crate::net::hybrid::HybridExchange) pool deployed
+//! per the hostfile placement, with the wire check split into intra-host
+//! (channel) and inter-host (socket) ledgers — socket bytes must cover
+//! exactly the inter-host floats, and the two splits must sum back to the
+//! placement-agnostic totals of the other transports.
 
 use super::experiments::{
     build_graph, build_problem, make_inner_solver, make_sharded_algorithm,
@@ -24,9 +32,13 @@ use super::experiments::{
 };
 use crate::algorithms::{run, RunOptions, Trace};
 use crate::config::{AlgoKind, ExperimentConfig, Json};
-use crate::coordinator::tcp::{run_leader, run_tcp_worker, TcpLeader, TcpPartitionedRun};
+use crate::coordinator::tcp::{
+    run_hybrid_host, run_leader, run_leader_with_hosts, run_tcp_worker, HybridHostConfig,
+    TcpLeader, TcpPartitionedRun,
+};
 use crate::coordinator::{run_partitioned_baseline, Partition, PartitionedRun};
 use crate::graph::Graph;
+use crate::net::hybrid::{parse_hostfile, Placement};
 use crate::net::tcp::frame::{self, HEADER_BYTES};
 use crate::net::tcp::WorkerNetConfig;
 use crate::net::CommGraph;
@@ -60,6 +72,10 @@ pub struct TcpJobSpec {
     /// builds its solver from a fresh `Pcg64::new(solver_seed)`, so the
     /// randomized SDDM chain is bit-identical everywhere.
     pub solver_seed: u64,
+    /// Hostfile path for the hybrid transport (`None` for plain TCP).
+    /// When set, worker processes run the per-host hybrid driver and the
+    /// leader broadcasts the rank→host placement at rendezvous.
+    pub hostfile: Option<String>,
 }
 
 /// A spec resolved into the concrete experiment objects (identical on
@@ -143,6 +159,9 @@ impl TcpJobSpec {
         a.extend(["--workers".to_string(), self.workers.to_string()]);
         a.extend(["--partitioning".to_string(), self.partitioning.clone()]);
         a.extend(["--solver-seed".to_string(), self.solver_seed.to_string()]);
+        if let Some(path) = &self.hostfile {
+            a.extend(["--hostfile".to_string(), path.clone()]);
+        }
         a
     }
 }
@@ -155,6 +174,46 @@ pub fn tcp_worker_main(spec: &TcpJobSpec, net: &WorkerNetConfig) -> Result<(), S
     let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
     let solver_ref = solver.as_deref();
     run_tcp_worker(&job.problem, &job.g, &job.part, spec.iters, net, &|owned| {
+        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+    })
+    .map_err(|e| e.to_string())
+}
+
+/// Host-process entry point for the hybrid transport: parse the spec's
+/// hostfile and drive every rank it places on `host` (spawned by
+/// `sddnewton worker --host NAME --hostfile F`, or started by hand on
+/// each machine of a multi-host deployment).
+pub fn hybrid_host_main(spec: &TcpJobSpec, host: &str, leader_addr: &str) -> Result<(), String> {
+    let path = spec
+        .hostfile
+        .as_ref()
+        .ok_or("hybrid host needs --hostfile (the rank→host placement)")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let placement = parse_hostfile(&text).map_err(|e| format!("{path}: {e}"))?;
+    hybrid_host_with_placement(spec, &placement, host, leader_addr)
+}
+
+/// [`hybrid_host_main`] with an already-parsed placement (the in-process
+/// thread mode of [`run_hybrid_cross_transport`] skips the hostfile I/O).
+pub fn hybrid_host_with_placement(
+    spec: &TcpJobSpec,
+    placement: &Placement,
+    host: &str,
+    leader_addr: &str,
+) -> Result<(), String> {
+    if placement.k() != spec.workers {
+        return Err(format!(
+            "hostfile places {} ranks but the pool has {}",
+            placement.k(),
+            spec.workers
+        ));
+    }
+    let job = spec.build()?;
+    let backend = NativeBackend;
+    let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+    let solver_ref = solver.as_deref();
+    let cfg = HybridHostConfig { placement, host, leader_addr, iters: spec.iters };
+    run_hybrid_host(&job.problem, &job.g, &job.part, &cfg, &|owned| {
         make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
     })
     .map_err(|e| e.to_string())
@@ -357,6 +416,225 @@ pub fn run_tcp_cross_transport(
         objectives_match,
         ledger_ok,
         wire_ok,
+        bytes_ok,
+    })
+}
+
+/// Parity verdict of one algorithm run on the hybrid transport against
+/// both in-process references — the [`TcpParity`] checks, with the wire
+/// truth refined by host placement: the intra/inter splits must sum back
+/// to the placement-agnostic totals, and observed socket bytes must cover
+/// exactly the inter-host floats (co-located traffic never hits a socket).
+#[derive(Debug)]
+pub struct HybridParity {
+    /// Algorithm display name (from the bulk trace).
+    pub algorithm: String,
+    /// The hybrid pool's run (leader-side gather).
+    pub hybrid: TcpPartitionedRun,
+    /// Bulk-synchronous reference trace.
+    pub bulk: Trace,
+    /// In-process sharded reference run.
+    pub shard: PartitionedRun,
+    /// Plan-driven wire model of the cross-worker payload count.
+    pub modeled_cross: u64,
+    /// Hybrid final iterate bit-identical to the bulk reference.
+    pub thetas_match_bulk: bool,
+    /// Hybrid final iterate bit-identical to the in-process shard run.
+    pub thetas_match_shard: bool,
+    /// Per-iteration objectives bit-identical to both references.
+    pub objectives_match: bool,
+    /// Modeled comm ledger identical to both references.
+    pub ledger_ok: bool,
+    /// Placement-agnostic totals preserved: cross payloads/floats equal
+    /// the wire model and the in-process shard run.
+    pub wire_ok: bool,
+    /// The placement split is internally consistent:
+    /// `intra + inter == cross` for both payload counts and floats.
+    pub split_ok: bool,
+    /// Socket bytes cover exactly the inter-host leg:
+    /// `payload_bytes == inter_floats × 8` and `header_bytes` a whole
+    /// number of frame headers.
+    pub bytes_ok: bool,
+}
+
+impl HybridParity {
+    /// All parity, split-accounting, and wire-truth checks passed.
+    pub fn ok(&self) -> bool {
+        self.thetas_match_bulk
+            && self.thetas_match_shard
+            && self.objectives_match
+            && self.ledger_ok
+            && self.wire_ok
+            && self.split_ok
+            && self.bytes_ok
+    }
+}
+
+/// Run `spec` on the hybrid transport under `placement` — bulk reference,
+/// in-process shard reference, then one hybrid pool with co-located ranks
+/// on channels and cross-host edges on TCP — and report the parity
+/// verdict.
+///
+/// With `bin = Some(path)` each *host* becomes an OS process
+/// (`path worker --host H --hostfile F …`; `spec.hostfile` must point at
+/// the file `placement` was parsed from). With `bin = None` each host is
+/// an in-process thread (which still drives one OS thread per local rank
+/// and speaks real loopback sockets across "hosts" — the CI-friendly
+/// single-machine mode). `listen` is the leader bind address.
+pub fn run_hybrid_cross_transport(
+    spec: &TcpJobSpec,
+    placement: &Placement,
+    listen: &str,
+    bin: Option<&Path>,
+) -> Result<HybridParity, String> {
+    let k = spec.workers;
+    if placement.k() != k {
+        return Err(format!("hostfile places {} ranks but the pool has {k}", placement.k()));
+    }
+    if bin.is_some() && spec.hostfile.is_none() {
+        return Err("process mode needs spec.hostfile so workers can re-parse the placement"
+            .to_string());
+    }
+    let job = spec.build()?;
+    let iters = spec.iters;
+
+    // References, built on a solver from the same deterministic seed the
+    // host processes use.
+    let backend = NativeBackend;
+    let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+    let solver_ref = solver.as_deref();
+    let mut alg = make_sharded_algorithm(
+        &job.kind,
+        &job.problem,
+        &job.g,
+        &backend,
+        solver_ref,
+        (0..job.problem.n()).collect(),
+    );
+    let mut comm = CommGraph::new(&job.g);
+    let bulk = run(
+        &mut alg,
+        &job.problem,
+        &mut comm,
+        &RunOptions { max_iters: iters, ..Default::default() },
+    );
+    let shard = run_partitioned_baseline(&job.problem, &job.g, &job.part, iters, &|owned| {
+        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+    });
+
+    // The hybrid pool: leader here (broadcasting the placement), one
+    // "host" per distinct hostfile name.
+    let leader = TcpLeader::bind(listen, k).map_err(|e| e.to_string())?;
+    let addr = leader.addr().map_err(|e| e.to_string())?.to_string();
+    let timeout = frame::default_timeout();
+    let owned_of: Vec<Vec<usize>> = (0..k).map(|w| job.part.nodes_of(w)).collect();
+    let rank_hosts: Vec<String> = (0..k).map(|r| placement.host(r).to_string()).collect();
+    let host_names: Vec<String> = placement.hosts().iter().map(|h| h.to_string()).collect();
+
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let mut threads: Vec<std::thread::JoinHandle<Result<(), String>>> = Vec::new();
+    match bin {
+        Some(path) => {
+            for host in &host_names {
+                let child = std::process::Command::new(path)
+                    .arg("worker")
+                    .args(spec.to_worker_args())
+                    .args(["--host".to_string(), host.clone()])
+                    .args(["--connect".to_string(), addr.clone()])
+                    .spawn()
+                    .map_err(|e| format!("spawn host {host}: {e}"))?;
+                children.push(child);
+            }
+        }
+        None => {
+            for host in &host_names {
+                let spec = spec.clone();
+                let placement = placement.clone();
+                let host = host.clone();
+                let addr = addr.clone();
+                threads.push(std::thread::spawn(move || {
+                    hybrid_host_with_placement(&spec, &placement, &host, &addr)
+                }));
+            }
+        }
+    }
+
+    let led =
+        run_leader_with_hosts(leader, &job.problem, owned_of, iters, timeout, Some(&rank_hosts));
+    // Reap the pool before judging the leader outcome, so a leader error
+    // never leaks host processes.
+    let mut worker_err: Option<String> = None;
+    for (host, child) in host_names.iter().zip(children.iter_mut()) {
+        if led.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                worker_err.get_or_insert(format!("host {host} exited with {status}"));
+            }
+            Err(e) => {
+                worker_err.get_or_insert(format!("host {host} wait failed: {e}"));
+            }
+        }
+    }
+    for (host, handle) in host_names.iter().zip(threads) {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                worker_err.get_or_insert(format!("host {host} failed: {e}"));
+            }
+            Err(_) => {
+                worker_err.get_or_insert(format!("host {host} panicked"));
+            }
+        }
+    }
+    let hybrid = match led {
+        Ok(out) => out,
+        Err(e) => {
+            let extra = worker_err.map(|w| format!(" ({w})")).unwrap_or_default();
+            return Err(format!("leader failed: {e}{extra}"));
+        }
+    };
+    if let Some(w) = worker_err {
+        return Err(w);
+    }
+
+    // Parity verdict.
+    let bulk_stats = bulk.records.last().map(|r| r.comm).unwrap_or_default();
+    let modeled_cross = modeled_cross_messages(&job.kind, &job.g, &job.part, iters, &bulk_stats);
+    let thetas_match_bulk = bits(&hybrid.thetas) == bits(&bulk.final_thetas);
+    let thetas_match_shard = bits(&hybrid.thetas) == bits(&shard.thetas);
+    let objectives_match = hybrid.records.len() == iters
+        && shard.records.len() == iters
+        && bulk.records.len() == iters + 1
+        && hybrid.records.iter().zip(&bulk.records[1..]).all(|(a, b)| {
+            a.objective.to_bits() == b.objective.to_bits()
+        })
+        && hybrid.records.iter().zip(&shard.records).all(|(a, b)| {
+            a.objective.to_bits() == b.objective.to_bits()
+        });
+    let ledger_ok = hybrid.comm == bulk_stats && hybrid.comm == shard.comm;
+    let wire_ok = hybrid.cross_messages == modeled_cross
+        && hybrid.cross_messages == shard.cross_messages
+        && hybrid.cross_floats == shard.cross_floats;
+    let split_ok = hybrid.intra_cross + hybrid.inter_cross == hybrid.cross_messages
+        && hybrid.intra_floats + hybrid.inter_floats == hybrid.cross_floats;
+    let bytes_ok = hybrid.payload_bytes == hybrid.inter_floats * 8
+        && hybrid.header_bytes % HEADER_BYTES == 0;
+
+    Ok(HybridParity {
+        algorithm: bulk.algorithm.clone(),
+        hybrid,
+        bulk,
+        shard,
+        modeled_cross,
+        thetas_match_bulk,
+        thetas_match_shard,
+        objectives_match,
+        ledger_ok,
+        wire_ok,
+        split_ok,
         bytes_ok,
     })
 }

@@ -5,5 +5,8 @@ pub mod deploy;
 pub mod experiments;
 pub mod report;
 
-pub use deploy::{run_tcp_cross_transport, tcp_worker_main, TcpJobSpec, TcpParity};
+pub use deploy::{
+    hybrid_host_main, hybrid_host_with_placement, run_hybrid_cross_transport,
+    run_tcp_cross_transport, tcp_worker_main, HybridParity, TcpJobSpec, TcpParity,
+};
 pub use experiments::{build_graph, build_problem, run_experiment, run_single, ExperimentResult};

@@ -7,9 +7,13 @@
 //!   partitioned — run every configured algorithm on the sharded worker
 //!                 runtime and check bit-for-bit parity with the bulk path
 //!                 (`--transport tcp` deploys the workers as OS processes
-//!                 over loopback TCP and extends the check to socket bytes)
-//!   worker      — one TCP worker rank (spawned by `partitioned
-//!                 --transport tcp`, or by hand for multi-host runs)
+//!                 over loopback TCP and extends the check to socket bytes;
+//!                 `--transport hybrid --hostfile F` deploys one process
+//!                 per hostfile host, channels within a host and TCP
+//!                 across hosts, and splits the wire check by placement)
+//!   worker      — one TCP worker rank (`--rank R`), or one hybrid host
+//!                 process (`--host NAME --hostfile F`); spawned by
+//!                 `partitioned`, or by hand for multi-host runs
 //!   solve       — demo the distributed SDDM solver on a random Laplacian
 //!   bench-validate — check BENCH_*.json perf-trajectory files against
 //!                 the schema (CI gate; see docs/BENCHMARKS.md)
@@ -59,9 +63,11 @@ fn print_usage() {
            sddnewton comm [--experiment <preset>] [--targets 1e-1,1e-2,...] [--out comm.csv]\n\
            sddnewton partitioned [--experiment <preset>] [--workers K] [--iters N]\n\
                          [--partitioning contiguous|round_robin|bfs] [--algorithms a,b,c]\n\
-                         [--transport channels|tcp] [--listen HOST:PORT]\n\
-           sddnewton worker --rank R --connect HOST:PORT --workers K [--experiment <preset>]\n\
-                         [--config file.json] [--algorithms a,b,c] [--seed S] [--algo-index I]\n\
+                         [--transport channels|tcp|hybrid] [--listen HOST:PORT]\n\
+                         [--hostfile F]   (hybrid: rank→host placement)\n\
+           sddnewton worker (--rank R | --host NAME --hostfile F) --connect HOST:PORT\n\
+                         --workers K [--experiment <preset>] [--config file.json]\n\
+                         [--algorithms a,b,c] [--seed S] [--algo-index I]\n\
                          [--iters N] [--partitioning P] [--solver-seed S]\n\
            sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
            sddnewton bench-validate [--dir bench_results] [--allow-empty]\n\
@@ -301,8 +307,9 @@ fn cmd_partitioned(args: &[String]) -> i32 {
     match transport {
         "channels" => {}
         "tcp" => return cmd_partitioned_tcp(&f, &cfg, workers, iters, scheme),
+        "hybrid" => return cmd_partitioned_hybrid(&f, &cfg, workers, iters, scheme),
         other => {
-            eprintln!("unknown transport '{other}' (expected channels|tcp)");
+            eprintln!("unknown transport '{other}' (expected channels|tcp|hybrid)");
             return 2;
         }
     }
@@ -378,6 +385,7 @@ fn tcp_spec(
         // parity comparison (references here, each worker process)
         // rebuilds the randomized inner solver from this exact seed.
         solver_seed: cfg.seed.wrapping_add(0x51D0 + idx as u64),
+        hostfile: None,
     }
 }
 
@@ -436,9 +444,96 @@ fn cmd_partitioned_tcp(
     0
 }
 
-/// One TCP worker rank: rebuild the job from the spec flags and serve the
-/// shard until the run completes (spawned by `partitioned --transport
-/// tcp`, or started by hand on each machine of a multi-host pool).
+/// `partitioned --transport hybrid --hostfile F`: one host process per
+/// hostfile host (channels within a host, TCP across hosts) and the TCP
+/// parity check with the wire truth split into intra-host and inter-host
+/// ledgers.
+fn cmd_partitioned_hybrid(
+    f: &Flags,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    iters: usize,
+    scheme: &str,
+) -> i32 {
+    let Some(hostfile) = f.kv.get("hostfile").cloned() else {
+        eprintln!("--transport hybrid needs --hostfile F (rank→host placement)");
+        return 2;
+    };
+    let placement = match std::fs::read_to_string(&hostfile)
+        .map_err(|e| format!("{hostfile}: {e}"))
+        .and_then(|text| {
+            sddnewton::net::hybrid::parse_hostfile(&text).map_err(|e| format!("{hostfile}: {e}"))
+        }) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if placement.k() != workers {
+        eprintln!("hostfile places {} ranks but --workers is {workers}", placement.k());
+        return 2;
+    }
+    let listen = f.kv.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let bin = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate own binary for host spawning: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "hosts: {}",
+        placement
+            .hosts()
+            .iter()
+            .map(|h| format!("{h}[{}]", placement.ranks_on(h).len()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!(
+        "{:<28} {:>8} {:>11} {:>11} {:>11} {:>13} {:>10}",
+        "algorithm", "parity", "intra", "inter", "wire model", "payload B", "header B"
+    );
+    let mut drifted = false;
+    for idx in 0..cfg.algorithms.len() {
+        let mut spec = tcp_spec(f, cfg, workers, iters, scheme, idx);
+        spec.hostfile = Some(hostfile.clone());
+        let parity =
+            match harness::run_hybrid_cross_transport(&spec, &placement, &listen, Some(&bin)) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("hybrid run failed for algorithm {idx}: {e}");
+                    return 1;
+                }
+            };
+        let ok = parity.ok();
+        drifted |= !ok;
+        println!(
+            "{:<28} {:>8} {:>11} {:>11} {:>11} {:>13} {:>10}",
+            parity.algorithm,
+            if ok { "ok" } else { "DRIFT" },
+            parity.hybrid.intra_cross,
+            parity.hybrid.inter_cross,
+            parity.modeled_cross,
+            parity.hybrid.payload_bytes,
+            parity.hybrid.header_bytes,
+        );
+    }
+    if drifted {
+        eprintln!(
+            "hybrid transport parity violated — the host-aware pool drifted from the \
+             in-process paths (iterates, ledger, split accounting, or socket bytes)"
+        );
+        return 1;
+    }
+    0
+}
+
+/// One TCP worker rank (`--rank R`) or one hybrid host process
+/// (`--host NAME --hostfile F`): rebuild the job from the spec flags and
+/// serve the shard(s) until the run completes (spawned by `partitioned`,
+/// or started by hand on each machine of a multi-host pool).
 fn cmd_worker(args: &[String]) -> i32 {
     let f = match parse_flags(args, &[]) {
         Ok(f) => f,
@@ -447,13 +542,16 @@ fn cmd_worker(args: &[String]) -> i32 {
             return 2;
         }
     };
-    let (Some(rank), Some(connect)) = (
-        f.kv.get("rank").and_then(|v| v.parse::<usize>().ok()),
-        f.kv.get("connect").cloned(),
-    ) else {
-        eprintln!("worker needs --rank R and --connect HOST:PORT");
+    let Some(connect) = f.kv.get("connect").cloned() else {
+        eprintln!("worker needs --connect HOST:PORT");
         return 2;
     };
+    let rank = f.kv.get("rank").and_then(|v| v.parse::<usize>().ok());
+    let host = f.kv.get("host").cloned();
+    if rank.is_none() && host.is_none() {
+        eprintln!("worker needs --rank R (tcp) or --host NAME --hostfile F (hybrid)");
+        return 2;
+    }
     let spec = TcpJobSpec {
         experiment: f.kv.get("experiment").cloned().unwrap_or_else(|| "smoke".to_string()),
         config_path: f.kv.get("config").cloned(),
@@ -468,7 +566,18 @@ fn cmd_worker(args: &[String]) -> i32 {
             .cloned()
             .unwrap_or_else(|| "contiguous".to_string()),
         solver_seed: f.kv.get("solver-seed").and_then(|v| v.parse().ok()).unwrap_or(0),
+        hostfile: f.kv.get("hostfile").cloned(),
     };
+    if let Some(host) = host {
+        return match harness::hybrid_host_main(&spec, &host, &connect) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("host {host} failed: {e}");
+                1
+            }
+        };
+    }
+    let rank = rank.expect("checked above");
     let net = sddnewton::net::tcp::WorkerNetConfig::from_env(rank, spec.workers, &connect);
     match harness::tcp_worker_main(&spec, &net) {
         Ok(()) => 0,

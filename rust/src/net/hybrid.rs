@@ -1,0 +1,1459 @@
+//! Host-aware hybrid transport: the fourth [`Exchange`](super::Exchange)
+//! implementation, routing every boundary payload by deployment
+//! placement. Ranks placed on the *same* host exchange through in-process
+//! channels — the zero-serialization
+//! [`ShardExchange`](super::partitioned::ShardExchange) path — while
+//! cross-host edges ride the checksummed TCP
+//! [`frame`](super::tcp::frame)s of the socket transport. Same plans,
+//! same row kernel, same reduce order: iterates are bit-for-bit identical
+//! to all three existing transports (`tests/hybrid_wire.rs`).
+//!
+//! # Placement
+//!
+//! A deployment is described by an MPI-style hostfile: one host per line,
+//! optionally `slots=N` for the number of ranks it runs, `#` comments and
+//! blank lines ignored, ranks assigned in file order
+//! ([`parse_hostfile`]). The leader process broadcasts its own placement
+//! with the peer table (`ADDR\tHOST` lines, see
+//! [`crate::coordinator::tcp`]); every worker cross-checks that column
+//! against its local hostfile and refuses to run on drift — two processes
+//! disagreeing about who is co-located would corrupt the byte ledger.
+//! By convention the coordinator runs on rank 0's host, so ranks sharing
+//! that host classify their all-reduce traffic as intra-host.
+//!
+//! # Wire-truth split
+//!
+//! The comm ledger splits by placement: [`HybridExchange::intra_cross`] /
+//! [`HybridExchange::intra_floats`] count channel payloads,
+//! [`HybridExchange::inter_cross`] / [`HybridExchange::inter_floats`]
+//! count socket payloads, and the sums equal the single-transport totals
+//! of `ShardExchange`/`TcpExchange` exactly. Socket bytes are counted
+//! only on inter-host edges: `payload_bytes == inter_floats × 8` and
+//! `header_bytes` is a multiple of
+//! [`HEADER_BYTES`](super::tcp::frame::HEADER_BYTES) — asserted the same
+//! three ways as the pure TCP transport (unit, property, CLI smoke).
+//! All-reduce frames from ranks co-located with the leader ride a
+//! loopback socket and are deliberately excluded from the socket byte
+//! ledger (they are intra-host traffic).
+//!
+//! # Reconnect
+//!
+//! The socket leg is hardened for real clusters. Every cross-host
+//! connection retains its last [`REPLAY_ROUNDS`] rounds of outbound
+//! frames; when a connection drops mid-run, the *higher* rank of the pair
+//! redials (it dialed at bootstrap too — the static dialer rule) with the
+//! existing `SDDN_TCP_RETRIES`/`SDDN_TCP_RETRY_MS` knobs while the lower
+//! rank re-accepts on its kept-open mesh listener, then **both** sides
+//! replay their retained frames. Receivers deduplicate replays against
+//! the highest round already consumed per peer, so a frame that survived
+//! the crash is dropped on redelivery and iterates stay bit-identical.
+//! Replayed bytes are not re-counted (first-transmission accounting keeps
+//! the byte invariant). Only when recovery exceeds the iteration deadline
+//! (`SDDN_TCP_TIMEOUT_MS`) does the round fail, with the same typed
+//! [`TcpError`] the pure TCP transport uses.
+
+use super::partitioned::{derive_exchange_plan, op_key, ExchangePlan, OpKey, ShardPlan};
+use super::tcp::frame::{
+    bytes_to_f64s, put_f64s, put_u64s, read_frame, write_frame, FrameKind, TcpError, HEADER_BYTES,
+};
+use super::tcp::{accept_with_deadline, connect_with_retry, WorkerNetConfig, METRIC_COUNTERS};
+use super::{CommStats, Exchange};
+use crate::linalg::Csr;
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How many recent exchange rounds of outbound frames every cross-host
+/// connection retains for post-reconnect replay. A peer lagging further
+/// behind a dropped connection than this cannot be replayed to and the
+/// round fails with the typed timeout instead.
+pub const REPLAY_ROUNDS: u64 = 4;
+
+/// Cap on parked payload buffers (excess buffers are dropped) — same
+/// arena discipline as the in-process transport.
+const PAYLOAD_POOL_CAP: usize = 64;
+
+/// A deployment placement: which named host runs each rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// `host_of[rank]` = host name, ranks in hostfile order.
+    host_of: Vec<String>,
+}
+
+impl Placement {
+    /// Pool size (total ranks across all hosts).
+    pub fn k(&self) -> usize {
+        self.host_of.len()
+    }
+
+    /// The host name running `rank`.
+    pub fn host(&self, rank: usize) -> &str {
+        &self.host_of[rank]
+    }
+
+    /// Distinct host names in order of first appearance.
+    pub fn hosts(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for h in &self.host_of {
+            if !out.contains(&h.as_str()) {
+                out.push(h);
+            }
+        }
+        out
+    }
+
+    /// Ranks placed on `host`, ascending.
+    pub fn ranks_on(&self, host: &str) -> Vec<usize> {
+        self.host_of
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.as_str() == host)
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Whether two ranks share a host (every rank shares with itself).
+    pub fn same_host(&self, a: usize, b: usize) -> bool {
+        self.host_of[a] == self.host_of[b]
+    }
+
+    /// The host running rank 0 — by convention also the host running the
+    /// coordinator, which is how all-reduce traffic is classified.
+    pub fn leader_host(&self) -> &str {
+        &self.host_of[0]
+    }
+}
+
+/// Parse an MPI-style hostfile into a [`Placement`].
+///
+/// One host per line, optionally followed by `slots=N` (default 1) for
+/// the number of consecutive ranks the host runs; `#` starts a comment,
+/// blank lines are skipped, and repeated host names accumulate further
+/// ranks. Ranks are assigned in file order:
+///
+/// ```text
+/// hostA slots=2   # ranks 0,1
+/// hostB           # rank 2
+/// hostA           # rank 3 — back on hostA
+/// ```
+pub fn parse_hostfile(text: &str) -> Result<Placement, String> {
+    let mut host_of: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let Some(host) = toks.next() else { continue };
+        let mut slots = 1usize;
+        for tok in toks {
+            if let Some(v) = tok.strip_prefix("slots=") {
+                slots = v.parse().map_err(|_| {
+                    format!("hostfile line {}: bad slot count {v:?}", lineno + 1)
+                })?;
+                if slots == 0 {
+                    return Err(format!("hostfile line {}: slots=0 assigns no ranks", lineno + 1));
+                }
+            } else {
+                return Err(format!(
+                    "hostfile line {}: unknown token {tok:?} (expected `host [slots=N]`)",
+                    lineno + 1
+                ));
+            }
+        }
+        for _ in 0..slots {
+            host_of.push(host.to_string());
+        }
+    }
+    if host_of.is_empty() {
+        return Err("hostfile assigns no ranks (every line is blank or a comment)".to_string());
+    }
+    Ok(Placement { host_of })
+}
+
+/// What lands in a rank's hybrid inbox: channel payloads from co-located
+/// ranks, decoded socket payloads from cross-host reader threads, and
+/// connection lifecycle notices (generation-tagged so a notice from an
+/// already-replaced connection is ignored).
+pub(crate) enum HybridMsg {
+    /// A round-tagged boundary payload from a co-located rank (moved, not
+    /// serialized).
+    Local {
+        /// Sender rank.
+        src: usize,
+        /// Exchange round.
+        round: u64,
+        /// Values in the sender's plan order.
+        vals: Vec<f64>,
+    },
+    /// A round-tagged boundary payload decoded off a cross-host socket.
+    Remote {
+        /// Sender rank.
+        src: usize,
+        /// Exchange round.
+        round: u64,
+        /// Values in the sender's plan order.
+        vals: Vec<f64>,
+    },
+    /// A cross-host connection closed (cleanly or after a shutdown).
+    Closed {
+        /// Peer rank.
+        src: usize,
+        /// Connection generation the notice belongs to.
+        generation: u64,
+    },
+    /// A cross-host connection failed.
+    Failed {
+        /// Peer rank.
+        src: usize,
+        /// Connection generation the notice belongs to.
+        generation: u64,
+        /// What went wrong.
+        err: TcpError,
+    },
+}
+
+/// The in-process channel endpoints wiring one rank into its host's
+/// co-located group. Built by [`local_links`] in the per-host launcher
+/// and consumed by [`HybridExchange::connect`]; opaque outside the crate.
+pub struct LocalLink {
+    pub(crate) rank: usize,
+    pub(crate) inbox: Receiver<HybridMsg>,
+    pub(crate) inbox_tx: Sender<HybridMsg>,
+    /// Senders toward co-located ranks, indexed by rank (`None` for self
+    /// and for ranks on other hosts).
+    pub(crate) peer_txs: Vec<Option<Sender<HybridMsg>>>,
+}
+
+impl LocalLink {
+    /// The rank this link belongs to.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+/// Build the channel links for every rank `placement` puts on `host`,
+/// in ascending rank order. Each link's inbox also receives the rank's
+/// cross-host socket traffic once [`HybridExchange::connect`] wires the
+/// mesh readers into it.
+pub fn local_links(placement: &Placement, host: &str) -> Vec<LocalLink> {
+    let k = placement.k();
+    let ranks = placement.ranks_on(host);
+    let mut txs: Vec<Sender<HybridMsg>> = Vec::with_capacity(ranks.len());
+    let mut rxs: Vec<Receiver<HybridMsg>> = Vec::with_capacity(ranks.len());
+    for _ in &ranks {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    ranks
+        .iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(i, (&r, rx))| {
+            let mut peer_txs: Vec<Option<Sender<HybridMsg>>> = vec![None; k];
+            for (j, &q) in ranks.iter().enumerate() {
+                if q != r {
+                    peer_txs[q] = Some(txs[j].clone());
+                }
+            }
+            LocalLink { rank: r, inbox: rx, inbox_tx: txs[i].clone(), peer_txs }
+        })
+        .collect()
+}
+
+/// Pump one cross-host connection's read end into the hybrid inbox,
+/// tagging lifecycle notices with the connection generation so notices
+/// from a connection that has since been replaced are ignored.
+fn spawn_remote_reader(
+    mut reader: BufReader<TcpStream>,
+    src: usize,
+    generation: u64,
+    tx: Sender<HybridMsg>,
+) {
+    std::thread::spawn(move || {
+        let ctx = format!("rank {src}");
+        loop {
+            match read_frame(&mut reader, &ctx) {
+                Ok(f) => {
+                    if f.kind != FrameKind::Payload || f.src as usize != src {
+                        let _ = tx.send(HybridMsg::Failed {
+                            src,
+                            generation,
+                            err: TcpError::Protocol {
+                                msg: format!(
+                                    "unexpected {:?} frame from rank {} on the rank-{src} \
+                                     data connection",
+                                    f.kind, f.src
+                                ),
+                            },
+                        });
+                        return;
+                    }
+                    match bytes_to_f64s(&f.body, &ctx) {
+                        Ok(vals) => {
+                            if tx
+                                .send(HybridMsg::Remote { src, round: f.tag, vals })
+                                .is_err()
+                            {
+                                return; // exchange dropped; shutting down
+                            }
+                        }
+                        Err(err) => {
+                            let _ = tx.send(HybridMsg::Failed { src, generation, err });
+                            return;
+                        }
+                    }
+                }
+                Err(TcpError::PeerClosed { .. }) => {
+                    let _ = tx.send(HybridMsg::Closed { src, generation });
+                    return;
+                }
+                Err(err) => {
+                    let _ = tx.send(HybridMsg::Failed { src, generation, err });
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// One cross-host mesh connection.
+struct RemotePeer {
+    /// Write half (the reader thread holds a clone of the read half).
+    stream: TcpStream,
+    /// The peer's mesh listener address — what the higher rank redials.
+    addr: String,
+    /// Bumped on every (re)connection; lifecycle notices carry the
+    /// generation they were observed under.
+    generation: u64,
+    /// Whether the current connection is believed alive.
+    up: bool,
+    /// Round-tagged outbound frame bodies retained for replay, oldest
+    /// first, pruned to the last [`REPLAY_ROUNDS`] rounds.
+    replay: VecDeque<(u64, Vec<u8>)>,
+}
+
+/// All channel + socket + recovery state of one rank, kept in its own
+/// struct so [`HybridExchange::exchange_round`] can drive it while a
+/// shared borrow of the exchange-plan cache is alive (disjoint fields).
+struct Mesh {
+    rank: usize,
+    k: usize,
+    /// Kept open for the lifetime of the run: reconnecting higher ranks
+    /// redial it.
+    listener: TcpListener,
+    /// Cross-host connections, indexed by rank (`None` for self and
+    /// co-located ranks).
+    remotes: Vec<Option<RemotePeer>>,
+    inbox: Receiver<HybridMsg>,
+    /// Self-held sender clone: the inbox can never disconnect, so the
+    /// recv timeout is the only liveness guard.
+    inbox_tx: Sender<HybridMsg>,
+    /// Channel senders toward co-located ranks, indexed by rank.
+    local_txs: Vec<Option<Sender<HybridMsg>>>,
+    /// `co_located[q]` — rank q shares this host (false for self).
+    co_located: Vec<bool>,
+    /// Reorder buffer for early payloads, keyed `(sender, round)`.
+    pending: HashMap<(usize, u64), Vec<f64>>,
+    /// Highest round consumed per peer — the replay deduplication
+    /// watermark (only meaningful for cross-host peers).
+    consumed: Vec<u64>,
+    /// Completed mesh reconnections.
+    reconnects: u64,
+    timeout: Duration,
+    retries: u32,
+    backoff: Duration,
+}
+
+impl Mesh {
+    /// The cross-host connection to `peer`, or a typed error when the
+    /// placement never gave us one.
+    fn remote_mut(&mut self, peer: usize) -> Result<&mut RemotePeer, TcpError> {
+        match self.remotes.get_mut(peer).and_then(|r| r.as_mut()) {
+            Some(rp) => Ok(rp),
+            None => {
+                Err(TcpError::Protocol { msg: format!("no mesh connection to rank {peer}") })
+            }
+        }
+    }
+
+    /// Mark the connection to `src` down — but only if `generation`
+    /// matches the current connection, so a stale notice from an
+    /// already-replaced connection's reader is ignored. Shuts the socket
+    /// down so the far side notices promptly and starts its own recovery.
+    fn note_down(&mut self, src: usize, generation: u64) {
+        if let Some(rp) = self.remotes.get_mut(src).and_then(|r| r.as_mut()) {
+            if rp.up && rp.generation == generation {
+                rp.up = false;
+                let _ = rp.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Move a boundary payload to a co-located rank over its channel.
+    fn send_local(&mut self, peer: usize, round: u64, vals: Vec<f64>) -> Result<(), TcpError> {
+        match self.local_txs.get(peer).and_then(|t| t.as_ref()) {
+            Some(tx) => tx
+                .send(HybridMsg::Local { src: self.rank, round, vals })
+                .map_err(|_| TcpError::PeerClosed { who: format!("co-located rank {peer}") }),
+            None => Err(TcpError::Protocol { msg: format!("rank {peer} is not co-located") }),
+        }
+    }
+
+    /// Write one round-tagged payload frame to a cross-host peer. The
+    /// body is retained in the replay buffer *before* the write, so a
+    /// transient failure (broken pipe, peer-side shutdown) recovers by
+    /// reconnecting and replaying instead of erroring out.
+    fn send_remote(&mut self, peer: usize, round: u64, body: &[u8]) -> Result<(), TcpError> {
+        let ctx = format!("rank {peer}");
+        {
+            let rp = self.remote_mut(peer)?;
+            rp.replay.push_back((round, body.to_vec()));
+            while rp.replay.front().is_some_and(|(r, _)| r + REPLAY_ROUNDS <= round) {
+                rp.replay.pop_front();
+            }
+        }
+        let deadline = Instant::now() + self.timeout;
+        if !self.remote_mut(peer)?.up {
+            // recover() replays the retained frames, including this one.
+            return self.recover(peer, deadline);
+        }
+        let rank = self.rank as u16;
+        let result = {
+            let rp = self.remote_mut(peer)?;
+            write_frame(&mut rp.stream, FrameKind::Payload, rank, round, body, &ctx)
+        };
+        match result {
+            Ok(()) => Ok(()),
+            Err(TcpError::Io { .. }) | Err(TcpError::PeerClosed { .. }) => {
+                let generation = self.remote_mut(peer)?.generation;
+                self.note_down(peer, generation);
+                self.recover(peer, deadline)
+            }
+            Err(other) => Err(other),
+        }
+    }
+
+    /// Replay every retained outbound frame to a freshly reconnected
+    /// peer. Replayed bytes are *not* added to the byte ledger —
+    /// first-transmission accounting keeps `payload_bytes` equal to
+    /// `inter_floats × 8`; the receiver deduplicates by consumed round.
+    fn replay_to(&mut self, peer: usize) -> Result<(), TcpError> {
+        let rank = self.rank as u16;
+        let ctx = format!("rank {peer} (replay)");
+        let rp = self.remote_mut(peer)?;
+        for (round, body) in &rp.replay {
+            write_frame(&mut rp.stream, FrameKind::Payload, rank, *round, body, &ctx)?;
+        }
+        Ok(())
+    }
+
+    /// Re-establish the dropped connection to cross-host peer `q` and
+    /// replay retained frames. The static dialer rule mirrors bootstrap:
+    /// the higher rank of the pair redials the lower rank's kept-open
+    /// mesh listener (TCP backlog holds the redial until the lower rank
+    /// accepts). While waiting for `q`, a reconnect Hello from a
+    /// *different* down higher rank is installed too — two connections
+    /// dropping at once must not deadlock the accept loop.
+    fn recover(&mut self, q: usize, deadline: Instant) -> Result<(), TcpError> {
+        let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+        if q < self.rank {
+            // We dialed q at bootstrap; redial with the same knobs.
+            let (addr, generation) = {
+                let rp = self.remote_mut(q)?;
+                let _ = rp.stream.shutdown(Shutdown::Both);
+                rp.up = false;
+                rp.generation += 1;
+                (rp.addr.clone(), rp.generation)
+            };
+            let mut s = connect_with_retry(&addr, self.retries, self.backoff)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            let ctx = format!("rank {q}");
+            write_frame(&mut s, FrameKind::Hello, self.rank as u16, generation, &[], &ctx)?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            spawn_remote_reader(BufReader::new(read_half), q, generation, self.inbox_tx.clone());
+            {
+                let rp = self.remote_mut(q)?;
+                rp.stream = s;
+                rp.up = true;
+            }
+            self.reconnects += 1;
+            return self.replay_to(q);
+        }
+        // q dialed us at bootstrap; wait for its redial.
+        loop {
+            let s = accept_with_deadline(&self.listener, deadline)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            s.set_read_timeout(Some(self.timeout)).map_err(|e| io("peer set timeout", e))?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            let mut reader = BufReader::new(read_half);
+            let hello = read_frame(&mut reader, "mesh re-accept")?;
+            if hello.kind != FrameKind::Hello {
+                return Err(TcpError::Protocol {
+                    msg: format!("expected a reconnect Hello, got a {:?} frame", hello.kind),
+                });
+            }
+            let src = hello.src as usize;
+            let reconnectable = src > self.rank
+                && src < self.k
+                && self.remotes.get(src).and_then(|r| r.as_ref()).is_some_and(|rp| !rp.up);
+            if !reconnectable {
+                return Err(TcpError::Protocol {
+                    msg: format!("unexpected reconnect Hello from rank {src}"),
+                });
+            }
+            s.set_read_timeout(None).map_err(|e| io("peer clear timeout", e))?;
+            let generation = {
+                let rp = self.remote_mut(src)?;
+                let _ = rp.stream.shutdown(Shutdown::Both);
+                rp.generation += 1;
+                rp.stream = s;
+                rp.up = true;
+                rp.generation
+            };
+            // Keep the handshake BufReader — it may already hold replayed
+            // payload bytes that arrived behind the Hello.
+            spawn_remote_reader(reader, src, generation, self.inbox_tx.clone());
+            self.reconnects += 1;
+            self.replay_to(src)?;
+            if src == q {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Receive the `round`-tagged payload from `peer`, parking other
+    /// (possibly future-round) payloads in the reorder buffer. Replayed
+    /// duplicates of already-consumed rounds are dropped against the
+    /// per-peer watermark; a dropped connection to the awaited peer is
+    /// recovered in place. The whole wait is bounded by one timeout
+    /// window — past it, the round fails with the typed error.
+    fn recv_round(&mut self, peer: usize, round: u64) -> Result<Vec<f64>, TcpError> {
+        let deadline = Instant::now() + self.timeout;
+        if let Some(d) = self.pending.remove(&(peer, round)) {
+            if !self.co_located[peer] && round > self.consumed[peer] {
+                self.consumed[peer] = round;
+            }
+            return Ok(d);
+        }
+        if !self.co_located[peer]
+            && self.remotes.get(peer).and_then(|r| r.as_ref()).is_some_and(|rp| !rp.up)
+        {
+            self.recover(peer, deadline)?;
+        }
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(TcpError::Timeout {
+                    who: format!("rank {peer}"),
+                    waiting_for: format!("the round-{round} boundary payload"),
+                });
+            }
+            match self.inbox.recv_timeout(left) {
+                Ok(HybridMsg::Local { src, round: r, vals }) => {
+                    if src == peer && r == round {
+                        return Ok(vals);
+                    }
+                    // Channels cannot legitimately duplicate: a second
+                    // copy of the same (sender, round) is a wiring bug.
+                    if self.pending.insert((src, r), vals).is_some() {
+                        return Err(TcpError::Protocol {
+                            msg: format!("duplicate channel payload from rank {src} round {r}"),
+                        });
+                    }
+                }
+                Ok(HybridMsg::Remote { src, round: r, vals }) => {
+                    if r <= self.consumed[src] {
+                        continue; // replayed duplicate of a consumed round
+                    }
+                    if src == peer && r == round {
+                        self.consumed[src] = r;
+                        return Ok(vals);
+                    }
+                    // A replay may duplicate a parked-but-unconsumed
+                    // round; keep the first copy (they are bit-identical).
+                    self.pending.entry((src, r)).or_insert(vals);
+                }
+                Ok(HybridMsg::Closed { src, generation }) => {
+                    self.note_down(src, generation);
+                    if src == peer {
+                        self.recover(peer, deadline)?;
+                    }
+                }
+                Ok(HybridMsg::Failed { src, generation, err }) => {
+                    if matches!(err, TcpError::Protocol { .. }) {
+                        // Protocol violations are bugs, not transients —
+                        // reconnecting would mask them.
+                        return Err(TcpError::Protocol {
+                            msg: format!("data connection to rank {src} failed: {err}"),
+                        });
+                    }
+                    self.note_down(src, generation);
+                    if src == peer {
+                        self.recover(peer, deadline)?;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TcpError::Timeout {
+                        who: format!("rank {peer}"),
+                        waiting_for: format!("the round-{round} boundary payload"),
+                    });
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Unreachable: the mesh holds its own inbox sender.
+                    return Err(TcpError::Protocol {
+                        msg: "hybrid inbox disconnected".to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Per-rank [`Exchange`] handle of the hybrid transport.
+///
+/// Semantically a [`ShardExchange`](super::partitioned::ShardExchange)
+/// whose channels to other hosts are sockets: plan-driven shipping,
+/// round-tagged reorder buffering, sequence-keyed all-reduce through the
+/// leader connection. One OS process per *host* runs one handle per rank
+/// it hosts (see [`crate::coordinator::tcp`] for the per-host launcher).
+pub struct HybridExchange {
+    n: usize,
+    k: usize,
+    m_edges: usize,
+    rank: usize,
+    lap: Arc<Csr>,
+    plan: ShardPlan,
+    /// Channel + socket + recovery state (its own struct so recovery is
+    /// reachable while the plan cache is borrowed).
+    mesh: Mesh,
+    /// Write half of the leader connection (all-reduce up, metrics).
+    leader: TcpStream,
+    /// Read half of the leader connection (peer table, all-reduce down).
+    leader_reader: BufReader<TcpStream>,
+    /// Whether this rank shares a host with rank 0 (and hence, by
+    /// convention, with the coordinator): decides how all-reduce traffic
+    /// is classified in the intra/inter ledger.
+    leader_is_local: bool,
+    /// Mirror of the global stack holding fresh values for covered nodes.
+    mirror: Vec<f64>,
+    round: u64,
+    red_seq: u64,
+    /// Per-operator exchange plans (same derivation as `ShardExchange`).
+    op_plans: HashMap<OpKey, ExchangePlan>,
+    /// Arena of boundary-payload buffers for the channel path.
+    payload_pool: Vec<Vec<f64>>,
+    /// Reused frame-body encode buffer for the socket path.
+    body_scratch: Vec<u8>,
+    /// Persistent scratch for the fresh-masked receive row list.
+    fresh_scratch: Vec<usize>,
+    stats: CommStats,
+    intra_cross: u64,
+    intra_floats: u64,
+    inter_cross: u64,
+    inter_floats: u64,
+    payload_bytes: u64,
+    header_bytes: u64,
+}
+
+impl HybridExchange {
+    /// Join the pool: rendezvous through the leader, verify the broadcast
+    /// placement against the local hostfile, then build a mesh of
+    /// *cross-host* connections only (co-located ranks already share
+    /// channels through `link`). `plan` must be this rank's entry of
+    /// [`build_shard_plans`](super::partitioned::build_shard_plans) and
+    /// `lap` the graph Laplacian, shared (`Arc`) because one per-host
+    /// process runs several ranks.
+    pub fn connect(
+        net: &WorkerNetConfig,
+        placement: &Placement,
+        link: LocalLink,
+        n: usize,
+        m_edges: usize,
+        lap: Arc<Csr>,
+        plan: ShardPlan,
+    ) -> Result<HybridExchange, TcpError> {
+        let (rank, k) = (net.rank, net.k);
+        if k == 0 || rank >= k || k > u16::MAX as usize {
+            return Err(TcpError::Protocol { msg: format!("bad rank/pool: rank {rank} of {k}") });
+        }
+        if placement.k() != k {
+            return Err(TcpError::Protocol {
+                msg: format!("hostfile places {} ranks, pool has {k}", placement.k()),
+            });
+        }
+        if link.rank != rank {
+            return Err(TcpError::Protocol {
+                msg: format!("local link is for rank {}, not rank {rank}", link.rank),
+            });
+        }
+        if plan.worker != rank {
+            return Err(TcpError::Protocol {
+                msg: format!("shard plan is for worker {}, not rank {rank}", plan.worker),
+            });
+        }
+        if lap.rows != n {
+            return Err(TcpError::Protocol {
+                msg: format!("Laplacian is {}×{}, graph has {n} nodes", lap.rows, lap.cols),
+            });
+        }
+        let co_located: Vec<bool> =
+            (0..k).map(|q| q != rank && placement.same_host(rank, q)).collect();
+        for (q, tx) in link.peer_txs.iter().enumerate() {
+            if tx.is_some() != co_located[q] {
+                return Err(TcpError::Protocol {
+                    msg: format!(
+                        "link wiring does not match the placement: rank {q} is {} but has {} \
+                         channel",
+                        if co_located[q] { "co-located" } else { "remote" },
+                        if tx.is_some() { "a" } else { "no" },
+                    ),
+                });
+            }
+        }
+        let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
+
+        // 1. Leader rendezvous: dial (with retry), bind our own mesh
+        //    listener on the same interface, advertise it.
+        let mut leader = connect_with_retry(&net.leader_addr, net.retries, net.backoff)?;
+        leader.set_nodelay(true).map_err(|e| io("leader set_nodelay", e))?;
+        leader.set_read_timeout(Some(net.timeout)).map_err(|e| io("leader set timeout", e))?;
+        let local_ip = leader.local_addr().map_err(|e| io("leader local_addr", e))?.ip();
+        let listener = TcpListener::bind((local_ip, 0)).map_err(|e| io("bind mesh listener", e))?;
+        let my_addr = listener.local_addr().map_err(|e| io("listener local_addr", e))?;
+        write_frame(
+            &mut leader,
+            FrameKind::Hello,
+            rank as u16,
+            0,
+            my_addr.to_string().as_bytes(),
+            "leader",
+        )?;
+
+        // 2. Peer table with the leader's placement column: every worker
+        //    cross-checks it against the local hostfile — two processes
+        //    disagreeing about co-location would corrupt the byte ledger.
+        let mut leader_reader =
+            BufReader::new(leader.try_clone().map_err(|e| io("leader try_clone", e))?);
+        let table = read_frame(&mut leader_reader, "leader")?;
+        if table.kind != FrameKind::PeerTable {
+            return Err(TcpError::Protocol {
+                msg: format!("expected the peer table, got a {:?} frame", table.kind),
+            });
+        }
+        let text = String::from_utf8(table.body)
+            .map_err(|_| TcpError::BadFrame { msg: "peer table is not UTF-8".to_string() })?;
+        let lines: Vec<&str> = text.lines().collect();
+        if lines.len() != k {
+            return Err(TcpError::Protocol {
+                msg: format!("peer table lists {} workers, expected {k}", lines.len()),
+            });
+        }
+        let mut addrs: Vec<String> = Vec::with_capacity(k);
+        for (q, line) in lines.iter().enumerate() {
+            let mut cols = line.split('\t');
+            let addr = cols.next().unwrap_or(line);
+            match cols.next() {
+                Some(host) if host != placement.host(q) => {
+                    return Err(TcpError::Protocol {
+                        msg: format!(
+                            "placement drift: the leader places rank {q} on {host:?}, the local \
+                             hostfile says {:?}",
+                            placement.host(q)
+                        ),
+                    });
+                }
+                Some(_) => {}
+                None => {
+                    return Err(TcpError::Protocol {
+                        msg: "the leader did not broadcast a placement — start it with the \
+                              same hostfile (`--transport hybrid --hostfile F`)"
+                            .to_string(),
+                    });
+                }
+            }
+            addrs.push(addr.to_string());
+        }
+
+        // 3. Cross-host mesh only: dial every lower cross-host rank,
+        //    accept every higher cross-host rank. Co-located ranks keep
+        //    their channels. Connections start at generation 1.
+        let mut remotes: Vec<Option<RemotePeer>> = (0..k).map(|_| None).collect();
+        for (q, addr) in addrs.iter().enumerate().take(rank) {
+            if co_located[q] {
+                continue;
+            }
+            let mut s = connect_with_retry(addr, net.retries, net.backoff)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            write_frame(&mut s, FrameKind::Hello, rank as u16, 1, &[], &format!("rank {q}"))?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            spawn_remote_reader(BufReader::new(read_half), q, 1, link.inbox_tx.clone());
+            remotes[q] = Some(RemotePeer {
+                stream: s,
+                addr: addr.clone(),
+                generation: 1,
+                up: true,
+                replay: VecDeque::new(),
+            });
+        }
+        let expect_accepts =
+            (rank + 1..k).filter(|&q| !placement.same_host(rank, q)).count();
+        let deadline = Instant::now() + net.timeout;
+        for _ in 0..expect_accepts {
+            let s = accept_with_deadline(&listener, deadline)?;
+            s.set_nodelay(true).map_err(|e| io("peer set_nodelay", e))?;
+            s.set_read_timeout(Some(net.timeout)).map_err(|e| io("peer set timeout", e))?;
+            let read_half = s.try_clone().map_err(|e| io("peer try_clone", e))?;
+            let mut reader = BufReader::new(read_half);
+            let hello = read_frame(&mut reader, "peer handshake")?;
+            if hello.kind != FrameKind::Hello {
+                return Err(TcpError::Protocol {
+                    msg: format!("expected a mesh Hello, got a {:?} frame", hello.kind),
+                });
+            }
+            let src = hello.src as usize;
+            if src <= rank || src >= k || co_located[src] {
+                return Err(TcpError::Protocol {
+                    msg: format!("mesh Hello from out-of-range or co-located rank {src}"),
+                });
+            }
+            if remotes[src].is_some() {
+                return Err(TcpError::Protocol {
+                    msg: format!("duplicate mesh connection from rank {src}"),
+                });
+            }
+            // Handshake done: payload reads block indefinitely in the
+            // reader thread (hang protection is the inbox recv timeout).
+            s.set_read_timeout(None).map_err(|e| io("peer clear timeout", e))?;
+            // Keep the handshake BufReader — it may already hold buffered
+            // payload bytes that arrived behind the Hello.
+            spawn_remote_reader(reader, src, 1, link.inbox_tx.clone());
+            remotes[src] = Some(RemotePeer {
+                stream: s,
+                addr: addrs[src].clone(),
+                generation: 1,
+                up: true,
+                replay: VecDeque::new(),
+            });
+        }
+
+        let leader_is_local = placement.same_host(rank, 0);
+        let mesh = Mesh {
+            rank,
+            k,
+            listener,
+            remotes,
+            inbox: link.inbox,
+            inbox_tx: link.inbox_tx,
+            local_txs: link.peer_txs,
+            co_located,
+            pending: HashMap::new(),
+            consumed: vec![0; k],
+            reconnects: 0,
+            timeout: net.timeout,
+            retries: net.retries,
+            backoff: net.backoff,
+        };
+        Ok(HybridExchange {
+            n,
+            k,
+            m_edges,
+            rank,
+            lap,
+            plan,
+            mesh,
+            leader,
+            leader_reader,
+            leader_is_local,
+            mirror: Vec::new(),
+            round: 0,
+            red_seq: 0,
+            op_plans: HashMap::new(),
+            payload_pool: Vec::new(),
+            body_scratch: Vec::new(),
+            fresh_scratch: Vec::new(),
+            stats: CommStats::default(),
+            intra_cross: 0,
+            intra_floats: 0,
+            inter_cross: 0,
+            inter_floats: 0,
+            payload_bytes: 0,
+            header_bytes: 0,
+        })
+    }
+
+    /// This worker's rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// This worker's shard plan.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The exchange plan the transport derived (or had registered) for an
+    /// operator, if any — lets tests and benches inspect what ships.
+    pub fn plan_for(&self, a: &Csr) -> Option<&ExchangePlan> {
+        self.op_plans.get(&op_key(a))
+    }
+
+    /// Real cross-worker payloads so far over *both* legs — identical to
+    /// `ShardExchange::cross_messages` / `TcpExchange::cross_messages`
+    /// on the same run (the placement only decides the split).
+    pub fn cross_messages(&self) -> u64 {
+        self.intra_cross + self.inter_cross
+    }
+
+    /// Real floats moved over both legs so far.
+    pub fn cross_floats(&self) -> u64 {
+        self.intra_floats + self.inter_floats
+    }
+
+    /// Cross-worker payloads that stayed on this host (channel leg).
+    pub fn intra_cross(&self) -> u64 {
+        self.intra_cross
+    }
+
+    /// Floats moved between co-located ranks (channel leg, never
+    /// serialized).
+    pub fn intra_floats(&self) -> u64 {
+        self.intra_floats
+    }
+
+    /// Cross-worker payloads that left this host (socket leg).
+    pub fn inter_cross(&self) -> u64 {
+        self.inter_cross
+    }
+
+    /// Floats moved over sockets to other hosts.
+    pub fn inter_floats(&self) -> u64 {
+        self.inter_floats
+    }
+
+    /// Real payload bytes written to cross-host sockets — exactly
+    /// [`inter_floats`](Self::inter_floats)` × 8`: the wire-truth
+    /// invariant, now counting only bytes that actually leave the host.
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_bytes
+    }
+
+    /// Fixed framing overhead written to cross-host sockets:
+    /// [`HEADER_BYTES`](super::tcp::frame::HEADER_BYTES) per first
+    /// transmission of a data frame (replays are not re-counted).
+    pub fn header_bytes(&self) -> u64 {
+        self.header_bytes
+    }
+
+    /// Completed mesh reconnections (0 on a healthy run).
+    pub fn reconnects(&self) -> u64 {
+        self.mesh.reconnects
+    }
+
+    /// Fault-injection hook for the reconnect tests: shut down the mesh
+    /// socket to cross-host rank `q` as a transient network failure
+    /// would. The next exchange involving `q` detects the dead
+    /// connection, reconnects, and replays — completing with identical
+    /// iterates — or fails with the typed error past the deadline.
+    pub fn drop_mesh_connection(&mut self, q: usize) {
+        if let Some(rp) = self.mesh.remotes.get_mut(q).and_then(|r| r.as_mut()) {
+            let _ = rp.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl HybridExchange {
+    /// Report this iteration's metrics to the leader (the
+    /// [`METRIC_COUNTERS`] `u64`s followed by the shard's owned θ rows),
+    /// tagged with the iteration number. Unlike the pure TCP transport,
+    /// the intra/inter columns carry the real placement split.
+    pub fn send_metrics(&mut self, iter: u64, thetas: &[f64]) -> Result<(), TcpError> {
+        self.body_scratch.clear();
+        let counters: [u64; METRIC_COUNTERS] = [
+            self.intra_cross + self.inter_cross,
+            self.intra_floats + self.inter_floats,
+            self.intra_cross,
+            self.intra_floats,
+            self.inter_cross,
+            self.inter_floats,
+            self.payload_bytes,
+            self.header_bytes,
+            self.stats.messages,
+            self.stats.floats,
+            self.stats.rounds,
+            self.stats.allreduces,
+        ];
+        put_u64s(&mut self.body_scratch, &counters);
+        put_f64s(&mut self.body_scratch, thetas);
+        write_frame(
+            &mut self.leader,
+            FrameKind::Metric,
+            self.rank as u16,
+            iter,
+            &self.body_scratch,
+            "leader",
+        )
+    }
+
+    /// Ensure an exchange plan exists for `a` (graph-halo rule, identical
+    /// to the in-process transport).
+    fn ensure_plan(&mut self, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
+        }
+        for &u in &self.plan.owned {
+            for kk in a.indptr[u]..a.indptr[u + 1] {
+                assert!(
+                    self.plan.covered[a.indices[kk]],
+                    "operator support escapes the halo at row {u}: the partitioned \
+                     transport only ships graph-support operators unless an overlay \
+                     plan is registered (Exchange::register_plan)"
+                );
+            }
+        }
+        let plan = derive_exchange_plan("graph-support", a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
+    }
+
+    /// One plan-driven exchange round. Identical structure to
+    /// `ShardExchange::exchange_round`, with each peer's leg picked by
+    /// placement: co-located peers get the moved-`Vec` channel payload
+    /// (arena-recycled, zero serialization), cross-host peers get one
+    /// checksummed frame of raw `f64` bit patterns — and the ledger
+    /// splits accordingly.
+    fn exchange_round(
+        &mut self,
+        a: &Csr,
+        fresh: Option<&[bool]>,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) -> Result<(), TcpError> {
+        let ln = self.plan.owned.len();
+        assert_eq!(a.rows, self.n, "operator shape mismatch");
+        assert_eq!(x.len(), ln * w, "payload shape mismatch");
+        assert_eq!(out.len(), ln * w);
+        if let Some(m) = fresh {
+            assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        self.ensure_plan(a);
+        self.round += 1;
+        let round = self.round;
+        let mirror_reset = self.mirror.len() != self.n * w;
+        if mirror_reset {
+            self.mirror = vec![0.0; self.n * w];
+        }
+        let key = op_key(a);
+        let xplan = &self.op_plans[&key];
+        let live = |u: usize| fresh.is_none_or(|m| m[u]);
+
+        // Same guard as the in-process transport: a fresh round right
+        // after a mirror (re)allocation would read unseeded halo rows.
+        if mirror_reset && fresh.is_some() {
+            for (_, rows) in &xplan.recv {
+                for &u in rows {
+                    assert!(
+                        live(u),
+                        "fresh exchange after a mirror reset would read unseeded halo \
+                         row {u}: issue a full exchange at this width first"
+                    );
+                }
+            }
+        }
+
+        // 1. Ship the plan's (fresh) owned rows to each peer, routed by
+        //    placement. Skip-empty is decided from the same global plan +
+        //    mask on both endpoints, exactly as on the other transports.
+        for (peer, rows) in &xplan.send {
+            if self.mesh.co_located[*peer] {
+                let mut buf = self.payload_pool.pop().unwrap_or_default();
+                buf.clear();
+                buf.reserve(rows.len() * w);
+                let mut shipped = 0u64;
+                for &u in rows {
+                    if !live(u) {
+                        continue;
+                    }
+                    let li = self.plan.local_of[u];
+                    buf.extend_from_slice(&x[li * w..(li + 1) * w]);
+                    shipped += 1;
+                }
+                if shipped == 0 {
+                    if self.payload_pool.len() < PAYLOAD_POOL_CAP {
+                        self.payload_pool.push(buf);
+                    }
+                    continue;
+                }
+                self.mesh.send_local(*peer, round, buf)?;
+                self.intra_cross += shipped;
+                self.intra_floats += shipped * w as u64;
+            } else {
+                self.body_scratch.clear();
+                let mut shipped = 0u64;
+                for &u in rows {
+                    if !live(u) {
+                        continue;
+                    }
+                    let li = self.plan.local_of[u];
+                    put_f64s(&mut self.body_scratch, &x[li * w..(li + 1) * w]);
+                    shipped += 1;
+                }
+                if shipped == 0 {
+                    continue;
+                }
+                self.mesh.send_remote(*peer, round, &self.body_scratch)?;
+                self.inter_cross += shipped;
+                self.inter_floats += shipped * w as u64;
+                self.payload_bytes += self.body_scratch.len() as u64;
+                self.header_bytes += HEADER_BYTES;
+            }
+        }
+
+        // 2. Refresh the mirror: owned rows from `x`, (fresh) halo rows
+        //    from the peers — both legs land in the same reorder-buffered
+        //    inbox, so the receive side is placement-agnostic.
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            self.mirror[u * w..(u + 1) * w].copy_from_slice(&x[li * w..(li + 1) * w]);
+        }
+        for (peer, rows) in &xplan.recv {
+            let expect: &[usize] = match fresh {
+                None => rows,
+                Some(_) => {
+                    self.fresh_scratch.clear();
+                    self.fresh_scratch.extend(rows.iter().copied().filter(|&u| live(u)));
+                    &self.fresh_scratch
+                }
+            };
+            if expect.is_empty() {
+                continue;
+            }
+            let data = self.mesh.recv_round(*peer, round)?;
+            if data.len() != expect.len() * w {
+                return Err(TcpError::Protocol {
+                    msg: format!(
+                        "halo payload width drifted: rank {peer} round {round} sent {} floats, \
+                         expected {}",
+                        data.len(),
+                        expect.len() * w
+                    ),
+                });
+            }
+            for (idx, &u) in expect.iter().enumerate() {
+                self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
+            }
+            if self.payload_pool.len() < PAYLOAD_POOL_CAP && data.capacity() > 0 {
+                self.payload_pool.push(data);
+            }
+        }
+
+        // 3. Owned rows via the shared CSR row kernel — bit-for-bit equal
+        //    to every other transport.
+        for (li, &u) in self.plan.owned.iter().enumerate() {
+            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+        }
+        self.stats.record_exchange(directed_messages, w);
+        Ok(())
+    }
+
+    /// Sequence-tagged all-reduce through the leader connection,
+    /// classified intra-host when this rank shares the leader's host
+    /// (the frames then ride a loopback socket, which the inter-host
+    /// byte ledger deliberately excludes).
+    fn allreduce_impl(&mut self, locals: &[f64], w: usize) -> Result<Vec<f64>, TcpError> {
+        assert_eq!(locals.len(), self.plan.owned.len() * w);
+        self.red_seq += 1;
+        self.body_scratch.clear();
+        put_f64s(&mut self.body_scratch, locals);
+        write_frame(
+            &mut self.leader,
+            FrameKind::ReduceUp,
+            self.rank as u16,
+            self.red_seq,
+            &self.body_scratch,
+            "leader",
+        )?;
+        let down = read_frame(&mut self.leader_reader, "leader")?;
+        if down.kind != FrameKind::ReduceDown {
+            return Err(TcpError::Protocol {
+                msg: format!("expected an all-reduce total, got a {:?} frame", down.kind),
+            });
+        }
+        if down.tag != self.red_seq {
+            return Err(TcpError::Protocol {
+                msg: format!(
+                    "all-reduce sequence drifted: got total {} while at sequence {}",
+                    down.tag, self.red_seq
+                ),
+            });
+        }
+        let total = bytes_to_f64s(&down.body, "leader reduce-down")?;
+        if total.len() != w {
+            return Err(TcpError::Protocol {
+                msg: format!("all-reduce width drifted: got {} floats, expected {w}", total.len()),
+            });
+        }
+        if self.k > 1 {
+            if self.leader_is_local {
+                self.intra_cross += 2;
+                self.intra_floats += (locals.len() + w) as u64;
+            } else {
+                self.inter_cross += 2;
+                self.inter_floats += (locals.len() + w) as u64;
+                self.payload_bytes += ((locals.len() + w) * 8) as u64;
+                self.header_bytes += 2 * HEADER_BYTES;
+            }
+        }
+        self.stats.record_allreduce(self.n, w);
+        Ok(total)
+    }
+
+    /// Surface an unrecoverable transport failure as a loud panic, same
+    /// as every other transport (a deadlocked pool would be strictly
+    /// worse). Transient socket failures never reach this — they are
+    /// absorbed by reconnect-and-replay; what remains is protocol drift
+    /// or a peer that stayed dead past the deadline.
+    fn die(&self, err: TcpError) -> ! {
+        // sddn-lint: allow(panic) reason=transport loss past the reconnect deadline is unrecoverable under the Exchange contract; dying loudly with the peer diagnosis beats deadlocking the pool
+        panic!("hybrid transport rank {}: {err}", self.rank)
+    }
+}
+
+impl Exchange for HybridExchange {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn owned(&self) -> &[usize] {
+        &self.plan.owned
+    }
+
+    fn exchange_apply(
+        &mut self,
+        a: &Csr,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) = self.exchange_round(a, None, directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn exchange_apply_fresh(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) = self.exchange_round(a, Some(fresh), directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn register_plan(&mut self, name: &str, a: &Csr) {
+        let key = op_key(a);
+        if self.op_plans.contains_key(&key) {
+            return;
+        }
+        let plan = derive_exchange_plan(name, a, &self.plan.owner, self.plan.worker);
+        self.op_plans.insert(key, plan);
+    }
+
+    fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
+        let lap = Arc::clone(&self.lap);
+        let dm = 2 * self.m_edges as u64;
+        // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph plus diagonal
+        self.exchange_apply(&lap, dm, x, w, out);
+    }
+
+    fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+        match self.allreduce_impl(locals, w) {
+            Ok(total) => total,
+            Err(e) => self.die(e),
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+}
+
+impl Drop for HybridExchange {
+    /// Shut down every socket so blocked reader threads (ours and the
+    /// peers') observe the close instead of waiting out their timeouts.
+    fn drop(&mut self) {
+        for rp in self.mesh.remotes.iter().flatten() {
+            let _ = rp.stream.shutdown(Shutdown::Both);
+        }
+        let _ = self.leader.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_hostfile_assigns_ranks_in_file_order() {
+        let text = "alpha slots=2   # ranks 0,1\nbeta\n\n# a comment line\ngamma slots=1\nalpha\n";
+        let p = parse_hostfile(text).unwrap();
+        assert_eq!(p.k(), 5);
+        assert_eq!(
+            (0..5).map(|r| p.host(r)).collect::<Vec<_>>(),
+            ["alpha", "alpha", "beta", "gamma", "alpha"]
+        );
+        assert_eq!(p.hosts(), ["alpha", "beta", "gamma"]);
+        assert_eq!(p.ranks_on("alpha"), [0, 1, 4]);
+        assert_eq!(p.ranks_on("beta"), [2]);
+        assert!(p.ranks_on("nowhere").is_empty());
+        assert!(p.same_host(0, 1));
+        assert!(p.same_host(0, 4));
+        assert!(!p.same_host(1, 2));
+        assert!(p.same_host(2, 2), "a rank shares a host with itself");
+        assert_eq!(p.leader_host(), "alpha");
+    }
+
+    #[test]
+    fn parse_hostfile_rejects_malformed_input() {
+        for (text, needle) in [
+            ("", "no ranks"),
+            ("# only comments\n\n", "no ranks"),
+            ("a slots=0", "slots=0"),
+            ("a slots=many", "bad slot count"),
+            ("a b", "unknown token"),
+        ] {
+            let err = parse_hostfile(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn local_links_wire_only_co_located_ranks() {
+        let p = parse_hostfile("h0 slots=2\nh1 slots=2\n").unwrap();
+        let links = local_links(&p, "h0");
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0].rank(), 0);
+        assert_eq!(links[1].rank(), 1);
+        for link in &links {
+            assert_eq!(link.peer_txs.len(), 4);
+            assert!(link.peer_txs[link.rank].is_none(), "no self channel");
+            assert!(link.peer_txs[2].is_none(), "no channel to another host");
+            assert!(link.peer_txs[3].is_none(), "no channel to another host");
+        }
+        // Rank 0's sender toward rank 1 feeds rank 1's inbox.
+        links[0].peer_txs[1]
+            .as_ref()
+            .unwrap()
+            .send(HybridMsg::Local { src: 0, round: 7, vals: vec![1.5, -2.5] })
+            .unwrap();
+        match links[1].inbox.recv_timeout(Duration::from_secs(1)).unwrap() {
+            HybridMsg::Local { src, round, vals } => {
+                assert_eq!((src, round), (0, 7));
+                assert_eq!(vals, [1.5, -2.5]);
+            }
+            _ => panic!("expected the channel payload"),
+        }
+        assert!(local_links(&p, "nowhere").is_empty());
+    }
+
+    /// A mesh with no live remote connections, for driving `recv_round`
+    /// through hand-injected inbox messages.
+    fn bare_mesh(k: usize, rank: usize, co_located: Vec<bool>) -> Mesh {
+        let (tx, rx) = channel();
+        Mesh {
+            rank,
+            k,
+            listener: TcpListener::bind("127.0.0.1:0").unwrap(),
+            remotes: (0..k).map(|_| None).collect(),
+            inbox: rx,
+            inbox_tx: tx,
+            local_txs: vec![None; k],
+            co_located,
+            pending: HashMap::new(),
+            consumed: vec![0; k],
+            reconnects: 0,
+            timeout: Duration::from_millis(200),
+            retries: 0,
+            backoff: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn recv_round_drops_replayed_socket_duplicates() {
+        let mut mesh = bare_mesh(2, 0, vec![false, false]);
+        let tx = mesh.inbox_tx.clone();
+        tx.send(HybridMsg::Remote { src: 1, round: 1, vals: vec![1.0] }).unwrap();
+        tx.send(HybridMsg::Remote { src: 1, round: 1, vals: vec![-1.0] }).unwrap();
+        tx.send(HybridMsg::Remote { src: 1, round: 2, vals: vec![2.0] }).unwrap();
+        assert_eq!(mesh.recv_round(1, 1).unwrap(), [1.0], "first copy wins");
+        // The round-1 duplicate is behind the consumed watermark now and
+        // must be skipped on the way to round 2.
+        assert_eq!(mesh.recv_round(1, 2).unwrap(), [2.0]);
+        // A late replay of a consumed round is dropped, not parked.
+        tx.send(HybridMsg::Remote { src: 1, round: 1, vals: vec![9.0] }).unwrap();
+        tx.send(HybridMsg::Remote { src: 1, round: 3, vals: vec![3.0] }).unwrap();
+        assert_eq!(mesh.recv_round(1, 3).unwrap(), [3.0]);
+        assert!(mesh.pending.is_empty(), "stale replays must not accumulate");
+    }
+
+    #[test]
+    fn recv_round_rejects_duplicate_channel_payloads() {
+        let mut mesh = bare_mesh(2, 0, vec![false, true]);
+        let tx = mesh.inbox_tx.clone();
+        // Channels cannot legitimately duplicate — two copies of the same
+        // (sender, round) is a wiring bug, not a replay.
+        tx.send(HybridMsg::Local { src: 1, round: 5, vals: vec![1.0] }).unwrap();
+        tx.send(HybridMsg::Local { src: 1, round: 5, vals: vec![1.0] }).unwrap();
+        match mesh.recv_round(1, 6) {
+            Err(TcpError::Protocol { msg }) => assert!(msg.contains("duplicate"), "{msg}"),
+            other => panic!("expected Protocol, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_round_times_out_with_the_typed_error() {
+        let mut mesh = bare_mesh(2, 0, vec![false, false]);
+        let start = Instant::now();
+        match mesh.recv_round(1, 4) {
+            Err(TcpError::Timeout { who, waiting_for }) => {
+                assert_eq!(who, "rank 1");
+                assert!(waiting_for.contains("round-4"), "{waiting_for}");
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert!(start.elapsed() >= Duration::from_millis(150), "must wait out the window");
+    }
+
+    #[test]
+    fn stale_generation_notices_do_not_mark_a_replaced_connection_down() {
+        let mut mesh = bare_mesh(2, 0, vec![false, false]);
+        // Fake a live generation-2 connection using a loopback socket.
+        let hold = TcpListener::bind("127.0.0.1:0").unwrap();
+        let s = TcpStream::connect(hold.local_addr().unwrap()).unwrap();
+        mesh.remotes[1] = Some(RemotePeer {
+            stream: s,
+            addr: "127.0.0.1:1".to_string(),
+            generation: 2,
+            up: true,
+            replay: VecDeque::new(),
+        });
+        mesh.note_down(1, 1); // notice from the replaced generation-1 reader
+        assert!(mesh.remotes[1].as_ref().unwrap().up, "stale notice must be ignored");
+        mesh.note_down(1, 2);
+        assert!(!mesh.remotes[1].as_ref().unwrap().up, "current notice must mark down");
+    }
+}

@@ -32,9 +32,19 @@
 //!   transports, with the wire-truth ledger extended to observed socket
 //!   bytes (`payload_bytes == cross_floats × 8`, headers accounted
 //!   separately).
+//! - [`hybrid::HybridExchange`] is the host-aware hybrid transport: a
+//!   hostfile maps ranks to named hosts, co-located ranks exchange
+//!   through the in-process channel path (zero serialization) while
+//!   cross-host edges ride the checksummed TCP frames — the deployment
+//!   shape of a real multi-node cluster, where intra-node and inter-node
+//!   links differ by orders of magnitude. The ledger splits accordingly
+//!   (`cross_floats` into intra-host vs inter-host, socket bytes counted
+//!   only on inter-host edges), and dropped mesh connections reconnect
+//!   and replay instead of killing the run.
 
 #![warn(missing_docs)]
 
+pub mod hybrid;
 pub mod model;
 pub mod partitioned;
 pub mod stats;

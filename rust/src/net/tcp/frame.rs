@@ -3,7 +3,7 @@
 //! One frame is a fixed 16-byte header followed by `len` body bytes:
 //!
 //! ```text
-//! [len: u32 LE][kind: u8][reserved: u8 = 0][src: u16 LE][tag: u64 LE]
+//! [len: u32 LE][kind: u8][reserved: u8 = 0][src: u16 LE][tag: u32 LE][crc32: u32 LE]
 //! ```
 //!
 //! There is no serde: payload bodies are raw `f64` bit patterns in
@@ -11,11 +11,22 @@
 //! contract the in-process `ShardExchange` payloads use, see
 //! [`super::super::partitioned`]), control bodies are `u64` counters or
 //! UTF-8 address strings. `tag` carries the exchange round / reduce
-//! sequence / iteration number, `src` the sender's rank.
+//! sequence / iteration number (bounded to `u32` on the wire — round
+//! counters never approach 2³²; the writer rejects larger tags with a
+//! typed error instead of silently wrapping), `src` the sender's rank.
+//!
+//! The trailing `crc32` field is a CRC-32/IEEE checksum over the first 12
+//! header bytes followed by the body. Every frame is checksummed on write
+//! and verified on read — a mismatch surfaces as [`TcpError::Corrupt`]
+//! instead of letting a flipped bit silently perturb an iterate. (The
+//! length prefix is covered by the checksum but must be trusted *before*
+//! verification to know how many body bytes to read; the independent
+//! [`MAX_BODY_BYTES`] cap bounds the damage a corrupted length can do.)
 //!
 //! Everything here is pure `Read`/`Write` plumbing so the codec is
 //! testable against in-memory cursors; socket-specific robustness
-//! (connect retry, read timeouts) lives in [`super`].
+//! (connect retry, read timeouts, reconnect) lives in [`super`] and
+//! [`crate::net::hybrid`].
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -31,6 +42,37 @@ pub const HEADER_BYTES: u64 = 16;
 /// the receiver to reserve gigabytes.
 pub const MAX_BODY_BYTES: u32 = 1 << 28;
 
+/// CRC-32/IEEE lookup table (reflected polynomial `0xEDB88320`), built at
+/// compile time — the crate stays dependency-free.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32/IEEE over a sequence of byte chunks (checksummed as if they
+/// were one contiguous buffer — lets the frame codec cover header and
+/// body without concatenating them).
+pub fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
 /// Frame discriminant (byte 4 of the header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
@@ -38,7 +80,8 @@ pub enum FrameKind {
     /// sender's advertised listener address (UTF-8) or empty.
     Hello,
     /// Leader → worker rendezvous answer: `\n`-joined listener addresses
-    /// in rank order.
+    /// in rank order (each line optionally `ADDR\tHOST` when the leader
+    /// knows the deployment placement — see `net::hybrid`).
     PeerTable,
     /// Worker → worker boundary payload for exchange round `tag`.
     Payload,
@@ -127,6 +170,16 @@ pub enum TcpError {
         /// Diagnostic.
         msg: String,
     },
+    /// A frame whose CRC-32 checksum did not match its received bytes —
+    /// the wire flipped a bit somewhere between sender and receiver.
+    Corrupt {
+        /// Which connection delivered the corrupt frame.
+        who: String,
+        /// Checksum the sender stored in the header.
+        stored: u32,
+        /// Checksum recomputed over the received header and body.
+        computed: u32,
+    },
     /// A well-formed frame that violates the rendezvous or BSP protocol
     /// (wrong kind, duplicate rank, sequence drift, …).
     Protocol {
@@ -152,6 +205,13 @@ impl fmt::Display for TcpError {
                 )
             }
             TcpError::BadFrame { msg } => write!(f, "bad frame: {msg}"),
+            TcpError::Corrupt { who, stored, computed } => {
+                write!(
+                    f,
+                    "corrupt frame from {who}: header checksum {stored:#010x} \
+                     but received bytes checksum to {computed:#010x}"
+                )
+            }
             TcpError::Protocol { msg } => write!(f, "protocol violation: {msg}"),
         }
     }
@@ -178,8 +238,37 @@ fn map_read_err(err: std::io::Error, ctx: &str) -> TcpError {
     }
 }
 
-/// Write one frame. Rejects bodies beyond [`MAX_BODY_BYTES`] before
-/// touching the socket.
+/// Encode one frame's header for `body`. Fails (typed, before anything
+/// hits the wire) on bodies beyond [`MAX_BODY_BYTES`] and tags beyond the
+/// `u32` wire field.
+fn encode_header(
+    kind: FrameKind,
+    src: u16,
+    tag: u64,
+    body: &[u8],
+) -> Result<[u8; HEADER_BYTES as usize], TcpError> {
+    if body.len() > MAX_BODY_BYTES as usize {
+        return Err(TcpError::OversizedFrame { len: body.len() as u64, max: MAX_BODY_BYTES });
+    }
+    if tag > u32::MAX as u64 {
+        return Err(TcpError::Protocol {
+            msg: format!("frame tag {tag} exceeds the u32 wire field"),
+        });
+    }
+    let mut head = [0u8; HEADER_BYTES as usize];
+    head[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    head[4] = kind.to_byte();
+    head[5] = 0;
+    head[6..8].copy_from_slice(&src.to_le_bytes());
+    head[8..12].copy_from_slice(&(tag as u32).to_le_bytes());
+    let crc = crc32(&[&head[0..12], body]);
+    head[12..16].copy_from_slice(&crc.to_le_bytes());
+    Ok(head)
+}
+
+/// Write one frame. Rejects bodies beyond [`MAX_BODY_BYTES`] (and tags
+/// beyond the `u32` wire field) before touching the socket, and stamps
+/// the CRC-32 checksum into the header.
 pub fn write_frame(
     w: &mut impl Write,
     kind: FrameKind,
@@ -188,15 +277,7 @@ pub fn write_frame(
     body: &[u8],
     ctx: &str,
 ) -> Result<(), TcpError> {
-    if body.len() > MAX_BODY_BYTES as usize {
-        return Err(TcpError::OversizedFrame { len: body.len() as u64, max: MAX_BODY_BYTES });
-    }
-    let mut head = [0u8; HEADER_BYTES as usize];
-    head[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
-    head[4] = kind.to_byte();
-    head[5] = 0;
-    head[6..8].copy_from_slice(&src.to_le_bytes());
-    head[8..16].copy_from_slice(&tag.to_le_bytes());
+    let head = encode_header(kind, src, tag, body)?;
     let io = |err| TcpError::Io { ctx: format!("write to {ctx}"), err };
     w.write_all(&head).map_err(io)?;
     w.write_all(body).map_err(io)?;
@@ -208,7 +289,9 @@ pub fn write_frame(
 /// [`TcpError::PeerClosed`]; an EOF *inside* a frame is a
 /// [`TcpError::BadFrame`]; a read timeout maps to [`TcpError::Timeout`];
 /// an advertised body beyond [`MAX_BODY_BYTES`] is rejected before any
-/// allocation.
+/// allocation; a checksum mismatch is [`TcpError::Corrupt`] (verified
+/// before the kind byte is interpreted, so corruption anywhere in the
+/// frame reports as corruption, not as a protocol error).
 pub fn read_frame(r: &mut impl Read, ctx: &str) -> Result<Frame, TcpError> {
     let mut head = [0u8; HEADER_BYTES as usize];
     // First byte via plain read: Ok(0) is the peer closing cleanly
@@ -221,18 +304,23 @@ pub fn read_frame(r: &mut impl Read, ctx: &str) -> Result<Frame, TcpError> {
     let mut b4 = [0u8; 4];
     b4.copy_from_slice(&head[0..4]);
     let len = u32::from_le_bytes(b4);
-    let kind = FrameKind::from_byte(head[4])?;
-    let mut b2 = [0u8; 2];
-    b2.copy_from_slice(&head[6..8]);
-    let src = u16::from_le_bytes(b2);
-    let mut b8 = [0u8; 8];
-    b8.copy_from_slice(&head[8..16]);
-    let tag = u64::from_le_bytes(b8);
     if len > MAX_BODY_BYTES {
         return Err(TcpError::OversizedFrame { len: len as u64, max: MAX_BODY_BYTES });
     }
     let mut body = vec![0u8; len as usize];
     r.read_exact(&mut body).map_err(|err| map_read_err(err, ctx))?;
+    b4.copy_from_slice(&head[12..16]);
+    let stored = u32::from_le_bytes(b4);
+    let computed = crc32(&[&head[0..12], &body]);
+    if stored != computed {
+        return Err(TcpError::Corrupt { who: ctx.to_string(), stored, computed });
+    }
+    let kind = FrameKind::from_byte(head[4])?;
+    let mut b2 = [0u8; 2];
+    b2.copy_from_slice(&head[6..8]);
+    let src = u16::from_le_bytes(b2);
+    b4.copy_from_slice(&head[8..12]);
+    let tag = u32::from_le_bytes(b4) as u64;
     Ok(Frame { kind, src, tag, body })
 }
 
@@ -302,11 +390,24 @@ pub fn default_timeout() -> Duration {
     Duration::from_millis(env_u64("SDDN_TCP_TIMEOUT_MS", 30_000))
 }
 
-/// Connect retry attempts before giving up: `SDDN_TCP_RETRIES` (default
+/// Connect *re*-dial count before giving up: `SDDN_TCP_RETRIES` (default
 /// 40) — workers dial the leader and each other with linear backoff while
-/// the processes race through startup.
+/// the processes race through startup, and the hybrid transport reuses
+/// the same knob for mesh reconnects. `0` still means one connect
+/// attempt (no re-dials); values beyond `u32::MAX` saturate instead of
+/// truncating.
 pub fn default_retries() -> u32 {
-    env_u64("SDDN_TCP_RETRIES", 40) as u32
+    parse_retries(std::env::var("SDDN_TCP_RETRIES").ok().as_deref())
+}
+
+/// Pure parser behind [`default_retries`], separated so the edge cases
+/// (`"0"`, values beyond `u32::MAX`) are testable without racing other
+/// tests on process-global environment variables.
+pub(crate) fn parse_retries(var: Option<&str>) -> u32 {
+    match var.and_then(|s| s.trim().parse::<u128>().ok()) {
+        Some(v) => u32::try_from(v).unwrap_or(u32::MAX),
+        None => 40,
+    }
 }
 
 /// Base backoff between connect retries: `SDDN_TCP_RETRY_MS` (default
@@ -330,6 +431,17 @@ mod tests {
         f
     }
 
+    /// A hand-crafted header with a valid checksum (for tests that probe
+    /// parse errors past the CRC gate).
+    fn checksummed_header(mutate: impl Fn(&mut [u8; 16])) -> Vec<u8> {
+        let mut head = [0u8; HEADER_BYTES as usize];
+        head[4] = FrameKind::Payload.to_byte();
+        mutate(&mut head);
+        let crc = crc32(&[&head[0..12], &[]]);
+        head[12..16].copy_from_slice(&crc.to_le_bytes());
+        head.to_vec()
+    }
+
     #[test]
     fn frames_roundtrip_all_kinds() {
         for (i, kind) in [
@@ -350,6 +462,54 @@ mod tests {
             assert_eq!(f.tag, 0xDEAD_BEEF + i as u64);
             assert_eq!(f.body, body);
         }
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // CRC-32/IEEE check values: the canonical "123456789" vector and
+        // a couple of fixed points, plus chunking invariance.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b""]), 0);
+        assert_eq!(crc32(&[b"12345", b"6789"]), crc32(&[b"123456789"]));
+    }
+
+    #[test]
+    fn corrupted_body_byte_is_detected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Payload, 3, 7, &[0xABu8; 24], "test").unwrap();
+        let at = HEADER_BYTES as usize + 5;
+        wire[at] ^= 0x10; // single flipped bit in the body
+        let mut cur = Cursor::new(wire);
+        match read_frame(&mut cur, "peer 3") {
+            Err(TcpError::Corrupt { who, stored, computed }) => {
+                assert_eq!(who, "peer 3");
+                assert_ne!(stored, computed);
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_header_byte_is_detected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::ReduceUp, 1, 9, &[1u8, 2, 3, 4, 5, 6, 7, 8], "test")
+            .unwrap();
+        wire[6] ^= 0x01; // src field: would silently misroute without the CRC
+        let mut cur = Cursor::new(wire);
+        assert!(matches!(read_frame(&mut cur, "peer"), Err(TcpError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn tag_beyond_u32_is_rejected_before_writing() {
+        let mut sink = Vec::new();
+        match write_frame(&mut sink, FrameKind::Payload, 0, u32::MAX as u64 + 1, &[], "test") {
+            Err(TcpError::Protocol { msg }) => assert!(msg.contains("u32"), "{msg}"),
+            other => panic!("expected Protocol, got {other:?}"),
+        }
+        assert!(sink.is_empty(), "nothing may hit the wire after a tag rejection");
+        // The largest representable tag still roundtrips.
+        let f = roundtrip(FrameKind::Payload, 0, u32::MAX as u64, &[]);
+        assert_eq!(f.tag, u32::MAX as u64);
     }
 
     #[test]
@@ -408,7 +568,9 @@ mod tests {
 
     #[test]
     fn oversized_length_is_rejected_before_allocating() {
-        // Hand-craft a header advertising a 1 GiB body.
+        // Hand-craft a header advertising a 1 GiB body. The length gate
+        // runs before the body read (and hence before CRC verification),
+        // so no checksum is needed to trip it.
         let mut head = [0u8; HEADER_BYTES as usize];
         head[0..4].copy_from_slice(&(1u32 << 30).to_le_bytes());
         head[4] = FrameKind::Payload.to_byte();
@@ -432,14 +594,46 @@ mod tests {
 
     #[test]
     fn unknown_kind_byte_is_bad_frame() {
-        let mut head = [0u8; HEADER_BYTES as usize];
-        head[4] = 99;
-        let mut cur = Cursor::new(head.to_vec());
+        // Correctly checksummed frame with an unknown kind byte: the CRC
+        // gate passes, the kind parse rejects.
+        let wire = checksummed_header(|head| head[4] = 99);
+        let mut cur = Cursor::new(wire);
         assert!(matches!(read_frame(&mut cur, "peer"), Err(TcpError::BadFrame { .. })));
+    }
+
+    #[test]
+    fn unchecksummed_header_is_corrupt() {
+        // A 16-byte header with a zeroed crc field (what a pre-checksum
+        // sender would emit) must be rejected, not silently accepted.
+        let mut head = [0u8; HEADER_BYTES as usize];
+        head[4] = FrameKind::Hello.to_byte();
+        let mut cur = Cursor::new(head.to_vec());
+        assert!(matches!(read_frame(&mut cur, "peer"), Err(TcpError::Corrupt { .. })));
     }
 
     #[test]
     fn non_multiple_of_8_payload_is_bad_frame() {
         assert!(matches!(bytes_to_f64s(&[0u8; 12], "test"), Err(TcpError::BadFrame { .. })));
+    }
+
+    #[test]
+    fn retries_zero_means_zero_redials() {
+        assert_eq!(parse_retries(Some("0")), 0);
+    }
+
+    #[test]
+    fn retries_beyond_u32_saturate() {
+        // 2^32 used to truncate to 0 via `as u32`, silently turning "retry
+        // practically forever" into "never retry".
+        assert_eq!(parse_retries(Some("4294967296")), u32::MAX);
+        assert_eq!(parse_retries(Some(&u128::MAX.to_string())), u32::MAX);
+        assert_eq!(parse_retries(Some("4294967295")), u32::MAX);
+    }
+
+    #[test]
+    fn retries_default_and_garbage() {
+        assert_eq!(parse_retries(None), 40);
+        assert_eq!(parse_retries(Some("not-a-number")), 40);
+        assert_eq!(parse_retries(Some(" 7 ")), 7);
     }
 }

@@ -57,6 +57,14 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Number of `u64` counters leading a [`FrameKind::Metric`] body, ahead
+/// of the owned θ rows: `[cross, cross_floats, intra_cross, intra_floats,
+/// inter_cross, inter_floats, payload_bytes, header_bytes, messages,
+/// floats, rounds, allreduces]`. The intra/inter columns split the cross
+/// totals by host placement (identical to the totals on the pure TCP
+/// transport, which treats every rank as remote).
+pub const METRIC_COUNTERS: usize = 12;
+
 /// How a worker process finds and talks to the rest of the pool.
 #[derive(Debug, Clone)]
 pub struct WorkerNetConfig {
@@ -100,8 +108,15 @@ enum InboxMsg {
 }
 
 /// Dial `addr` with linear-backoff retry — worker processes race through
-/// startup, so the first attempts may find nobody listening yet.
-fn connect_with_retry(addr: &str, retries: u32, backoff: Duration) -> Result<TcpStream, TcpError> {
+/// startup, so the first attempts may find nobody listening yet. With
+/// `retries = 0` exactly one connect attempt is made (the knob counts
+/// *re*-dials, not attempts). Shared with the hybrid transport, which
+/// also reuses it to redial a dropped mesh connection.
+pub(crate) fn connect_with_retry(
+    addr: &str,
+    retries: u32,
+    backoff: Duration,
+) -> Result<TcpStream, TcpError> {
     let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
@@ -121,8 +136,12 @@ fn connect_with_retry(addr: &str, retries: u32, backoff: Duration) -> Result<Tcp
 }
 
 /// Accept one connection, polling a nonblocking listener so a missing
-/// peer surfaces as [`TcpError::Timeout`] instead of a hang.
-fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> Result<TcpStream, TcpError> {
+/// peer surfaces as [`TcpError::Timeout`] instead of a hang. Shared with
+/// the hybrid transport (mesh bootstrap and reconnect re-accept).
+pub(crate) fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+) -> Result<TcpStream, TcpError> {
     let io = |ctx: &str, err| TcpError::Io { ctx: ctx.to_string(), err };
     listener.set_nonblocking(true).map_err(|e| io("listener set_nonblocking", e))?;
     loop {
@@ -344,7 +363,10 @@ impl TcpExchange {
         }
         let text = String::from_utf8(table.body)
             .map_err(|_| TcpError::BadFrame { msg: "peer table is not UTF-8".to_string() })?;
-        let addrs: Vec<&str> = text.lines().collect();
+        // Placement-aware leaders append a `\tHOST` column per line (the
+        // hybrid transport consumes it); the plain TCP mesh only needs
+        // the address.
+        let addrs: Vec<&str> = text.lines().map(|l| l.split('\t').next().unwrap_or(l)).collect();
         if addrs.len() != k {
             return Err(TcpError::Protocol {
                 msg: format!("peer table lists {} workers, expected {k}", addrs.len()),
@@ -466,11 +488,20 @@ impl TcpExchange {
 
     /// Report this iteration's metrics to the leader (counters + the
     /// shard's owned θ rows), tagged with the iteration number.
+    ///
+    /// The metric body carries [`METRIC_COUNTERS`] `u64`s; on the pure
+    /// TCP transport every cross-worker payload rides a socket, so the
+    /// intra-host columns are 0 and the inter-host columns equal the
+    /// totals (the hybrid transport splits them by placement).
     pub fn send_metrics(&mut self, iter: u64, thetas: &[f64]) -> Result<(), TcpError> {
         self.body_scratch.clear();
         put_u64s(
             &mut self.body_scratch,
             &[
+                self.cross,
+                self.cross_floats,
+                0,
+                0,
                 self.cross,
                 self.cross_floats,
                 self.payload_bytes,

@@ -1,0 +1,337 @@
+//! Wire-truth suite for the host-aware hybrid transport.
+//!
+//! Three layers of the contract:
+//!
+//! 1. **Bit parity**: an algorithm driven over the hybrid transport —
+//!    in-process channels between co-located ranks, real loopback TCP
+//!    across "hosts" — must produce bit-for-bit the iterates,
+//!    per-iteration objectives, and modeled comm ledger of the bulk
+//!    `CommGraph`, channel `ShardExchange`, and pure-TCP transports,
+//!    under *every* hostfile placement.
+//! 2. **Split wire truth**: the comm ledger splits by placement. The
+//!    intra-host and inter-host legs must sum back to the
+//!    placement-agnostic totals, and observed socket payload bytes must
+//!    equal `inter_floats × 8` exactly — co-located traffic never hits a
+//!    socket, so a single-host placement ships zero payload bytes while a
+//!    fully-split placement degenerates to the pure-TCP accounting.
+//! 3. **Robustness**: a mesh connection dropped mid-run reconnects (the
+//!    higher rank redials the lower rank's listener), replays the retained
+//!    round window, and completes bit-identically — with the reconnect
+//!    visible in the transport's counter, never in the results.
+//!
+//! The frame-codec and hostfile-parser unit suites live with their code in
+//! `net::tcp::frame` and `net::hybrid`; these tests exercise real sockets.
+
+use sddnewton::algorithms::ConsensusAlgorithm as _;
+use sddnewton::coordinator::run_partitioned_baseline;
+use sddnewton::coordinator::tcp::{run_leader_with_hosts, TcpLeader};
+use sddnewton::graph::laplacian_csr;
+use sddnewton::net::Exchange as _;
+use sddnewton::harness::deploy::{run_hybrid_cross_transport, HybridParity, TcpJobSpec};
+use sddnewton::harness::experiments::{make_inner_solver, make_sharded_algorithm};
+use sddnewton::net::hybrid::{local_links, parse_hostfile, HybridExchange, Placement};
+use sddnewton::net::partitioned::build_shard_plans;
+use sddnewton::net::tcp::frame;
+use sddnewton::net::tcp::WorkerNetConfig;
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::Pcg64;
+use std::sync::Arc;
+
+/// Spec for one algorithm of the smoke preset on a loopback hybrid pool.
+fn smoke_spec(algo: &str, workers: usize, iters: usize) -> TcpJobSpec {
+    TcpJobSpec {
+        experiment: "smoke".to_string(),
+        config_path: None,
+        algorithms: Some(algo.to_string()),
+        seed: None,
+        algo_index: 0,
+        iters,
+        workers,
+        partitioning: "contiguous".to_string(),
+        solver_seed: 0x51D0,
+        hostfile: None,
+    }
+}
+
+/// Run one spec in thread mode under the given hostfile text and assert
+/// the full parity + split-accounting contract, returning the verdict for
+/// placement-specific follow-up assertions.
+fn assert_hybrid_parity(spec: TcpJobSpec, hostfile: &str) -> HybridParity {
+    let placement = parse_hostfile(hostfile).expect("test hostfile must parse");
+    let parity = run_hybrid_cross_transport(&spec, &placement, "127.0.0.1:0", None)
+        .unwrap_or_else(|e| panic!("hybrid run failed for {spec:?} under {hostfile:?}: {e}"));
+    assert!(
+        parity.thetas_match_bulk,
+        "{}: hybrid iterate drifted from the bulk reference under {hostfile:?}",
+        parity.algorithm
+    );
+    assert!(
+        parity.thetas_match_shard,
+        "{}: hybrid iterate drifted from the in-process shard reference under {hostfile:?}",
+        parity.algorithm
+    );
+    assert!(
+        parity.objectives_match,
+        "{}: per-iteration objectives drifted across transports under {hostfile:?}",
+        parity.algorithm
+    );
+    assert!(parity.ledger_ok, "{}: modeled comm ledger drifted", parity.algorithm);
+    // Placement-agnostic totals: the hybrid pool must ship exactly what
+    // the wire model and the channel transport ship, however its traffic
+    // splits between channels and sockets.
+    assert_eq!(
+        parity.hybrid.cross_messages, parity.modeled_cross,
+        "{}: payload count drifted from the wire model",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.hybrid.cross_messages, parity.shard.cross_messages,
+        "{}: payload count drifted from the channel transport",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.hybrid.cross_floats, parity.shard.cross_floats,
+        "{}: float count drifted from the channel transport",
+        parity.algorithm
+    );
+    // The split: intra + inter must sum back to the totals, and socket
+    // bytes must cover exactly the inter-host leg.
+    assert_eq!(
+        parity.hybrid.intra_cross + parity.hybrid.inter_cross,
+        parity.hybrid.cross_messages,
+        "{}: intra/inter payload split does not sum to the total",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.hybrid.intra_floats + parity.hybrid.inter_floats,
+        parity.hybrid.cross_floats,
+        "{}: intra/inter float split does not sum to the total",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.hybrid.payload_bytes,
+        parity.hybrid.inter_floats * 8,
+        "{}: observed socket payload bytes are not inter_floats × 8",
+        parity.algorithm
+    );
+    assert_eq!(
+        parity.hybrid.header_bytes % 16,
+        0,
+        "{}: header overhead is not a whole number of frame headers",
+        parity.algorithm
+    );
+    assert!(parity.ok(), "{}: parity verdict not ok under {hostfile:?}", parity.algorithm);
+    parity
+}
+
+#[test]
+fn sdd_newton_hybrid_k2_fully_split_is_all_inter_host() {
+    let parity = assert_hybrid_parity(smoke_spec("sdd", 2, 3), "alpha slots=1\nbeta slots=1\n");
+    // One rank per host: every boundary payload crosses hosts.
+    assert_eq!(parity.hybrid.intra_cross, 0, "no co-located pair exists");
+    assert!(parity.hybrid.inter_cross > 0, "a split pool must ship socket traffic");
+    assert!(parity.hybrid.payload_bytes > 0, "socket traffic must account payload bytes");
+}
+
+#[test]
+fn sdd_newton_hybrid_k2_single_host_ships_zero_socket_bytes() {
+    let parity = assert_hybrid_parity(smoke_spec("sdd", 2, 3), "alpha slots=2\n");
+    // Both ranks co-located: everything rides the channel path.
+    assert!(parity.hybrid.intra_cross > 0, "a multi-worker pool must ship boundary traffic");
+    assert_eq!(parity.hybrid.inter_cross, 0, "no cross-host pair exists");
+    assert_eq!(parity.hybrid.payload_bytes, 0, "co-located traffic must never hit a socket");
+}
+
+#[test]
+fn sdd_newton_hybrid_k4_two_hosts_splits_both_ways() {
+    let parity =
+        assert_hybrid_parity(smoke_spec("sdd", 4, 3), "alpha slots=2\nbeta slots=2\n");
+    // Contiguous shards 0,1 on alpha and 2,3 on beta: the 0–1 and 2–3
+    // boundaries are intra-host, the 1–2 boundary is inter-host.
+    assert!(parity.hybrid.intra_cross > 0, "co-located boundaries must ride channels");
+    assert!(parity.hybrid.inter_cross > 0, "the cross-host boundary must ride sockets");
+}
+
+#[test]
+fn sdd_newton_hybrid_k4_three_hosts() {
+    assert_hybrid_parity(
+        smoke_spec("sdd", 4, 3),
+        "alpha slots=1\nbeta slots=2\ngamma slots=1\n",
+    );
+}
+
+#[test]
+fn admm_hybrid_k2_fully_split() {
+    assert_hybrid_parity(smoke_spec("admm", 2, 3), "alpha slots=1\nbeta slots=1\n");
+}
+
+#[test]
+fn admm_hybrid_k4_two_hosts() {
+    assert_hybrid_parity(smoke_spec("admm", 4, 3), "alpha slots=2\nbeta slots=2\n");
+}
+
+#[test]
+fn gradient_hybrid_round_robin_two_hosts() {
+    // Round-robin maximizes the cut — every neighbor is a remote shard,
+    // so both legs of the split carry near-balanced traffic.
+    let mut spec = smoke_spec("grad", 4, 3);
+    spec.partitioning = "round_robin".to_string();
+    let parity = assert_hybrid_parity(spec, "alpha slots=2\nbeta slots=2\n");
+    assert!(parity.hybrid.intra_cross > 0);
+    assert!(parity.hybrid.inter_cross > 0);
+}
+
+/// A mesh connection killed mid-run must reconnect (higher rank redials
+/// the lower rank's listener), replay the retained rounds, and finish
+/// bit-identically to the in-process shard reference — with the repair
+/// visible only in the transport's reconnect counter.
+#[test]
+fn dropped_mesh_connection_reconnects_and_matches_bit_for_bit() {
+    let spec = smoke_spec("sdd", 2, 4);
+    let placement = parse_hostfile("alpha slots=1\nbeta slots=1\n").expect("hostfile");
+    let job = spec.build().expect("spec must build");
+    let iters = spec.iters;
+
+    // In-process shard reference on the same deterministic solver seed.
+    let backend = NativeBackend;
+    let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+    let solver_ref = solver.as_deref();
+    let shard = run_partitioned_baseline(&job.problem, &job.g, &job.part, iters, &|owned| {
+        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+    });
+
+    let leader = TcpLeader::bind("127.0.0.1:0", 2).expect("bind leader");
+    let addr = leader.addr().expect("leader addr").to_string();
+    let owned_of: Vec<Vec<usize>> = (0..2).map(|w| job.part.nodes_of(w)).collect();
+    let hosts: Vec<String> = vec!["alpha".to_string(), "beta".to_string()];
+
+    let mut host_links = Vec::new();
+    for host in ["alpha", "beta"] {
+        for link in local_links(&placement, host) {
+            host_links.push((host, link));
+        }
+    }
+    let (led, reconnects) = std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for (host, link) in host_links {
+            let spec = spec.clone();
+            let placement = &placement;
+            let addr = addr.clone();
+            workers.push(scope.spawn(move || -> Result<u64, String> {
+                let rank = link.rank();
+                let job = spec.build()?;
+                let backend = NativeBackend;
+                let solver =
+                    make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
+                let solver_ref = solver.as_deref();
+                let lap = Arc::new(laplacian_csr(&job.g));
+                let plan = build_shard_plans(&job.g, &job.part).swap_remove(rank);
+                let net = WorkerNetConfig::from_env(rank, 2, &addr);
+                let mut exch = HybridExchange::connect(
+                    &net,
+                    placement,
+                    link,
+                    job.g.n,
+                    job.g.m(),
+                    lap,
+                    plan,
+                )
+                .map_err(|e| format!("host {host} connect: {e}"))?;
+                let mut alg = make_sharded_algorithm(
+                    &job.kind,
+                    &job.problem,
+                    &job.g,
+                    &backend,
+                    solver_ref,
+                    exch.owned().to_vec(),
+                );
+                for it in 0..spec.iters {
+                    // Kill the only mesh connection from the low side,
+                    // mid-run: rank 1 must redial rank 0's listener and
+                    // both sides must replay.
+                    if rank == 0 && it == 2 {
+                        exch.drop_mesh_connection(1);
+                    }
+                    alg.step(&job.problem, &mut exch);
+                    exch.send_metrics(it as u64, alg.thetas())
+                        .map_err(|e| format!("host {host} metrics: {e}"))?;
+                }
+                Ok(exch.reconnects())
+            }));
+        }
+        let led = run_leader_with_hosts(
+            leader,
+            &job.problem,
+            owned_of,
+            iters,
+            frame::default_timeout(),
+            Some(&hosts),
+        );
+        let mut reconnects = 0u64;
+        for w in workers {
+            reconnects += w
+                .join()
+                .expect("worker thread must not panic")
+                .unwrap_or_else(|e| panic!("worker failed: {e}"));
+        }
+        (led, reconnects)
+    });
+
+    let run = led.expect("leader must complete despite the dropped connection");
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(
+        bits(&run.thetas),
+        bits(&shard.thetas),
+        "reconnect+replay changed the iterate"
+    );
+    assert!(
+        reconnects >= 1,
+        "the dropped mesh connection was never repaired (reconnects = {reconnects})"
+    );
+    // First-transmission accounting: replayed frames must not be
+    // double-counted, so the byte invariant still holds exactly.
+    assert_eq!(run.payload_bytes, run.inter_floats * 8);
+    assert_eq!(run.header_bytes % 16, 0);
+}
+
+/// Full process deployment through the CLI: one `worker --host H` process
+/// per hostfile host over loopback, and the parity table must report ok
+/// (exit zero, split columns present, no DRIFT).
+#[test]
+fn partitioned_cli_hybrid_transport_end_to_end() {
+    let path = std::env::temp_dir().join(format!("sddn_hostfile_{}.txt", std::process::id()));
+    std::fs::write(&path, "hostA slots=2\nhostB slots=2\n").expect("write hostfile");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_sddnewton"))
+        .args([
+            "partitioned",
+            "--transport",
+            "hybrid",
+            "--hostfile",
+            path.to_str().expect("utf8 temp path"),
+            "--experiment",
+            "smoke",
+            "--iters",
+            "2",
+            "--workers",
+            "4",
+            "--algorithms",
+            "sdd,admm",
+        ])
+        .output()
+        .expect("sddnewton binary should run");
+    let _ = std::fs::remove_file(&path);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit nonzero\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("hostA[2] hostB[2]"), "missing host roster line:\n{stdout}");
+    assert!(stdout.contains("intra"), "missing intra split column:\n{stdout}");
+    assert!(stdout.contains("inter"), "missing inter split column:\n{stdout}");
+    assert!(!stdout.contains("DRIFT"), "hybrid parity table reported drift:\n{stdout}");
+    for name in ["SDD-Newton", "Distributed ADMM"] {
+        let row = stdout
+            .lines()
+            .find(|l| l.contains(name))
+            .unwrap_or_else(|| panic!("missing row for {name}:\n{stdout}"));
+        assert!(row.contains("ok"), "{name} not ok:\n{row}");
+    }
+}

@@ -37,6 +37,7 @@ fn smoke_spec(algo: &str, workers: usize, iters: usize) -> TcpJobSpec {
         workers,
         partitioning: "contiguous".to_string(),
         solver_seed: 0x51D0,
+        hostfile: None,
     }
 }
 
@@ -133,6 +134,21 @@ fn gradient_tcp_matches_both_transports_round_robin() {
     let mut spec = smoke_spec("grad", 4, 3);
     spec.partitioning = "round_robin".to_string();
     assert_tcp_parity(spec);
+}
+
+/// Ranks ride the wire as `u16`: a pool wider than `u16::MAX` must be
+/// rejected at bind time with a typed error, never silently truncated
+/// into colliding rank ids (the old `rank as u16` bug).
+#[test]
+fn leader_rejects_pools_wider_than_u16_ranks() {
+    let err = TcpLeader::bind("127.0.0.1:0", 70_000)
+        .expect_err("a 70000-rank pool cannot be addressed by u16 rank ids");
+    assert!(
+        matches!(err, TcpError::Protocol { .. }),
+        "expected a typed protocol error, got: {err}"
+    );
+    // The boundary itself is fine.
+    assert!(TcpLeader::bind("127.0.0.1:0", u16::MAX as usize).is_ok());
 }
 
 /// A worker that never shows up must surface as a typed rendezvous
