@@ -1,0 +1,176 @@
+//! Staleness sweep: what bounded-staleness halos and ADAPD-style local
+//! steps buy on the wire, and what they cost in convergence.
+//!
+//! Two sections, both emitting trajectory points into the
+//! `BENCH_staleness_sweep_*.json` report:
+//!
+//! 1. **Convergence vs τ** — distributed gradient and SDD-Newton under
+//!    `StaleState` halo reuse for τ ∈ {0, 1, 2, 4}: final objective,
+//!    real cross-worker wire bytes (asserted *strictly decreasing* in
+//!    τ), and the savings ledger (asserted to model exactly the elided
+//!    rounds: `skipped = iters − ⌈iters/(τ+1)⌉`). The τ = 0 sample is
+//!    asserted bit-for-bit identical to the staleness-free construction.
+//!
+//! 2. **Iterations vs comm rounds** — local-step Newton at a fixed
+//!    local-work budget: `local_steps ∈ {1, 2, 4}` with outer iteration
+//!    counts scaled so every sample performs the same number of local
+//!    solves, so the wire bytes (asserted strictly decreasing in
+//!    `local_steps`) buy comparable compute.
+//!
+//!     cargo bench --bench staleness_sweep
+//!     cargo bench --bench staleness_sweep -- --smoke    # CI smoke run
+
+use sddnewton::algorithms::solvers::LaplacianSolver;
+use sddnewton::benchkit::{bench, cli_opts, is_smoke, result_row, section, BenchReport};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::{run_partitioned_baseline, Partition};
+use sddnewton::graph::generate;
+use sddnewton::harness::experiments::{make_inner_solver, make_sharded_algorithm_stale};
+use sddnewton::problems::datasets;
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::Pcg64;
+
+fn main() {
+    let opts = cli_opts();
+    let smoke = is_smoke();
+    result_row("parallelism/threads", sddnewton::par::threads());
+
+    let (n, m_edges, p, samples, iters, k) =
+        if smoke { (16, 32, 3, 120, 4, 2) } else { (64, 160, 6, 1_280, 8, 4) };
+    let taus: &[u64] = if smoke { &[0, 1] } else { &[0, 1, 2, 4] };
+    let mut report = BenchReport::new("staleness_sweep");
+    report.config_num("n", n as f64);
+    report.config_num("m", m_edges as f64);
+    report.config_num("p", p as f64);
+    report.config_num("iters", iters as f64);
+    report.config_num("workers", k as f64);
+
+    let mut rng = Pcg64::new(3141);
+    let g = generate::random_connected(n, m_edges, &mut rng);
+    let prob = datasets::synthetic_regression(n, p, samples, 0.1, 0.05, &mut rng);
+    let backend = NativeBackend;
+    let part = Partition::contiguous(n, k);
+
+    section(&format!(
+        "Convergence vs staleness bound: n={n}, m={m_edges}, p={p}, k={k}, {iters} iterations"
+    ));
+    let kinds: [(&str, AlgoKind); 2] = [
+        ("grad", AlgoKind::Gradient { alpha: 0.01 }),
+        ("sdd_newton", AlgoKind::SddNewton { eps: 1e-4, alpha: 1.0 }),
+    ];
+    for (name, kind) in &kinds {
+        let kind_timer = sddnewton::util::Timer::start();
+        let solver = make_inner_solver(kind, &g, &mut rng);
+        let solver_ref: Option<&dyn LaplacianSolver> = solver.as_deref();
+        // Staleness-free reference — the τ = 0 sample must reproduce it
+        // bit for bit (iterates and full modeled ledger).
+        let reference = run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+            make_sharded_algorithm_stale(kind, &prob, &g, &backend, solver_ref, owned, 0)
+        });
+        let mut prev_floats: Option<u64> = None;
+        for &tau in taus {
+            let mut last = None;
+            let s = bench(&format!("{name}/tau{tau}"), &opts, || {
+                last = Some(run_partitioned_baseline(&prob, &g, &part, iters, &|owned| {
+                    make_sharded_algorithm_stale(kind, &prob, &g, &backend, solver_ref, owned, tau)
+                }));
+            });
+            let out = last.unwrap();
+            if tau == 0 {
+                assert_eq!(
+                    out.thetas, reference.thetas,
+                    "{name}: tau=0 must be bit-identical to the staleness-free path"
+                );
+                assert_eq!(out.comm, reference.comm, "{name}: tau=0 ledger drifted");
+                assert_eq!(out.cross_floats, reference.cross_floats);
+            }
+            // The savings ledger models exactly the elided refresh rounds:
+            // one policy-eligible exchange per iteration, refreshed every
+            // τ+1 rounds.
+            let refreshes = iters as u64 / (tau + 1)
+                + u64::from(iters as u64 % (tau + 1) != 0);
+            assert_eq!(
+                out.comm.skipped_rounds,
+                iters as u64 - refreshes,
+                "{name}/tau{tau}: skipped-round ledger drifted from the refresh cadence"
+            );
+            assert_eq!(out.comm.saved_floats, out.comm.saved_messages * p as u64);
+            // Staleness must actually take traffic off the wire.
+            if let Some(prev) = prev_floats {
+                assert!(
+                    out.cross_floats < prev,
+                    "{name}/tau{tau}: cross floats {} not strictly below {prev}",
+                    out.cross_floats
+                );
+            }
+            prev_floats = Some(out.cross_floats);
+            let objective = out.records.last().map(|r| r.objective).unwrap_or(f64::NAN);
+            report.metric(&format!("{name}/tau{tau}/final_objective"), objective);
+            report.metric(&format!("{name}/tau{tau}/wire_bytes"), (8 * out.cross_floats) as f64);
+            report.metric(
+                &format!("{name}/tau{tau}/skipped_rounds"),
+                out.comm.skipped_rounds as f64,
+            );
+            result_row(
+                &format!("{name}/tau{tau}"),
+                format!(
+                    "objective {objective:.6e} | {} wire bytes | {} skipped rounds | \
+                     {:.5}s median",
+                    8 * out.cross_floats,
+                    out.comm.skipped_rounds,
+                    s.median
+                ),
+            );
+        }
+        report.phase(name, kind_timer.secs());
+    }
+
+    // Fixed local-work budget: every sample performs `budget` local
+    // solves; more local steps per outer iteration ⇒ fewer outer
+    // iterations ⇒ fewer real exchange rounds for the same compute.
+    let budget = if smoke { 4 } else { 16 };
+    section(&format!("Iterations vs comm rounds: local-step Newton, budget {budget} solves"));
+    let mut prev_floats: Option<u64> = None;
+    for &steps in &[1usize, 2, 4] {
+        let outer = budget / steps;
+        if outer == 0 {
+            continue;
+        }
+        let kind = AlgoKind::LocalNewton { eta: 0.5, local_steps: steps, comm_rounds: 1 };
+        let mut last = None;
+        let s = bench(&format!("local/steps{steps}"), &opts, || {
+            last = Some(run_partitioned_baseline(&prob, &g, &part, outer, &|owned| {
+                make_sharded_algorithm_stale(&kind, &prob, &g, &backend, None, owned, 0)
+            }));
+        });
+        let out = last.unwrap();
+        if let Some(prev) = prev_floats {
+            assert!(
+                out.cross_floats < prev,
+                "local/steps{steps}: cross floats {} not strictly below {prev} at equal \
+                 local work",
+                out.cross_floats
+            );
+        }
+        prev_floats = Some(out.cross_floats);
+        // The ledger splits real rounds from modeled savings: per outer
+        // iteration, 1 real mixing round and steps−1 skipped rounds.
+        assert_eq!(out.comm.skipped_rounds, (outer * (steps - 1)) as u64);
+        let objective = out.records.last().map(|r| r.objective).unwrap_or(f64::NAN);
+        report.metric(&format!("local/steps{steps}/final_objective"), objective);
+        report.metric(&format!("local/steps{steps}/wire_bytes"), (8 * out.cross_floats) as f64);
+        result_row(
+            &format!("local/steps{steps}"),
+            format!(
+                "{outer} outer iters | objective {objective:.6e} | {} wire bytes | \
+                 {} skipped rounds | {:.5}s median",
+                8 * out.cross_floats,
+                out.comm.skipped_rounds,
+                s.median
+            ),
+        );
+    }
+
+    let path = report.write().expect("bench report must be writable");
+    result_row("report", path.display());
+}

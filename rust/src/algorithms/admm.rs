@@ -43,10 +43,28 @@
 //! dual round ships the last stage's updates. The per-iteration total is
 //! `2m + Σ_u deg(u) = 4m` — identical to the classic two-round
 //! gather formulation. The wire matches the model: every round goes
-//! through [`Exchange::exchange_apply_fresh`] with the stage's fresh-row
-//! mask, so a plan-driven transport ships only that stage's active
-//! boundary rows instead of re-shipping the whole halo each stage (the
-//! over-shipping the `prop_wire` suite regression-tests).
+//! through [`Exchange::exchange_apply_fresh_rows`] with the round's
+//! fresh-row ship mask, so a plan-driven transport ships only that
+//! round's active boundary rows instead of re-shipping the whole halo
+//! each stage (the over-shipping the `prop_wire` suite
+//! regression-tests). The *compute* mask restricts the row kernel to the
+//! stage's independent set — the only rows the stage consumes — so one
+//! iteration costs one full sweep of row evaluations plus the dual
+//! round (`2n`, tallied in [`Admm::row_evals`]) rather than `stages`
+//! full matvecs.
+//!
+//! # Pipelined wavefront
+//!
+//! The drained schedule ships stage `s−1`'s updates at round `s` —
+//! stage `s+1` cannot start until stage `s` has drained globally. The
+//! pipelined variant ([`Admm::new_sharded_pipelined`]) instead ships
+//! each node's update at its *earliest consumer's* round
+//! ([`pipelined_ship_schedule`]): stage `s+1` starts once its own
+//! predecessors' boundary rows arrive. Iterates stay bit-for-bit
+//! identical and the per-iteration total stays `4m` over `stages + 1`
+//! rounds; what changes is *when* each row crosses the wire, which is
+//! what lets a transport overlap stage compute with later stages'
+//! traffic.
 
 use super::ConsensusAlgorithm;
 use crate::graph::Graph;
@@ -105,6 +123,61 @@ pub fn stage_message_schedule(g: &Graph, stages: &[usize]) -> (Vec<u64>, u64) {
     (per_stage, degsum_of(n_stages - 1))
 }
 
+/// Pipelined ship-at-earliest-consumer schedule: instead of draining
+/// stage `s−1` globally before stage `s` starts, a node's update ships
+/// exactly at the round of its *earliest consumer* — the minimum stage
+/// among its strictly-higher-stage neighbors (`ec(u)`), or the dual
+/// round when no later stage reads it. Returns, per sweep round
+/// `s ∈ 0..stages`, the fresh-row ship mask and its charged message
+/// count, plus the dual round's mask and charge.
+///
+/// Why this preserves bit-identity with the drained schedule: a stage-`s`
+/// reader's lower-stage neighbor `v` has `ec(v) ≤ s` (the reader itself
+/// is a higher-stage neighbor of `v`), so `v`'s fresh value arrived at or
+/// before round `s`; higher-stage neighbors last shipped θ^k at round 0 —
+/// exactly the mirror state the drained wavefront computes from. At the
+/// dual round every neighbor's final value has shipped (at its `ec`, or
+/// in the dual mask itself). Conservation: every node ships θ^k at round
+/// 0 and its update exactly once after its stage, so the per-iteration
+/// total stays `2m + Σ_u deg(u) = 4m` over the same `stages + 1` rounds.
+pub fn pipelined_ship_schedule(
+    g: &Graph,
+    stages: &[usize],
+) -> (Vec<Vec<bool>>, Vec<u64>, Vec<bool>, u64) {
+    let n_stages = stages.iter().max().map(|&s| s + 1).unwrap_or(0);
+    // Earliest consumer stage per node (usize::MAX = only the dual reads
+    // this node's update from a later round).
+    let ec: Vec<usize> = (0..g.n)
+        .map(|u| {
+            g.neighbors(u)
+                .iter()
+                .filter(|&&v| stages[v] > stages[u])
+                .map(|&v| stages[v])
+                .min()
+                .unwrap_or(usize::MAX)
+        })
+        .collect();
+    let mut masks: Vec<Vec<bool>> = Vec::with_capacity(n_stages);
+    let mut msgs: Vec<u64> = Vec::with_capacity(n_stages);
+    for s in 0..n_stages {
+        let mask: Vec<bool> = if s == 0 {
+            vec![true; g.n]
+        } else {
+            (0..g.n).map(|u| ec[u] == s).collect()
+        };
+        let charge = if s == 0 {
+            2 * g.m() as u64
+        } else {
+            (0..g.n).filter(|&u| mask[u]).map(|u| g.degree(u) as u64).sum()
+        };
+        masks.push(mask);
+        msgs.push(charge);
+    }
+    let dual_mask: Vec<bool> = (0..g.n).map(|u| ec[u] == usize::MAX).collect();
+    let dual_msgs = (0..g.n).filter(|&u| dual_mask[u]).map(|u| g.degree(u) as u64).sum();
+    (masks, msgs, dual_mask, dual_msgs)
+}
+
 /// ADMM state (one shard's view).
 pub struct Admm {
     /// Penalty parameter β.
@@ -122,15 +195,32 @@ pub struct Admm {
     stage_of: Vec<usize>,
     /// Number of sweep stages.
     stages: usize,
-    /// Fresh-row masks: `stage_masks[s][u]` ⇔ `stage_of[u] == s` — what a
-    /// plan-driven transport ships after stage `s` updates.
+    /// Per-stage compute masks: `stage_masks[s][u]` ⇔ `stage_of[u] == s` —
+    /// the independent set stage `s` actually updates (and therefore the
+    /// only rows whose neighbor sums it needs).
     stage_masks: Vec<Vec<bool>>,
-    /// All-rows mask for the stage-0 full halo refresh.
+    /// All-rows mask for the stage-0 full halo refresh and the dual round.
     full_mask: Vec<bool>,
+    /// Fresh-row ship mask per sweep round: drained schedule ships stage
+    /// `s−1`'s updates at round `s`; the pipelined schedule ships each
+    /// node at its earliest consumer's round ([`pipelined_ship_schedule`]).
+    ship_masks: Vec<Vec<bool>>,
+    /// Fresh-row ship mask for the dual round.
+    dual_ship: Vec<bool>,
+    /// Rows evaluated per sweep stage (popcount of the compute mask).
+    stage_counts: Vec<u64>,
     /// Directed messages charged per sweep stage.
     stage_msgs: Vec<u64>,
     /// Directed messages charged for the dual round.
     dual_msgs: u64,
+    /// Whether the ship schedule is the pipelined wavefront.
+    pub pipelined: bool,
+    /// Modeled system-wide row evaluations so far: the compute-mask
+    /// popcounts each exchange round charged. One iteration costs
+    /// `2n` — one full sweep (the stages partition the nodes) plus the
+    /// dual round — independent of the stage count; the pre-fix kernel
+    /// evaluated every owned row every stage, `(stages+1)·n`.
+    pub row_evals: u64,
     /// Global adjacency (neighbor sums of the sweep).
     adjacency: Csr,
     /// Global Laplacian (the aggregated dual update).
@@ -146,20 +236,61 @@ impl Admm {
         Self::new_sharded(problem, g, beta, (0..problem.n()).collect())
     }
 
-    /// Shard-local instance owning the given global nodes (ascending).
+    /// Like [`Admm::new`] but with the pipelined ship schedule.
+    pub fn new_pipelined(problem: &ConsensusProblem, g: &Graph, beta: f64) -> Admm {
+        Self::new_sharded_pipelined(problem, g, beta, (0..problem.n()).collect())
+    }
+
+    /// Shard-local instance owning the given global nodes (ascending),
+    /// using the drained per-stage ship schedule.
     pub fn new_sharded(
         problem: &ConsensusProblem,
         g: &Graph,
         beta: f64,
         owned: Vec<usize>,
     ) -> Admm {
+        Self::build(problem, g, beta, owned, false)
+    }
+
+    /// Shard-local instance using the pipelined ship-at-earliest-consumer
+    /// schedule ([`pipelined_ship_schedule`]): bit-identical iterates and
+    /// the same `4m` per-iteration message total, but stage `s+1`'s
+    /// boundary rows ship as soon as their own predecessors update rather
+    /// than after stage `s` drains globally.
+    pub fn new_sharded_pipelined(
+        problem: &ConsensusProblem,
+        g: &Graph,
+        beta: f64,
+        owned: Vec<usize>,
+    ) -> Admm {
+        Self::build(problem, g, beta, owned, true)
+    }
+
+    fn build(
+        problem: &ConsensusProblem,
+        g: &Graph,
+        beta: f64,
+        owned: Vec<usize>,
+        pipelined: bool,
+    ) -> Admm {
         let p = problem.p;
         let stage_of = sweep_stages(g);
         let stages = stage_of.iter().max().map(|&s| s + 1).unwrap_or(0);
-        let (stage_msgs, dual_msgs) = stage_message_schedule(g, &stage_of);
         let stage_masks: Vec<Vec<bool>> = (0..stages)
             .map(|s| (0..g.n).map(|u| stage_of[u] == s).collect())
             .collect();
+        let stage_counts: Vec<u64> = stage_masks
+            .iter()
+            .map(|m| m.iter().filter(|&&b| b).count() as u64)
+            .collect();
+        let (ship_masks, stage_msgs, dual_ship, dual_msgs) = if pipelined {
+            pipelined_ship_schedule(g, &stage_of)
+        } else {
+            let (msgs, dual) = stage_message_schedule(g, &stage_of);
+            let mut ships = vec![vec![true; g.n]];
+            ships.extend(stage_masks[..stages - 1].iter().cloned());
+            (ships, msgs, stage_masks[stages - 1].clone(), dual)
+        };
         Admm {
             beta,
             inner_iters: 8,
@@ -170,8 +301,13 @@ impl Admm {
             stages,
             stage_masks,
             full_mask: vec![true; g.n],
+            ship_masks,
+            dual_ship,
+            stage_counts,
             stage_msgs,
             dual_msgs,
+            pipelined,
+            row_evals: 0,
             adjacency: crate::graph::laplacian::adjacency_csr(g),
             laplacian: crate::graph::laplacian_csr(g),
             degree: crate::graph::laplacian::degrees(g),
@@ -191,32 +327,36 @@ impl ConsensusAlgorithm for Admm {
         let beta = self.beta;
 
         // Gauss–Seidel sweep as a stage wavefront: each stage refreshes
-        // the neighbor sums (fresh lower-stage + stale higher-stage
-        // values) and updates its independent set. Known trade-off: the
-        // exchange primitive computes every owned row each stage though
-        // only the stage's independent set consumes the result — S full
-        // matvecs per iteration instead of one. Sparse graphs color in
-        // few stages so the redundancy is small, and sharing the full-row
-        // kernel with the bulk transport is what keeps the two paths
-        // bit-for-bit identical; a row-subset exchange variant is the
-        // obvious follow-up if ADMM compute ever dominates.
+        // the neighbor sums its independent set consumes (fresh
+        // lower-stage + stale higher-stage values) and updates that set.
+        // The compute mask restricts the row kernel to exactly the
+        // stage's consumers, so one iteration costs one full sweep of row
+        // evaluations (the stages partition the nodes) plus the dual
+        // round — not `stages` full matvecs; the shared per-row kernel
+        // keeps masked rows bit-identical to the full sweep on every
+        // transport. Rows outside the mask are left unspecified and never
+        // read.
         let mut work = self.thetas.clone();
+        let mut nbr = vec![0.0; ln * p];
         for s in 0..self.stages {
-            let mut nbr = vec![0.0; ln * p];
-            // Stage 0 refreshes the full halo (`work` = θ^k everywhere);
-            // stage s>0 only ships the rows stage s−1 just updated — on a
-            // plan-driven transport exactly the stage's active boundary
-            // crosses the wire, matching the modeled per-stage charge.
-            let fresh = if s == 0 { &self.full_mask } else { &self.stage_masks[s - 1] };
-            // sddn-lint: graph-support adjacency sparsity is exactly the comm graph
-            exch.exchange_apply_fresh(
+            // Drained schedule: stage 0 refreshes the full halo (`work` =
+            // θ^k everywhere), stage s>0 ships the rows stage s−1 just
+            // updated. Pipelined schedule: round s ships the rows whose
+            // earliest consumer is stage s. Either way a plan-driven
+            // transport puts exactly the modeled per-round charge on the
+            // wire.
+            let fresh = &self.ship_masks[s];
+            // Adjacency sparsity is exactly the comm graph.
+            exch.exchange_apply_fresh_rows(
                 &self.adjacency,
                 fresh,
+                &self.stage_masks[s],
                 self.stage_msgs[s],
                 &work,
                 p,
                 &mut nbr,
             );
+            self.row_evals += self.stage_counts[s];
             for (li, &u) in self.owned.iter().enumerate() {
                 if self.stage_of[u] != s {
                     continue;
@@ -248,11 +388,21 @@ impl ConsensusAlgorithm for Admm {
         }
 
         // Aggregated dual update μ ← μ − β (L θ^{k+1}): one more boundary
-        // round shipping the final stage's fresh values.
+        // round shipping the not-yet-shipped fresh values (drained: the
+        // final stage; pipelined: every node with no later-stage
+        // consumer). The dual consumes every owned row, so compute is the
+        // full mask. Laplacian sparsity is the comm graph plus diagonal.
         let mut lap = vec![0.0; ln * p];
-        let last = &self.stage_masks[self.stages - 1];
-        // sddn-lint: graph-support Laplacian sparsity is exactly the comm graph plus diagonal
-        exch.exchange_apply_fresh(&self.laplacian, last, self.dual_msgs, &work, p, &mut lap);
+        exch.exchange_apply_fresh_rows(
+            &self.laplacian,
+            &self.dual_ship,
+            &self.full_mask,
+            self.dual_msgs,
+            &work,
+            p,
+            &mut lap,
+        );
+        self.row_evals += self.full_mask.len() as u64;
         for i in 0..ln * p {
             self.mu[i] -= beta * lap[i];
         }
@@ -413,5 +563,169 @@ mod tests {
         alg.step(&prob, &mut comm);
         assert_eq!(comm.stats().messages, 4 * g.m() as u64);
         assert_eq!(comm.stats().rounds, n_stages as u64 + 1);
+    }
+
+    /// The per-stage over-compute is fixed: each sweep stage evaluates
+    /// only its own independent set, so one iteration costs `n` row
+    /// evaluations for the whole sweep (the stages partition the nodes)
+    /// plus `n` for the dual round — not `(stages+1)·n` as the old
+    /// full-matvec-per-stage kernel charged.
+    #[test]
+    fn row_evals_charge_one_sweep_plus_dual_per_iteration() {
+        let mut rng = Pcg64::new(118);
+        let g = generate::random_connected(9, 18, &mut rng);
+        let prob = datasets::synthetic_regression(9, 3, 90, 0.1, 0.05, &mut rng);
+        let n_stages = sweep_stages(&g).iter().max().unwrap() + 1;
+        assert!(n_stages >= 2, "need a multi-stage sweep for the regression to bite");
+        let mut alg = Admm::new(&prob, &g, 1.0);
+        let mut comm = crate::net::CommGraph::new(&g);
+        let iters = 3u64;
+        for _ in 0..iters {
+            alg.step(&prob, &mut comm);
+        }
+        let n = g.n as u64;
+        assert_eq!(alg.row_evals, iters * 2 * n);
+        // The pre-fix cost: every stage evaluated every owned row.
+        assert!(alg.row_evals < iters * (n_stages as u64 + 1) * n);
+    }
+
+    /// Forwards everything to an inner [`CommGraph`] but keeps the
+    /// *default* `exchange_apply_fresh_rows` (which computes the full-row
+    /// superset) — the reference the masked kernel must match bit for
+    /// bit.
+    struct FullComputeRef<'g>(crate::net::CommGraph<'g>);
+
+    impl Exchange for FullComputeRef<'_> {
+        fn n(&self) -> usize {
+            self.0.n()
+        }
+        fn owned(&self) -> &[usize] {
+            Exchange::owned(&self.0)
+        }
+        fn exchange_apply(
+            &mut self,
+            a: &Csr,
+            directed_messages: u64,
+            x: &[f64],
+            w: usize,
+            out: &mut [f64],
+        ) {
+            self.0.exchange_apply(a, directed_messages, x, w, out);
+        }
+        fn laplacian_apply_into(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
+            self.0.laplacian_apply_into(x, w, out);
+        }
+        fn allreduce_sum(&mut self, locals: &[f64], w: usize) -> Vec<f64> {
+            self.0.allreduce_sum(locals, w)
+        }
+        fn stats(&self) -> &crate::net::CommStats {
+            self.0.stats()
+        }
+        fn stats_mut(&mut self) -> &mut crate::net::CommStats {
+            self.0.stats_mut()
+        }
+    }
+
+    /// Masked per-stage compute must be invisible in the iterates: the
+    /// rows a stage consumes come out of the same per-row kernel whether
+    /// or not the transport skips the masked-out rows.
+    #[test]
+    fn masked_stage_compute_matches_full_compute_bitwise() {
+        let mut rng = Pcg64::new(117);
+        let g = generate::random_connected(10, 20, &mut rng);
+        let prob = datasets::synthetic_regression(10, 3, 120, 0.1, 0.05, &mut rng);
+        let mut masked = Admm::new(&prob, &g, 1.0);
+        let mut full = Admm::new(&prob, &g, 1.0);
+        let mut comm_m = crate::net::CommGraph::new(&g);
+        let mut comm_f = FullComputeRef(crate::net::CommGraph::new(&g));
+        for it in 0..25 {
+            masked.step(&prob, &mut comm_m);
+            full.step(&prob, &mut comm_f);
+            assert_eq!(masked.thetas(), full.thetas(), "iterates diverged at iteration {it}");
+        }
+        // The compute mask changes which kernels run, never the ledger.
+        assert_eq!(comm_m.stats(), comm_f.0.stats());
+    }
+
+    /// The pipelined ship schedule reorders *when* rows cross the wire,
+    /// never what any stage reads: iterates and modeled totals are
+    /// bit-identical to the drained schedule.
+    #[test]
+    fn pipelined_wavefront_matches_drained_bitwise() {
+        let mut rng = Pcg64::new(119);
+        let g = generate::random_connected(11, 24, &mut rng);
+        let prob = datasets::synthetic_regression(11, 3, 110, 0.1, 0.05, &mut rng);
+        let n_stages = sweep_stages(&g).iter().max().unwrap() + 1;
+        let mut drained = Admm::new(&prob, &g, 1.0);
+        let mut pipelined = Admm::new_pipelined(&prob, &g, 1.0);
+        assert!(pipelined.pipelined && !drained.pipelined);
+        let mut comm_d = crate::net::CommGraph::new(&g);
+        let mut comm_p = crate::net::CommGraph::new(&g);
+        let iters = 20u64;
+        for it in 0..iters {
+            drained.step(&prob, &mut comm_d);
+            pipelined.step(&prob, &mut comm_p);
+            assert_eq!(
+                drained.thetas(),
+                pipelined.thetas(),
+                "iterates diverged at iteration {it}"
+            );
+        }
+        // Same modeled totals: 4m messages over stages+1 rounds per
+        // iteration, and the same row-evaluation count.
+        assert_eq!(comm_p.stats().messages, iters * 4 * g.m() as u64);
+        assert_eq!(comm_p.stats().rounds, iters * (n_stages as u64 + 1));
+        assert_eq!(comm_d.stats().messages, comm_p.stats().messages);
+        assert_eq!(comm_d.stats().rounds, comm_p.stats().rounds);
+        assert_eq!(drained.row_evals, pipelined.row_evals);
+    }
+
+    /// The pipelined schedule is conservative and fresh: round 0 ships
+    /// the full halo, every node ships its update exactly once afterwards
+    /// (never before its own stage has run), every reader's lower-stage
+    /// neighbor has shipped by the reader's round, and the charges total
+    /// 4m.
+    #[test]
+    fn pipelined_schedule_ships_each_update_exactly_once() {
+        let mut rng = Pcg64::new(120);
+        for g in [
+            generate::star(8),
+            generate::path(9),
+            generate::grid(3, 4),
+            generate::random_connected(13, 28, &mut rng),
+        ] {
+            let stages = sweep_stages(&g);
+            let (masks, msgs, dual_mask, dual_msgs) = pipelined_ship_schedule(&g, &stages);
+            assert!(masks[0].iter().all(|&b| b), "round 0 must refresh the full halo");
+            assert_eq!(msgs[0], 2 * g.m() as u64);
+            for u in 0..g.n {
+                let ships =
+                    masks[1..].iter().filter(|m| m[u]).count() + dual_mask[u] as usize;
+                assert_eq!(ships, 1, "node {u} must ship its update exactly once");
+                for (s, m) in masks.iter().enumerate().skip(1) {
+                    if m[u] {
+                        assert!(
+                            stages[u] < s,
+                            "node {u} shipped at round {s} before updating at stage {}",
+                            stages[u]
+                        );
+                    }
+                }
+                // Freshness: every lower-stage neighbor of u has shipped
+                // by u's own round — the invariant bit-identity rests on.
+                for &v in g.neighbors(u) {
+                    if stages[v] < stages[u] {
+                        let shipped_at = (1..masks.len()).find(|&s| masks[s][v]);
+                        assert!(
+                            shipped_at.is_some_and(|s| s <= stages[u]),
+                            "neighbor {v} of {u} not fresh by stage {}",
+                            stages[u]
+                        );
+                    }
+                }
+            }
+            let total: u64 = msgs.iter().sum::<u64>() + dual_msgs;
+            assert_eq!(total, 4 * g.m() as u64, "pipelined schedule total drifted");
+        }
     }
 }

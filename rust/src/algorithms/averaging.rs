@@ -12,7 +12,7 @@
 
 use super::ConsensusAlgorithm;
 use crate::linalg::Csr;
-use crate::net::Exchange;
+use crate::net::{Exchange, StaleState};
 use crate::problems::ConsensusProblem;
 
 /// Distributed-averaging state (one shard's view).
@@ -33,6 +33,8 @@ pub struct DistAveraging {
     momentum: f64,
     /// Reusable diffusion-output scratch (no per-step allocation).
     diff: Vec<f64>,
+    /// Bounded-staleness state for the diffusion exchange (`None` = BSP).
+    stale: Option<StaleState>,
 }
 
 impl DistAveraging {
@@ -74,7 +76,17 @@ impl DistAveraging {
             m_edges: g.m(),
             p,
             momentum: 1.0 - 2.0 / (9.0 * n as f64 + 1.0),
+            stale: None,
         }
+    }
+
+    /// Run the diffusion exchange under a bounded-staleness policy:
+    /// boundary data may be up to `tau` rounds old
+    /// ([`Exchange::exchange_apply_stale`]). `tau = 0` keeps the exact
+    /// BSP path — bit-for-bit, zero overhead.
+    pub fn with_staleness(mut self, tau: u64) -> Self {
+        self.stale = if tau > 0 { Some(StaleState::new(tau)) } else { None };
+        self
     }
 }
 
@@ -91,8 +103,16 @@ impl ConsensusAlgorithm for DistAveraging {
         let mut diff = std::mem::take(&mut self.diff);
         diff.clear();
         diff.resize(ln * p, 0.0);
-        // sddn-lint: graph-support diffusion operator sparsity is exactly the comm graph
-        exch.exchange_apply(&self.diffusion, 2 * self.m_edges as u64, &self.theta, p, &mut diff);
+        let msgs = 2 * self.m_edges as u64;
+        if let Some(st) = self.stale.as_mut() {
+            // Bounded staleness: stale rounds reconstruct the diffusion
+            // from cached off-diagonal halos, charged to the savings
+            // ledger.
+            exch.exchange_apply_stale(&self.diffusion, st, msgs, &self.theta, p, &mut diff);
+        } else {
+            // sddn-lint: graph-support diffusion operator sparsity is exactly the comm graph
+            exch.exchange_apply(&self.diffusion, msgs, &self.theta, p, &mut diff);
+        }
         for (li, &u) in self.owned.iter().enumerate() {
             // Gradient at the current ω.
             let grad = problem.locals[u].gradient(&self.omega[li * p..(li + 1) * p]);

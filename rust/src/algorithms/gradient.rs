@@ -8,7 +8,7 @@
 
 use super::{metropolis_csr, ConsensusAlgorithm};
 use crate::linalg::Csr;
-use crate::net::Exchange;
+use crate::net::{Exchange, StaleState};
 use crate::problems::ConsensusProblem;
 
 /// Step-size schedule.
@@ -34,6 +34,8 @@ pub struct DistGradient {
     p: usize,
     /// Spare buffer swapped with `thetas` each step (no per-step allocation).
     spare: Vec<f64>,
+    /// Bounded-staleness state for the mixing exchange (`None` = BSP).
+    stale: Option<StaleState>,
 }
 
 impl DistGradient {
@@ -63,7 +65,17 @@ impl DistGradient {
             k: 0,
             p: problem.p,
             spare: Vec::new(),
+            stale: None,
         }
+    }
+
+    /// Run the mixing exchange under a bounded-staleness policy: boundary
+    /// data may be up to `tau` rounds old
+    /// ([`Exchange::exchange_apply_stale`]). `tau = 0` keeps the exact
+    /// BSP path — bit-for-bit, zero overhead.
+    pub fn with_staleness(mut self, tau: u64) -> Self {
+        self.stale = if tau > 0 { Some(StaleState::new(tau)) } else { None };
+        self
     }
 
     fn alpha(&self) -> f64 {
@@ -89,8 +101,15 @@ impl ConsensusAlgorithm for DistGradient {
         let mut mixed = std::mem::take(&mut self.spare);
         mixed.clear();
         mixed.resize(ln * p, 0.0);
-        // sddn-lint: graph-support Metropolis mixing sparsity is exactly the comm graph plus diagonal
-        exch.exchange_apply(&self.mixing, 2 * self.m_edges as u64, &self.thetas, p, &mut mixed);
+        let msgs = 2 * self.m_edges as u64;
+        if let Some(st) = self.stale.as_mut() {
+            // Bounded staleness: stale rounds reconstruct the mix from
+            // cached off-diagonal halos, charged to the savings ledger.
+            exch.exchange_apply_stale(&self.mixing, st, msgs, &self.thetas, p, &mut mixed);
+        } else {
+            // sddn-lint: graph-support Metropolis mixing sparsity is exactly the comm graph plus diagonal
+            exch.exchange_apply(&self.mixing, msgs, &self.thetas, p, &mut mixed);
+        }
         // Gradient step at the *current* iterate — purely local.
         for (li, &u) in self.owned.iter().enumerate() {
             let grad = problem.locals[u].gradient(&self.thetas[li * p..(li + 1) * p]);

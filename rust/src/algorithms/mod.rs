@@ -9,6 +9,7 @@
 //! | [`averaging`] | Distributed averaging [13] | primal 1st-order |
 //! | [`network_newton`] | Network Newton-K [9,10] | penalty 2nd-order |
 //! | [`incremental`] | Incremental SDD-Newton (conclusions) | dual 2nd-order |
+//! | [`local_steps`] | Local-step Newton (ADAPD-style) | primal-dual, comm-avoiding |
 //!
 //! Every algorithm implements [`ConsensusAlgorithm::step`] against the
 //! [`crate::net::Exchange`] trait with **shard-local** buffers, so the
@@ -31,6 +32,7 @@ pub mod admm;
 pub mod gradient;
 pub mod averaging;
 pub mod network_newton;
+pub mod local_steps;
 
 use crate::linalg::Csr;
 use crate::net::{CommGraph, CommStats, Exchange};

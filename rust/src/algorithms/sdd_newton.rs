@@ -28,7 +28,8 @@
 
 use super::solvers::LaplacianSolver;
 use super::ConsensusAlgorithm;
-use crate::net::Exchange;
+use crate::linalg::Csr;
+use crate::net::{Exchange, StaleState};
 use crate::problems::ConsensusProblem;
 use crate::runtime::LocalBackend;
 use crate::util::BufferPool;
@@ -90,6 +91,11 @@ pub struct SddNewton<'a> {
     /// Reusable scratch for the step hot loop — after warm-up an outer
     /// iteration allocates nothing beyond transport-level bookkeeping.
     pool: BufferPool,
+    /// Bounded-staleness state for the outer dual-gradient read `g = M y`
+    /// (`None` = BSP). Carries the Laplacian operator because the
+    /// staleness path routes through [`Exchange::exchange_apply_stale`]
+    /// rather than the transport's built-in `laplacian_apply_into`.
+    stale: Option<(Csr, StaleState)>,
 }
 
 impl<'a> SddNewton<'a> {
@@ -130,6 +136,7 @@ impl<'a> SddNewton<'a> {
             p,
             label: String::new(),
             pool: BufferPool::new(),
+            stale: None,
         };
         alg.label = match solver.name() {
             "neumann" => "Distributed ADD-Newton".to_string(),
@@ -153,6 +160,21 @@ impl<'a> SddNewton<'a> {
     /// Toggle the kernel-consistency correction (ablation; default on).
     pub fn with_kernel_correction(mut self, on: bool) -> Self {
         self.kernel_correction = on;
+        self
+    }
+
+    /// Run the outer dual-gradient read `g = M y` under a bounded-
+    /// staleness policy: the boundary rows of `y` may be up to `tau`
+    /// rounds old ([`Exchange::exchange_apply_stale`]). `lap` must be the
+    /// graph Laplacian ([`crate::graph::laplacian_csr`]) — the same
+    /// operator `laplacian_apply_into` applies, so `tau = 0` is
+    /// bit-for-bit the BSP path with the identical ledger charge (one
+    /// round of `2m` messages). Primal recovery and the inner solver
+    /// always read fresh state: the dual gradient is the one outer halo
+    /// read where bounded staleness degrades gracefully (it only delays
+    /// the ascent direction), and the one the staleness sweep prices.
+    pub fn with_staleness(mut self, lap: Csr, tau: u64) -> Self {
+        self.stale = if tau > 0 { Some((lap, StaleState::new(tau))) } else { None };
         self
     }
 
@@ -203,9 +225,15 @@ impl<'a> SddNewton<'a> {
         self.y = y;
         self.pool.put(v);
 
-        // (2) dual gradient g = M y.
+        // (2) dual gradient g = M y — the one outer halo read the
+        // bounded-staleness policy may serve from cache.
         let mut g = self.pool.take(ln * p);
-        exch.laplacian_apply_into(&self.y, p, &mut g);
+        if let Some((lap, st)) = self.stale.as_mut() {
+            let dm = (lap.nnz() - lap.rows) as u64;
+            exch.exchange_apply_stale(lap, st, dm, &self.y, p, &mut g);
+        } else {
+            exch.laplacian_apply_into(&self.y, p, &mut g);
+        }
 
         // (3) M z = g.
         let solver = self.solver;

@@ -340,6 +340,113 @@ pub fn result_row(key: &str, value: impl std::fmt::Display) {
     println!("result {key} = {value}");
 }
 
+/// Which direction of change counts as a regression for a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricDirection {
+    /// Growth is a regression (bytes, messages, seconds, iterations, …).
+    LowerIsBetter,
+    /// Shrinkage is a regression (speedups, throughputs, rates).
+    HigherIsBetter,
+}
+
+/// Classify a metric key by naming convention: `speedup`, `throughput`,
+/// and `rate` keys improve upward, everything else (bytes, messages,
+/// seconds, iteration counts) improves downward. `bench-diff` relies on
+/// this, so metric names in benches should follow the convention.
+pub fn metric_direction(key: &str) -> MetricDirection {
+    let k = key.to_ascii_lowercase();
+    if k.contains("speedup") || k.contains("throughput") || k.contains("rate") {
+        MetricDirection::HigherIsBetter
+    } else {
+        MetricDirection::LowerIsBetter
+    }
+}
+
+/// One metric compared between a baseline and a candidate report.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    /// Bench name both reports agree on.
+    pub bench: String,
+    /// Metric key (summaries compare their `median` field).
+    pub key: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Candidate value.
+    pub candidate: f64,
+    /// Fractional change in the *bad* direction (positive = worse),
+    /// relative to the baseline magnitude.
+    pub worse_frac: f64,
+    /// The change exceeds the tolerance — a regression.
+    pub regressed: bool,
+}
+
+/// Outcome of [`diff_reports`].
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    /// Per-metric comparison rows (baseline metric order).
+    pub rows: Vec<MetricDiff>,
+    /// Baseline metric keys the candidate no longer reports. A vanished
+    /// metric is treated as a regression — silently dropping a headline
+    /// number would otherwise hide an arbitrarily large one.
+    pub missing: Vec<String>,
+}
+
+impl BenchDiff {
+    /// Any metric regressed beyond tolerance (or vanished).
+    pub fn regressed(&self) -> bool {
+        !self.missing.is_empty() || self.rows.iter().any(|r| r.regressed)
+    }
+}
+
+/// Numeric value of a metric entry: scalars directly, timing summaries by
+/// their `median`.
+fn metric_value(v: &Json) -> Option<f64> {
+    v.as_f64().or_else(|| v.get("median").and_then(Json::as_f64))
+}
+
+/// Compare two parsed `BENCH_*.json` documents of the same bench.
+///
+/// Every numeric baseline metric (summaries via their median) is matched
+/// against the candidate's metric of the same key and judged by
+/// [`metric_direction`]: a change worse than `tol` (a fraction of the
+/// baseline magnitude, e.g. `0.05` = 5 %) is a regression, as is a
+/// baseline metric the candidate dropped. Candidate-only metrics are
+/// ignored — adding instrumentation is not a regression. Both documents
+/// must validate ([`validate_report`]) and name the same bench.
+pub fn diff_reports(baseline: &Json, candidate: &Json, tol: f64) -> Result<BenchDiff, String> {
+    validate_report(baseline).map_err(|e| format!("baseline: {e}"))?;
+    validate_report(candidate).map_err(|e| format!("candidate: {e}"))?;
+    let bench = baseline.get("bench").and_then(Json::as_str).unwrap_or_default();
+    let cand_bench = candidate.get("bench").and_then(Json::as_str).unwrap_or_default();
+    if bench != cand_bench {
+        return Err(format!("bench mismatch: baseline '{bench}' vs candidate '{cand_bench}'"));
+    }
+    let base_metrics = baseline.get("metrics").and_then(Json::as_obj).expect("validated");
+    let cand_metrics = candidate.get("metrics").and_then(Json::as_obj).expect("validated");
+    let mut out = BenchDiff::default();
+    for (key, bval) in base_metrics {
+        let Some(base) = metric_value(bval) else { continue };
+        let Some(cand) = cand_metrics.get(key).and_then(metric_value) else {
+            out.missing.push(key.clone());
+            continue;
+        };
+        let delta = match metric_direction(key) {
+            MetricDirection::LowerIsBetter => cand - base,
+            MetricDirection::HigherIsBetter => base - cand,
+        };
+        let worse_frac = delta / base.abs().max(1e-12);
+        out.rows.push(MetricDiff {
+            bench: bench.to_string(),
+            key: key.clone(),
+            baseline: base,
+            candidate: cand,
+            worse_frac,
+            regressed: worse_frac > tol,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -488,6 +595,65 @@ mod tests {
             validate_report(&parsed).unwrap();
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn diff_passes_on_self_compare_and_flags_direction_aware_regressions() {
+        let doc = sample_report().to_json();
+        // Self-compare: every metric identical, nothing regresses.
+        let same = diff_reports(&doc, &doc, 0.05).unwrap();
+        assert!(!same.regressed());
+        assert!(same.missing.is_empty());
+        assert!(same.rows.iter().all(|r| r.worse_frac == 0.0));
+        // wire_bytes (lower-is-better) grows 50 % → regression; the same
+        // growth on speedup_vs_serial (higher-is-better) is an improvement.
+        let mut worse = sample_report();
+        worse.metric("wire_bytes", 1234.0 * 1.5);
+        worse.metric("speedup_vs_serial", 1.7 * 1.5);
+        worse.summary("iter_secs", &Summary::of(&[0.5, 0.6, 0.7]));
+        let diff = diff_reports(&doc, &worse.to_json(), 0.05).unwrap();
+        assert!(diff.regressed());
+        let by_key = |k: &str| diff.rows.iter().find(|r| r.key == k).unwrap();
+        assert!(by_key("wire_bytes").regressed);
+        assert!(!by_key("speedup_vs_serial").regressed);
+        assert!(by_key("speedup_vs_serial").worse_frac < 0.0, "improvement is negative");
+        assert!(!by_key("iter_secs").regressed, "identical summary median");
+        // A shrinking speedup IS a regression.
+        let mut slower = sample_report();
+        slower.metric("speedup_vs_serial", 1.7 * 0.5);
+        let shrunk = diff_reports(&doc, &slower.to_json(), 0.05).unwrap();
+        assert!(shrunk.rows.iter().find(|r| r.key == "speedup_vs_serial").unwrap().regressed);
+    }
+
+    #[test]
+    fn diff_tolerates_changes_within_tol_and_flags_vanished_metrics() {
+        let doc = sample_report().to_json();
+        let mut slight = sample_report();
+        slight.metric("wire_bytes", 1234.0 * 1.04); // +4 % < 5 % tol
+        let diff = diff_reports(&doc, &slight.to_json(), 0.05).unwrap();
+        assert!(!diff.regressed());
+        // Candidate that silently drops a baseline metric regresses.
+        let mut dropped = BenchReport::new("unit_test");
+        dropped.config_num("n", 1000.0);
+        dropped.metric("wire_bytes", 1234.0);
+        let diff = diff_reports(&doc, &dropped.to_json(), 0.05).unwrap();
+        assert!(diff.regressed());
+        assert!(diff.missing.contains(&"speedup_vs_serial".to_string()));
+        // Candidate-only metrics are fine.
+        let mut extra = sample_report();
+        extra.metric("new_counter", 7.0);
+        assert!(!diff_reports(&doc, &extra.to_json(), 0.05).unwrap().regressed());
+        // Mismatched bench names refuse to compare.
+        let other = BenchReport::new("other_bench").to_json();
+        assert!(diff_reports(&doc, &other, 0.05).is_err());
+    }
+
+    #[test]
+    fn metric_direction_convention() {
+        assert_eq!(metric_direction("wire_bytes"), MetricDirection::LowerIsBetter);
+        assert_eq!(metric_direction("iter_secs"), MetricDirection::LowerIsBetter);
+        assert_eq!(metric_direction("speedup_vs_serial"), MetricDirection::HigherIsBetter);
+        assert_eq!(metric_direction("rows_per_sec_rate"), MetricDirection::HigherIsBetter);
     }
 
     #[test]

@@ -29,9 +29,19 @@ pub enum AlgoKind {
     AddNewton { terms: usize, alpha: f64 },
     ExactNewton { alpha: f64 },
     Admm { beta: f64 },
+    /// ADMM with the pipelined ship-at-earliest-consumer wavefront
+    /// ([`crate::algorithms::admm::pipelined_ship_schedule`]):
+    /// bit-identical iterates and the same 4m/iteration total, but stage
+    /// s+1's boundary rows ship as soon as their own predecessors update.
+    AdmmPipelined { beta: f64 },
     Gradient { alpha: f64 },
     Averaging { beta: f64 },
     NetworkNewton { k: usize, alpha: f64, epsilon: f64 },
+    /// ADAPD-style communication-avoiding local-step Newton
+    /// ([`crate::algorithms::local_steps::LocalNewton`]): `local_steps`
+    /// inner proximal-Newton solves per outer iteration, `comm_rounds`
+    /// Metropolis mixing exchanges.
+    LocalNewton { eta: f64, local_steps: usize, comm_rounds: usize },
 }
 
 impl AlgoKind {
@@ -47,10 +57,14 @@ impl AlgoKind {
             }
             AlgoKind::ExactNewton { alpha } => AlgoKind::ExactNewton { alpha: alpha * factor },
             AlgoKind::Admm { beta } => AlgoKind::Admm { beta: beta * factor },
+            AlgoKind::AdmmPipelined { beta } => AlgoKind::AdmmPipelined { beta: beta * factor },
             AlgoKind::Gradient { alpha } => AlgoKind::Gradient { alpha: alpha * factor },
             AlgoKind::Averaging { beta } => AlgoKind::Averaging { beta: beta * factor },
             AlgoKind::NetworkNewton { k, alpha, epsilon } => {
                 AlgoKind::NetworkNewton { k, alpha, epsilon: epsilon * factor }
+            }
+            AlgoKind::LocalNewton { eta, local_steps, comm_rounds } => {
+                AlgoKind::LocalNewton { eta: eta * factor, local_steps, comm_rounds }
             }
         }
     }
@@ -62,8 +76,10 @@ impl AlgoKind {
             AlgoKind::AddNewton { .. } => "add",
             AlgoKind::ExactNewton { .. } => "exact",
             AlgoKind::Admm { .. } => "admm",
+            AlgoKind::AdmmPipelined { .. } => "admmp",
             AlgoKind::Gradient { .. } => "grad",
             AlgoKind::Averaging { .. } => "avg",
+            AlgoKind::LocalNewton { .. } => "local",
             AlgoKind::NetworkNewton { k, .. } => {
                 if *k <= 1 {
                     "nn1"
@@ -81,6 +97,8 @@ impl AlgoKind {
             "add" => AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
             "exact" => AlgoKind::ExactNewton { alpha: 1.0 },
             "admm" => AlgoKind::Admm { beta: 1.0 },
+            "admmp" => AlgoKind::AdmmPipelined { beta: 1.0 },
+            "local" => AlgoKind::LocalNewton { eta: 0.5, local_steps: 4, comm_rounds: 1 },
             "grad" => AlgoKind::Gradient { alpha: 0.01 },
             "avg" => AlgoKind::Averaging { beta: 0.005 },
             "nn1" => AlgoKind::NetworkNewton { k: 1, alpha: 0.1, epsilon: 1.0 },
@@ -329,9 +347,17 @@ mod tests {
 
     #[test]
     fn algo_ids_roundtrip() {
-        for id in ["sdd", "add", "exact", "admm", "grad", "avg", "nn1", "nn2"] {
+        for id in ["sdd", "add", "exact", "admm", "admmp", "grad", "avg", "nn1", "nn2", "local"] {
             assert_eq!(AlgoKind::from_id(id).unwrap().id(), id);
         }
         assert!(AlgoKind::from_id("bogus").is_none());
+    }
+
+    #[test]
+    fn scale_step_touches_the_step_like_knob_of_new_kinds() {
+        let p = AlgoKind::AdmmPipelined { beta: 1.0 }.scale_step(0.5);
+        assert_eq!(p, AlgoKind::AdmmPipelined { beta: 0.5 });
+        let l = AlgoKind::LocalNewton { eta: 0.5, local_steps: 4, comm_rounds: 2 }.scale_step(0.5);
+        assert_eq!(l, AlgoKind::LocalNewton { eta: 0.25, local_steps: 4, comm_rounds: 2 });
     }
 }

@@ -135,6 +135,17 @@ where
             scope.spawn(move || {
                 let mut exch =
                     ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
+                // Opt-in reorder-buffer bound: with SDDN_REORDER_BOUND=R a
+                // parked payload more than R rounds ahead of the awaited
+                // round dies loudly instead of growing the buffer (set R
+                // to τ+1 under a bounded-staleness policy with halo age τ;
+                // leave unset for sparse masked schedules).
+                if let Some(bound) = std::env::var("SDDN_REORDER_BOUND")
+                    .ok()
+                    .and_then(|v| v.parse::<u64>().ok())
+                {
+                    exch.set_reorder_high_water(bound);
+                }
                 let mut alg = make_alg(wid, exch.owned().to_vec());
                 for it in 0..iters {
                     alg.step(problem, &mut exch);

@@ -447,6 +447,9 @@ pub fn run_leader_with_hosts(
                     floats: counters[9],
                     rounds: counters[10],
                     allreduces: counters[11],
+                    skipped_rounds: counters[12],
+                    saved_messages: counters[13],
+                    saved_floats: counters[14],
                 };
                 // Every worker tallies the identical modeled ledger.
                 if comm.is_some_and(|c| c != stats) {

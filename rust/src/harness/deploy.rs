@@ -27,7 +27,7 @@
 //! placement-agnostic totals of the other transports.
 
 use super::experiments::{
-    build_graph, build_problem, make_inner_solver, make_sharded_algorithm,
+    build_graph, build_problem, make_inner_solver, make_sharded_algorithm_stale,
     modeled_cross_messages,
 };
 use crate::algorithms::{run, RunOptions, Trace};
@@ -76,6 +76,11 @@ pub struct TcpJobSpec {
     /// When set, worker processes run the per-host hybrid driver and the
     /// leader broadcasts the rank→host placement at rendezvous.
     pub hostfile: Option<String>,
+    /// Bounded-staleness bound τ for halo exchanges (`0` = exact BSP).
+    /// Applied identically on every side of a parity comparison — the
+    /// bulk reference, the in-process shard reference, and each worker
+    /// process — so the three-way bit-for-bit checks hold for any τ.
+    pub stale_tau: u64,
 }
 
 /// A spec resolved into the concrete experiment objects (identical on
@@ -159,6 +164,9 @@ impl TcpJobSpec {
         a.extend(["--workers".to_string(), self.workers.to_string()]);
         a.extend(["--partitioning".to_string(), self.partitioning.clone()]);
         a.extend(["--solver-seed".to_string(), self.solver_seed.to_string()]);
+        if self.stale_tau > 0 {
+            a.extend(["--stale-tau".to_string(), self.stale_tau.to_string()]);
+        }
         if let Some(path) = &self.hostfile {
             a.extend(["--hostfile".to_string(), path.clone()]);
         }
@@ -174,7 +182,15 @@ pub fn tcp_worker_main(spec: &TcpJobSpec, net: &WorkerNetConfig) -> Result<(), S
     let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
     let solver_ref = solver.as_deref();
     run_tcp_worker(&job.problem, &job.g, &job.part, spec.iters, net, &|owned| {
-        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+        make_sharded_algorithm_stale(
+            &job.kind,
+            &job.problem,
+            &job.g,
+            &backend,
+            solver_ref,
+            owned,
+            spec.stale_tau,
+        )
     })
     .map_err(|e| e.to_string())
 }
@@ -214,7 +230,15 @@ pub fn hybrid_host_with_placement(
     let solver_ref = solver.as_deref();
     let cfg = HybridHostConfig { placement, host, leader_addr, iters: spec.iters };
     run_hybrid_host(&job.problem, &job.g, &job.part, &cfg, &|owned| {
-        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+        make_sharded_algorithm_stale(
+            &job.kind,
+            &job.problem,
+            &job.g,
+            &backend,
+            solver_ref,
+            owned,
+            spec.stale_tau,
+        )
     })
     .map_err(|e| e.to_string())
 }
@@ -293,13 +317,14 @@ pub fn run_tcp_cross_transport(
     let backend = NativeBackend;
     let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
     let solver_ref = solver.as_deref();
-    let mut alg = make_sharded_algorithm(
+    let mut alg = make_sharded_algorithm_stale(
         &job.kind,
         &job.problem,
         &job.g,
         &backend,
         solver_ref,
         (0..job.problem.n()).collect(),
+        spec.stale_tau,
     );
     let mut comm = CommGraph::new(&job.g);
     let bulk = run(
@@ -309,7 +334,15 @@ pub fn run_tcp_cross_transport(
         &RunOptions { max_iters: iters, ..Default::default() },
     );
     let shard = run_partitioned_baseline(&job.problem, &job.g, &job.part, iters, &|owned| {
-        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+        make_sharded_algorithm_stale(
+            &job.kind,
+            &job.problem,
+            &job.g,
+            &backend,
+            solver_ref,
+            owned,
+            spec.stale_tau,
+        )
     });
 
     // The TCP pool: leader here, workers as processes or socket threads.
@@ -503,13 +536,14 @@ pub fn run_hybrid_cross_transport(
     let backend = NativeBackend;
     let solver = make_inner_solver(&job.kind, &job.g, &mut Pcg64::new(spec.solver_seed));
     let solver_ref = solver.as_deref();
-    let mut alg = make_sharded_algorithm(
+    let mut alg = make_sharded_algorithm_stale(
         &job.kind,
         &job.problem,
         &job.g,
         &backend,
         solver_ref,
         (0..job.problem.n()).collect(),
+        spec.stale_tau,
     );
     let mut comm = CommGraph::new(&job.g);
     let bulk = run(
@@ -519,7 +553,15 @@ pub fn run_hybrid_cross_transport(
         &RunOptions { max_iters: iters, ..Default::default() },
     );
     let shard = run_partitioned_baseline(&job.problem, &job.g, &job.part, iters, &|owned| {
-        make_sharded_algorithm(&job.kind, &job.problem, &job.g, &backend, solver_ref, owned)
+        make_sharded_algorithm_stale(
+            &job.kind,
+            &job.problem,
+            &job.g,
+            &backend,
+            solver_ref,
+            owned,
+            spec.stale_tau,
+        )
     });
 
     // The hybrid pool: leader here (broadcasting the placement), one

@@ -3,6 +3,7 @@
 use crate::algorithms::admm::Admm;
 use crate::algorithms::averaging::DistAveraging;
 use crate::algorithms::gradient::{DistGradient, GradSchedule};
+use crate::algorithms::local_steps::LocalNewton;
 use crate::algorithms::network_newton::NetworkNewton;
 use crate::algorithms::sdd_newton::{SddNewton, StepSize};
 use crate::algorithms::solvers::{sddm_for_graph, ExactCgSolver, LaplacianSolver, NeumannSolver};
@@ -101,6 +102,14 @@ pub fn run_single(
             let mut a = Admm::new(problem, g, beta);
             run(&mut a, problem, &mut comm, opts)
         }
+        AlgoKind::AdmmPipelined { beta } => {
+            let mut a = Admm::new_pipelined(problem, g, beta);
+            run(&mut a, problem, &mut comm, opts)
+        }
+        AlgoKind::LocalNewton { eta, local_steps, comm_rounds } => {
+            let mut a = LocalNewton::new(problem, g, eta, local_steps, comm_rounds);
+            run(&mut a, problem, &mut comm, opts)
+        }
         AlgoKind::Gradient { alpha } => {
             let mut a = DistGradient::new(problem, g, GradSchedule::Constant(alpha));
             run(&mut a, problem, &mut comm, opts)
@@ -136,7 +145,8 @@ pub fn make_inner_solver(
 /// Build a shard-local instance of `kind` owning the given global nodes —
 /// the factory consumed by [`run_partitioned_baseline`] (and, with
 /// `owned = 0..n`, the bulk-path construction). Dual-Newton kinds borrow
-/// the caller's shared inner `solver`.
+/// the caller's shared inner `solver`. Strict BSP: equivalent to
+/// [`make_sharded_algorithm_stale`] with `stale_tau = 0`.
 pub fn make_sharded_algorithm<'a>(
     kind: &AlgoKind,
     problem: &'a ConsensusProblem,
@@ -145,31 +155,52 @@ pub fn make_sharded_algorithm<'a>(
     solver: Option<&'a dyn LaplacianSolver>,
     owned: Vec<usize>,
 ) -> Box<dyn ConsensusAlgorithm + 'a> {
+    make_sharded_algorithm_stale(kind, problem, g, backend, solver, owned, 0)
+}
+
+/// [`make_sharded_algorithm`] under a bounded-staleness policy: boundary
+/// data consumed by the kind's policy-eligible halo exchange may be up to
+/// `stale_tau` rounds old ([`crate::net::Exchange::exchange_apply_stale`]).
+/// `stale_tau = 0` is bit-for-bit the strict BSP construction. The policy
+/// applies to the mixing/diffusion exchange of the first-order baselines
+/// and to the dual-Newton kinds' outer dual-gradient read; ADMM (either
+/// schedule — its Gauss–Seidel sweep *requires* fresh predecessor
+/// values), Network Newton, and the local-step method (already
+/// communication-avoiding by construction) ignore it.
+pub fn make_sharded_algorithm_stale<'a>(
+    kind: &AlgoKind,
+    problem: &'a ConsensusProblem,
+    g: &Graph,
+    backend: &'a NativeBackend,
+    solver: Option<&'a dyn LaplacianSolver>,
+    owned: Vec<usize>,
+    stale_tau: u64,
+) -> Box<dyn ConsensusAlgorithm + 'a> {
     match *kind {
         AlgoKind::SddNewton { alpha, .. }
         | AlgoKind::AddNewton { alpha, .. }
         | AlgoKind::ExactNewton { alpha } => {
             let solver = solver.expect("dual-Newton kinds need the shared inner solver");
-            Box::new(SddNewton::new_sharded(
-                problem,
-                backend,
-                solver,
-                StepSize::Fixed(alpha),
-                owned,
-            ))
+            let alg = SddNewton::new_sharded(problem, backend, solver, StepSize::Fixed(alpha), owned)
+                .with_staleness(crate::graph::laplacian_csr(g), stale_tau);
+            Box::new(alg)
         }
         AlgoKind::Admm { beta } => Box::new(Admm::new_sharded(problem, g, beta, owned)),
-        AlgoKind::Gradient { alpha } => Box::new(DistGradient::new_sharded(
-            problem,
-            g,
-            GradSchedule::Constant(alpha),
-            owned,
-        )),
-        AlgoKind::Averaging { beta } => {
-            Box::new(DistAveraging::new_sharded(problem, g, beta, owned))
+        AlgoKind::AdmmPipelined { beta } => {
+            Box::new(Admm::new_sharded_pipelined(problem, g, beta, owned))
         }
+        AlgoKind::Gradient { alpha } => Box::new(
+            DistGradient::new_sharded(problem, g, GradSchedule::Constant(alpha), owned)
+                .with_staleness(stale_tau),
+        ),
+        AlgoKind::Averaging { beta } => Box::new(
+            DistAveraging::new_sharded(problem, g, beta, owned).with_staleness(stale_tau),
+        ),
         AlgoKind::NetworkNewton { k, alpha, epsilon } => {
             Box::new(NetworkNewton::new_sharded(problem, g, k, alpha, epsilon, owned))
+        }
+        AlgoKind::LocalNewton { eta, local_steps, comm_rounds } => {
+            Box::new(LocalNewton::new_sharded(problem, g, eta, local_steps, comm_rounds, owned))
         }
     }
 }
@@ -220,6 +251,21 @@ pub fn modeled_cross_messages(
             }
             iters as u64 * per_iter + allreduce_wire
         }
+        AlgoKind::AdmmPipelined { .. } => {
+            // Mirror the pipelined ship masks round by round from the
+            // same schedule the algorithm precomputes.
+            let stage_of = crate::algorithms::admm::sweep_stages(g);
+            let (masks, _, dual_mask, _) =
+                crate::algorithms::admm::pipelined_ship_schedule(g, &stage_of);
+            let adj = crate::graph::laplacian::adjacency_csr(g);
+            let lap = crate::graph::laplacian_csr(g);
+            let mut per_iter = plan_cross_rows(&adj, owner, None);
+            for mask in &masks[1..] {
+                per_iter += plan_cross_rows(&adj, owner, Some(mask.as_slice()));
+            }
+            per_iter += plan_cross_rows(&lap, owner, Some(dual_mask.as_slice()));
+            iters as u64 * per_iter + allreduce_wire
+        }
         _ => {
             let exchange_rounds = bulk.rounds - 2 * bulk.allreduces;
             let boundary = plan_cross_rows(&crate::graph::laplacian_csr(g), owner, None);
@@ -240,12 +286,37 @@ pub fn run_cross_transport(
     iters: usize,
     rng: &mut Pcg64,
 ) -> (Trace, PartitionedRun) {
+    run_cross_transport_stale(kind, problem, g, part, iters, 0, rng)
+}
+
+/// [`run_cross_transport`] under a bounded-staleness policy
+/// (`stale_tau`, see [`make_sharded_algorithm_stale`]). The parity
+/// contract holds for *every* τ — stale rounds are a pure function of
+/// the last refresh output and the current local iterate, so both
+/// transports reconstruct identical halos and tally identical ledgers
+/// (savings counters included).
+pub fn run_cross_transport_stale(
+    kind: &AlgoKind,
+    problem: &ConsensusProblem,
+    g: &Graph,
+    part: &Partition,
+    iters: usize,
+    stale_tau: u64,
+    rng: &mut Pcg64,
+) -> (Trace, PartitionedRun) {
     let backend = NativeBackend;
     let solver = make_inner_solver(kind, g, rng);
     let solver_ref: Option<&dyn LaplacianSolver> = solver.as_deref();
     // Bulk-synchronous reference.
-    let mut alg =
-        make_sharded_algorithm(kind, problem, g, &backend, solver_ref, (0..problem.n()).collect());
+    let mut alg = make_sharded_algorithm_stale(
+        kind,
+        problem,
+        g,
+        &backend,
+        solver_ref,
+        (0..problem.n()).collect(),
+        stale_tau,
+    );
     let mut comm = CommGraph::new(g);
     let trace = run(
         // `Box<dyn ConsensusAlgorithm>` implements the trait itself, so
@@ -258,7 +329,7 @@ pub fn run_cross_transport(
     );
     // Partitioned run over the same shared state.
     let out = run_partitioned_baseline(problem, g, part, iters, &|owned| {
-        make_sharded_algorithm(kind, problem, g, &backend, solver_ref, owned)
+        make_sharded_algorithm_stale(kind, problem, g, &backend, solver_ref, owned, stale_tau)
     });
     (trace, out)
 }

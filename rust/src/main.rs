@@ -36,6 +36,7 @@ fn main() {
         Some("worker") => cmd_worker(&args[1..]),
         Some("solve") => cmd_solve(&args[1..]),
         Some("bench-validate") => cmd_bench_validate(&args[1..]),
+        Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | Some("-h") | Some("--help") | None => {
             print_usage();
@@ -64,13 +65,16 @@ fn print_usage() {
            sddnewton partitioned [--experiment <preset>] [--workers K] [--iters N]\n\
                          [--partitioning contiguous|round_robin|bfs] [--algorithms a,b,c]\n\
                          [--transport channels|tcp|hybrid] [--listen HOST:PORT]\n\
+                         [--stale-tau T]  (bounded-staleness halo bound; 0 = exact BSP)\n\
                          [--hostfile F]   (hybrid: rank→host placement)\n\
            sddnewton worker (--rank R | --host NAME --hostfile F) --connect HOST:PORT\n\
                          --workers K [--experiment <preset>] [--config file.json]\n\
                          [--algorithms a,b,c] [--seed S] [--algo-index I]\n\
-                         [--iters N] [--partitioning P] [--solver-seed S]\n\
+                         [--iters N] [--partitioning P] [--solver-seed S] [--stale-tau T]\n\
            sddnewton solve [--nodes N] [--edges M] [--eps E] [--seed S] [--threads T]\n\
            sddnewton bench-validate [--dir bench_results] [--allow-empty]\n\
+           sddnewton bench-diff <baseline> <candidate> [--tol FRAC]\n\
+                         (BENCH_*.json files or directories; exit 1 on regression)\n\
            sddnewton info\n\
          \n\
          PRESETS: {}",
@@ -297,9 +301,10 @@ fn cmd_partitioned(args: &[String]) -> i32 {
         }
     };
     let transport = f.kv.get("transport").map(String::as_str).unwrap_or("channels");
+    let stale_tau: u64 = f.kv.get("stale-tau").and_then(|v| v.parse().ok()).unwrap_or(0);
     println!(
-        "'{}' on {} workers ({scheme}, {} cut edges, {transport}), {iters} iterations — \
-         bulk vs sharded parity",
+        "'{}' on {} workers ({scheme}, {} cut edges, {transport}, τ={stale_tau}), \
+         {iters} iterations — bulk vs sharded parity",
         cfg.name,
         workers,
         part.cut_edges(&g)
@@ -319,8 +324,9 @@ fn cmd_partitioned(args: &[String]) -> i32 {
     );
     let mut drifted = false;
     for kind in &cfg.algorithms {
-        let (trace, out) =
-            harness::experiments::run_cross_transport(kind, &problem, &g, &part, iters, &mut rng);
+        let (trace, out) = harness::experiments::run_cross_transport_stale(
+            kind, &problem, &g, &part, iters, stale_tau, &mut rng,
+        );
         let ledger_ok = trace
             .records
             .last()
@@ -386,6 +392,7 @@ fn tcp_spec(
         // rebuilds the randomized inner solver from this exact seed.
         solver_seed: cfg.seed.wrapping_add(0x51D0 + idx as u64),
         hostfile: None,
+        stale_tau: f.kv.get("stale-tau").and_then(|v| v.parse().ok()).unwrap_or(0),
     }
 }
 
@@ -567,6 +574,7 @@ fn cmd_worker(args: &[String]) -> i32 {
             .unwrap_or_else(|| "contiguous".to_string()),
         solver_seed: f.kv.get("solver-seed").and_then(|v| v.parse().ok()).unwrap_or(0),
         hostfile: f.kv.get("hostfile").cloned(),
+        stale_tau: f.kv.get("stale-tau").and_then(|v| v.parse().ok()).unwrap_or(0),
     };
     if let Some(host) = host {
         return match harness::hybrid_host_main(&spec, &host, &connect) {
@@ -688,6 +696,161 @@ fn cmd_bench_validate(args: &[String]) -> i32 {
     }
     println!("bench-validate: {} file(s), {bad} invalid", names.len());
     i32::from(bad > 0)
+}
+
+/// Parse one `BENCH_*.json` file.
+fn load_bench_report(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(text.trim()).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Latest `BENCH_*.json` per bench name under `dir` (files sort by name,
+/// and names embed the UTC date plus a same-day dedupe suffix, so the
+/// lexicographically last file for a bench is its newest trajectory
+/// point).
+fn latest_bench_reports(
+    dir: &std::path::Path,
+) -> Result<std::collections::BTreeMap<String, (std::path::PathBuf, Json)>, String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut names: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    names.sort();
+    let mut latest = std::collections::BTreeMap::new();
+    for path in names {
+        let doc = load_bench_report(&path)?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{}: missing bench name", path.display()))?
+            .to_string();
+        latest.insert(bench, (path, doc));
+    }
+    Ok(latest)
+}
+
+/// `bench-diff <baseline> <candidate> [--tol FRAC]`: compare BENCH_*.json
+/// performance reports (single files, or directories paired by bench name
+/// taking each bench's newest point) and exit 1 when any metric regresses
+/// beyond the tolerance. The regression gate for perf-sensitive PRs.
+fn cmd_bench_diff(args: &[String]) -> i32 {
+    let f = match parse_flags(args, &[]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let [baseline, candidate] = f.positional.as_slice() else {
+        eprintln!("bench-diff needs exactly two positionals: <baseline> <candidate> (file or dir)");
+        return 2;
+    };
+    let tol: f64 = match f.kv.get("tol").map(|v| v.parse()) {
+        None => 0.05,
+        Some(Ok(t)) if t >= 0.0 => t,
+        _ => {
+            eprintln!("bad --tol (expected a non-negative fraction, e.g. 0.05)");
+            return 2;
+        }
+    };
+    let base_path = std::path::Path::new(baseline);
+    let cand_path = std::path::Path::new(candidate);
+
+    // Resolve to (bench name → pair of parsed docs).
+    let pairs: Vec<(String, Json, Json)> = if base_path.is_dir() || cand_path.is_dir() {
+        if !(base_path.is_dir() && cand_path.is_dir()) {
+            eprintln!("bench-diff: mixed file/directory arguments — pass two files or two dirs");
+            return 2;
+        }
+        let base = match latest_bench_reports(base_path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("bench-diff: {e}");
+                return 1;
+            }
+        };
+        let mut cand = match latest_bench_reports(cand_path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("bench-diff: {e}");
+                return 1;
+            }
+        };
+        let mut v = Vec::new();
+        for (bench, (bpath, bdoc)) in base {
+            match cand.remove(&bench) {
+                Some((cpath, cdoc)) => {
+                    println!("pair {bench}: {} vs {}", bpath.display(), cpath.display());
+                    v.push((bench, bdoc, cdoc));
+                }
+                None => println!("skip {bench}: no candidate report (new baselines are fine)"),
+            }
+        }
+        if v.is_empty() {
+            eprintln!("bench-diff: no bench appears in both directories");
+            return 1;
+        }
+        v
+    } else {
+        let bdoc = match load_bench_report(base_path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench-diff: {e}");
+                return 1;
+            }
+        };
+        let cdoc = match load_bench_report(cand_path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench-diff: {e}");
+                return 1;
+            }
+        };
+        let bench = bdoc.get("bench").and_then(Json::as_str).unwrap_or("?").to_string();
+        vec![(bench, bdoc, cdoc)]
+    };
+
+    println!(
+        "{:<20} {:<28} {:>14} {:>14} {:>9}  verdict",
+        "bench", "metric", "baseline", "candidate", "worse %"
+    );
+    let mut regressed = false;
+    for (bench, bdoc, cdoc) in &pairs {
+        let diff = match sddnewton::benchkit::diff_reports(bdoc, cdoc, tol) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench-diff: {bench}: {e}");
+                return 1;
+            }
+        };
+        for row in &diff.rows {
+            println!(
+                "{:<20} {:<28} {:>14.6} {:>14.6} {:>8.2}%  {}",
+                row.bench,
+                row.key,
+                row.baseline,
+                row.candidate,
+                row.worse_frac * 100.0,
+                if row.regressed { "REGRESSED" } else { "ok" },
+            );
+        }
+        for key in &diff.missing {
+            println!("{bench:<20} {key:<28} {:>14} {:>14} {:>9}  VANISHED", "-", "-", "-");
+        }
+        regressed |= diff.regressed();
+    }
+    if regressed {
+        eprintln!("bench-diff: regression beyond {:.1}% tolerance", tol * 100.0);
+        return 1;
+    }
+    println!("bench-diff: all metrics within {:.1}% tolerance", tol * 100.0);
+    0
 }
 
 fn cmd_info() -> i32 {

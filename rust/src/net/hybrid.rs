@@ -986,6 +986,9 @@ impl HybridExchange {
             self.stats.floats,
             self.stats.rounds,
             self.stats.allreduces,
+            self.stats.skipped_rounds,
+            self.stats.saved_messages,
+            self.stats.saved_floats,
         ];
         put_u64s(&mut self.body_scratch, &counters);
         put_f64s(&mut self.body_scratch, thetas);
@@ -1030,6 +1033,7 @@ impl HybridExchange {
         &mut self,
         a: &Csr,
         fresh: Option<&[bool]>,
+        compute: Option<&[bool]>,
         directed_messages: u64,
         x: &[f64],
         w: usize,
@@ -1041,6 +1045,9 @@ impl HybridExchange {
         assert_eq!(out.len(), ln * w);
         if let Some(m) = fresh {
             assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        if let Some(c) = compute {
+            assert_eq!(c.len(), self.n, "compute mask must cover every global node");
         }
         self.ensure_plan(a);
         self.round += 1;
@@ -1153,9 +1160,12 @@ impl HybridExchange {
         }
 
         // 3. Owned rows via the shared CSR row kernel — bit-for-bit equal
-        //    to every other transport.
+        //    to every other transport. A compute mask skips rows the
+        //    caller will not read.
         for (li, &u) in self.plan.owned.iter().enumerate() {
-            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            if compute.is_none_or(|c| c[u]) {
+                a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            }
         }
         self.stats.record_exchange(directed_messages, w);
         Ok(())
@@ -1241,7 +1251,7 @@ impl Exchange for HybridExchange {
         w: usize,
         out: &mut [f64],
     ) {
-        if let Err(e) = self.exchange_round(a, None, directed_messages, x, w, out) {
+        if let Err(e) = self.exchange_round(a, None, None, directed_messages, x, w, out) {
             self.die(e)
         }
     }
@@ -1255,7 +1265,24 @@ impl Exchange for HybridExchange {
         w: usize,
         out: &mut [f64],
     ) {
-        if let Err(e) = self.exchange_round(a, Some(fresh), directed_messages, x, w, out) {
+        if let Err(e) = self.exchange_round(a, Some(fresh), None, directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn exchange_apply_fresh_rows(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        compute: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) =
+            self.exchange_round(a, Some(fresh), Some(compute), directed_messages, x, w, out)
+        {
             self.die(e)
         }
     }

@@ -47,6 +47,7 @@
 pub mod hybrid;
 pub mod model;
 pub mod partitioned;
+pub mod staleness;
 pub mod stats;
 pub mod tcp;
 pub mod threaded;
@@ -54,6 +55,7 @@ pub mod threaded;
 use crate::graph::laplacian::laplacian_csr;
 use crate::graph::Graph;
 use crate::linalg::Csr;
+pub use staleness::{StaleState, StalenessPolicy};
 pub use stats::CommStats;
 
 /// The communication window algorithms get onto the rest of the network.
@@ -117,6 +119,65 @@ pub trait Exchange {
         let _ = fresh;
         // sddn-lint: allow(overlay) reason=default forwards to exchange_apply, which enforces the operator contract itself
         self.exchange_apply(a, directed_messages, x, w, out);
+    }
+
+    /// Neighbor exchange restricted to freshly-updated source rows *and*
+    /// a subset of owned output rows: same wire contract as
+    /// [`Self::exchange_apply_fresh`], plus the caller's promise that it
+    /// will only read output rows with `compute[owned()[li]] == true` —
+    /// rows outside the compute mask are left unspecified, letting
+    /// plan-driven transports skip their row kernels (wavefront
+    /// schedules like ADMM's sweep stages consume only one independent
+    /// set per stage). The default computes the superset — masked-out
+    /// rows are simply ignored by the caller — so computed rows are
+    /// bit-identical whether or not a transport overrides this.
+    fn exchange_apply_fresh_rows(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        compute: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let _ = compute;
+        // sddn-lint: allow(overlay) reason=default forwards to exchange_apply_fresh, which enforces the operator contract itself
+        self.exchange_apply_fresh(a, fresh, directed_messages, x, w, out);
+    }
+
+    /// Neighbor exchange under a bounded-staleness policy: `st` carries
+    /// the per-call-site [`StaleState`]. With `st.tau == 0` this is a
+    /// plain [`Self::exchange_apply`] (bit-for-bit, zero overhead). With
+    /// `tau > 0`, one call out of every `tau + 1` is a *refresh* (a real
+    /// exchange, charged normally) and the rest are *stale* rounds
+    /// reconstructed locally from the cached off-diagonal contribution
+    /// plus the fresh diagonal self-term — no wire activity, charged to
+    /// the ledger's savings counters
+    /// ([`CommStats::record_skipped_exchange`]). See [`staleness`] for
+    /// the exactness argument; stale outputs are a pure function of the
+    /// last refresh output and the current local iterate, so
+    /// cross-transport bit-equality holds for every `tau`.
+    fn exchange_apply_stale(
+        &mut self,
+        a: &Csr,
+        st: &mut StaleState,
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if st.next_is_refresh() {
+            st.prime(a, self.owned());
+            // sddn-lint: allow(overlay) reason=staleness wrapper forwards to exchange_apply, which enforces the operator contract itself
+            self.exchange_apply(a, directed_messages, x, w, out);
+            if st.tau > 0 {
+                st.cache_refresh(x, w, out);
+            }
+        } else {
+            st.apply_stale(x, w, out);
+            self.stats_mut().record_skipped_exchange(directed_messages, w);
+        }
     }
 
     /// Register a named exchange plan for operator `a`: a plan-driven
@@ -292,6 +353,29 @@ impl Exchange for CommGraph<'_> {
     ) {
         assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
         a.matvec_multi_into(x, w, out);
+        self.stats.record_exchange(directed_messages, w);
+    }
+
+    fn exchange_apply_fresh_rows(
+        &mut self,
+        a: &Csr,
+        _fresh: &[bool],
+        compute: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        // Bulk state is co-located, so `fresh` is moot; the compute mask
+        // skips row kernels exactly like the partitioned transports —
+        // computed rows match the full sweep bit for bit.
+        assert_eq!(x.len(), self.g.n * w, "payload shape mismatch");
+        assert_eq!(compute.len(), self.g.n, "compute mask shape mismatch");
+        for u in 0..self.g.n {
+            if compute[u] {
+                a.row_matvec_multi(u, x, w, &mut out[u * w..(u + 1) * w]);
+            }
+        }
         self.stats.record_exchange(directed_messages, w);
     }
 

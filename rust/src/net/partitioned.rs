@@ -239,11 +239,22 @@ pub(crate) fn op_key(a: &Csr) -> OpKey {
 
 /// Receive the `round`-tagged payload from `peer`, parking any other
 /// (possibly future-round) payloads in the reorder buffer.
+///
+/// `high_water` bounds how far ahead of the awaited round a parked
+/// payload may be: under a bounded-staleness policy with halo age τ a
+/// correct peer can legitimately run at most τ+1 exchange rounds ahead,
+/// so a payload tagged beyond `round + high_water` is a protocol
+/// violation (or a runaway peer that would otherwise grow the buffer
+/// without bound) and dies loudly — never a silent drop, which would
+/// corrupt a later round. `None` keeps the legacy unbounded buffer
+/// (sparse masked schedules can park arbitrarily many rounds a worker
+/// never consumes).
 fn recv_round(
     pending: &mut HashMap<(usize, u64), Vec<f64>>,
     inbox: &Receiver<WireMsg>,
     peer: usize,
     round: u64,
+    high_water: Option<u64>,
 ) -> Vec<f64> {
     if let Some(d) = pending.remove(&(peer, round)) {
         return d;
@@ -253,6 +264,15 @@ fn recv_round(
         let (src, r, data) = inbox.recv().expect("peer worker died");
         if src == peer && r == round {
             return data;
+        }
+        if let Some(bound) = high_water {
+            assert!(
+                r <= round + bound,
+                "reorder buffer high-water exceeded: worker {src} is at round {r}, \
+                 {} ahead of awaited round {round} (bound {bound}); a bounded-staleness \
+                 policy with halo age tau admits at most tau+1 rounds of skew",
+                r - round
+            );
         }
         let prev = pending.insert((src, r), data);
         assert!(prev.is_none(), "duplicate payload from worker {src} round {r}");
@@ -290,6 +310,9 @@ pub struct ShardExchange<'a> {
     payload_pool: Vec<Vec<f64>>,
     /// Persistent scratch for the fresh-masked receive row list.
     fresh_scratch: Vec<usize>,
+    /// Reorder-buffer high-water mark in rounds; `None` = unbounded
+    /// (legacy). See [`ShardExchange::set_reorder_high_water`].
+    reorder_high_water: Option<u64>,
     stats: CommStats,
     cross: u64,
     cross_floats: u64,
@@ -330,6 +353,7 @@ impl<'a> ShardExchange<'a> {
             op_plans: HashMap::new(),
             payload_pool: Vec::new(),
             fresh_scratch: Vec::new(),
+            reorder_high_water: None,
             stats: CommStats::default(),
             cross: 0,
             cross_floats: 0,
@@ -363,6 +387,17 @@ impl<'a> ShardExchange<'a> {
     /// plus all-reduce up/down payloads). ×8 for bytes on the wire.
     pub fn cross_floats(&self) -> u64 {
         self.cross_floats
+    }
+
+    /// Bound the reorder buffer: a payload parked more than `rounds`
+    /// exchange rounds ahead of the awaited round dies loudly instead of
+    /// growing the buffer without bound. Under a bounded-staleness
+    /// policy with halo age τ the correct setting is τ+1 — a well-behaved
+    /// peer can never legitimately exceed that skew. Opt-in because
+    /// sparse masked schedules (wavefronts where a worker's receive set
+    /// is empty for many rounds) legitimately park far-future payloads.
+    pub fn set_reorder_high_water(&mut self, rounds: u64) {
+        self.reorder_high_water = Some(rounds);
     }
 
     /// This worker's shard plan.
@@ -401,12 +436,16 @@ impl<'a> ShardExchange<'a> {
     /// One plan-driven exchange round; `fresh` (when given) restricts the
     /// shipped rows to the freshly-updated source set — both endpoints
     /// intersect the same plan with the same global mask, so the wire
-    /// stays framed by the round tag alone.
+    /// stays framed by the round tag alone. `compute` (when given)
+    /// restricts the step-3 row kernels to the masked owned rows; rows
+    /// outside it are left unspecified (the caller promised not to read
+    /// them) — what ships is unchanged, only local arithmetic is skipped.
     // sddn-lint: hot-path
     fn exchange_round(
         &mut self,
         a: &Csr,
         fresh: Option<&[bool]>,
+        compute: Option<&[bool]>,
         directed_messages: u64,
         x: &[f64],
         w: usize,
@@ -418,6 +457,9 @@ impl<'a> ShardExchange<'a> {
         assert_eq!(out.len(), ln * w);
         if let Some(m) = fresh {
             assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        if let Some(c) = compute {
+            assert_eq!(c.len(), self.n, "compute mask must cover every global node");
         }
         self.ensure_plan(a);
         self.round += 1;
@@ -498,7 +540,8 @@ impl<'a> ShardExchange<'a> {
             if expect.is_empty() {
                 continue;
             }
-            let data = recv_round(&mut self.pending, &self.inbox, *peer, round);
+            let data =
+                recv_round(&mut self.pending, &self.inbox, *peer, round, self.reorder_high_water);
             assert_eq!(data.len(), expect.len() * w, "halo payload width drifted");
             for (idx, &u) in expect.iter().enumerate() {
                 self.mirror[u * w..(u + 1) * w].copy_from_slice(&data[idx * w..(idx + 1) * w]);
@@ -509,9 +552,13 @@ impl<'a> ShardExchange<'a> {
         }
 
         // 3. Owned rows via the shared CSR row kernel (bit-for-bit equal
-        //    to the bulk transport's block sweep).
+        //    to the bulk transport's block sweep). A compute mask skips
+        //    rows the caller will not read — wavefront schedules pay for
+        //    one independent set per stage instead of the full shard.
         for (li, &u) in self.plan.owned.iter().enumerate() {
-            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            if compute.is_none_or(|c| c[u]) {
+                a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            }
         }
         self.stats.record_exchange(directed_messages, w);
     }
@@ -534,7 +581,7 @@ impl Exchange for ShardExchange<'_> {
         w: usize,
         out: &mut [f64],
     ) {
-        self.exchange_round(a, None, directed_messages, x, w, out);
+        self.exchange_round(a, None, None, directed_messages, x, w, out);
     }
 
     fn exchange_apply_fresh(
@@ -546,7 +593,20 @@ impl Exchange for ShardExchange<'_> {
         w: usize,
         out: &mut [f64],
     ) {
-        self.exchange_round(a, Some(fresh), directed_messages, x, w, out);
+        self.exchange_round(a, Some(fresh), None, directed_messages, x, w, out);
+    }
+
+    fn exchange_apply_fresh_rows(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        compute: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        self.exchange_round(a, Some(fresh), Some(compute), directed_messages, x, w, out);
     }
 
     fn register_plan(&mut self, name: &str, a: &Csr) {

@@ -1,0 +1,132 @@
+//! Bounded-staleness halo policy.
+//!
+//! The strict BSP contract refreshes every halo every round. A
+//! [`StalenessPolicy`] with `tau > 0` lets an exchange call site reuse
+//! boundary data up to `tau` rounds old: out of every `tau + 1`
+//! consecutive calls, one *refresh* round actually crosses the wire and
+//! the following `tau` *stale* rounds are reconstructed locally from the
+//! cached off-diagonal contribution plus the (always fresh) diagonal
+//! self-term. `tau = 0` is bit-for-bit the BSP path.
+//!
+//! The reconstruction is exact in the following sense: for an operator
+//! `a` and owned row `u`,
+//!
+//! ```text
+//! (a · x̂)[u] = a[u,u] · x[u]  +  Σ_{v≠u} a[u,v] · x̂[v]
+//! ```
+//!
+//! The second term is what the refresh round cached (`offdiag`); a stale
+//! round recombines it with the *current* local `x[u]`. The output of a
+//! stale round is therefore a pure function of (last refresh output,
+//! current local iterate) — both of which are already bit-identical
+//! across transports — so bounded staleness preserves cross-transport
+//! bit-equality for every `tau`, on every transport, with zero
+//! per-transport code.
+//!
+//! Ledger accounting: refresh rounds charge the normal
+//! [`crate::net::CommStats::record_exchange`]; stale rounds charge only
+//! [`crate::net::CommStats::record_skipped_exchange`] — the modeled
+//! savings — so wire-truth assertions over `messages`/`floats`/`bytes`
+//! hold unchanged.
+
+use crate::linalg::Csr;
+
+/// How stale consumed boundary data may be, in rounds.
+///
+/// `tau = 0` means strict BSP (every round refreshes); `tau = 2` means
+/// one wire round out of every three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StalenessPolicy {
+    /// Maximum halo age in rounds.
+    pub tau: u64,
+}
+
+impl StalenessPolicy {
+    /// Strict BSP: never consume stale data.
+    pub fn bsp() -> Self {
+        StalenessPolicy { tau: 0 }
+    }
+
+    /// Fresh per-call-site state for this policy.
+    pub fn state(&self) -> StaleState {
+        StaleState::new(self.tau)
+    }
+}
+
+/// Per-call-site staleness state: one `StaleState` per (operator,
+/// vector) stream of exchange calls. Created via [`StalenessPolicy`] or
+/// [`StaleState::new`]; consumed by
+/// [`crate::net::Exchange::exchange_apply_stale`].
+#[derive(Debug, Clone)]
+pub struct StaleState {
+    /// Maximum halo age in rounds (0 = strict BSP).
+    pub tau: u64,
+    /// Calls issued so far; `age % (tau + 1) == 0` refreshes.
+    age: u64,
+    /// Whether `owned`/`diag` have been captured yet.
+    primed: bool,
+    /// Global ids of the handle's owned rows, captured on first refresh.
+    owned: Vec<usize>,
+    /// Operator diagonal `a[u,u]` per owned row.
+    diag: Vec<f64>,
+    /// Cached off-diagonal contribution per owned row × width, from the
+    /// last refresh round.
+    offdiag: Vec<f64>,
+}
+
+impl StaleState {
+    /// Fresh state for a maximum halo age of `tau` rounds.
+    pub fn new(tau: u64) -> Self {
+        StaleState { tau, age: 0, primed: false, owned: Vec::new(), diag: Vec::new(), offdiag: Vec::new() }
+    }
+
+    /// True when the next call will cross the wire (the first call
+    /// always does).
+    pub fn next_is_refresh(&self) -> bool {
+        self.tau == 0 || self.age % (self.tau + 1) == 0
+    }
+
+    /// Capture the owned-row set and operator diagonal (idempotent).
+    pub(crate) fn prime(&mut self, a: &Csr, owned: &[usize]) {
+        if self.primed {
+            return;
+        }
+        self.owned.extend_from_slice(owned);
+        self.diag.reserve(owned.len());
+        for &u in owned {
+            let mut d = 0.0;
+            for k in a.indptr[u]..a.indptr[u + 1] {
+                if a.indices[k] == u {
+                    d += a.values[k];
+                }
+            }
+            self.diag.push(d);
+        }
+        self.primed = true;
+    }
+
+    /// After a refresh round wrote `out = (a·x̂)[owned]`, cache the
+    /// off-diagonal part `out − diag ⊙ x` for the stale rounds to come.
+    pub(crate) fn cache_refresh(&mut self, x: &[f64], w: usize, out: &[f64]) {
+        self.offdiag.clear();
+        self.offdiag.extend_from_slice(out);
+        for (li, &d) in self.diag.iter().enumerate() {
+            for j in 0..w {
+                self.offdiag[li * w + j] -= d * x[li * w + j];
+            }
+        }
+        self.age += 1;
+    }
+
+    /// Reconstruct a stale round locally: cached off-diagonal plus the
+    /// fresh diagonal self-term.
+    pub(crate) fn apply_stale(&mut self, x: &[f64], w: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.offdiag.len());
+        for (li, &d) in self.diag.iter().enumerate() {
+            for j in 0..w {
+                out[li * w + j] = self.offdiag[li * w + j] + d * x[li * w + j];
+            }
+        }
+        self.age += 1;
+    }
+}

@@ -11,6 +11,15 @@ pub struct CommStats {
     pub rounds: u64,
     /// All-reduce operations (tree broadcasts count as 2 rounds each).
     pub allreduces: u64,
+    /// Exchange rounds a staleness/local-steps policy elided entirely
+    /// (no wire activity; consumers reused τ-old boundary data or a
+    /// purely local iterate). Not counted in `rounds`.
+    pub skipped_rounds: u64,
+    /// Point-to-point messages the skipped rounds *would* have moved
+    /// under the strict BSP contract — the modeled traffic savings.
+    pub saved_messages: u64,
+    /// Floats the skipped rounds would have moved (`saved_messages × w`).
+    pub saved_floats: u64,
 }
 
 impl CommStats {
@@ -22,6 +31,18 @@ impl CommStats {
         self.messages += directed_messages;
         self.floats += directed_messages * w as u64;
         self.rounds += 1;
+    }
+
+    /// One exchange round a relaxed-consistency policy skipped: under
+    /// strict BSP it would have moved `directed_messages` messages of
+    /// `w` floats, but nothing touched the wire. Only the savings
+    /// counters move — `messages`/`floats`/`rounds` stay untouched so
+    /// wire-truth assertions (`payload_bytes == cross_floats × 8` on
+    /// rounds that ship) keep holding verbatim.
+    pub fn record_skipped_exchange(&mut self, directed_messages: u64, w: usize) {
+        self.skipped_rounds += 1;
+        self.saved_messages += directed_messages;
+        self.saved_floats += directed_messages * w as u64;
     }
 
     /// One edge-exchange round over `m` undirected edges with `w`-float
@@ -60,6 +81,9 @@ impl CommStats {
             floats: self.floats - earlier.floats,
             rounds: self.rounds - earlier.rounds,
             allreduces: self.allreduces - earlier.allreduces,
+            skipped_rounds: self.skipped_rounds - earlier.skipped_rounds,
+            saved_messages: self.saved_messages - earlier.saved_messages,
+            saved_floats: self.saved_floats - earlier.saved_floats,
         }
     }
 }
@@ -99,6 +123,29 @@ mod tests {
         assert_eq!(s.messages, 7);
         assert_eq!(s.floats, 21);
         assert_eq!(s.rounds, 1);
+    }
+
+    #[test]
+    fn skipped_exchange_moves_only_savings_counters() {
+        let mut s = CommStats::default();
+        s.record_exchange(10, 2);
+        let shipped = s;
+        s.record_skipped_exchange(10, 2);
+        // Wire-truth counters untouched by a skipped round.
+        assert_eq!(s.messages, shipped.messages);
+        assert_eq!(s.floats, shipped.floats);
+        assert_eq!(s.rounds, shipped.rounds);
+        assert_eq!(s.bytes(), shipped.bytes());
+        // Savings modeled exactly.
+        assert_eq!(s.skipped_rounds, 1);
+        assert_eq!(s.saved_messages, 10);
+        assert_eq!(s.saved_floats, 20);
+        let d = s.since(&shipped);
+        assert_eq!(d.skipped_rounds, 1);
+        assert_eq!(d.saved_messages, 10);
+        assert_eq!(d.saved_floats, 20);
+        assert_eq!(d.messages, 0);
+        assert_eq!(d.rounds, 0);
     }
 
     #[test]

@@ -60,10 +60,12 @@ use std::time::{Duration, Instant};
 /// Number of `u64` counters leading a [`FrameKind::Metric`] body, ahead
 /// of the owned θ rows: `[cross, cross_floats, intra_cross, intra_floats,
 /// inter_cross, inter_floats, payload_bytes, header_bytes, messages,
-/// floats, rounds, allreduces]`. The intra/inter columns split the cross
-/// totals by host placement (identical to the totals on the pure TCP
-/// transport, which treats every rank as remote).
-pub const METRIC_COUNTERS: usize = 12;
+/// floats, rounds, allreduces, skipped_rounds, saved_messages,
+/// saved_floats]`. The intra/inter columns split the cross totals by
+/// host placement (identical to the totals on the pure TCP transport,
+/// which treats every rank as remote); the trailing three columns carry
+/// the modeled savings of rounds a staleness/local-steps policy elided.
+pub const METRIC_COUNTERS: usize = 15;
 
 /// How a worker process finds and talks to the rest of the pool.
 #[derive(Debug, Clone)]
@@ -510,6 +512,9 @@ impl TcpExchange {
                 self.stats.floats,
                 self.stats.rounds,
                 self.stats.allreduces,
+                self.stats.skipped_rounds,
+                self.stats.saved_messages,
+                self.stats.saved_floats,
             ],
         );
         put_f64s(&mut self.body_scratch, thetas);
@@ -547,10 +552,13 @@ impl TcpExchange {
     /// One plan-driven exchange round over the sockets. Identical
     /// structure to `ShardExchange::exchange_round`, with frame encoding
     /// in place of channel sends and byte-level wire accounting.
+    /// `compute` (when given) restricts the step-3 row kernels to the
+    /// masked owned rows, leaving the rest of `out` unspecified.
     fn exchange_round(
         &mut self,
         a: &Csr,
         fresh: Option<&[bool]>,
+        compute: Option<&[bool]>,
         directed_messages: u64,
         x: &[f64],
         w: usize,
@@ -562,6 +570,9 @@ impl TcpExchange {
         assert_eq!(out.len(), ln * w);
         if let Some(m) = fresh {
             assert_eq!(m.len(), self.n, "fresh mask must cover every global node");
+        }
+        if let Some(c) = compute {
+            assert_eq!(c.len(), self.n, "compute mask must cover every global node");
         }
         self.ensure_plan(a);
         self.round += 1;
@@ -660,9 +671,12 @@ impl TcpExchange {
         }
 
         // 3. Owned rows via the shared CSR row kernel — bit-for-bit equal
-        //    to both in-process transports.
+        //    to both in-process transports. A compute mask skips rows the
+        //    caller will not read.
         for (li, &u) in self.plan.owned.iter().enumerate() {
-            a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            if compute.is_none_or(|c| c[u]) {
+                a.row_matvec_multi(u, &self.mirror, w, &mut out[li * w..(li + 1) * w]);
+            }
         }
         self.stats.record_exchange(directed_messages, w);
         Ok(())
@@ -740,7 +754,7 @@ impl Exchange for TcpExchange {
         w: usize,
         out: &mut [f64],
     ) {
-        if let Err(e) = self.exchange_round(a, None, directed_messages, x, w, out) {
+        if let Err(e) = self.exchange_round(a, None, None, directed_messages, x, w, out) {
             self.die(e)
         }
     }
@@ -754,7 +768,24 @@ impl Exchange for TcpExchange {
         w: usize,
         out: &mut [f64],
     ) {
-        if let Err(e) = self.exchange_round(a, Some(fresh), directed_messages, x, w, out) {
+        if let Err(e) = self.exchange_round(a, Some(fresh), None, directed_messages, x, w, out) {
+            self.die(e)
+        }
+    }
+
+    fn exchange_apply_fresh_rows(
+        &mut self,
+        a: &Csr,
+        fresh: &[bool],
+        compute: &[bool],
+        directed_messages: u64,
+        x: &[f64],
+        w: usize,
+        out: &mut [f64],
+    ) {
+        if let Err(e) =
+            self.exchange_round(a, Some(fresh), Some(compute), directed_messages, x, w, out)
+        {
             self.die(e)
         }
     }

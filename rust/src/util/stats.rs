@@ -49,9 +49,28 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Relative error |a - b| / max(|b|, eps).
+/// Default denominator floor for [`rel_err`].
+pub const REL_ERR_EPS: f64 = 1e-12;
+
+/// Relative error `|a − b| / max(|b|, eps)` with an explicit denominator
+/// floor.
+///
+/// The floor caps the reported error near a zero baseline: whenever
+/// `|b| < eps` the result degrades to `|a − b| / eps` — an *absolute*
+/// error in units of `eps`, not a ratio. Two denormal-tiny values that
+/// differ by twenty orders of magnitude in ratio therefore compare as
+/// "equal" under any `eps` far above them; callers comparing quantities
+/// that can legitimately live below the floor (bench-diff thresholds,
+/// near-converged objectives) must pick `eps` at or below the smallest
+/// magnitude they consider meaningful, or pre-check `|b| >= eps`.
+pub fn rel_err_eps(a: f64, b: f64, eps: f64) -> f64 {
+    (a - b).abs() / b.abs().max(eps)
+}
+
+/// Relative error with the default [`REL_ERR_EPS`] floor — see
+/// [`rel_err_eps`] for the contract at near-zero baselines.
 pub fn rel_err(a: f64, b: f64) -> f64 {
-    (a - b).abs() / b.abs().max(1e-12)
+    rel_err_eps(a, b, REL_ERR_EPS)
 }
 
 #[cfg(test)]
@@ -99,5 +118,22 @@ mod tests {
     fn rel_err_basics() {
         assert!(rel_err(1.0, 1.0) < 1e-15);
         assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    /// The documented boundary contract: below the floor, `rel_err`
+    /// reports absolute error in units of eps — NOT the true ratio.
+    /// Two denormal-tiny values whose ratio is 1e20 read as ~0 under the
+    /// default floor; an eps chosen below them recovers the discrepancy.
+    #[test]
+    fn rel_err_floor_contract_at_denormal_baselines() {
+        let (a, b) = (1e-300f64, 1e-320f64);
+        // Default floor: silently ~0 — the trap the explicit API names.
+        assert!(rel_err(a, b) < 1e-287);
+        // Same values with an honest floor: the discrepancy is huge.
+        assert!(rel_err_eps(a, b, 1e-321) > 1e19);
+        // At/above the floor the two forms agree exactly.
+        assert_eq!(rel_err(3.0, 2.0), rel_err_eps(3.0, 2.0, REL_ERR_EPS));
+        // eps floors the denominator, never the numerator.
+        assert_eq!(rel_err_eps(5.0, 0.0, 1.0), 5.0);
     }
 }

@@ -1,0 +1,318 @@
+//! Bounded-staleness and local-step contracts, cross-transport.
+//!
+//! The relaxation PR's headline guarantees, asserted end to end:
+//!
+//! - **τ = 0 is BSP.** Building an algorithm through the staleness
+//!   factory with `stale_tau = 0` is bit-for-bit the staleness-free
+//!   construction — iterates, per-iteration objectives, and the full
+//!   modeled ledger (savings counters stay zero).
+//! - **Staleness is deterministic on every transport.** For τ > 0 the
+//!   stale reconstruction is a pure function of the last refresh and the
+//!   current local iterate, so bulk, in-process shards, the TCP pool,
+//!   and the hybrid pool all agree bit for bit — across partitionings
+//!   and worker counts — with identical ledgers *including* the savings
+//!   counters.
+//! - **The savings ledger is exact.** Skipped rounds equal the elided
+//!   refresh cadence (`iters − ⌈iters/(τ+1)⌉`), and saved messages and
+//!   floats equal precisely what the strict BSP contract would have
+//!   shipped for those rounds.
+//! - **Local steps split the ledger the same way.** Local-step Newton
+//!   charges its elided mixing rounds to the savings counters on every
+//!   transport, with `local_steps = 1` saving nothing.
+//! - **The pipelined ADMM wavefront is a schedule change, not a math
+//!   change.** Drained and pipelined runs produce bit-identical iterates
+//!   on both the bulk and the partitioned transport.
+
+use sddnewton::algorithms::{run, RunOptions};
+use sddnewton::config::AlgoKind;
+use sddnewton::coordinator::Partition;
+use sddnewton::graph::generate;
+use sddnewton::harness::deploy::{
+    run_hybrid_cross_transport, run_tcp_cross_transport, TcpJobSpec,
+};
+use sddnewton::harness::experiments::{
+    make_inner_solver, make_sharded_algorithm, make_sharded_algorithm_stale,
+    run_cross_transport_stale,
+};
+use sddnewton::net::hybrid::parse_hostfile;
+use sddnewton::net::CommGraph;
+use sddnewton::problems::datasets;
+use sddnewton::runtime::NativeBackend;
+use sddnewton::util::Pcg64;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// τ = 0 through the staleness factory is the staleness-free
+/// construction, bit for bit, for every policy-eligible kind.
+#[test]
+fn tau_zero_is_bit_identical_to_the_bsp_construction() {
+    let mut rng = Pcg64::new(9_001);
+    let g = generate::random_connected(10, 22, &mut rng);
+    let prob = datasets::synthetic_regression(10, 3, 120, 0.1, 0.05, &mut rng);
+    let backend = NativeBackend;
+    let kinds = [
+        AlgoKind::Gradient { alpha: 0.01 },
+        AlgoKind::Averaging { beta: 0.002 },
+        AlgoKind::SddNewton { eps: 1e-4, alpha: 1.0 },
+    ];
+    for kind in &kinds {
+        let solver = make_inner_solver(kind, &g, &mut Pcg64::new(77));
+        let solver_ref = solver.as_deref();
+        let all: Vec<usize> = (0..10).collect();
+        let mut plain =
+            make_sharded_algorithm(kind, &prob, &g, &backend, solver_ref, all.clone());
+        let mut comm_plain = CommGraph::new(&g);
+        let t_plain = run(
+            &mut plain,
+            &prob,
+            &mut comm_plain,
+            &RunOptions { max_iters: 6, ..Default::default() },
+        );
+        let solver2 = make_inner_solver(kind, &g, &mut Pcg64::new(77));
+        let solver2_ref = solver2.as_deref();
+        let mut stale =
+            make_sharded_algorithm_stale(kind, &prob, &g, &backend, solver2_ref, all, 0);
+        let mut comm_stale = CommGraph::new(&g);
+        let t_stale = run(
+            &mut stale,
+            &prob,
+            &mut comm_stale,
+            &RunOptions { max_iters: 6, ..Default::default() },
+        );
+        let id = kind.id();
+        assert_eq!(bits(&t_plain.final_thetas), bits(&t_stale.final_thetas), "{id} iterate");
+        assert_eq!(t_plain.records.len(), t_stale.records.len());
+        for (a, b) in t_plain.records.iter().zip(&t_stale.records) {
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{id} objective");
+        }
+        assert_eq!(comm_plain.stats(), comm_stale.stats(), "{id} ledger");
+        assert_eq!(comm_stale.stats().skipped_rounds, 0, "{id} must skip nothing at tau=0");
+        assert_eq!(comm_stale.stats().saved_messages, 0);
+        assert_eq!(comm_stale.stats().saved_floats, 0);
+    }
+}
+
+/// For τ > 0 the bulk and in-process shard transports agree bit for bit
+/// — iterates, per-iteration objectives, and the full ledger including
+/// the savings counters — across kinds, τ, partitionings, and worker
+/// counts.
+#[test]
+fn stale_halos_are_bit_identical_across_bulk_and_shard_transports() {
+    let mut rng = Pcg64::new(9_002);
+    let n = 12;
+    let g = generate::random_connected(n, 26, &mut rng);
+    let prob = datasets::synthetic_regression(n, 3, 144, 0.1, 0.05, &mut rng);
+    let iters = 6;
+    let kinds = [
+        AlgoKind::Gradient { alpha: 0.01 },
+        AlgoKind::Averaging { beta: 0.002 },
+        AlgoKind::SddNewton { eps: 1e-4, alpha: 1.0 },
+    ];
+    for kind in &kinds {
+        for tau in [1u64, 3] {
+            for k in [2usize, 4] {
+                for part in [Partition::contiguous(n, k), Partition::round_robin(n, k)] {
+                    let mut solver_rng = Pcg64::new(4_242);
+                    let (trace, out) = run_cross_transport_stale(
+                        kind,
+                        &prob,
+                        &g,
+                        &part,
+                        iters,
+                        tau,
+                        &mut solver_rng,
+                    );
+                    let id = kind.id();
+                    assert_eq!(
+                        bits(&trace.final_thetas),
+                        bits(&out.thetas),
+                        "{id} tau={tau} k={k}: iterate drifted"
+                    );
+                    for (a, b) in trace.records[1..].iter().zip(&out.records) {
+                        assert_eq!(
+                            a.objective.to_bits(),
+                            b.objective.to_bits(),
+                            "{id} tau={tau} k={k}: objective drifted"
+                        );
+                    }
+                    let bulk_stats = trace.records.last().unwrap().comm;
+                    assert_eq!(bulk_stats, out.comm, "{id} tau={tau} k={k}: ledger drifted");
+                    assert!(
+                        out.comm.skipped_rounds > 0,
+                        "{id} tau={tau}: policy must actually skip rounds"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The savings counters model exactly what strict BSP would have
+/// shipped for the elided rounds: one policy-eligible exchange per
+/// iteration, refreshed every τ+1 rounds.
+#[test]
+fn savings_ledger_models_exactly_the_elided_rounds() {
+    let mut rng = Pcg64::new(9_003);
+    let g = generate::random_connected(9, 18, &mut rng);
+    let m = g.m() as u64;
+    let p = 3usize;
+    let prob = datasets::synthetic_regression(9, p, 90, 0.1, 0.05, &mut rng);
+    let backend = NativeBackend;
+    let iters = 10usize;
+    for tau in [1u64, 2, 3] {
+        let kind = AlgoKind::Gradient { alpha: 0.01 };
+        let mut alg = make_sharded_algorithm_stale(
+            &kind,
+            &prob,
+            &g,
+            &backend,
+            None,
+            (0..9).collect(),
+            tau,
+        );
+        let mut comm = CommGraph::new(&g);
+        run(
+            &mut alg,
+            &prob,
+            &mut comm,
+            &RunOptions { max_iters: iters, ..Default::default() },
+        );
+        let refreshes =
+            iters as u64 / (tau + 1) + u64::from(iters as u64 % (tau + 1) != 0);
+        let skipped = iters as u64 - refreshes;
+        let s = comm.stats();
+        assert_eq!(s.skipped_rounds, skipped, "tau={tau}");
+        assert_eq!(s.saved_messages, skipped * 2 * m, "tau={tau}");
+        assert_eq!(s.saved_floats, skipped * 2 * m * p as u64, "tau={tau}");
+        // The real counters cover exactly the refresh rounds.
+        assert_eq!(s.rounds, refreshes);
+        assert_eq!(s.messages, refreshes * 2 * m);
+    }
+}
+
+/// Spec for one algorithm of the smoke preset on a loopback pool.
+fn spec(algo: &str, workers: usize, iters: usize, stale_tau: u64) -> TcpJobSpec {
+    TcpJobSpec {
+        experiment: "smoke".to_string(),
+        config_path: None,
+        algorithms: Some(algo.to_string()),
+        seed: None,
+        algo_index: 0,
+        iters,
+        workers,
+        partitioning: "contiguous".to_string(),
+        solver_seed: 0x57A1E,
+        hostfile: None,
+        stale_tau,
+    }
+}
+
+/// The TCP pool honors the staleness policy bit for bit: the three-way
+/// parity harness (bulk, shards, sockets — iterates, objectives, full
+/// ledger with savings, wire truth) passes for τ > 0, and the wire
+/// carries strictly less than the τ = 0 run. Local-step Newton rides the
+/// same pool with its modeled savings intact.
+#[test]
+fn tcp_parity_holds_under_staleness_and_local_steps() {
+    for (algo, tau) in [("grad", 2u64), ("sdd", 1), ("local", 0)] {
+        for k in [2usize, 4] {
+            let parity = run_tcp_cross_transport(&spec(algo, k, 4, tau), "127.0.0.1:0", None)
+                .unwrap_or_else(|e| panic!("tcp run failed for {algo} tau={tau} k={k}: {e}"));
+            assert!(
+                parity.ok(),
+                "tcp parity failed for {algo} tau={tau} k={k}: {parity:?}"
+            );
+            let comm = parity.tcp.comm;
+            if tau > 0 || algo == "local" {
+                assert!(
+                    comm.skipped_rounds > 0,
+                    "{algo} tau={tau}: policy must skip rounds on the pool"
+                );
+                // Savings stay internally consistent (messages × a whole
+                // payload width).
+                assert!(comm.saved_messages > 0 && comm.saved_floats > 0);
+                assert_eq!(comm.saved_floats % comm.saved_messages, 0);
+            } else {
+                assert_eq!(comm.skipped_rounds, 0);
+            }
+        }
+    }
+    // Strictly-fewer-wire-floats: same algorithm, growing τ.
+    let base = run_tcp_cross_transport(&spec("grad", 2, 6, 0), "127.0.0.1:0", None).unwrap();
+    let relaxed = run_tcp_cross_transport(&spec("grad", 2, 6, 2), "127.0.0.1:0", None).unwrap();
+    assert!(base.ok() && relaxed.ok());
+    assert!(
+        relaxed.tcp.cross_floats < base.tcp.cross_floats,
+        "tau=2 must ship strictly fewer floats: {} vs {}",
+        relaxed.tcp.cross_floats,
+        base.tcp.cross_floats
+    );
+}
+
+/// The hybrid pool agrees too, with the placement-split wire accounting
+/// intact under staleness (co-located savings are modeled identically).
+#[test]
+fn hybrid_parity_holds_under_staleness_and_local_steps() {
+    let hostfile = "0 alpha\n1 alpha\n2 beta\n3 beta\n";
+    let placement = parse_hostfile(hostfile).expect("test hostfile must parse");
+    for (algo, tau) in [("grad", 2u64), ("local", 0)] {
+        let parity =
+            run_hybrid_cross_transport(&spec(algo, 4, 4, tau), &placement, "127.0.0.1:0", None)
+                .unwrap_or_else(|e| panic!("hybrid run failed for {algo} tau={tau}: {e}"));
+        assert!(parity.ok(), "hybrid parity failed for {algo} tau={tau}: {parity:?}");
+        if tau > 0 || algo == "local" {
+            assert!(parity.hybrid.comm.skipped_rounds > 0, "{algo} tau={tau}");
+        }
+    }
+}
+
+/// Drained and pipelined ADMM produce bit-identical iterates on both the
+/// bulk and the partitioned transport — the wavefront reorders shipping,
+/// never values.
+#[test]
+fn admm_pipelined_matches_drained_on_both_transports() {
+    let mut rng = Pcg64::new(9_004);
+    let n = 12;
+    let g = generate::random_connected(n, 26, &mut rng);
+    let prob = datasets::synthetic_regression(n, 3, 144, 0.1, 0.05, &mut rng);
+    let iters = 8;
+    let part = Partition::round_robin(n, 3);
+    let mut rng_a = Pcg64::new(5);
+    let (drained_trace, drained_out) = run_cross_transport_stale(
+        &AlgoKind::Admm { beta: 1.0 },
+        &prob,
+        &g,
+        &part,
+        iters,
+        0,
+        &mut rng_a,
+    );
+    let mut rng_b = Pcg64::new(5);
+    let (pipe_trace, pipe_out) = run_cross_transport_stale(
+        &AlgoKind::AdmmPipelined { beta: 1.0 },
+        &prob,
+        &g,
+        &part,
+        iters,
+        0,
+        &mut rng_b,
+    );
+    // Each schedule is internally parity-clean across transports…
+    assert_eq!(bits(&drained_trace.final_thetas), bits(&drained_out.thetas));
+    assert_eq!(bits(&pipe_trace.final_thetas), bits(&pipe_out.thetas));
+    // …and the two schedules agree with each other, iteration by
+    // iteration.
+    assert_eq!(
+        bits(&drained_trace.final_thetas),
+        bits(&pipe_trace.final_thetas),
+        "pipelined wavefront drifted from the drained schedule"
+    );
+    for (a, b) in drained_trace.records.iter().zip(&pipe_trace.records) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+    // Both ship the same total volume (every boundary row exactly once
+    // per sweep plus the dual round), just on different rounds.
+    assert_eq!(drained_out.cross_floats, pipe_out.cross_floats);
+}

@@ -10,7 +10,9 @@
 //! across contiguous/round-robin/BFS partitionings and k ∈ {1, 2, 5} —
 //! the regression net for the ADMM stage-count over-shipping bug — plus
 //! the overlay-plan properties that let `SquaredChain` levels ride the
-//! transport, and a barrier-free reorder-buffer stress test.
+//! transport, a barrier-free reorder-buffer stress test, and the
+//! reorder-buffer high-water contract (legitimate skew passes; a racer
+//! beyond the bound trips a loud panic instead of buffering unboundedly).
 
 use sddnewton::algorithms::admm::sweep_stages;
 use sddnewton::config::AlgoKind;
@@ -37,10 +39,11 @@ fn partitionings(g: &Graph, k: usize) -> [Partition; 3] {
     ]
 }
 
-/// The acceptance property of this PR: for all 7 `AlgoKind`s the real
-/// cross-worker channel payloads equal the modeled ledger mapped through
-/// the partition — no algorithm over- or under-ships relative to its
-/// communication model (ADMM used to over-ship the full halo once per
+/// The acceptance property of this PR: for all 9 `AlgoKind`s — including
+/// the pipelined ADMM wavefront and the comm-avoiding local-step Newton —
+/// the real cross-worker channel payloads equal the modeled ledger mapped
+/// through the partition — no algorithm over- or under-ships relative to
+/// its communication model (ADMM used to over-ship the full halo once per
 /// sweep stage). Iterates stay bit-for-bit equal on the side.
 #[test]
 fn real_cross_messages_equal_modeled_ledger_for_all_algokinds() {
@@ -55,9 +58,11 @@ fn real_cross_messages_equal_modeled_ledger_for_all_algokinds() {
         AlgoKind::AddNewton { terms: 2, alpha: 1.0 },
         AlgoKind::ExactNewton { alpha: 1.0 },
         AlgoKind::Admm { beta: 1.0 },
+        AlgoKind::AdmmPipelined { beta: 1.0 },
         AlgoKind::Gradient { alpha: 0.01 },
         AlgoKind::Averaging { beta: 0.005 },
         AlgoKind::NetworkNewton { k: 2, alpha: 0.1, epsilon: 1.0 },
+        AlgoKind::LocalNewton { eta: 0.5, local_steps: 3, comm_rounds: 2 },
     ];
     for kind in &kinds {
         for k in [1usize, 2, 5] {
@@ -323,4 +328,147 @@ fn racing_workers_cannot_corrupt_sparse_rounds() {
         + rounds as u64 * plan_cross_rows(&adj, &part.assignment, Some(masks[0].as_slice()))
         + rounds as u64 * plan_cross_rows(&adj, &part.assignment, Some(masks[1].as_slice()));
     assert_eq!(cross_total, expected, "sparse payloads were dropped or double-counted");
+}
+
+/// Fixture where two workers can race masked rounds arbitrarily far ahead
+/// of a third. Workers 1 (node 2) and 2 (node 3) ship fresh rows that only
+/// worker 0 consumes — nodes 2 and 3 are not adjacent, so the racers'
+/// masked receive sets are empty and nothing throttles them. Worker 0
+/// needs both racers' rows every round, so when worker 1 sleeps, worker
+/// 2's future rounds pile into worker 0's reorder buffer.
+fn skew_fixture() -> (Graph, Partition) {
+    let g = Graph::from_edges(4, vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3)]);
+    let part = Partition { assignment: vec![0, 0, 1, 2], k: 3 };
+    (g, part)
+}
+
+/// Drive the skew fixture: one initial full exchange, then `races` rounds
+/// masked to the racers' nodes {2, 3}, with worker 1 sleeping after the
+/// full round so worker 2 runs ahead. `bound` is installed as worker 0's
+/// reorder high-water mark. Panics are caught per worker so a deliberate
+/// high-water trip does not tear down sibling threads mid-scope; returns
+/// each worker's panic message (if any) and worker 0's final outputs.
+fn run_skewed_rounds(bound: Option<u64>, races: usize) -> (Vec<Option<String>>, Vec<f64>) {
+    let (g, part) = skew_fixture();
+    let adj = adjacency_csr(&g);
+    let lap = laplacian_csr(&g);
+    let k = part.k;
+    let n = g.n;
+    let mask: Vec<bool> = vec![false, false, true, true];
+    let all_mask = vec![true; n];
+    let base = |u: usize| (u as f64 + 1.0) * 0.5;
+    let upd = |u: usize, t: usize| base(u) + (t as f64 + 1.0) * 0.01 * (u as f64 + 1.0);
+
+    let plans = build_shard_plans(&g, &part);
+    let owned_of: Vec<Vec<usize>> = plans.iter().map(|p| p.owned.clone()).collect();
+    let mut wire_tx = Vec::new();
+    let mut wire_rx = Vec::new();
+    for _ in 0..k {
+        let (tx, rx) = channel::<WireMsg>();
+        wire_tx.push(tx);
+        wire_rx.push(Some(rx));
+    }
+    let (red_tx, red_rx) = channel::<ReduceMsg>();
+    let mut red_out_tx = Vec::new();
+    let mut red_out_rx = Vec::new();
+    for _ in 0..k {
+        let (tx, rx) = channel::<Vec<f64>>();
+        red_out_tx.push(tx);
+        red_out_rx.push(Some(rx));
+    }
+    let panics = Mutex::new(vec![None::<String>; k]);
+    let final_out = Mutex::new(Vec::<f64>::new());
+    std::thread::scope(|scope| {
+        {
+            let owned_of = owned_of.clone();
+            let txs = red_out_tx.clone();
+            scope.spawn(move || run_reducer(n, &owned_of, red_rx, &txs));
+        }
+        for (wid, plan) in plans.into_iter().enumerate() {
+            let peer_txs = wire_tx.clone();
+            let inbox = wire_rx[wid].take().unwrap();
+            let from_red = red_out_rx[wid].take().unwrap();
+            let red = red_tx.clone();
+            let (g, adj, lap, mask, all_mask, panics, final_out) =
+                (&g, &adj, &lap, &mask, &all_mask, &panics, &final_out);
+            scope.spawn(move || {
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut ex =
+                        ShardExchange::new(g, lap, k, plan, peer_txs, inbox, red, from_red);
+                    if wid == 0 {
+                        if let Some(b) = bound {
+                            ex.set_reorder_high_water(b);
+                        }
+                    }
+                    let owned = ex.owned().to_vec();
+                    let mut xl: Vec<f64> = owned.iter().map(|&u| base(u)).collect();
+                    let mut out = vec![0.0; owned.len()];
+                    ex.exchange_apply_fresh(adj, all_mask, 1, &xl, 1, &mut out);
+                    if wid == 1 {
+                        // The slow racer: by the time it ships round 1,
+                        // worker 2 has shipped every masked round into
+                        // worker 0's inbox.
+                        std::thread::sleep(std::time::Duration::from_millis(200));
+                    }
+                    for t in 0..races {
+                        for (li, &u) in owned.iter().enumerate() {
+                            if mask[u] {
+                                xl[li] = upd(u, t);
+                            }
+                        }
+                        ex.exchange_apply_fresh(adj, mask, 1, &xl, 1, &mut out);
+                    }
+                    if wid == 0 {
+                        *final_out.lock().unwrap() = out;
+                    }
+                }));
+                if let Err(payload) = run {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    panics.lock().unwrap()[wid] = Some(msg);
+                }
+            });
+        }
+        drop(red_tx);
+        drop(red_out_tx);
+    });
+    (panics.into_inner().unwrap(), final_out.into_inner().unwrap())
+}
+
+/// A high-water mark that admits the worst legitimate skew must not fire:
+/// every worker completes, and worker 0's last masked round reflects both
+/// racers' final values exactly.
+#[test]
+fn reorder_high_water_within_bound_tolerates_racing_workers() {
+    let races = 6;
+    let (panics, out) = run_skewed_rounds(Some(races as u64 + 1), races);
+    for (wid, p) in panics.iter().enumerate() {
+        assert!(p.is_none(), "worker {wid} panicked under a generous bound: {p:?}");
+    }
+    let base = |u: usize| (u as f64 + 1.0) * 0.5;
+    let upd = |u: usize, t: usize| base(u) + (t as f64 + 1.0) * 0.01 * (u as f64 + 1.0);
+    // Worker 0 owns nodes 0 and 1; each neighbors 2 and 3 plus the other
+    // owned node. Sum order matches the CSR row sweep (ascending column).
+    let want0 = base(1) + upd(2, races - 1) + upd(3, races - 1);
+    let want1 = base(0) + upd(2, races - 1) + upd(3, races - 1);
+    assert_eq!(out, vec![want0, want1], "stale or reordered halo rows leaked into the matvec");
+}
+
+/// A racer more than `bound + 1` rounds ahead of the round worker 0 is
+/// still assembling must trip the reorder buffer's high-water panic — the
+/// loud-failure contract of `SDDN_REORDER_BOUND` — rather than buffering
+/// unboundedly.
+#[test]
+fn reorder_high_water_overflow_fails_loudly() {
+    let (panics, _) = run_skewed_rounds(Some(1), 6);
+    let msg = panics[0]
+        .as_deref()
+        .expect("worker 0 must trip the high-water bound when a racer runs 6 rounds ahead");
+    assert!(
+        msg.contains("reorder buffer high-water exceeded"),
+        "expected the high-water panic, got: {msg}"
+    );
 }

@@ -38,6 +38,7 @@ fn smoke_spec(algo: &str, workers: usize, iters: usize) -> TcpJobSpec {
         partitioning: "contiguous".to_string(),
         solver_seed: 0x51D0,
         hostfile: None,
+        stale_tau: 0,
     }
 }
 
